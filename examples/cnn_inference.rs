@@ -1,0 +1,114 @@
+//! End-to-end CNN driver (the paper's §IV-B experiment, Table IV):
+//! load the L2-trained LeNet-5 weights, classify the test corpus with all
+//! three operator sets (vanilla / CNN-HSC / CNN-SMURF), and — when the
+//! AOT artifacts exist — serve batched inference through the XLA
+//! executable, reporting latency and throughput.
+//!
+//! This is the end-to-end validation required by DESIGN.md: it proves the
+//! L1 Pallas kernel, the L2 trained model and the L3 rust engine compose
+//! on a real (small) workload.
+//!
+//! Run: `make artifacts && cargo run --release --example cnn_inference`
+
+use smurf::data;
+use smurf::nn::lenet::ScRuntime;
+use smurf::nn::{LeNet, OpSet};
+use smurf::runtime::{default_artifacts_dir, Runtime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = default_artifacts_dir();
+    let n_test = 400;
+    let (_, test) = data::load_corpus(0, n_test, 42);
+    println!("test corpus: {} images (28x28, 10 classes)\n", test.n);
+
+    // --- Load trained weights (L2 output) or fall back to rust training.
+    let weights_path = artifacts.join("lenet_weights.json");
+    let net = match LeNet::load(weights_path.to_str().unwrap()) {
+        Ok(net) => {
+            println!("loaded L2-trained weights from {}", weights_path.display());
+            net
+        }
+        Err(e) => {
+            println!("({e}) — training in-process with the rust trainer instead");
+            let (train_set, _) = data::load_corpus(2000, 0, 42);
+            let mut net = LeNet::random(7);
+            smurf::nn::train::train(
+                &mut net,
+                &train_set,
+                &smurf::nn::train::TrainConfig::default(),
+                1,
+            );
+            net
+        }
+    };
+
+    // --- Table IV: three operator sets on the same weights.
+    let t0 = Instant::now();
+    let acc_vanilla = net.accuracy(&test.images, &test.labels, OpSet::Vanilla, None);
+    let dt_vanilla = t0.elapsed();
+
+    let mut rt_hsc = ScRuntime::paper_config(11);
+    let t0 = Instant::now();
+    let acc_hsc = net.accuracy(&test.images, &test.labels, OpSet::Hsc, Some(&mut rt_hsc));
+    let dt_hsc = t0.elapsed();
+
+    let mut rt_smurf = ScRuntime::paper_config(13);
+    let t0 = Instant::now();
+    let acc_smurf = net.accuracy(&test.images, &test.labels, OpSet::Smurf, Some(&mut rt_smurf));
+    let dt_smurf = t0.elapsed();
+
+    println!("\n=== Table IV (reproduced on the synthetic corpus) ===");
+    println!("{:<14} {:>10} {:>12}", "operator set", "accuracy", "wall time");
+    println!("{:<14} {:>9.2}% {:>12?}", "vanilla CNN", acc_vanilla * 100.0, dt_vanilla);
+    println!("{:<14} {:>9.2}% {:>12?}", "CNN/HSC", acc_hsc * 100.0, dt_hsc);
+    println!("{:<14} {:>9.2}% {:>12?}", "CNN/SMURF", acc_smurf * 100.0, dt_smurf);
+    println!("(paper: 99.67 / 98.04 / 98.42 on MNIST — the shape to match is");
+    println!(" vanilla ≥ both SC variants, with a small SC gap)");
+
+    // --- Serve batched inference through the AOT XLA executables.
+    let rt = Runtime::cpu(&artifacts)?;
+    for artifact in ["lenet_infer.hlo.txt", "lenet_smurf_infer.hlo.txt"] {
+        if !rt.has_artifact(artifact) {
+            println!("\n({artifact} missing — run `make artifacts`)");
+            continue;
+        }
+        let exe = rt.load(artifact)?;
+        const BATCH: usize = 32;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut latencies = Vec::new();
+        for chunk_start in (0..test.n).step_by(BATCH) {
+            let n = BATCH.min(test.n - chunk_start);
+            let mut xs = vec![0.0f32; BATCH * 784];
+            for i in 0..n {
+                xs[i * 784..(i + 1) * 784].copy_from_slice(test.image(chunk_start + i));
+            }
+            let t0 = Instant::now();
+            let out = exe.run_f32(&[(&[BATCH, 1, 28, 28], &xs)])?;
+            latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+            for i in 0..n {
+                let logits = &out[0][i * 10..(i + 1) * 10];
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += (pred == test.labels[chunk_start + i] as usize) as usize;
+                total += 1;
+            }
+        }
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = latencies[latencies.len() / 2];
+        let p99_idx = ((latencies.len() as f64 * 0.99) as usize).min(latencies.len() - 1);
+        let p99 = latencies[p99_idx];
+        let throughput = total as f64 / latencies.iter().sum::<f64>() * 1e3;
+        println!(
+            "\nXLA {artifact}: accuracy {:.2}% | batch-32 latency p50 {p50:.2} ms, p99 {p99:.2} ms | {throughput:.0} img/s",
+            correct as f64 / total as f64 * 100.0
+        );
+    }
+    println!("\ncnn_inference OK");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Function zoo: synthesize every registered target (univariate through
+//! trivariate), print accuracy at the paper's stream lengths, and compare
+//! against the Bernstein, Taylor, LUT and CORDIC baselines on a shared
+//! accuracy budget — the §IV-A experiment generalized to the whole
+//! function library.
+//!
+//! Run: `cargo run --release --example function_zoo`
+
+use smurf::baselines::bernstein::BernsteinSc;
+use smurf::baselines::lut::Lut;
+use smurf::baselines::taylor::TaylorPoly;
+use smurf::prelude::*;
+use smurf::util::prng::Pcg;
+
+fn bitlevel_mae(approx: &SmurfApproximator, len: usize, trials: usize) -> f64 {
+    // MAE over a uniform grid with Monte-Carlo trials per point.
+    let m = approx.config().num_vars();
+    let grid = match m {
+        1 => 33,
+        2 => 9,
+        _ => 5,
+    };
+    let mut idx = vec![0usize; m];
+    let mut total = 0.0;
+    let mut count = 0;
+    let sim = approx.simulator();
+    loop {
+        let p: Vec<f64> = idx.iter().map(|&i| i as f64 / (grid - 1) as f64).collect();
+        let target = approx.eval_analytic(&p);
+        total += sim.abs_error(&p, target, len, trials, 42);
+        count += 1;
+        let mut j = 0;
+        loop {
+            idx[j] += 1;
+            if idx[j] < grid {
+                break;
+            }
+            idx[j] = 0;
+            j += 1;
+            if j == m {
+                let _ = count;
+                return total / count as f64;
+            }
+        }
+    }
+}
+
+fn main() {
+    println!("=== SMURF function zoo (N=4 per variable) ===\n");
+    println!(
+        "{:<12} {:>5} {:>10} {:>10} {:>10}",
+        "function", "M", "analytic", "hw@64", "hw@256"
+    );
+    for f in functions::registry() {
+        let cfg = SmurfConfig::uniform(f.arity(), 4);
+        let approx = SmurfApproximator::synthesize(&cfg, &f, 64);
+        let e64 = bitlevel_mae(&approx, 64, 8);
+        let e256 = bitlevel_mae(&approx, 256, 8);
+        println!(
+            "{:<12} {:>5} {:>10.4} {:>10.4} {:>10.4}",
+            f.name(),
+            f.arity(),
+            approx.synth_mae,
+            e64,
+            e256
+        );
+    }
+
+    // Baseline shoot-out on the Euclidean distance at equalized accuracy.
+    println!("\n=== baselines on euclidean2 (accuracy-equalized, §IV-C) ===\n");
+    let f = functions::euclidean2();
+    let cfg = SmurfConfig::uniform(2, 4);
+    let approx = SmurfApproximator::synthesize(&cfg, &f, 256);
+    println!("SMURF      : analytic MAE {:.4} with 16 coefficients", approx.synth_mae);
+
+    let taylor = TaylorPoly::expand(&f, &[0.5, 0.5], 3);
+    println!(
+        "Taylor-3   : float MAE {:.4}, 16-bit fixed MAE {:.4}, {} muls/{} adds",
+        taylor.mae_vs(&f, 33, None),
+        taylor.mae_vs(&f, 33, Some(14)),
+        taylor.mul_count(),
+        taylor.add_count()
+    );
+
+    let lut = Lut::size_for_accuracy(&f, 0.015, 16).expect("LUT sizing");
+    println!(
+        "LUT        : MAE {:.4} with {} entries ({} bits of storage)",
+        lut.mae_vs(&f, 65),
+        lut.entries(),
+        lut.storage_bits()
+    );
+
+    // Bernstein handles univariate only — use the tanh target.
+    let tanh = functions::tanh_bipolar(2.0);
+    let bern = BernsteinSc::synthesize(&tanh, 6);
+    println!(
+        "Bernstein-6: tanh MAE {:.4} with {} coefficients (univariate only)",
+        bern.mae_vs(&tanh, 101),
+        bern.coeffs.len()
+    );
+
+    // CORDIC: iterative, exact-ish — show iteration/accuracy trade.
+    let mut rng = Pcg::new(1);
+    let mut worst: f64 = 0.0;
+    for _ in 0..1000 {
+        let (x1, x2) = (rng.uniform(), rng.uniform());
+        let (r, _) = smurf::baselines::cordic::vectoring(x1.max(1e-9), x2, 16);
+        worst = worst.max((r - (x1 * x1 + x2 * x2).sqrt()).abs());
+    }
+    println!("CORDIC-16  : worst-case |err| {worst:.2e} (16 iterations, vectoring mode)");
+    println!("\nfunction_zoo OK");
+}

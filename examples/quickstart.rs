@@ -1,0 +1,69 @@
+//! Quickstart: synthesize a SMURF, evaluate it three ways, and (if
+//! `make artifacts` has run) execute the AOT-compiled XLA kernel — the
+//! full L3→L1 stack in one file.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use smurf::prelude::*;
+use smurf::runtime::{default_artifacts_dir, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Synthesize the paper's flagship example: the bivariate Euclidean
+    //    distance on a 2-variable, 4-state-per-variable SMURF (§III-B).
+    let cfg = SmurfConfig::uniform(2, 4);
+    let f = functions::euclidean2();
+    let approx = SmurfApproximator::synthesize(&cfg, &f, 64);
+    println!("synthesized {} on {}", approx.name(), approx.config());
+    println!("analytic MAE from synthesis: {:.5}\n", approx.synth_mae);
+
+    // 2. Print the coefficient table (compare with paper Table I — see
+    //    EXPERIMENTS.md for why the published table differs).
+    println!("coefficient table w_t (t = i1 + 4*i2):");
+    for (t, w) in approx.coefficients().iter().enumerate() {
+        print!("  w_{t:<2} = {w:.4}");
+        if (t + 1) % 4 == 0 {
+            println!();
+        }
+    }
+
+    // 3. Evaluate a few points: exact target, analytic (Eq. 21), and the
+    //    cycle-accurate bit-level hardware simulation at 64/256 bits.
+    println!("\n{:>12} {:>9} {:>9} {:>9} {:>9}", "input", "target", "analytic", "hw@64", "hw@256");
+    for (x1, x2) in [(0.3, 0.4), (0.6, 0.8), (0.1, 0.9), (0.5, 0.5)] {
+        let p = [x1, x2];
+        println!(
+            "{:>12} {:>9.4} {:>9.4} {:>9.4} {:>9.4}",
+            format!("({x1},{x2})"),
+            f.eval(&p),
+            approx.eval_analytic(&p),
+            approx.eval_bitstream(&p, 64, 1),
+            approx.eval_bitstream(&p, 256, 1),
+        );
+    }
+
+    // 4. AOT path: run the Pallas-lowered XLA kernel through PJRT.
+    let rt = Runtime::cpu(default_artifacts_dir())?;
+    if rt.has_artifact("smurf_eval.hlo.txt") {
+        let exe = rt.load("smurf_eval.hlo.txt")?;
+        let batch = 1024;
+        let mut xs = vec![0.0f32; batch * 2];
+        for i in 0..batch {
+            xs[i * 2] = (i % 32) as f32 / 31.0;
+            xs[i * 2 + 1] = (i / 32) as f32 / 31.0;
+        }
+        let w: Vec<f32> = approx.coefficients().iter().map(|&v| v as f32).collect();
+        let out = exe.run_f32(&[(&[batch, 2], &xs), (&[4, 4], &w)])?;
+        // Cross-check the kernel against the rust analytic evaluator.
+        let mut max_err = 0.0f64;
+        for i in 0..batch {
+            let y_rust = approx.eval_analytic(&[xs[i * 2] as f64, xs[i * 2 + 1] as f64]);
+            max_err = max_err.max((out[0][i] as f64 - y_rust).abs());
+        }
+        println!("\nXLA kernel vs rust analytic: max |Δ| = {max_err:.2e} over {batch} points");
+        assert!(max_err < 1e-4, "AOT kernel must agree with the analytic evaluator");
+        println!("quickstart OK (all three layers agree)");
+    } else {
+        println!("\n(artifacts missing — run `make artifacts` to exercise the XLA path)");
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Serving demo: stand up the evaluation service with a function registry,
+//! drive concurrent clients against all three engines (bit-level sim,
+//! analytic, AOT XLA kernel), and print the latency/throughput report —
+//! the L3 coordinator under load.
+//!
+//! Run: `make artifacts && cargo run --release --example serve`
+
+use smurf::coordinator::{Engine, EvalServer, ServerConfig};
+use smurf::prelude::*;
+use smurf::runtime::default_artifacts_dir;
+use std::sync::Arc;
+
+fn main() {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let funcs = vec![
+        SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64),
+        SmurfApproximator::synthesize(&cfg, &functions::sincos(), 64),
+        SmurfApproximator::synthesize(&cfg, &functions::softmax2(), 64),
+        SmurfApproximator::synthesize(&cfg, &functions::product2(), 64),
+    ];
+    let server = Arc::new(EvalServer::start(
+        funcs,
+        Some(default_artifacts_dir()),
+        ServerConfig::default(),
+    ));
+    println!("registered functions: {:?}", server.functions());
+
+    // Concurrent client load: 8 threads × 500 requests, mixed engines.
+    let clients = 8;
+    let per_client = 500;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let names = ["euclidean2", "sincos", "softmax2", "product2"];
+            let mut xla_ok = 0usize;
+            let mut xla_err = 0usize;
+            for i in 0..per_client {
+                let x = ((c * per_client + i) % 101) as f64 / 100.0;
+                let y = ((c * per_client + i * 37) % 101) as f64 / 100.0;
+                let fname = names[i % names.len()];
+                let engine = match i % 5 {
+                    0 => Engine::BitLevel,
+                    1 | 2 => Engine::Analytic,
+                    _ => Engine::Xla,
+                };
+                let r = s.eval_sync(fname, vec![vec![x, y]], engine, 64);
+                match engine {
+                    Engine::Xla => {
+                        if r.is_ok() {
+                            xla_ok += 1;
+                        } else {
+                            xla_err += 1;
+                        }
+                    }
+                    _ => assert!(r.is_ok(), "{:?}", r.error),
+                }
+                if r.is_ok() {
+                    assert!(!r.outputs.is_empty());
+                    // f32 round-off on the XLA path can graze the unit
+                    // interval boundary.
+                    assert!(
+                        (-1e-5..=1.0 + 1e-5).contains(&r.outputs[0]),
+                        "{fname} out of range: {}",
+                        r.outputs[0]
+                    );
+                }
+            }
+            (xla_ok, xla_err)
+        }));
+    }
+    let mut xla_ok = 0;
+    let mut xla_err = 0;
+    for h in handles {
+        let (ok, err) = h.join().unwrap();
+        xla_ok += ok;
+        xla_err += err;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "\ndrove {} requests from {clients} clients in {dt:?}",
+        clients * per_client
+    );
+    if xla_err > 0 {
+        println!("XLA engine: {xla_ok} ok, {xla_err} failed (run `make artifacts`)");
+    } else {
+        println!("XLA engine: {xla_ok} requests served from the AOT kernel");
+    }
+    println!("\n=== service metrics ===\n{}", server.metrics().report());
+    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    println!("serve OK");
+}

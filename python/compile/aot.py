@@ -1,0 +1,112 @@
+"""AOT export: lower the L2/L1 computations to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_hlo_proto().serialize()``)
+is the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to ../artifacts/ by default):
+
+- ``smurf_eval.hlo.txt``        — L1 Pallas batched SMURF evaluator,
+  (1024, 2) probabilities + (4, 4) table → (1024,) outputs.
+- ``lenet_infer.hlo.txt``       — vanilla LeNet-5 inference, trained
+  weights baked in, (32, 1, 28, 28) → (32, 10) logits.
+- ``lenet_smurf_infer.hlo.txt`` — LeNet-5 with the Pallas SMURF
+  activation (CNN/SMURF inference path).
+- ``lenet_weights.json``        — trained weights for the rust SC-CNN.
+- ``train_log.json``            — loss curves + test accuracy for
+  EXPERIMENTS.md.
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .kernels.smurf_eval import smurf_eval
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path).
+
+    print_large_constants=True matters: the default print elides big
+    literals as ``constant({...})``, which the rust-side text parser
+    cannot reconstruct — baked model weights must round-trip.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_smurf_eval(out_dir, batch=1024):
+    spec_x = jax.ShapeDtypeStruct((batch, 2), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(lambda x, w: (smurf_eval(x, w),)).lower(spec_x, spec_w)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "smurf_eval.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def export_lenet(out_dir, params, activation, name, batch=32):
+    spec = jax.ShapeDtypeStruct((batch, 1, 28, 28), jnp.float32)
+    fwd = functools.partial(model.forward, activation=activation)
+    # Bake trained weights as constants: the serving binary only feeds
+    # images (closure over params).
+    lowered = jax.jit(lambda x: (fwd(params, x),)).lower(spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--train-samples", type=int, default=4000)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only export the smurf_eval kernel")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    export_smurf_eval(args.out_dir)
+    if args.skip_train:
+        return
+
+    # Vanilla training (Table IV column 1) …
+    params_v, hist_v = train.train(
+        n_train=args.train_samples, epochs=args.epochs, activation="tanh"
+    )
+    # … and SMURF-surrogate training (Table IV column 3): same data/seed.
+    params_s, hist_s = train.train(
+        n_train=args.train_samples, epochs=args.epochs, activation="smurf"
+    )
+
+    export_lenet(args.out_dir, params_v, "tanh", "lenet_infer.hlo.txt")
+    export_lenet(args.out_dir, params_s, "smurf", "lenet_smurf_infer.hlo.txt")
+
+    wpath = os.path.join(args.out_dir, "lenet_weights.json")
+    with open(wpath, "w") as f:
+        f.write(train.params_to_json(params_s))
+    print(f"wrote {wpath}")
+
+    lpath = os.path.join(args.out_dir, "train_log.json")
+    with open(lpath, "w") as f:
+        json.dump({"vanilla": hist_v, "smurf": hist_s}, f, indent=1)
+    print(f"wrote {lpath}")
+
+
+if __name__ == "__main__":
+    main()

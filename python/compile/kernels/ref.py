@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Everything here mirrors the rust analytic evaluator
+(rust/src/smurf/analytic.rs): the chain-FSM steady state of paper Eq. 4
+in its numerically-stable form, the joint factorization, and the Eq. 21
+readout.
+"""
+
+import jax.numpy as jnp
+
+
+def steady_state(n: int, p):
+    """Steady-state distribution of an n-state chain FSM at Bernoulli(p).
+
+    pi_i = p^i (1-p)^(n-1-i) / sum_k p^k (1-p)^(n-1-k)  — stable on [0,1].
+
+    Args:
+      n: number of states.
+      p: array of shape (...,) of probabilities in [0, 1].
+
+    Returns:
+      array of shape (..., n).
+    """
+    p = jnp.asarray(p)
+    q = 1.0 - p
+    i = jnp.arange(n)
+    w = p[..., None] ** i * q[..., None] ** (n - 1 - i)
+    return w / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def smurf_eval_ref(x, w):
+    """Batched bivariate SMURF analytic evaluation (Eq. 21), M=2, N=4.
+
+    Args:
+      x: (B, 2) input probabilities.
+      w: (4, 4) coefficient table, w[i2, i1].
+
+    Returns:
+      (B,) outputs  y_b = sum_{i2,i1} pi(x2)[i2] pi(x1)[i1] w[i2,i1].
+    """
+    m1 = steady_state(4, x[:, 0])  # (B, 4) marginal of variable 1 (i1)
+    m2 = steady_state(4, x[:, 1])  # (B, 4) marginal of variable 2 (i2)
+    return jnp.einsum("bi,ij,bj->b", m2, w, m1)
+
+
+def smurf_act_ref(v, w, r):
+    """Batched univariate SMURF activation in the bipolar convention.
+
+    v in [-inf, inf] clamps to [-r, r]; P = (v/r + 1)/2; the N=4 SMURF
+    with coefficients w (4,) produces P_y; decode y = 2 P_y - 1.
+
+    Mirrors rust/src/nn/sc_ops.rs::SmurfActivation::eval_analytic.
+    """
+    p = (jnp.clip(v / r, -1.0, 1.0) + 1.0) / 2.0
+    pi = steady_state(4, p)  # (..., 4)
+    p_y = jnp.sum(pi * w, axis=-1)
+    return 2.0 * p_y - 1.0

@@ -1,0 +1,143 @@
+"""L1 Pallas kernels: batched SMURF evaluation.
+
+The hot compute of the serving path: for a batch of input probability
+vectors, evaluate the closed-form steady-state readout (paper Eq. 21)
+
+    y_b = sum_s P_s(x_b) * w_s
+        = pi(x2_b) @ W @ pi(x1_b)          (M = 2, factored joint)
+
+expressed as two small matmuls per block so the contraction maps onto the
+MXU systolic array on a real TPU. BlockSpec tiles the batch dimension
+into VMEM-sized blocks (BLOCK_B × (N + N + N²) f32 ≪ 16 MiB).
+
+Pallas runs with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO with
+identical arithmetic (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_STATES = 4
+BLOCK_B = 256
+
+
+def _steady4(p):
+    """Chain steady state for N=4, stable form (matches ref.steady_state)."""
+    q = 1.0 - p
+    # Unrolled powers (cheaper than pow for N=4; fuses into FMAs).
+    p2 = p * p
+    q2 = q * q
+    w0 = q2 * q
+    w1 = p * q2
+    w2 = p2 * q
+    w3 = p2 * p
+    z = w0 + w1 + w2 + w3
+    inv = 1.0 / z
+    return jnp.stack([w0 * inv, w1 * inv, w2 * inv, w3 * inv], axis=-1)
+
+
+def _smurf_eval_kernel(x_ref, w_ref, y_ref):
+    """One batch block: y = (pi(x2) @ W) · pi(x1), summed over states."""
+    x = x_ref[...]  # (BLOCK_B, 2)
+    w = w_ref[...]  # (4, 4), w[i2, i1]
+    m1 = _steady4(x[:, 0])  # (BLOCK_B, 4)
+    m2 = _steady4(x[:, 1])  # (BLOCK_B, 4)
+    # Two-matmul contraction: (B,4)@(4,4) -> (B,4), then row-dot.
+    t = jnp.dot(m2, w, preferred_element_type=jnp.float32)
+    y_ref[...] = jnp.sum(t * m1, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def smurf_eval(x, w):
+    """Batched bivariate SMURF evaluation.
+
+    Args:
+      x: (B, 2) f32 probabilities, B divisible by BLOCK_B (pad upstream).
+      w: (4, 4) f32 coefficient table.
+
+    Returns:
+      (B,) f32 outputs.
+    """
+    b = x.shape[0]
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _smurf_eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, 2), lambda i: (i, 0)),
+            pl.BlockSpec((N_STATES, N_STATES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _smurf_act_kernel(v_ref, w_ref, y_ref, *, r):
+    """Bipolar SMURF activation block: y = 2·(pi(P) · w) − 1."""
+    v = v_ref[...]
+    w = w_ref[...]  # (4,)
+    p = (jnp.clip(v / r, -1.0, 1.0) + 1.0) * 0.5
+    pi = _steady4(p)  # (..., 4)
+    y_ref[...] = 2.0 * jnp.sum(pi * w, axis=-1) - 1.0
+
+
+def _smurf_act_pallas(v, w, r):
+    b, f = v.shape
+    kernel = functools.partial(_smurf_act_kernel, r=r)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, f), lambda i: (0, 0)),
+            pl.BlockSpec((N_STATES,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, f), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f), jnp.float32),
+        interpret=True,
+    )(v, w)
+
+
+def _smurf_act_ref(v, w, r):
+    """Pure-jnp twin of the kernel (used for the VJP)."""
+    p = (jnp.clip(v / r, -1.0, 1.0) + 1.0) * 0.5
+    pi = _steady4(p)
+    return 2.0 * jnp.sum(pi * w, axis=-1) - 1.0
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def smurf_act(v, w, r=2.0):
+    """Batched univariate SMURF activation (used inside the LeNet model).
+
+    Forward runs the Pallas kernel; the backward pass (pallas_call has no
+    reverse-mode rule) differentiates the mathematically-identical pure
+    jnp expression — the L2 trainer trains *through* the SMURF
+    nonlinearity this way.
+
+    Args:
+      v: (B, F) f32 pre-activations.
+      w: (4,) f32 coefficient table of the univariate tanh SMURF.
+      r: clamp half-range (= N/2 for the Brown–Card-consistent config).
+
+    Returns:
+      (B, F) f32 activations in [-1, 1].
+    """
+    return _smurf_act_pallas(v, w, r)
+
+
+def _smurf_act_fwd(v, w, r):
+    return _smurf_act_pallas(v, w, r), (v, w)
+
+
+def _smurf_act_bwd(r, res, g):
+    v, w = res
+    _, vjp = jax.vjp(lambda vv, ww: _smurf_act_ref(vv, ww, r), v, w)
+    return vjp(g)
+
+
+smurf_act.defvjp(_smurf_act_fwd, _smurf_act_bwd)

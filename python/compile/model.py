@@ -1,0 +1,112 @@
+"""L2: LeNet-5 in JAX with SMURF-surrogate activations.
+
+The network of paper §IV-B (Table V): conv1 6@5×5 pad2 → act → avgpool2 →
+conv2 16@5×5 → act → avgpool2 → fc 400→120 → act → fc 120→84 → act →
+fc 84→10. The activation is pluggable:
+
+- ``"tanh"``   — vanilla CNN.
+- ``"smurf"``  — the L1 Pallas SMURF activation kernel
+  (kernels.smurf_eval.smurf_act): the closed-form Eq. 21 expectation of
+  the 4-state bipolar tanh SMURF. It is exactly what the SC hardware
+  computes in expectation, and it is differentiable, so training through
+  it produces weights adapted to the SMURF nonlinearity (the paper's
+  CNN/SMURF training setup).
+
+Layout is NCHW throughout, matching the rust inference engine.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.smurf_eval import smurf_act
+
+# The 4-state bipolar tanh SMURF coefficient table. Synthesis (rust
+# synth/ or the QP below) recovers the Brown–Card labelling; the exact
+# QP optimum at k = N/2 = 2 deviates from binary labels by < 0.03.
+SMURF_TANH_W4 = jnp.array([0.02741, 0.0, 1.0, 0.97259], dtype=jnp.float32)
+SMURF_ACT_RANGE = 2.0
+
+
+def init_params(key):
+    """Kaiming-uniform LeNet-5 parameters (NCHW conv layout)."""
+    shapes = {
+        "conv1_w": (6, 1, 5, 5),
+        "conv2_w": (16, 6, 5, 5),
+        "fc1_w": (120, 400),
+        "fc2_w": (84, 120),
+        "fc3_w": (10, 84),
+    }
+    biases = {"conv1_b": 6, "conv2_b": 16, "fc1_b": 120, "fc2_b": 84, "fc3_b": 10}
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        fan_in = int(jnp.prod(jnp.array(shape[1:])))
+        bound = (6.0 / fan_in) ** 0.5
+        params[name] = jax.random.uniform(sub, shape, jnp.float32, -bound, bound)
+    for name, n in biases.items():
+        params[name] = jnp.zeros((n,), jnp.float32)
+    return params
+
+
+def _conv(x, w, b, pad):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _avgpool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    ) * 0.25
+
+
+def _activate(v, kind):
+    if kind == "tanh":
+        return jnp.tanh(v)
+    if kind == "smurf":
+        # The Pallas kernel is rank-2 (B, F): flatten feature dims.
+        shape = v.shape
+        flat = v.reshape(shape[0], -1)
+        y = smurf_act(flat, SMURF_TANH_W4, r=SMURF_ACT_RANGE)
+        return y.reshape(shape)
+    raise ValueError(f"unknown activation {kind}")
+
+
+def forward(params, x, activation="tanh"):
+    """LeNet-5 forward pass.
+
+    Args:
+      params: dict from init_params.
+      x: (B, 1, 28, 28) f32 images in [0, 1].
+      activation: "tanh" | "smurf".
+
+    Returns:
+      (B, 10) logits.
+    """
+    h = _activate(_conv(x, params["conv1_w"], params["conv1_b"], 2), activation)
+    h = _avgpool2(h)
+    h = _activate(_conv(h, params["conv2_w"], params["conv2_b"], 0), activation)
+    h = _avgpool2(h)
+    h = h.reshape(h.shape[0], -1)  # (B, 400)
+    h = _activate(h @ params["fc1_w"].T + params["fc1_b"], activation)
+    h = _activate(h @ params["fc2_w"].T + params["fc2_b"], activation)
+    return h @ params["fc3_w"].T + params["fc3_b"]
+
+
+def loss_fn(params, x, labels, activation="tanh"):
+    """Mean softmax cross-entropy."""
+    logits = forward(params, x, activation)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(params, x, labels, activation="tanh", batch=200):
+    """Full-dataset accuracy in minibatches."""
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = forward(params, x[i : i + batch], activation)
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == labels[i : i + batch]))
+    return correct / x.shape[0]

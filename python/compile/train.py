@@ -1,0 +1,75 @@
+"""L2 training: LeNet-5 on the synthetic corpus, vanilla and SMURF-activated.
+
+Run by aot.py (or standalone: ``python -m compile.train``). Produces the
+weight sets the AOT exports and the rust SC-CNN consume, plus a training
+log for EXPERIMENTS.md.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import data, model
+
+
+def sgd_momentum(params, grads, vel, lr, mu):
+    new_vel = {}
+    new_params = {}
+    for k in params:
+        v = mu * vel[k] - lr * grads[k]
+        new_vel[k] = v
+        new_params[k] = params[k] + v
+    return new_params, new_vel
+
+
+def train(
+    n_train=4000,
+    n_test=1000,
+    epochs=6,
+    batch=64,
+    lr=0.05,
+    momentum=0.9,
+    activation="tanh",
+    seed=0,
+    log=print,
+):
+    """Train and return (params, history dict)."""
+    x_train, y_train = data.generate(n_train, seed=42)
+    x_test, y_test = data.generate(n_test, seed=43)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+
+    @jax.jit
+    def step(params, vel, xb, yb):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, xb, yb, activation)
+        params, vel = sgd_momentum(params, grads, vel, lr, momentum)
+        return params, vel, loss
+
+    rng = jax.random.PRNGKey(seed + 1)
+    history = {"activation": activation, "epoch_loss": [], "epoch_time_s": []}
+    n = x_train.shape[0]
+    for epoch in range(epochs):
+        t0 = time.time()
+        rng, sub = jax.random.split(rng)
+        order = jax.random.permutation(sub, n)
+        total = 0.0
+        batches = 0
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i : i + batch]
+            params, vel, loss = step(params, vel, x_train[idx], y_train[idx])
+            total += float(loss)
+            batches += 1
+        dt = time.time() - t0
+        history["epoch_loss"].append(total / batches)
+        history["epoch_time_s"].append(dt)
+        log(f"[{activation}] epoch {epoch}: loss {total / batches:.4f} ({dt:.1f}s)")
+    history["test_accuracy"] = model.accuracy(params, x_test, y_test, activation)
+    log(f"[{activation}] test accuracy: {history['test_accuracy'] * 100:.2f}%")
+    return params, history
+
+
+def params_to_json(params):
+    """Serialize weights in the rust LeNet::from_json format."""
+    return json.dumps({k: [float(x) for x in jnp.ravel(v)] for k, v in params.items()})

@@ -1,0 +1,48 @@
+"""AOT lowering tests: the compile path produces loadable HLO text."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import to_hlo_text
+from compile.kernels.smurf_eval import BLOCK_B, smurf_eval
+
+
+def test_smurf_eval_lowers_to_hlo_text():
+    spec_x = jax.ShapeDtypeStruct((BLOCK_B, 2), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(lambda x, w: (smurf_eval(x, w),)).lower(spec_x, spec_w)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    # interpret=True must not leave Mosaic custom-calls behind.
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_hlo_text_parses_back():
+    # The text must parse back into an HLO module with the expected entry
+    # signature. (Full execute-from-text round-trip is exercised on the
+    # rust side: rust/src/runtime/mod.rs::loads_and_runs_artifact_if_present
+    # and examples/quickstart.rs — the consumer of these artifacts.)
+    from jax._src.lib import xla_client as xc
+
+    spec_x = jax.ShapeDtypeStruct((BLOCK_B, 2), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(lambda x, w: (smurf_eval(x, w),)).lower(spec_x, spec_w)
+    text = to_hlo_text(lowered)
+    mod = xc._xla.hlo_module_from_text(text)
+    sig = mod.to_string()
+    assert f"f32[{BLOCK_B},2]" in sig
+    assert "f32[4,4]" in sig
+    assert "ENTRY" in sig
+
+
+def test_kernel_output_values_match_through_lowering():
+    # jit-compiled (the exported computation) vs eager both equal the ref.
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(0, 1, (BLOCK_B, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 1, (4, 4)), jnp.float32)
+    jitted = jax.jit(lambda x, w: smurf_eval(x, w))
+    np.testing.assert_allclose(
+        np.asarray(jitted(x, w)), np.asarray(smurf_eval(x, w)), atol=1e-6
+    )

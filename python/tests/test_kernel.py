@@ -1,0 +1,136 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The core correctness signal of the compile path — hypothesis sweeps
+shapes and input distributions, assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.smurf_eval import BLOCK_B, smurf_act, smurf_eval
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# steady_state oracle sanity
+# ---------------------------------------------------------------------------
+
+
+def test_steady_state_sums_to_one():
+    p = jnp.linspace(0.0, 1.0, 33)
+    pi = ref.steady_state(4, p)
+    np.testing.assert_allclose(np.asarray(jnp.sum(pi, axis=-1)), 1.0, atol=1e-6)
+
+
+def test_steady_state_endpoints_degenerate():
+    pi = np.asarray(ref.steady_state(4, jnp.array([0.0, 1.0])))
+    np.testing.assert_allclose(pi[0], [1, 0, 0, 0], atol=1e-7)
+    np.testing.assert_allclose(pi[1], [0, 0, 0, 1], atol=1e-7)
+
+
+@given(st.integers(2, 8), st.floats(0.0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_steady_state_detailed_balance(n, p):
+    pi = np.asarray(ref.steady_state(n, jnp.float32(p)), dtype=np.float64)
+    # pi_{i+1} (1-p) == pi_i p  (Eq. 2)
+    for i in range(n - 1):
+        lhs = pi[i + 1] * (1.0 - p)
+        rhs = pi[i] * p
+        assert abs(lhs - rhs) < 1e-5, (n, p, i)
+
+
+# ---------------------------------------------------------------------------
+# smurf_eval (bivariate) vs oracle
+# ---------------------------------------------------------------------------
+
+
+def test_smurf_eval_matches_ref_fixed_batch():
+    x = jnp.asarray(RNG.uniform(0, 1, (BLOCK_B * 4, 2)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0, 1, (4, 4)), jnp.float32)
+    got = smurf_eval(x, w)
+    want = ref.smurf_eval_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@given(
+    st.integers(1, 4),  # batch blocks
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_smurf_eval_matches_ref_hypothesis(blocks, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 1, (BLOCK_B * blocks, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 1, (4, 4)), jnp.float32)
+    got = np.asarray(smurf_eval(x, w))
+    want = np.asarray(ref.smurf_eval_ref(x, w))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_smurf_eval_output_is_convex_combination():
+    x = jnp.asarray(RNG.uniform(0, 1, (BLOCK_B, 2)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.2, 0.8, (4, 4)), jnp.float32)
+    y = np.asarray(smurf_eval(x, w))
+    assert y.min() >= float(jnp.min(w)) - 1e-5
+    assert y.max() <= float(jnp.max(w)) + 1e-5
+
+
+def test_smurf_eval_corner_readout():
+    # At (1,1) both chains saturate: y = w[3,3].
+    x = jnp.tile(jnp.array([[1.0, 1.0]], jnp.float32), (BLOCK_B, 1))
+    w = jnp.asarray(RNG.uniform(0, 1, (4, 4)), jnp.float32)
+    y = np.asarray(smurf_eval(x, w))
+    np.testing.assert_allclose(y, float(w[3, 3]), atol=1e-6)
+
+
+def test_smurf_eval_rejects_ragged_batch():
+    x = jnp.zeros((BLOCK_B + 1, 2), jnp.float32)
+    w = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        smurf_eval(x, w)
+
+
+# ---------------------------------------------------------------------------
+# smurf_act (univariate activation) vs oracle and tanh
+# ---------------------------------------------------------------------------
+
+# QP-optimal 4-state bipolar tanh table (max pointwise error < 0.019 on
+# the clamp region; the binary Brown–Card labels are the nearby vertex).
+W4 = jnp.array([0.02741, 0.0, 1.0, 0.97259], jnp.float32)
+
+
+def test_smurf_act_matches_ref():
+    v = jnp.asarray(RNG.normal(0, 2, (8, 50)), jnp.float32)
+    got = np.asarray(smurf_act(v, W4, r=2.0))
+    want = np.asarray(ref.smurf_act_ref(v, W4, 2.0))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@given(st.floats(-1.9, 1.9), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_smurf_act_tracks_tanh(v, salt):
+    vv = jnp.full((1, 8), jnp.float32(v + salt * 0.0))
+    y = float(np.asarray(smurf_act(vv, W4, r=2.0))[0, 0])
+    assert abs(y - np.tanh(v)) < 0.025, (v, y, np.tanh(v))
+
+
+def test_smurf_act_odd_symmetry():
+    v = jnp.asarray([[0.5, 1.0, 1.5]], jnp.float32)
+    y_pos = np.asarray(smurf_act(v, W4, r=2.0))
+    y_neg = np.asarray(smurf_act(-v, W4, r=2.0))
+    np.testing.assert_allclose(y_pos, -y_neg, atol=1e-6)
+
+
+def test_smurf_act_differentiable():
+    # The L2 trainer differentiates through the kernel.
+    def scalar(v):
+        return jnp.sum(smurf_act(v, W4, r=2.0))
+
+    g = jax.grad(scalar)(jnp.full((2, 3), 0.5, jnp.float32))
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert float(jnp.min(g)) > 0.0, "tanh-like slope must be positive at 0.5"

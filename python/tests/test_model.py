@@ -1,0 +1,69 @@
+"""L2 model tests: shapes, loss, gradients, quick training smoke, data."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import data, model, train
+
+
+def test_forward_shapes():
+    params = model.init_params(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, 1, 28, 28), jnp.float32)
+    for act in ("tanh", "smurf"):
+        logits = model.forward(params, x, act)
+        assert logits.shape == (4, 10), act
+
+
+def test_loss_finite_and_grads_flow():
+    params = model.init_params(jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (8, 1, 28, 28)), jnp.float32)
+    y = jnp.asarray(np.arange(8) % 10, jnp.int32)
+    for act in ("tanh", "smurf"):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, x, y, act)
+        assert np.isfinite(float(loss)), act
+        for k, g in grads.items():
+            assert np.all(np.isfinite(np.asarray(g))), (act, k)
+        # conv1 must receive gradient through 4 activation layers.
+        assert float(jnp.max(jnp.abs(grads["conv1_w"]))) > 0, act
+
+
+def test_smurf_and_tanh_forward_agree_closely():
+    # The SMURF surrogate is a tanh approximation (MAE < 0.01 per unit);
+    # logits should be close for moderate weights.
+    params = model.init_params(jax.random.PRNGKey(2))
+    x = jnp.asarray(np.random.default_rng(1).uniform(0, 1, (4, 1, 28, 28)), jnp.float32)
+    lt = np.asarray(model.forward(params, x, "tanh"))
+    ls = np.asarray(model.forward(params, x, "smurf"))
+    assert np.max(np.abs(lt - ls)) < 0.5, np.max(np.abs(lt - ls))
+    # And the argmax rarely moves on random nets.
+    assert (np.argmax(lt, 1) == np.argmax(ls, 1)).mean() >= 0.75
+
+
+def test_data_generator_balanced_and_bounded():
+    x, y = data.generate(50, seed=5)
+    assert x.shape == (50, 1, 28, 28)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() == 5 and counts.max() == 5
+
+
+def test_one_epoch_reduces_loss():
+    _, hist = train.train(
+        n_train=300, n_test=100, epochs=2, batch=32, activation="tanh", log=lambda *_: None
+    )
+    assert hist["epoch_loss"][-1] < hist["epoch_loss"][0]
+    assert 0.0 <= hist["test_accuracy"] <= 1.0
+
+
+def test_params_json_roundtrip_format():
+    params = model.init_params(jax.random.PRNGKey(3))
+    import json
+
+    j = json.loads(train.params_to_json(params))
+    assert set(j) == {
+        "conv1_w", "conv1_b", "conv2_w", "conv2_b",
+        "fc1_w", "fc1_b", "fc2_w", "fc2_b", "fc3_w", "fc3_b",
+    }
+    assert len(j["conv1_w"]) == 6 * 1 * 5 * 5
+    assert len(j["fc3_b"]) == 10

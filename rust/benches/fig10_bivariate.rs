@@ -1,0 +1,97 @@
+//! Fig. 10: SMURF approximating the three bivariate targets at 64-bit
+//! streams — (a) Euclidean distance, (b) the HT kernel sin(x₁)cos(x₂),
+//! (c) bivariate softmax.
+//!
+//! Paper anchors: MAE ≈ 0.032, 0.032 and 0.014 respectively (softmax is
+//! smoother, hence smaller error).
+
+use smurf::prelude::*;
+use smurf::smurf::sim::{BitLevelSmurf, EntropyMode};
+
+fn surface_mae(sim: &BitLevelSmurf, f: &TargetFn, len: usize, grid: usize, trials: usize) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0;
+    for i in 0..grid {
+        for j in 0..grid {
+            let p = [i as f64 / (grid - 1) as f64, j as f64 / (grid - 1) as f64];
+            total += sim.abs_error(&p, f.eval(&p), len, trials, 777 + (i * grid + j) as u64);
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+fn main() {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let cases = [
+        (functions::euclidean2(), 0.032),
+        (functions::sincos(), 0.032),
+        (functions::softmax2(), 0.014),
+    ];
+    println!("=== Fig. 10: bivariate surfaces at L=64 ===\n");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>8}",
+        "function", "analytic", "MAE@64", "paper", "shape"
+    );
+    let mut results = Vec::new();
+    for (f, paper) in &cases {
+        let res = synthesize(&cfg, f, &SynthOptions::default());
+        // Sobol (low-discrepancy) CPT sampling — the configuration that
+        // reaches the paper's 64-bit accuracy (§II-B mentions Sobol
+        // θ-gates explicitly; see EXPERIMENTS.md for the noise-floor
+        // analysis that makes it necessary).
+        let sim = BitLevelSmurf::new(
+            cfg.clone(),
+            res.smurf.coefficients(),
+            EntropyMode::SobolCpt,
+        );
+        let mae = surface_mae(&sim, f, 64, 9, 16);
+        let ok = mae < paper * 2.5;
+        println!(
+            "{:<12} {:>10.4} {:>10.4} {:>10.3} {:>8}",
+            f.name(),
+            res.mae,
+            mae,
+            paper,
+            if ok { "OK" } else { "OFF" }
+        );
+        results.push((f.name().to_string(), mae, ok));
+    }
+    // The paper's qualitative finding: softmax2 (smoothest) is the most
+    // accurate of the three.
+    let softmax_mae = results[2].1;
+    assert!(
+        softmax_mae <= results[0].1 + 0.01 && softmax_mae <= results[1].1 + 0.01,
+        "softmax should be the smoothest/most accurate surface"
+    );
+    assert!(results.iter().all(|r| r.2), "some surface error is out of regime");
+
+    // Ablation: entropy wiring (the LFSR vs LDS trade, §II-B).
+    println!("\n--- ablation: entropy mode vs MAE@64 ---");
+    println!("{:<12} {:>12} {:>12} {:>12}", "function", "SharedLfsr", "Xorshift", "SobolCpt");
+    for (f, _) in &cases {
+        let res = synthesize(&cfg, f, &SynthOptions::default());
+        let mut row = format!("{:<12}", f.name());
+        for mode in [
+            EntropyMode::SharedLfsr,
+            EntropyMode::IndependentXorshift,
+            EntropyMode::SobolCpt,
+        ] {
+            let sim = BitLevelSmurf::new(cfg.clone(), res.smurf.coefficients(), mode);
+            row += &format!(" {:>12.4}", surface_mae(&sim, f, 64, 9, 8));
+        }
+        println!("{row}");
+    }
+
+    // Sample surface print (euclidean2) for plotting.
+    println!("\n--- euclidean2 surface (analytic), 9×9 ---");
+    let res = synthesize(&cfg, &functions::euclidean2(), &SynthOptions::default());
+    for i in 0..9 {
+        for j in 0..9 {
+            let p = [i as f64 / 8.0, j as f64 / 8.0];
+            print!("{:6.3} ", res.smurf.eval(&p));
+        }
+        println!();
+    }
+    println!("\nfig10 OK");
+}

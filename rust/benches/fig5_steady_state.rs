@@ -1,0 +1,73 @@
+//! Fig. 5: steady-state probabilities of 2-, 3-, 4- and 5-state chain
+//! FSMs as a function of the input probability — the analytic curves
+//! (Eq. 4) cross-validated against long-run empirical occupancy of the
+//! bit-level chain.
+
+use smurf::fsm::chain::ChainFsm;
+use smurf::fsm::steady::steady_state;
+use smurf::util::prng::Pcg;
+
+fn main() {
+    // Analytic curves, printed as plot-ready series.
+    for n in [2usize, 3, 4, 5] {
+        println!("=== Fig. 5: N={n} — steady-state probabilities π_i(P_x) ===");
+        print!("{:>6}", "P_x");
+        for i in 0..n {
+            print!(" {:>9}", format!("pi_{i}"));
+        }
+        println!();
+        for k in 0..=20 {
+            let p = k as f64 / 20.0;
+            let pi = steady_state(n, p);
+            print!("{:>6.2}", p);
+            for v in &pi {
+                print!(" {:>9.5}", v);
+            }
+            println!();
+        }
+        println!();
+    }
+
+    // Empirical cross-validation at a few interior points.
+    println!("--- empirical occupancy vs analytic (2M cycles) ---");
+    println!("{:>3} {:>6} {:>12} {:>12}", "N", "P_x", "max |Δ|", "verdict");
+    for n in [2usize, 3, 4, 5] {
+        for &p in &[0.25, 0.5, 0.75] {
+            let mut fsm = ChainFsm::centered(n);
+            let mut rng = Pcg::new((n * 1000) as u64 + (p * 100.0) as u64);
+            let cycles = 2_000_000u64;
+            let mut occ = vec![0u64; n];
+            for _ in 0..1000 {
+                fsm.step(rng.uniform() < p);
+            }
+            for _ in 0..cycles {
+                occ[fsm.step(rng.uniform() < p)] += 1;
+            }
+            let pi = steady_state(n, p);
+            let max_d = occ
+                .iter()
+                .zip(&pi)
+                .map(|(&c, &a)| (c as f64 / cycles as f64 - a).abs())
+                .fold(0.0f64, f64::max);
+            println!(
+                "{:>3} {:>6.2} {:>12.5} {:>12}",
+                n,
+                p,
+                max_d,
+                if max_d < 0.005 { "OK" } else { "DEVIATES" }
+            );
+            assert!(max_d < 0.005, "N={n} p={p}: empirical deviates by {max_d}");
+        }
+    }
+    println!("\nFig. 5 shape checks: 2-state is linear; middle states are humps.");
+    let pi2 = steady_state(2, 0.3);
+    assert!((pi2[1] - 0.3).abs() < 1e-12);
+    for n in [3, 4, 5] {
+        for mid in 1..n - 1 {
+            assert_eq!(steady_state(n, 0.0)[mid], 0.0);
+            assert_eq!(steady_state(n, 1.0)[mid], 0.0);
+            assert!(steady_state(n, 0.5)[mid] > 0.0);
+        }
+    }
+    println!("fig5 OK");
+}

@@ -1,0 +1,122 @@
+//! §Perf: end-to-end performance of the serving stack.
+//!
+//! Measures, with wall-clock timing (criterion is not vendored in this
+//! offline environment — methodology: warmup + N timed iterations,
+//! median-of-runs):
+//!
+//! 1. bit-level simulator cycle rate (the L3 hot loop),
+//! 2. analytic evaluator throughput (scalar and batched),
+//! 3. XLA kernel throughput (AOT Pallas path, batch 1024),
+//! 4. coordinator end-to-end request throughput + latency percentiles,
+//! 5. SC-PwMM MAC rate (the CNN hot path).
+
+use smurf::coordinator::{Engine, EvalServer, ServerConfig};
+use smurf::nn::sc_ops::{ScContext, ScMode};
+use smurf::prelude::*;
+use smurf::runtime::default_artifacts_dir;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn timed<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<44} {:>12.3} us/iter", per * 1e6);
+    per
+}
+
+fn main() {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let approx = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+    println!("=== §Perf: serving-stack microbenchmarks ===\n");
+
+    // 1. Bit-level simulator.
+    let p = [0.3, 0.4];
+    let per64 = timed("bitlevel eval L=64 (SharedLfsr)", 20_000, || {
+        std::hint::black_box(approx.eval_bitstream(&p, 64, 42));
+    });
+    println!("{:<44} {:>12.1} Mcycles/s", "  → simulated clock rate", 64.0 / per64 / 1e6);
+    timed("bitlevel eval L=1024", 2_000, || {
+        std::hint::black_box(approx.eval_bitstream(&p, 1024, 42));
+    });
+
+    // 2. Analytic evaluator.
+    let per_a = timed("analytic eval (Eq. 21, M=2 N=4)", 200_000, || {
+        std::hint::black_box(approx.eval_analytic(&p));
+    });
+    println!("{:<44} {:>12.2} Meval/s", "  → analytic throughput", 1.0 / per_a / 1e6);
+    let batch: Vec<Vec<f64>> = (0..1024)
+        .map(|i| vec![(i % 32) as f64 / 31.0, (i / 32) as f64 / 31.0])
+        .collect();
+    timed("analytic eval_batch (1024 points)", 500, || {
+        std::hint::black_box(approx.analytic().eval_batch(&batch));
+    });
+
+    // 3. XLA kernel (AOT Pallas) — measured through the coordinator's
+    //    dedicated owner thread, as served in production.
+    let funcs = vec![SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64)];
+    let server = Arc::new(EvalServer::start(
+        funcs,
+        Some(default_artifacts_dir()),
+        ServerConfig::default(),
+    ));
+    let points: Vec<Vec<f64>> = batch.clone();
+    let r = server.eval_sync("euclidean2", points.clone(), Engine::Xla, 64);
+    if r.is_ok() {
+        timed("XLA smurf_eval batch-1024 (via coordinator)", 200, || {
+            let r = server.eval_sync("euclidean2", points.clone(), Engine::Xla, 64);
+            assert!(r.is_ok());
+        });
+    } else {
+        println!("XLA path skipped: {:?}", r.error);
+    }
+
+    // 4. Coordinator end-to-end under concurrent load.
+    let n_clients = 8;
+    let per_client = 400;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let x = ((c * 37 + i) % 101) as f64 / 100.0;
+                let r = s.eval_sync("euclidean2", vec![vec![x, 1.0 - x]], Engine::Analytic, 64);
+                assert!(r.is_ok());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let total = (n_clients * per_client) as f64;
+    println!(
+        "{:<44} {:>12.0} req/s",
+        "coordinator e2e (8 clients, sync)",
+        total / dt
+    );
+    println!("\n{}", server.metrics().report());
+
+    // 5. SC-PwMM MAC rate (CNN hot path).
+    let mut ctx = ScContext::new(128, ScMode::Binomial, 5);
+    let xs: Vec<f32> = (0..400).map(|i| ((i % 13) as f32 / 13.0) * 2.0 - 1.0).collect();
+    let ws: Vec<f32> = (0..400).map(|i| ((i % 7) as f32 / 7.0) * 2.0 - 1.0).collect();
+    let per_dot = timed("SC-PwMM dot-400 (binomial, L=128)", 2_000, || {
+        std::hint::black_box(ctx.dot_bipolar(&xs, &ws));
+    });
+    println!(
+        "{:<44} {:>12.2} MMAC/s",
+        "  → SC MAC rate",
+        400.0 / per_dot / 1e6
+    );
+
+    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    println!("\nperf_serve done");
+}

@@ -1,0 +1,86 @@
+//! Table VI: hardware metrics (area, power, area·power) of SMURF vs the
+//! Taylor-series pipeline and the LUT, from the shared SMIC-65nm-like
+//! cell library, accuracy-equalized per §IV-C (MAE ≈ 0.015).
+
+use smurf::baselines::lut::Lut;
+use smurf::baselines::taylor::TaylorPoly;
+use smurf::hw::{lut_design, smurf_design, taylor_design};
+use smurf::prelude::*;
+
+fn main() {
+    let f = functions::euclidean2();
+
+    // Accuracy equalization (§IV-C): all three schemes near MAE 0.015.
+    let cfg = SmurfConfig::uniform(2, 4);
+    let approx = SmurfApproximator::synthesize(&cfg, &f, 256);
+    let taylor = TaylorPoly::expand(&f, &[0.5, 0.5], 3);
+    let lut = Lut::build(&f, 8, 16);
+    println!("accuracy equalization (target ≈ 0.015):");
+    println!("  SMURF analytic MAE {:.4} (+ bitstream noise @256b ≈ 0.02)", approx.synth_mae);
+    println!("  Taylor cubic 16-bit MAE {:.4}", taylor.mae_vs(&f, 33, Some(14)));
+    println!("  LUT 2×8b→16b MAE {:.4}\n", lut.mae_vs(&f, 65));
+
+    let s = smurf_design(&cfg);
+    let t = taylor_design(&taylor);
+    let l = lut_design(&lut);
+    print!("{}", s.table());
+    print!("{}", t.table());
+    print!("{}", l.table());
+
+    let (st, tt, lt) = (s.total(), t.total(), l.total());
+    println!("\n=== Table VI ===");
+    println!(
+        "{:<8} {:>14} {:>10} {:>18}",
+        "method", "area/um^2", "power/mW", "area*power"
+    );
+    for (name, c, paper_area, paper_pow) in [
+        ("SMURF", st, 5294.72, 0.51),
+        ("Taylor", tt, 32941.44, 3.53),
+        ("LUT", lt, 238176.38, 0.10),
+    ] {
+        println!(
+            "{:<8} {:>14.2} {:>10.3} {:>18.2}   (paper: {:.2} um², {:.2} mW)",
+            name,
+            c.area_um2,
+            c.power_mw,
+            c.area_power(),
+            paper_area,
+            paper_pow
+        );
+    }
+
+    println!("\nheadline ratios:");
+    println!(
+        "  SMURF/Taylor area  = {:>6.2}%   (paper 16.07%)",
+        100.0 * st.area_um2 / tt.area_um2
+    );
+    println!(
+        "  SMURF/Taylor power = {:>6.2}%   (paper 14.45%)",
+        100.0 * st.power_mw / tt.power_mw
+    );
+    println!(
+        "  SMURF/LUT area     = {:>6.2}%   (paper 2.22%)",
+        100.0 * st.area_um2 / lt.area_um2
+    );
+    println!(
+        "  SMURF/Taylor AP    = {:>6.2}%   (paper 2.32%)",
+        100.0 * st.area_power() / tt.area_power()
+    );
+    println!(
+        "  SMURF/LUT AP       = {:>6.2}%   (paper 11.34%)",
+        100.0 * st.area_power() / lt.area_power()
+    );
+
+    // Ablation: how SMURF hardware scales with radix and arity.
+    println!("\n--- ablation: SMURF cost vs configuration ---");
+    println!("{:<16} {:>12} {:>10}", "config", "area/um^2", "power/mW");
+    for (m, n) in [(1, 4), (2, 3), (2, 4), (2, 8), (3, 4), (4, 4)] {
+        let d = smurf_design(&SmurfConfig::uniform(m, n)).total();
+        println!(
+            "{:<16} {:>12.2} {:>10.3}",
+            format!("M={m}, N={n}"),
+            d.area_um2,
+            d.power_mw
+        );
+    }
+}

@@ -1,0 +1,157 @@
+//! Bernstein-polynomial stochastic logic (paper ref [12], Qian–Riedel).
+//!
+//! The classic SC generalization for *univariate* functions: a degree-n
+//! Bernstein polynomial `Σ_k b_k B_{k,n}(x)` is computed stochastically by
+//! feeding n independent copies of the x bitstream into an adder tree and
+//! using the bit-count to select `b_k` from a coefficient MUX — precisely
+//! a CPT-gate whose select is a *binomial* state rather than SMURF's
+//! Markov state. Included as the second SC baseline and for the ablation
+//! bench (Bernstein-vs-SMURF coefficient count at equal accuracy).
+
+use crate::sc::rng::StreamRng;
+use crate::sc::sng::ThetaGate;
+use crate::synth::functions::TargetFn;
+use crate::synth::qp::solve_box_qp;
+use crate::synth::quadrature::gauss_legendre_unit;
+use crate::util::linalg::Mat;
+
+/// Bernstein basis value `B_{k,n}(x) = C(n,k) x^k (1-x)^{n-k}`.
+pub fn bernstein_basis(n: usize, k: usize, x: f64) -> f64 {
+    binom(n, k) * x.powi(k as i32) * (1.0 - x).powi((n - k) as i32)
+}
+
+fn binom(n: usize, k: usize) -> f64 {
+    let k = k.min(n - k.min(n));
+    let mut r = 1.0;
+    for i in 0..k {
+        r *= (n - i) as f64 / (i + 1) as f64;
+    }
+    r
+}
+
+/// A synthesized Bernstein SC generator for a univariate target.
+#[derive(Clone, Debug)]
+pub struct BernsteinSc {
+    /// Degree n (uses n independent input streams).
+    pub degree: usize,
+    /// Coefficients b_0 … b_n, each in [0,1] (they are MUX θ-gate inputs).
+    pub coeffs: Vec<f64>,
+}
+
+impl BernsteinSc {
+    /// L2-optimal coefficients in the box [0,1]^{n+1} — same QP machinery
+    /// as SMURF synthesis, with the Bernstein Gram matrix.
+    pub fn synthesize(f: &TargetFn, degree: usize) -> Self {
+        assert_eq!(f.arity(), 1, "Bernstein baseline is univariate");
+        let n = degree;
+        let (xs, ws) = gauss_legendre_unit(64);
+        let dim = n + 1;
+        let mut h = Mat::zeros(dim, dim);
+        let mut c = vec![0.0; dim];
+        for (&x, &w) in xs.iter().zip(&ws) {
+            let basis: Vec<f64> = (0..dim).map(|k| bernstein_basis(n, k, x)).collect();
+            let t = f.eval(&[x]);
+            for a in 0..dim {
+                c[a] -= w * t * basis[a];
+                for b in 0..dim {
+                    h.a[a * dim + b] += w * basis[a] * basis[b];
+                }
+            }
+        }
+        let (coeffs, _) = solve_box_qp(&h, &c, 50_000, 1e-12);
+        Self { degree: n, coeffs }
+    }
+
+    /// Analytic (expected) output.
+    pub fn eval_analytic(&self, x: f64) -> f64 {
+        (0..=self.degree)
+            .map(|k| self.coeffs[k] * bernstein_basis(self.degree, k, x))
+            .sum()
+    }
+
+    /// Bit-level simulation: n independent x-streams, bit-count select,
+    /// coefficient θ-gate bank (the ReSC architecture of [12]).
+    pub fn eval_bitstream(
+        &self,
+        x: f64,
+        len: usize,
+        rngs: &mut [Box<dyn StreamRng>],
+        coeff_rng: &mut dyn StreamRng,
+    ) -> f64 {
+        assert_eq!(rngs.len(), self.degree, "need n independent input streams");
+        let gate = ThetaGate::new(x);
+        let coeff_gates: Vec<ThetaGate> =
+            self.coeffs.iter().map(|&b| ThetaGate::new(b)).collect();
+        let mut ones = 0u64;
+        for _ in 0..len {
+            let k: usize = rngs.iter_mut().map(|r| gate.sample(r.next_u16()) as usize).sum();
+            ones += coeff_gates[k].sample(coeff_rng.next_u16()) as u64;
+        }
+        ones as f64 / len as f64
+    }
+
+    /// Grid MAE of the analytic curve.
+    pub fn mae_vs(&self, f: &TargetFn, grid: usize) -> f64 {
+        let mut total = 0.0;
+        for i in 0..grid {
+            let x = i as f64 / (grid - 1) as f64;
+            total += (self.eval_analytic(x) - f.eval(&[x])).abs();
+        }
+        total / grid as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::rng::XorShift64;
+    use crate::synth::functions;
+
+    #[test]
+    fn basis_partition_of_unity() {
+        for &x in &[0.0, 0.3, 0.7, 1.0] {
+            let s: f64 = (0..=5).map(|k| bernstein_basis(5, k, x)).sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn binom_values() {
+        assert_eq!(binom(5, 2), 10.0);
+        assert_eq!(binom(6, 0), 1.0);
+        assert_eq!(binom(6, 6), 1.0);
+    }
+
+    #[test]
+    fn synthesizes_tanh_accurately() {
+        let f = functions::tanh_bipolar(2.0);
+        let b = BernsteinSc::synthesize(&f, 6);
+        let mae = b.mae_vs(&f, 101);
+        assert!(mae < 0.02, "degree-6 Bernstein tanh MAE={mae}");
+        // Coefficients must be valid probabilities.
+        for &c in &b.coeffs {
+            assert!((-1e-9..=1.0 + 1e-9).contains(&c));
+        }
+    }
+
+    #[test]
+    fn higher_degree_is_at_least_as_good() {
+        let f = functions::sigmoid_bipolar(4.0);
+        let lo = BernsteinSc::synthesize(&f, 3).mae_vs(&f, 101);
+        let hi = BernsteinSc::synthesize(&f, 8).mae_vs(&f, 101);
+        assert!(hi <= lo + 1e-9, "hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn bitstream_converges_to_analytic() {
+        let f = functions::tanh_bipolar(2.0);
+        let b = BernsteinSc::synthesize(&f, 4);
+        let mut rngs: Vec<Box<dyn StreamRng>> = (0..4)
+            .map(|i| Box::new(XorShift64::new(1000 + i)) as Box<dyn StreamRng>)
+            .collect();
+        let mut crng = XorShift64::new(2000);
+        let x = 0.6;
+        let y = b.eval_bitstream(x, 100_000, &mut rngs, &mut crng);
+        assert!((y - b.eval_analytic(x)).abs() < 0.01, "y={y}");
+    }
+}

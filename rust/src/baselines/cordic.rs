@@ -1,0 +1,283 @@
+//! CORDIC baseline (paper §III-C Discussion, Table III).
+//!
+//! Fixed-point CORDIC engines for the univariate primitives the paper's
+//! Table III decomposes multivariate functions into:
+//! circular-rotation (sin/cos), circular-vectoring (√(x²+y²) — note the
+//! paper charges CORDIC 2 squarings + 1 sqrt for the Euclidean distance,
+//! we additionally provide the vectoring shortcut), hyperbolic-rotation
+//! (sinh/cosh → exp), and linear-vectoring (divide).
+//!
+//! Also here: the symbolic operation-count comparison that regenerates
+//! Table III programmatically from expression decompositions.
+
+/// Number of CORDIC iterations (bits of precision).
+pub const DEFAULT_ITERS: usize = 16;
+
+/// Circular-rotation CORDIC: returns (cos θ, sin θ) for θ in radians,
+/// |θ| ≤ ~1.74 (the CORDIC convergence range).
+pub fn sin_cos(theta: f64, iters: usize) -> (f64, f64) {
+    let mut x = 1.0;
+    let mut y = 0.0;
+    let mut z = theta;
+    for i in 0..iters {
+        let d = if z >= 0.0 { 1.0 } else { -1.0 };
+        let shift = 2f64.powi(-(i as i32));
+        let (xn, yn) = (x - d * y * shift, y + d * x * shift);
+        z -= d * (2f64.powi(-(i as i32))).atan();
+        x = xn;
+        y = yn;
+    }
+    let k = gain(iters);
+    (x / k, y / k)
+}
+
+/// Circular-vectoring CORDIC: returns (√(x²+y²), atan2(y,x)) for x > 0.
+pub fn vectoring(x0: f64, y0: f64, iters: usize) -> (f64, f64) {
+    let mut x = x0;
+    let mut y = y0;
+    let mut z = 0.0;
+    for i in 0..iters {
+        let d = if y >= 0.0 { -1.0 } else { 1.0 };
+        let shift = 2f64.powi(-(i as i32));
+        let (xn, yn) = (x - d * y * shift, y + d * x * shift);
+        z -= d * (2f64.powi(-(i as i32))).atan();
+        x = xn;
+        y = yn;
+    }
+    (x / gain(iters), z)
+}
+
+/// Hyperbolic-rotation CORDIC: returns (cosh θ, sinh θ), |θ| ≤ ~1.13.
+/// Iterations 4 and 13 are repeated per the classic convergence fix.
+pub fn cosh_sinh(theta: f64, iters: usize) -> (f64, f64) {
+    let mut x = 1.0;
+    let mut y = 0.0;
+    let mut z = theta;
+    let mut k = 1.0;
+    let mut i = 1; // hyperbolic mode starts at i=1
+    let mut repeated4 = false;
+    let mut repeated13 = false;
+    let mut count = 0;
+    while count < iters {
+        let d = if z >= 0.0 { 1.0 } else { -1.0 };
+        let shift = 2f64.powi(-(i as i32));
+        let (xn, yn) = (x + d * y * shift, y + d * x * shift);
+        z -= d * shift.atanh();
+        x = xn;
+        y = yn;
+        k *= (1.0 - shift * shift).sqrt();
+        count += 1;
+        // Repeat i = 4 and i = 13 once.
+        if i == 4 && !repeated4 {
+            repeated4 = true;
+        } else if i == 13 && !repeated13 {
+            repeated13 = true;
+        } else {
+            i += 1;
+        }
+    }
+    // The iteration scales the invariant x²−y² by k² = Π(1−2^{-2i}),
+    // so the true (cosh, sinh) are recovered by dividing by k.
+    (x / k, y / k)
+}
+
+/// exp(θ) = cosh θ + sinh θ for |θ| ≤ 1.13; extended by argument
+/// reduction exp(θ) = 2^m · exp(r).
+pub fn exp(theta: f64, iters: usize) -> f64 {
+    // Reduce into convergence range using ln 2 steps.
+    let m = (theta / std::f64::consts::LN_2).round();
+    let r = theta - m * std::f64::consts::LN_2;
+    let (c, s) = cosh_sinh(r, iters);
+    (c + s) * 2f64.powi(m as i32)
+}
+
+/// Linear-vectoring CORDIC division y/x for |y| < 2|x|.
+pub fn divide(y: f64, x: f64, iters: usize) -> f64 {
+    let mut yv = y;
+    let mut z = 0.0;
+    let mut t = 1.0;
+    for _ in 0..iters {
+        let d = if (yv >= 0.0) == (x >= 0.0) { 1.0 } else { -1.0 };
+        yv -= d * x * t;
+        z += d * t;
+        t *= 0.5;
+    }
+    z
+}
+
+/// sqrt via hyperbolic vectoring: √v = √((v+¼)² − (v−¼)²) — the standard
+/// CORDIC square-root trick.
+pub fn sqrt(v: f64, iters: usize) -> f64 {
+    if v <= 0.0 {
+        return 0.0;
+    }
+    // Normalize v into [0.25, 1) by even exponent shifts.
+    let mut m = 0i32;
+    let mut u = v;
+    while u >= 1.0 {
+        u /= 4.0;
+        m += 1;
+    }
+    while u < 0.25 {
+        u *= 4.0;
+        m -= 1;
+    }
+    let mut x = u + 0.25;
+    let mut y = u - 0.25;
+    let mut k = 1.0;
+    let mut i = 1;
+    let mut repeated4 = false;
+    let mut repeated13 = false;
+    let mut count = 0;
+    while count < iters {
+        let shift = 2f64.powi(-(i as i32));
+        let d = if y >= 0.0 { -1.0 } else { 1.0 };
+        let (xn, yn) = (x + d * y * shift, y + d * x * shift);
+        x = xn;
+        y = yn;
+        k *= (1.0 - shift * shift).sqrt();
+        count += 1;
+        if i == 4 && !repeated4 {
+            repeated4 = true;
+        } else if i == 13 && !repeated13 {
+            repeated13 = true;
+        } else {
+            i += 1;
+        }
+    }
+    (x / k) * 2f64.powi(m)
+}
+
+fn gain(iters: usize) -> f64 {
+    (0..iters).map(|i| (1.0 + 2f64.powi(-2 * (i as i32))).sqrt()).product()
+}
+
+// ---------------------------------------------------------------------------
+// Table III: symbolic operation counts
+// ---------------------------------------------------------------------------
+
+/// One row of the Table III comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpCount {
+    pub scheme: &'static str,
+    pub function: &'static str,
+    /// (operation name, count)
+    pub ops: Vec<(&'static str, usize)>,
+}
+
+impl OpCount {
+    /// Total number of distinct hardware evaluation units.
+    pub fn total_units(&self) -> usize {
+        self.ops.iter().map(|(_, c)| c).sum()
+    }
+}
+
+/// The CORDIC decompositions the paper's Table III lists.
+pub fn table3_cordic() -> Vec<OpCount> {
+    vec![
+        OpCount {
+            scheme: "CORDIC",
+            function: "sqrt(x1^2+x2^2)",
+            ops: vec![("square", 2), ("sqrt", 1)],
+        },
+        OpCount {
+            scheme: "CORDIC",
+            function: "sin(x1)cos(x2)",
+            ops: vec![("sin", 2), ("cos", 1), ("add", 1), ("multiply", 1)],
+        },
+        OpCount {
+            scheme: "CORDIC",
+            function: "exp(x1)/(exp(x1)+exp(x2))",
+            ops: vec![("exp", 2), ("add", 1), ("divide", 1)],
+        },
+    ]
+}
+
+/// SMURF needs exactly one generator per function (Table III bottom row).
+pub fn table3_smurf() -> Vec<OpCount> {
+    vec![
+        OpCount { scheme: "SMURF", function: "sqrt(x1^2+x2^2)", ops: vec![("SMURF", 1)] },
+        OpCount { scheme: "SMURF", function: "sin(x1)cos(x2)", ops: vec![("SMURF", 1)] },
+        OpCount {
+            scheme: "SMURF",
+            function: "exp(x1)/(exp(x1)+exp(x2))",
+            ops: vec![("SMURF", 1)],
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sin_cos_accuracy() {
+        for &t in &[0.0, 0.3, 0.7, 1.0, -0.5] {
+            let (c, s) = sin_cos(t, 24);
+            assert!((c - t.cos()).abs() < 1e-5, "cos({t})={c}");
+            assert!((s - t.sin()).abs() < 1e-5, "sin({t})={s}");
+        }
+    }
+
+    #[test]
+    fn vectoring_magnitude() {
+        let (r, a) = vectoring(0.3, 0.4, 24);
+        assert!((r - 0.5).abs() < 1e-5, "r={r}");
+        assert!((a - (0.4f64 / 0.3).atan()).abs() < 1e-5, "a={a}");
+    }
+
+    #[test]
+    fn exp_accuracy() {
+        for &t in &[0.0, 0.5, 1.0, -0.7, 2.3] {
+            let e = exp(t, 24);
+            assert!((e - t.exp()).abs() / t.exp() < 1e-5, "exp({t})={e}");
+        }
+    }
+
+    #[test]
+    fn divide_accuracy() {
+        assert!((divide(0.3, 0.8, 30) - 0.375).abs() < 1e-6);
+        assert!((divide(-0.5, 0.9, 30) + 0.5555555).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sqrt_accuracy() {
+        for &v in &[0.04, 0.25, 0.5, 0.9, 2.0, 16.0] {
+            let s = sqrt(v, 30);
+            assert!((s - v.sqrt()).abs() < 1e-4, "sqrt({v})={s} vs {}", v.sqrt());
+        }
+    }
+
+    #[test]
+    fn sqrt_edge_cases() {
+        assert_eq!(sqrt(0.0, 16), 0.0);
+        assert_eq!(sqrt(-1.0, 16), 0.0);
+    }
+
+    #[test]
+    fn table3_shape_matches_paper() {
+        let cordic = table3_cordic();
+        let smurf = table3_smurf();
+        assert_eq!(cordic.len(), 3);
+        assert_eq!(smurf.len(), 3);
+        // Paper's claim: SMURF uses 1 unit everywhere; CORDIC at least 3.
+        for row in &smurf {
+            assert_eq!(row.total_units(), 1);
+        }
+        for row in &cordic {
+            assert!(row.total_units() >= 3, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn euclid_via_cordic_pipeline() {
+        // The paper's decomposition: 2 squarings (via multiply) + 1 sqrt.
+        let (x1, x2): (f64, f64) = (0.6, 0.3);
+        let sq = x1 * x1 + x2 * x2;
+        let r = sqrt(sq, 30);
+        assert!((r - (x1 * x1 + x2 * x2).sqrt()).abs() < 1e-4);
+        // And the vectoring shortcut agrees.
+        let (rv, _) = vectoring(x1, x2, 30);
+        assert!((rv - r).abs() < 1e-4);
+    }
+}

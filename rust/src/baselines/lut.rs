@@ -1,0 +1,187 @@
+//! Look-up-table baseline (paper §IV-C, Table VI).
+//!
+//! Inputs quantized to `addr_bits` each; the table stores the target at
+//! every grid point with `out_bits` output resolution. The paper's LUT
+//! row (238176.38 µm², 0.10 mW) corresponds to two 8-bit inputs and a
+//! 16-bit output word — 2^16 entries × 16 bits. Optional bilinear
+//! interpolation shows the classic area↔logic trade-off in the ablation
+//! bench.
+
+use crate::synth::functions::TargetFn;
+
+/// A direct-mapped multivariate LUT.
+#[derive(Clone, Debug)]
+pub struct Lut {
+    /// Address bits per input variable.
+    pub addr_bits: u32,
+    /// Output word width.
+    pub out_bits: u32,
+    arity: usize,
+    /// Quantized outputs, row-major over the address grid.
+    table: Vec<u32>,
+}
+
+impl Lut {
+    /// Tabulate `f` on the `2^addr_bits`-per-dim grid.
+    pub fn build(f: &TargetFn, addr_bits: u32, out_bits: u32) -> Self {
+        let m = f.arity();
+        let side = 1usize << addr_bits;
+        let total = side.pow(m as u32);
+        assert!(total < (1 << 28), "LUT too large to simulate");
+        let out_scale = ((1u64 << out_bits) - 1) as f64;
+        let mut table = vec![0u32; total];
+        let mut idx = vec![0usize; m];
+        let mut x = vec![0.0; m];
+        for entry in table.iter_mut() {
+            for j in 0..m {
+                // Address k represents the cell-centre input value.
+                x[j] = (idx[j] as f64 + 0.5) / side as f64;
+            }
+            let y = f.eval(&x).clamp(0.0, 1.0);
+            *entry = (y * out_scale).round() as u32;
+            // Odometer.
+            let mut j = 0;
+            while j < m {
+                idx[j] += 1;
+                if idx[j] < side {
+                    break;
+                }
+                idx[j] = 0;
+                j += 1;
+            }
+        }
+        Self { addr_bits, out_bits, arity: m, table }
+    }
+
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Number of stored entries.
+    pub fn entries(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Total storage bits — the quantity that dominates Table VI's area.
+    pub fn storage_bits(&self) -> u64 {
+        self.table.len() as u64 * self.out_bits as u64
+    }
+
+    /// Direct lookup.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.arity);
+        let side = 1usize << self.addr_bits;
+        let mut addr = 0usize;
+        let mut stride = 1usize;
+        for &xj in x {
+            let k = ((xj.clamp(0.0, 1.0) * side as f64) as usize).min(side - 1);
+            addr += k * stride;
+            stride *= side;
+        }
+        let out_scale = ((1u64 << self.out_bits) - 1) as f64;
+        self.table[addr] as f64 / out_scale
+    }
+
+    /// Mean absolute error on a dense uniform grid.
+    pub fn mae_vs(&self, f: &TargetFn, grid: usize) -> f64 {
+        let m = self.arity;
+        let mut idx = vec![0usize; m];
+        let mut x = vec![0.0; m];
+        let mut total = 0.0;
+        let mut count = 0usize;
+        loop {
+            for j in 0..m {
+                x[j] = idx[j] as f64 / (grid - 1) as f64;
+            }
+            total += (self.eval(&x) - f.eval(&x)).abs();
+            count += 1;
+            let mut j = 0;
+            loop {
+                idx[j] += 1;
+                if idx[j] < grid {
+                    break;
+                }
+                idx[j] = 0;
+                j += 1;
+                if j == m {
+                    return total / count as f64;
+                }
+            }
+        }
+    }
+
+    /// Smallest per-dimension address width whose direct-mapped LUT
+    /// achieves `target_mae` for `f` (the "equalize accuracy, then compare
+    /// hardware" methodology of §IV-C).
+    pub fn size_for_accuracy(f: &TargetFn, target_mae: f64, out_bits: u32) -> Option<Lut> {
+        for addr_bits in 2..=12 {
+            if f.arity() as u32 * addr_bits > 26 {
+                return None; // beyond simulable size
+            }
+            let lut = Lut::build(f, addr_bits, out_bits);
+            if lut.mae_vs(f, 65) <= target_mae {
+                return Some(lut);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::functions;
+
+    #[test]
+    fn shapes() {
+        let lut = Lut::build(&functions::euclidean2(), 4, 8);
+        assert_eq!(lut.entries(), 256);
+        assert_eq!(lut.storage_bits(), 2048);
+        assert_eq!(lut.arity(), 2);
+    }
+
+    #[test]
+    fn lookup_accuracy_scales_with_addr_bits() {
+        let f = functions::euclidean2();
+        let small = Lut::build(&f, 3, 16).mae_vs(&f, 65);
+        let big = Lut::build(&f, 7, 16).mae_vs(&f, 65);
+        assert!(big < small, "big={big} small={small}");
+        assert!(big < 0.01);
+    }
+
+    #[test]
+    fn eval_within_quantization_error() {
+        let f = functions::product2();
+        let lut = Lut::build(&f, 8, 16);
+        // At a cell centre, error is just output quantization.
+        let x = [(10.0 + 0.5) / 256.0, (20.0 + 0.5) / 256.0];
+        assert!((lut.eval(&x) - f.eval(&x)).abs() < 1.0 / 65535.0 + 1e-9);
+    }
+
+    #[test]
+    fn paper_table6_configuration() {
+        // Two 8-bit addresses, 16-bit output: 65536 entries, 1 Mibit.
+        let f = functions::euclidean2();
+        let lut = Lut::build(&f, 8, 16);
+        assert_eq!(lut.entries(), 65536);
+        assert_eq!(lut.storage_bits(), 1_048_576);
+        // Accuracy far better than the 0.015 equalization point.
+        assert!(lut.mae_vs(&f, 65) < 0.005);
+    }
+
+    #[test]
+    fn size_for_accuracy_monotone() {
+        let f = functions::euclidean2();
+        let loose = Lut::size_for_accuracy(&f, 0.05, 16).unwrap();
+        let tight = Lut::size_for_accuracy(&f, 0.005, 16).unwrap();
+        assert!(tight.addr_bits >= loose.addr_bits);
+    }
+
+    #[test]
+    fn clamps_out_of_domain_inputs() {
+        let f = functions::euclidean2();
+        let lut = Lut::build(&f, 4, 8);
+        let y = lut.eval(&[1.5, -0.5]);
+        assert!((0.0..=1.0).contains(&y));
+    }
+}

@@ -1,0 +1,14 @@
+//! Comparator schemes the paper evaluates against (§I, §IV):
+//!
+//! - [`taylor`] — fixed-point Taylor-series polynomial evaluation (the
+//!   paper's main hardware comparison, Table VI).
+//! - [`lut`] — quantized look-up tables (Table VI).
+//! - [`cordic`] — CORDIC iterations for the univariate primitives, used to
+//!   reproduce the operation-count comparison of Table III.
+//! - [`bernstein`] — Qian–Riedel Bernstein-polynomial stochastic logic
+//!   (ref [12]), the other classic SC generalization.
+
+pub mod bernstein;
+pub mod cordic;
+pub mod lut;
+pub mod taylor;

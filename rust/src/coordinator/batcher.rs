@@ -1,0 +1,187 @@
+//! Dynamic batcher: size + deadline triggered batch formation.
+//!
+//! Requests arrive on an MPSC channel; the batcher thread accumulates
+//! them per (function, engine) key and flushes a batch when either
+//! `max_batch` requests are waiting or the oldest request has waited
+//! `max_wait`. This is the classic serving-router batching policy
+//! (vLLM/Orca): bounded latency, amortized execution.
+
+use super::request::{Engine, EvalRequest};
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // 300 µs deadline: §Perf found the 2 ms default dominated
+        // end-to-end latency for synchronous clients (queue p50 ≈ max_wait)
+        // while batches saturated at the client count anyway — the lower
+        // deadline tripled closed-loop throughput at equal batch shapes.
+        Self { max_batch: 64, max_wait: Duration::from_micros(300) }
+    }
+}
+
+/// A formed batch ready for a worker.
+pub struct Batch {
+    pub key: (String, Engine),
+    pub requests: Vec<EvalRequest>,
+    pub formed_at: Instant,
+}
+
+/// Run the batching loop until the input channel closes. Formed batches
+/// are sent to `out` (consumed by the worker pool).
+pub fn run_batcher(rx: Receiver<EvalRequest>, out: Sender<Batch>, policy: BatchPolicy) {
+    let mut pending: HashMap<(String, Engine), Vec<EvalRequest>> = HashMap::new();
+    let mut oldest: HashMap<(String, Engine), Instant> = HashMap::new();
+    loop {
+        // Compute the nearest deadline over all pending groups.
+        let now = Instant::now();
+        let next_deadline = oldest
+            .values()
+            .map(|&t| t + policy.max_wait)
+            .min()
+            .unwrap_or(now + Duration::from_millis(50));
+        let timeout = next_deadline.saturating_duration_since(now);
+
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                let key = (req.function.clone(), req.engine);
+                let group = pending.entry(key.clone()).or_default();
+                oldest.entry(key.clone()).or_insert_with(Instant::now);
+                group.push(req);
+                if group.len() >= policy.max_batch {
+                    flush(&mut pending, &mut oldest, &key, &out);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // Flush every group whose oldest member expired.
+                let now = Instant::now();
+                let expired: Vec<_> = oldest
+                    .iter()
+                    .filter(|(_, &t)| now >= t + policy.max_wait)
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                for key in expired {
+                    flush(&mut pending, &mut oldest, &key, &out);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // Drain everything and exit.
+                let keys: Vec<_> = pending.keys().cloned().collect();
+                for key in keys {
+                    flush(&mut pending, &mut oldest, &key, &out);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn flush(
+    pending: &mut HashMap<(String, Engine), Vec<EvalRequest>>,
+    oldest: &mut HashMap<(String, Engine), Instant>,
+    key: &(String, Engine),
+    out: &Sender<Batch>,
+) {
+    if let Some(reqs) = pending.remove(key) {
+        oldest.remove(key);
+        if !reqs.is_empty() {
+            // Receiver loss means shutdown; drop silently.
+            let _ = out.send(Batch {
+                key: key.clone(),
+                requests: reqs,
+                formed_at: Instant::now(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn mk_request(function: &str, reply: Sender<super::super::request::EvalResponse>) -> EvalRequest {
+        EvalRequest {
+            function: function.into(),
+            points: vec![vec![0.5, 0.5]],
+            engine: Engine::Analytic,
+            stream_len: 64,
+            enqueued: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn size_trigger_forms_full_batch() {
+        let (tx, rx) = channel();
+        let (btx, brx) = channel();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let (rtx, _rrx) = channel();
+        for _ in 0..4 {
+            tx.send(mk_request("f", rtx.clone())).unwrap();
+        }
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_trigger_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        let (btx, brx) = channel();
+        let policy = BatchPolicy { max_batch: 1000, max_wait: Duration::from_millis(5) };
+        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let (rtx, _rrx) = channel();
+        tx.send(mk_request("f", rtx.clone())).unwrap();
+        tx.send(mk_request("f", rtx.clone())).unwrap();
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests.len(), 2, "partial batch must flush on deadline");
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn groups_by_function() {
+        let (tx, rx) = channel();
+        let (btx, brx) = channel();
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(200) };
+        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let (rtx, _rrx) = channel();
+        tx.send(mk_request("f", rtx.clone())).unwrap();
+        tx.send(mk_request("g", rtx.clone())).unwrap();
+        tx.send(mk_request("f", rtx.clone())).unwrap();
+        // "f" reaches max_batch=2 first.
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.key.0, "f");
+        assert_eq!(batch.requests.len(), 2);
+        drop(tx);
+        // Remaining "g" flushes on drain.
+        let batch2 = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch2.key.0, "g");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let (tx, rx) = channel();
+        let (btx, brx) = channel();
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(100) };
+        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let (rtx, _rrx) = channel();
+        tx.send(mk_request("f", rtx.clone())).unwrap();
+        drop(tx); // close input
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        h.join().unwrap();
+    }
+}

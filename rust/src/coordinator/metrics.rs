@@ -1,0 +1,142 @@
+//! Service metrics: counters + latency histograms, merged across workers.
+
+use crate::util::stats::LatencyHistogram;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    points: u64,
+    batches: u64,
+    errors: u64,
+    queue: Option<LatencyHistogram>,
+    exec: Option<LatencyHistogram>,
+    e2e: Option<LatencyHistogram>,
+    started: Option<Instant>,
+}
+
+/// A point-in-time snapshot.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub points: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch_size: f64,
+    pub queue_p50_us: f64,
+    pub queue_p99_us: f64,
+    pub exec_p50_us: f64,
+    pub exec_p99_us: f64,
+    pub e2e_p50_us: f64,
+    pub e2e_p99_us: f64,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, queue_ns: u64, exec_ns: u64, e2e_ns: u64, points: u64, batch: bool) {
+        let mut m = self.inner.lock().unwrap();
+        if m.started.is_none() {
+            m.started = Some(Instant::now());
+        }
+        m.requests += 1;
+        m.points += points;
+        if batch {
+            m.batches += 1;
+        }
+        m.queue.get_or_insert_with(LatencyHistogram::new).record(queue_ns);
+        m.exec.get_or_insert_with(LatencyHistogram::new).record(exec_ns);
+        m.e2e.get_or_insert_with(LatencyHistogram::new).record(e2e_ns);
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let q = m.queue.clone().unwrap_or_default();
+        let x = m.exec.clone().unwrap_or_default();
+        let e = m.e2e.clone().unwrap_or_default();
+        let elapsed = m.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        Snapshot {
+            requests: m.requests,
+            points: m.points,
+            batches: m.batches,
+            errors: m.errors,
+            mean_batch_size: if m.batches == 0 {
+                0.0
+            } else {
+                m.requests as f64 / m.batches as f64
+            },
+            queue_p50_us: q.quantile_ns(0.5) as f64 / 1e3,
+            queue_p99_us: q.quantile_ns(0.99) as f64 / 1e3,
+            exec_p50_us: x.quantile_ns(0.5) as f64 / 1e3,
+            exec_p99_us: x.quantile_ns(0.99) as f64 / 1e3,
+            e2e_p50_us: e.quantile_ns(0.5) as f64 / 1e3,
+            e2e_p99_us: e.quantile_ns(0.99) as f64 / 1e3,
+            throughput_rps: if elapsed > 0.0 { m.requests as f64 / elapsed } else { 0.0 },
+        }
+    }
+}
+
+impl Snapshot {
+    /// Render a human-readable report block.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} points={} batches={} (mean batch {:.1}) errors={}\n\
+             queue p50/p99: {:.1}/{:.1} us | exec p50/p99: {:.1}/{:.1} us | \
+             e2e p50/p99: {:.1}/{:.1} us | throughput {:.0} req/s",
+            self.requests,
+            self.points,
+            self.batches,
+            self.mean_batch_size,
+            self.errors,
+            self.queue_p50_us,
+            self.queue_p99_us,
+            self.exec_p50_us,
+            self.exec_p99_us,
+            self.e2e_p50_us,
+            self.e2e_p99_us,
+            self.throughput_rps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record(1_000, 10_000, 12_000, 4, true);
+        m.record(2_000, 20_000, 25_000, 4, false);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.points, 8);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.errors, 1);
+        assert!(s.exec_p99_us >= s.exec_p50_us);
+        assert!(s.report().contains("requests=2"));
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_batch_size, 0.0);
+        assert_eq!(s.throughput_rps, 0.0);
+    }
+}

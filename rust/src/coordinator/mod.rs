@@ -1,0 +1,23 @@
+//! Evaluation service — the L3 serving layer.
+//!
+//! SMURF is a *function generator*: the natural serving shape is an
+//! evaluation service that accepts nonlinear-function evaluation requests
+//! and executes them on one of three engines: the bit-level hardware
+//! simulator, the analytic evaluator, or an AOT-compiled XLA executable
+//! (the L1 Pallas kernel lowered through L2 and loaded by [`crate::runtime`]).
+//!
+//! - [`request`] — typed requests/responses.
+//! - [`batcher`] — dynamic batching with size + deadline triggers
+//!   (vLLM-router-style): requests accumulate until `max_batch` or
+//!   `max_wait` elapses, then the batch is dispatched to a worker.
+//! - [`server`] — worker pool wiring it together over std threads +
+//!   channels (tokio is not vendored in this offline environment).
+//! - [`metrics`] — latency histograms + throughput counters.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use request::{EvalRequest, EvalResponse, Engine};
+pub use server::{EvalServer, ServerConfig};

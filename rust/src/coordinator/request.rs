@@ -1,0 +1,78 @@
+//! Request/response types for the evaluation service.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Which evaluation engine executes a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// Cycle-accurate bit-level simulator (hardware-faithful).
+    BitLevel,
+    /// Closed-form Eq. 21 evaluation (infinite-stream limit).
+    Analytic,
+    /// AOT-compiled XLA executable (L1 Pallas kernel through PJRT).
+    Xla,
+}
+
+/// One evaluation request: a point (or batch of points) for a named,
+/// already-synthesized function.
+#[derive(Debug)]
+pub struct EvalRequest {
+    /// Registered function name (e.g. "euclidean2").
+    pub function: String,
+    /// Input probability vectors, each of the function's arity.
+    pub points: Vec<Vec<f64>>,
+    pub engine: Engine,
+    /// Bitstream length for the bit-level engine.
+    pub stream_len: usize,
+    /// Enqueue timestamp (set by the server).
+    pub enqueued: Instant,
+    /// Completion channel.
+    pub reply: Sender<EvalResponse>,
+}
+
+/// Response with outputs and timing.
+#[derive(Clone, Debug)]
+pub struct EvalResponse {
+    pub outputs: Vec<f64>,
+    /// Queue wait before the batch formed.
+    pub queue_ns: u64,
+    /// Execution time inside the worker.
+    pub exec_ns: u64,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+    /// Error message if evaluation failed.
+    pub error: Option<String>,
+}
+
+impl EvalResponse {
+    pub fn failed(msg: impl Into<String>) -> Self {
+        Self { outputs: Vec::new(), queue_ns: 0, exec_ns: 0, batch_size: 0, error: Some(msg.into()) }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failed_response() {
+        let r = EvalResponse::failed("nope");
+        assert!(!r.is_ok());
+        assert_eq!(r.error.as_deref(), Some("nope"));
+    }
+
+    #[test]
+    fn engine_is_hashable() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(Engine::BitLevel);
+        s.insert(Engine::Analytic);
+        s.insert(Engine::Xla);
+        assert_eq!(s.len(), 3);
+    }
+}

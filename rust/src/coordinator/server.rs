@@ -1,0 +1,398 @@
+//! The evaluation server: function registry + batcher + worker pool.
+//!
+//! Architecture (std threads + channels; Python never on this path):
+//!
+//! ```text
+//! clients → submit() → [mpsc] → batcher thread → [mpsc] → N workers
+//!                                                     ↘ metrics
+//! ```
+//!
+//! Workers execute a whole batch on one engine: the bit-level simulator,
+//! the analytic evaluator, or — when `artifacts/smurf_eval.hlo.txt`
+//! exists — the AOT-compiled XLA kernel for supported configurations.
+
+use super::batcher::{run_batcher, Batch, BatchPolicy};
+use super::metrics::Metrics;
+use super::request::{Engine, EvalRequest, EvalResponse};
+use crate::runtime::Runtime;
+use crate::smurf::approximator::SmurfApproximator;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub policy: BatchPolicy,
+    /// Artifact name of the XLA smurf_eval kernel (batch-N, M=2, N=4).
+    pub xla_artifact: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
+            policy: BatchPolicy::default(),
+            xla_artifact: "smurf_eval.hlo.txt".into(),
+        }
+    }
+}
+
+/// A job for the dedicated XLA thread (the PJRT client is not `Send` in
+/// the `xla` crate, so a single owner thread serializes device access —
+/// the same single-queue model a real accelerator backend uses).
+struct XlaJob {
+    /// Row-major (batch, 2) f32 inputs, padded to the kernel batch.
+    xs: Vec<f32>,
+    /// 4×4 coefficient table.
+    w: Vec<f32>,
+    reply: Sender<Result<Vec<f32>, String>>,
+}
+
+/// Shared state between workers.
+struct Shared {
+    functions: HashMap<String, Arc<SmurfApproximator>>,
+    metrics: Metrics,
+    xla_tx: Option<Sender<XlaJob>>,
+}
+
+/// Owner loop for the PJRT runtime: creates the client *inside* the
+/// thread (the `xla` crate's handles are not `Send`), compiles the
+/// artifact once, then serves jobs until the channel closes.
+fn xla_owner_loop(artifacts_dir: std::path::PathBuf, artifact: String, rx: Receiver<XlaJob>) {
+    let exe = Runtime::cpu(&artifacts_dir)
+        .map_err(|e| e.to_string())
+        .and_then(|runtime| {
+            if runtime.has_artifact(&artifact) {
+                runtime.load(&artifact).map_err(|e| e.to_string())
+            } else {
+                Err(format!("artifact {artifact} missing (run `make artifacts`)"))
+            }
+        });
+    while let Ok(job) = rx.recv() {
+        let result = match &exe {
+            Ok(exe) => exe
+                .run_f32(&[(&[KERNEL_BATCH, 2], &job.xs), (&[4, 4], &job.w)])
+                .map(|mut out| out.remove(0))
+                .map_err(|e| e.to_string()),
+            Err(e) => Err(e.clone()),
+        };
+        let _ = job.reply.send(result);
+    }
+}
+
+/// Batch size the AOT kernel was lowered with (see python/compile/aot.py).
+const KERNEL_BATCH: usize = 1024;
+
+/// The running evaluation service.
+pub struct EvalServer {
+    tx: Option<Sender<EvalRequest>>,
+    shared: Arc<Shared>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl EvalServer {
+    /// Start the service with a set of synthesized functions.
+    /// `artifacts_dir` is optional: without it (or without artifacts) the
+    /// XLA engine reports an error response instead of failing at startup.
+    pub fn start(
+        functions: Vec<SmurfApproximator>,
+        artifacts_dir: Option<std::path::PathBuf>,
+        cfg: ServerConfig,
+    ) -> Self {
+        // Dedicated XLA owner thread (PJRT client is not Send).
+        let xla_tx = artifacts_dir.map(|dir| {
+            let (jtx, jrx) = channel::<XlaJob>();
+            let artifact = cfg.xla_artifact.clone();
+            std::thread::Builder::new()
+                .name("smurf-xla".into())
+                .spawn(move || xla_owner_loop(dir, artifact, jrx))
+                .expect("spawn xla owner");
+            jtx
+        });
+        let shared = Arc::new(Shared {
+            functions: functions
+                .into_iter()
+                .map(|f| (f.name().to_string(), Arc::new(f)))
+                .collect(),
+            metrics: Metrics::new(),
+            xla_tx,
+        });
+        let (tx, rx) = channel::<EvalRequest>();
+        let (btx, brx) = channel::<Batch>();
+        let policy = cfg.policy;
+        let batcher = std::thread::Builder::new()
+            .name("smurf-batcher".into())
+            .spawn(move || run_batcher(rx, btx, policy))
+            .expect("spawn batcher");
+        // Work-stealing via a shared locked receiver.
+        let brx = Arc::new(Mutex::new(brx));
+        let mut workers = Vec::new();
+        for i in 0..cfg.workers.max(1) {
+            let shared = shared.clone();
+            let brx = brx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("smurf-worker-{i}"))
+                    .spawn(move || worker_loop(shared, brx))
+                    .expect("spawn worker"),
+            );
+        }
+        Self { tx: Some(tx), shared, batcher: Some(batcher), workers }
+    }
+
+    /// Submit a request. Returns an error if the server is stopped.
+    pub fn submit(&self, mut req: EvalRequest) -> Result<(), String> {
+        req.enqueued = Instant::now();
+        self.tx
+            .as_ref()
+            .ok_or("server stopped")?
+            .send(req)
+            .map_err(|_| "server channel closed".to_string())
+    }
+
+    /// Convenience: synchronous single-request evaluation.
+    pub fn eval_sync(
+        &self,
+        function: &str,
+        points: Vec<Vec<f64>>,
+        engine: Engine,
+        stream_len: usize,
+    ) -> EvalResponse {
+        let (rtx, rrx) = channel();
+        let req = EvalRequest {
+            function: function.to_string(),
+            points,
+            engine,
+            stream_len,
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        if let Err(e) = self.submit(req) {
+            return EvalResponse::failed(e);
+        }
+        rrx.recv().unwrap_or_else(|_| EvalResponse::failed("worker dropped reply"))
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> super::metrics::Snapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Registered function names.
+    pub fn functions(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.shared.functions.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Graceful shutdown: close intake, join batcher and workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // closes the channel; batcher drains and exits
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, brx: Arc<Mutex<Receiver<Batch>>>) {
+    loop {
+        let batch = {
+            let guard = brx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(batch) = batch else { return };
+        execute_batch(&shared, batch);
+    }
+}
+
+fn execute_batch(shared: &Shared, batch: Batch) {
+    let (ref fname, engine) = batch.key;
+    let batch_size = batch.requests.len();
+    let Some(func) = shared.functions.get(fname).cloned() else {
+        for req in batch.requests {
+            shared.metrics.record_error();
+            let _ = req.reply.send(EvalResponse::failed(format!("unknown function {fname}")));
+        }
+        return;
+    };
+
+    // Flatten points across requests, execute once, scatter results.
+    let spans: Vec<usize> = batch.requests.iter().map(|r| r.points.len()).collect();
+    let all_points: Vec<&[f64]> = batch
+        .requests
+        .iter()
+        .flat_map(|r| r.points.iter().map(|p| p.as_slice()))
+        .collect();
+
+    let exec_start = Instant::now();
+    let result: Result<Vec<f64>, String> = match engine {
+        Engine::Analytic => Ok(all_points.iter().map(|p| func.eval_analytic(p)).collect()),
+        Engine::BitLevel => {
+            let len = batch.requests.first().map(|r| r.stream_len.max(1)).unwrap_or(64);
+            Ok(all_points
+                .iter()
+                .enumerate()
+                .map(|(i, p)| func.eval_bitstream(p, len, 0x5EED ^ i as u64))
+                .collect())
+        }
+        Engine::Xla => execute_xla(shared, &func, &all_points),
+    };
+    let exec_ns = exec_start.elapsed().as_nanos() as u64;
+
+    match result {
+        Ok(outputs) => {
+            let mut off = 0;
+            for (req, span) in batch.requests.into_iter().zip(spans) {
+                let queue_ns = batch
+                    .formed_at
+                    .saturating_duration_since(req.enqueued)
+                    .as_nanos() as u64;
+                let e2e_ns = req.enqueued.elapsed().as_nanos() as u64;
+                shared.metrics.record(queue_ns, exec_ns, e2e_ns, span as u64, off == 0);
+                let _ = req.reply.send(EvalResponse {
+                    outputs: outputs[off..off + span].to_vec(),
+                    queue_ns,
+                    exec_ns,
+                    batch_size,
+                    error: None,
+                });
+                off += span;
+            }
+        }
+        Err(e) => {
+            for req in batch.requests {
+                shared.metrics.record_error();
+                let _ = req.reply.send(EvalResponse::failed(e.clone()));
+            }
+        }
+    }
+}
+
+/// Execute a batch on the AOT XLA kernel via the owner thread. The
+/// shipped kernel is specialized to M=2/N=4 with a runtime coefficient
+/// table and a fixed batch of 1024 (padded).
+fn execute_xla(
+    shared: &Shared,
+    func: &SmurfApproximator,
+    points: &[&[f64]],
+) -> Result<Vec<f64>, String> {
+    let jtx = shared.xla_tx.as_ref().ok_or("XLA runtime not configured")?;
+    if func.config().num_vars() != 2 || func.config().radices() != [4, 4] {
+        return Err("XLA kernel is compiled for bivariate N=4 functions".into());
+    }
+    let w: Vec<f32> = func.coefficients().iter().map(|&x| x as f32).collect();
+    let mut outputs = Vec::with_capacity(points.len());
+    for chunk in points.chunks(KERNEL_BATCH) {
+        let mut xs = vec![0.0f32; KERNEL_BATCH * 2];
+        for (i, p) in chunk.iter().enumerate() {
+            xs[i * 2] = p[0] as f32;
+            xs[i * 2 + 1] = p[1] as f32;
+        }
+        let (rtx, rrx) = channel();
+        jtx.send(XlaJob { xs, w: w.clone(), reply: rtx })
+            .map_err(|_| "xla owner thread gone".to_string())?;
+        let out = rrx.recv().map_err(|_| "xla owner dropped reply".to_string())??;
+        outputs.extend(out[..chunk.len()].iter().map(|&y| y as f64));
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::smurf::config::SmurfConfig;
+    use crate::synth::functions;
+
+    fn test_server(workers: usize) -> EvalServer {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let funcs = vec![
+            SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64),
+            SmurfApproximator::synthesize(&cfg, &functions::product2(), 64),
+        ];
+        EvalServer::start(
+            funcs,
+            None,
+            ServerConfig {
+                workers,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+                xla_artifact: "smurf_eval.hlo.txt".into(),
+            },
+        )
+    }
+
+    #[test]
+    fn serves_analytic_requests() {
+        let server = test_server(2);
+        let resp = server.eval_sync("euclidean2", vec![vec![0.3, 0.4]], Engine::Analytic, 64);
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert!((resp.outputs[0] - 0.5).abs() < 0.05, "y={}", resp.outputs[0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_bitlevel_requests() {
+        let server = test_server(2);
+        let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::BitLevel, 256);
+        assert!(resp.is_ok());
+        assert!((resp.outputs[0] - 0.25).abs() < 0.2, "y={}", resp.outputs[0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_function_errors() {
+        let server = test_server(1);
+        let resp = server.eval_sync("nope", vec![vec![0.1, 0.1]], Engine::Analytic, 64);
+        assert!(!resp.is_ok());
+        assert_eq!(server.metrics().errors, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn xla_without_runtime_errors_cleanly() {
+        let server = test_server(1);
+        let resp = server.eval_sync("euclidean2", vec![vec![0.1, 0.1]], Engine::Xla, 64);
+        assert!(!resp.is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_load_is_batched() {
+        let server = Arc::new(test_server(4));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    let x = (t as f64 * 25.0 + i as f64) / 200.0;
+                    let r = s.eval_sync("euclidean2", vec![vec![x, x]], Engine::Analytic, 64);
+                    assert!(r.is_ok());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = server.metrics().clone();
+        assert_eq!(snap.requests, 200);
+        assert!(snap.mean_batch_size >= 1.0);
+        assert_eq!(snap.errors, 0);
+        Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn functions_listing() {
+        let server = test_server(1);
+        assert_eq!(server.functions(), vec!["euclidean2", "product2"]);
+        server.shutdown();
+    }
+}

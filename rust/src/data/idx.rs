@@ -1,0 +1,159 @@
+//! IDX (LeCun MNIST) file parser — used automatically when real MNIST is
+//! available via `MNIST_DIR`.
+
+use super::Dataset;
+use std::io::Read;
+use std::path::Path;
+
+/// Parse an IDX3 (images) file: magic 0x00000803, dims [n, rows, cols].
+pub fn parse_idx3(bytes: &[u8]) -> Result<(usize, usize, usize, Vec<u8>), String> {
+    if bytes.len() < 16 {
+        return Err("idx3 too short".into());
+    }
+    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    if magic != 0x0000_0803 {
+        return Err(format!("bad idx3 magic {magic:#x}"));
+    }
+    let n = u32::from_be_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let rows = u32::from_be_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let cols = u32::from_be_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let want = 16 + n * rows * cols;
+    if bytes.len() < want {
+        return Err(format!("idx3 truncated: {} < {want}", bytes.len()));
+    }
+    Ok((n, rows, cols, bytes[16..want].to_vec()))
+}
+
+/// Parse an IDX1 (labels) file: magic 0x00000801.
+pub fn parse_idx1(bytes: &[u8]) -> Result<Vec<u8>, String> {
+    if bytes.len() < 8 {
+        return Err("idx1 too short".into());
+    }
+    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    if magic != 0x0000_0801 {
+        return Err(format!("bad idx1 magic {magic:#x}"));
+    }
+    let n = u32::from_be_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    if bytes.len() < 8 + n {
+        return Err("idx1 truncated".into());
+    }
+    Ok(bytes[8..8 + n].to_vec())
+}
+
+fn read_file(path: &Path) -> Result<Vec<u8>, String> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?
+        .read_to_end(&mut buf)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    Ok(buf)
+}
+
+fn to_dataset(images: &[u8], labels: &[u8], rows: usize, cols: usize, limit: usize) -> Dataset {
+    assert_eq!(rows, 28);
+    assert_eq!(cols, 28);
+    let n = labels.len().min(limit);
+    Dataset {
+        images: images[..n * 784].iter().map(|&b| b as f32 / 255.0).collect(),
+        labels: labels[..n].to_vec(),
+        n,
+    }
+}
+
+/// Load `train-images-idx3-ubyte` / `train-labels-idx1-ubyte` /
+/// `t10k-…` from a directory.
+pub fn load_mnist_dir(dir: &str, n_train: usize, n_test: usize) -> Result<(Dataset, Dataset), String> {
+    let d = Path::new(dir);
+    let (tn, tr_r, tr_c, tr_img) = parse_idx3(&read_file(&d.join("train-images-idx3-ubyte"))?)?;
+    let tr_lbl = parse_idx1(&read_file(&d.join("train-labels-idx1-ubyte"))?)?;
+    let (sn, te_r, te_c, te_img) = parse_idx3(&read_file(&d.join("t10k-images-idx3-ubyte"))?)?;
+    let te_lbl = parse_idx1(&read_file(&d.join("t10k-labels-idx1-ubyte"))?)?;
+    if tn != tr_lbl.len() || sn != te_lbl.len() {
+        return Err("image/label count mismatch".into());
+    }
+    Ok((
+        to_dataset(&tr_img, &tr_lbl, tr_r, tr_c, n_train),
+        to_dataset(&te_img, &te_lbl, te_r, te_c, n_test),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_idx3(n: usize) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        v.extend_from_slice(&(n as u32).to_be_bytes());
+        v.extend_from_slice(&28u32.to_be_bytes());
+        v.extend_from_slice(&28u32.to_be_bytes());
+        v.extend(std::iter::repeat(128u8).take(n * 784));
+        v
+    }
+
+    fn make_idx1(labels: &[u8]) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        v.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        v.extend_from_slice(labels);
+        v
+    }
+
+    #[test]
+    fn roundtrip_idx3() {
+        let raw = make_idx3(3);
+        let (n, r, c, px) = parse_idx3(&raw).unwrap();
+        assert_eq!((n, r, c), (3, 28, 28));
+        assert_eq!(px.len(), 3 * 784);
+    }
+
+    #[test]
+    fn roundtrip_idx1() {
+        let raw = make_idx1(&[1, 2, 3]);
+        assert_eq!(parse_idx1(&raw).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut raw = make_idx3(1);
+        raw[3] = 0x99;
+        assert!(parse_idx3(&raw).is_err());
+        let mut raw1 = make_idx1(&[1]);
+        raw1[3] = 0x99;
+        assert!(parse_idx1(&raw1).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let raw = make_idx3(2);
+        assert!(parse_idx3(&raw[..100]).is_err());
+        let raw1 = make_idx1(&[1, 2, 3]);
+        assert!(parse_idx1(&raw1[..9]).is_err());
+    }
+
+    #[test]
+    fn dataset_conversion_normalizes() {
+        let raw = make_idx3(2);
+        let (_, r, c, px) = parse_idx3(&raw).unwrap();
+        let d = to_dataset(&px, &[4, 5], r, c, 10);
+        assert_eq!(d.n, 2);
+        assert!((d.images[0] - 128.0 / 255.0).abs() < 1e-6);
+        assert_eq!(d.labels, vec![4, 5]);
+    }
+
+    #[test]
+    fn load_mnist_dir_roundtrip() {
+        // Write a tiny fake MNIST directory and load it back.
+        let dir = std::env::temp_dir().join(format!("idx_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("train-images-idx3-ubyte"), make_idx3(5)).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), make_idx1(&[0, 1, 2, 3, 4])).unwrap();
+        std::fs::write(dir.join("t10k-images-idx3-ubyte"), make_idx3(2)).unwrap();
+        std::fs::write(dir.join("t10k-labels-idx1-ubyte"), make_idx1(&[5, 6])).unwrap();
+        let (tr, te) = load_mnist_dir(dir.to_str().unwrap(), 3, 2).unwrap();
+        assert_eq!(tr.n, 3);
+        assert_eq!(te.n, 2);
+        assert_eq!(te.labels, vec![5, 6]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,82 @@
+//! Datasets for the CNN experiments (paper §IV-B, Table IV).
+//!
+//! MNIST is not redistributable inside this offline environment, so
+//! [`synth_mnist`] procedurally renders a seeded, MNIST-shaped digit
+//! corpus (28×28 grayscale, 10 classes, stroke-based glyphs with affine +
+//! elastic jitter). When real MNIST IDX files are present (set
+//! `MNIST_DIR`), [`idx`] loads them instead — the experiment code prefers
+//! real data automatically. See DESIGN.md for why the substitution
+//! preserves Table IV's comparison.
+
+pub mod idx;
+pub mod synth_mnist;
+
+/// A labelled image dataset with MNIST geometry.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `[n, 28*28]` row-major pixels in `[0,1]`.
+    pub images: Vec<f32>,
+    /// `[n]` class labels `0..=9`.
+    pub labels: Vec<u8>,
+    pub n: usize,
+}
+
+impl Dataset {
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * 28 * 28..(i + 1) * 28 * 28]
+    }
+
+    /// Deterministic train/test split helper.
+    pub fn take(&self, start: usize, count: usize) -> Dataset {
+        let end = (start + count).min(self.n);
+        Dataset {
+            images: self.images[start * 784..end * 784].to_vec(),
+            labels: self.labels[start..end].to_vec(),
+            n: end - start,
+        }
+    }
+}
+
+/// Load the experiment corpus: real MNIST if `MNIST_DIR` points at the
+/// IDX files, else the synthetic corpus with the given seed.
+pub fn load_corpus(n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+    if let Ok(dir) = std::env::var("MNIST_DIR") {
+        if let Ok(pair) = idx::load_mnist_dir(&dir, n_train, n_test) {
+            return pair;
+        }
+    }
+    (
+        synth_mnist::generate(n_train, seed),
+        synth_mnist::generate(n_test, seed.wrapping_add(0x5EED_7E57)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_slices_consistently() {
+        let d = synth_mnist::generate(20, 1);
+        let s = d.take(5, 10);
+        assert_eq!(s.n, 10);
+        assert_eq!(s.image(0), d.image(5));
+        assert_eq!(s.labels[0], d.labels[5]);
+    }
+
+    #[test]
+    fn take_clamps_at_end() {
+        let d = synth_mnist::generate(10, 1);
+        let s = d.take(8, 10);
+        assert_eq!(s.n, 2);
+    }
+
+    #[test]
+    fn load_corpus_returns_requested_sizes() {
+        let (tr, te) = load_corpus(30, 10, 3);
+        assert_eq!(tr.n, 30);
+        assert_eq!(te.n, 10);
+        // train and test are disjoint draws (different seeds).
+        assert_ne!(tr.image(0), te.image(0));
+    }
+}

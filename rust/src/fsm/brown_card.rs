@@ -1,0 +1,150 @@
+//! Brown–Card FSM nonlinear generators (paper §II-C, ref [14]).
+//!
+//! The 2001 scheme: an N-state chain whose *output* is a fixed 0/1 label
+//! per state. With the right half labelled 1 the output mean approximates
+//! `tanh(N/2 · x)` in bipolar encoding (paper Eq. 1 states the unipolar
+//! equivalent). This is the univariate prior art SMURF generalizes: labels
+//! here are binary and fixed, where SMURF's CPT-gate makes them
+//! *continuous, synthesized* coefficients.
+
+use super::chain::ChainFsm;
+use super::steady::steady_state;
+use crate::sc::rng::StreamRng;
+use crate::sc::sng::ThetaGate;
+
+/// A Brown–Card generator: chain FSM + per-state binary output label.
+#[derive(Clone, Debug)]
+pub struct BrownCardFsm {
+    fsm: ChainFsm,
+    labels: Vec<bool>,
+}
+
+impl BrownCardFsm {
+    pub fn new(labels: Vec<bool>) -> Self {
+        assert!(labels.len() >= 2);
+        Self { fsm: ChainFsm::centered(labels.len()), labels }
+    }
+
+    /// The classic tanh configuration: states `N/2 …` output 1.
+    pub fn tanh(n: usize) -> Self {
+        assert!(n >= 2 && n % 2 == 0, "tanh config needs even N");
+        Self::new((0..n).map(|i| i >= n / 2).collect())
+    }
+
+    /// The exp configuration from [14]: only the leftmost `n-1` states of
+    /// the *complement* — output 1 unless in the rightmost state.
+    pub fn exp(n: usize) -> Self {
+        Self::new((0..n).map(|i| i < n - 1).collect())
+    }
+
+    pub fn num_states(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// One cycle: transition on the input bit, emit the new state's label.
+    #[inline]
+    pub fn step(&mut self, bit: bool) -> bool {
+        let s = self.fsm.step(bit);
+        self.labels[s]
+    }
+
+    /// Bit-level simulation: drive with a θ-gate encoding `p_x` for `len`
+    /// cycles and return the output mean.
+    pub fn run(&mut self, p_x: f64, len: usize, rng: &mut impl StreamRng) -> f64 {
+        let gate = ThetaGate::new(p_x);
+        let mut ones = 0u64;
+        for _ in 0..len {
+            let bit = gate.sample(rng.next_u16());
+            ones += self.step(bit) as u64;
+        }
+        ones as f64 / len as f64
+    }
+
+    /// Analytic (infinite-stream) output: Σ_i π_i · label_i.
+    pub fn analytic(&self, p_x: f64) -> f64 {
+        steady_state(self.labels.len(), p_x)
+            .iter()
+            .zip(&self.labels)
+            .map(|(pi, &l)| if l { *pi } else { 0.0 })
+            .sum()
+    }
+}
+
+/// The paper's Eq. 1 approximation target for the tanh configuration, in
+/// the paper's own unipolar form:
+/// `P_y ≈ (e^{N/2·Px} - e^{-N/2·Px}) / (e^{N/2·Px} + e^{-N/2·Px})`.
+pub fn eq1_tanh_target(n: usize, p_x: f64) -> f64 {
+    let a = n as f64 / 2.0 * p_x;
+    a.tanh()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::rng::XorShift64;
+
+    #[test]
+    fn tanh_labels() {
+        let f = BrownCardFsm::tanh(4);
+        assert_eq!(f.num_states(), 4);
+        assert_eq!(f.labels, vec![false, false, true, true]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tanh_rejects_odd() {
+        BrownCardFsm::tanh(5);
+    }
+
+    #[test]
+    fn analytic_is_sigmoid_in_unipolar() {
+        let f = BrownCardFsm::tanh(8);
+        // Unipolar: at p=0 output 0; at p=1 output 1; at p=0.5 output 0.5.
+        assert!(f.analytic(0.0) < 1e-9);
+        assert!((f.analytic(1.0) - 1.0).abs() < 1e-9);
+        assert!((f.analytic(0.5) - 0.5).abs() < 1e-9);
+        // Monotone.
+        let mut prev = -1.0;
+        for k in 0..=10 {
+            let y = f.analytic(k as f64 / 10.0);
+            assert!(y >= prev);
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn bitlevel_matches_analytic() {
+        let mut f = BrownCardFsm::tanh(4);
+        let mut rng = XorShift64::new(1234);
+        let p = 0.7;
+        let y_hw = f.run(p, 200_000, &mut rng);
+        let y_th = BrownCardFsm::tanh(4).analytic(p);
+        assert!((y_hw - y_th).abs() < 0.01, "hw={y_hw} th={y_th}");
+    }
+
+    #[test]
+    fn bipolar_tanh_tracks_eq1() {
+        // In bipolar encoding (x = 2Px-1, y = 2Py-1) the N-state machine
+        // approximates tanh(N/2 · x) — check at a few interior points.
+        let n = 8;
+        let f = BrownCardFsm::tanh(n);
+        for &x in &[-0.4, -0.2, 0.0, 0.2, 0.4] {
+            let px = (x + 1.0) / 2.0;
+            let y = 2.0 * f.analytic(px) - 1.0;
+            let target = (n as f64 / 2.0 * x).tanh();
+            assert!(
+                (y - target).abs() < 0.08,
+                "x={x}: fsm={y} eq1={target}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_config_shape() {
+        let f = BrownCardFsm::exp(4);
+        // At p=0 the chain sits at state 0 → label 1.
+        assert!((f.analytic(0.0) - 1.0).abs() < 1e-9);
+        // At p=1 it sits at the rightmost state → label 0.
+        assert!(f.analytic(1.0) < 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! The chained N-state saturating Moore FSM (paper Fig. 4).
+//!
+//! On input bit 1 the state moves right (saturating at `N-1`), on 0 it
+//! moves left (saturating at 0). One such chain per SMURF input variable;
+//! its state index is one digit of the universal-radix codeword.
+
+/// A saturating chain FSM over states `0 ..= n-1`.
+#[derive(Clone, Debug)]
+pub struct ChainFsm {
+    n: usize,
+    state: usize,
+}
+
+impl ChainFsm {
+    /// `n >= 2` states, starting at `initial`.
+    pub fn new(n: usize, initial: usize) -> Self {
+        assert!(n >= 2, "chain FSM needs at least 2 states");
+        assert!(initial < n, "initial state out of range");
+        Self { n, state: initial }
+    }
+
+    /// Start in the middle state — the conventional reset for symmetric
+    /// convergence from either side.
+    pub fn centered(n: usize) -> Self {
+        Self::new(n, n / 2)
+    }
+
+    pub fn num_states(&self) -> usize {
+        self.n
+    }
+
+    pub fn state(&self) -> usize {
+        self.state
+    }
+
+    /// One clock edge: input bit high → right, low → left (both saturating).
+    #[inline(always)]
+    pub fn step(&mut self, bit: bool) -> usize {
+        if bit {
+            if self.state + 1 < self.n {
+                self.state += 1;
+            }
+        } else {
+            self.state = self.state.saturating_sub(1);
+        }
+        self.state
+    }
+
+    /// Reset to a given state.
+    pub fn reset(&mut self, state: usize) {
+        assert!(state < self.n);
+        self.state = state;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, RangeUsize};
+    use crate::util::prng::Pcg;
+
+    #[test]
+    fn walks_and_saturates_right() {
+        let mut f = ChainFsm::new(4, 0);
+        assert_eq!(f.step(true), 1);
+        assert_eq!(f.step(true), 2);
+        assert_eq!(f.step(true), 3);
+        assert_eq!(f.step(true), 3, "must saturate at N-1");
+    }
+
+    #[test]
+    fn walks_and_saturates_left() {
+        let mut f = ChainFsm::new(4, 2);
+        assert_eq!(f.step(false), 1);
+        assert_eq!(f.step(false), 0);
+        assert_eq!(f.step(false), 0, "must saturate at 0");
+    }
+
+    #[test]
+    fn centered_start() {
+        assert_eq!(ChainFsm::centered(4).state(), 2);
+        assert_eq!(ChainFsm::centered(5).state(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_one_state() {
+        ChainFsm::new(1, 0);
+    }
+
+    #[test]
+    fn empirical_occupancy_matches_steady_state() {
+        // Drive with Bernoulli(p) bits and compare the long-run state
+        // occupancy with the analytic distribution of steady.rs.
+        let p = 0.3;
+        let n = 4;
+        let mut f = ChainFsm::centered(n);
+        let mut rng = Pcg::new(42);
+        let warmup = 1000;
+        let cycles = 2_000_000;
+        let mut occ = vec![0u64; n];
+        for _ in 0..warmup {
+            f.step(rng.uniform() < p);
+        }
+        for _ in 0..cycles {
+            occ[f.step(rng.uniform() < p)] += 1;
+        }
+        let pi = crate::fsm::steady::steady_state(n, p);
+        for (i, &cnt) in occ.iter().enumerate() {
+            let emp = cnt as f64 / cycles as f64;
+            assert!(
+                (emp - pi[i]).abs() < 0.005,
+                "state {i}: empirical {emp} vs analytic {}",
+                pi[i]
+            );
+        }
+    }
+
+    #[test]
+    fn prop_state_always_in_range() {
+        check(7, 128, &RangeUsize { lo: 2, hi: 9 }, |&n| {
+            let mut f = ChainFsm::centered(n);
+            let mut rng = Pcg::new(n as u64);
+            (0..1000).all(|_| f.step(rng.uniform() < 0.5) < n)
+        });
+    }
+}

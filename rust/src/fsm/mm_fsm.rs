@@ -1,0 +1,130 @@
+//! MM-FSM baseline (paper ref [18], Feng/Hu/Han 2022): multi-driving,
+//! multi-dimensional FSM for *univariate* nonlinear functions.
+//!
+//! Instead of a chain, the state space is an R×C grid; the row chain is
+//! driven by the input bitstream and the column chain by an auxiliary
+//! decorrelated copy of the same input. Each grid state carries a
+//! synthesized coefficient (like SMURF's CPT bank). This is the immediate
+//! precursor the paper generalizes: SMURF drives each dimension with a
+//! *different variable*, making it multivariate.
+
+use super::chain::ChainFsm;
+use super::steady::steady_state;
+use crate::sc::cpt::CptGate;
+use crate::sc::rng::StreamRng;
+use crate::sc::sng::ThetaGate;
+
+/// An R×C grid FSM with per-state output coefficients.
+#[derive(Clone, Debug)]
+pub struct MmFsm {
+    rows: ChainFsm,
+    cols: ChainFsm,
+    cpt: CptGate,
+    r: usize,
+    c: usize,
+}
+
+impl MmFsm {
+    /// `ws` has `r*c` entries in row-major order.
+    pub fn new(r: usize, c: usize, ws: &[f64]) -> Self {
+        assert_eq!(ws.len(), r * c, "coefficient table shape mismatch");
+        Self {
+            rows: ChainFsm::centered(r),
+            cols: ChainFsm::centered(c),
+            cpt: CptGate::new(ws),
+            r,
+            c,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.r, self.c)
+    }
+
+    /// Analytic output for input probability `p` (both drives carry the
+    /// same variable through independent SNGs, so the joint is a product).
+    pub fn analytic(&self, p: f64) -> f64 {
+        let pr = steady_state(self.r, p);
+        let pc = steady_state(self.c, p);
+        let mut y = 0.0;
+        for i in 0..self.r {
+            for j in 0..self.c {
+                y += pr[i] * pc[j] * self.cpt.effective_w(i * self.c + j);
+            }
+        }
+        y
+    }
+
+    /// Bit-level run: `len` cycles; three decorrelated entropy uses
+    /// (row SNG, column SNG, CPT sampling).
+    pub fn run(
+        &mut self,
+        p: f64,
+        len: usize,
+        rng_row: &mut impl StreamRng,
+        rng_col: &mut impl StreamRng,
+        rng_cpt: &mut impl StreamRng,
+    ) -> f64 {
+        let gate = ThetaGate::new(p);
+        let mut ones = 0u64;
+        for _ in 0..len {
+            let rb = gate.sample(rng_row.next_u16());
+            let cb = gate.sample(rng_col.next_u16());
+            let i = self.rows.step(rb);
+            let j = self.cols.step(cb);
+            ones += self.cpt.sample(i * self.c + j, rng_cpt.next_u16()) as u64;
+        }
+        ones as f64 / len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::rng::XorShift64;
+
+    #[test]
+    fn shape_and_validation() {
+        let f = MmFsm::new(2, 3, &[0.0; 6]);
+        assert_eq!(f.shape(), (2, 3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_table() {
+        MmFsm::new(2, 3, &[0.0; 5]);
+    }
+
+    #[test]
+    fn constant_table_is_constant_function() {
+        let f = MmFsm::new(3, 3, &[0.25; 9]);
+        for p in [0.0, 0.3, 0.8, 1.0] {
+            assert!((f.analytic(p) - 0.25).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn corner_table_reaches_corners() {
+        // w = 1 only at the bottom-right grid state: at p=1 both chains
+        // saturate there, so output → 1.
+        let mut ws = vec![0.0; 16];
+        ws[15] = 1.0;
+        let f = MmFsm::new(4, 4, &ws);
+        // 1e-4 tolerance: θ-gate thresholds are 16-bit quantized.
+        assert!(f.analytic(1.0) > 1.0 - 1e-4);
+        assert!(f.analytic(0.0) < 1e-4);
+    }
+
+    #[test]
+    fn bitlevel_tracks_analytic() {
+        let ws: Vec<f64> = (0..9).map(|i| i as f64 / 8.0).collect();
+        let mut f = MmFsm::new(3, 3, &ws);
+        let fa = f.clone();
+        let mut r1 = XorShift64::new(1);
+        let mut r2 = XorShift64::new(2);
+        let mut r3 = XorShift64::new(3);
+        let p = 0.6;
+        let y = f.run(p, 100_000, &mut r1, &mut r2, &mut r3);
+        assert!((y - fa.analytic(p)).abs() < 0.02, "y={y} vs {}", fa.analytic(p));
+    }
+}

@@ -1,0 +1,10 @@
+//! Chained finite-state machines and their steady-state theory
+//! (paper §II-C, Fig. 4–5), plus the prior-art FSM baselines.
+
+pub mod brown_card;
+pub mod chain;
+pub mod mm_fsm;
+pub mod steady;
+
+pub use chain::ChainFsm;
+pub use steady::steady_state;

@@ -1,0 +1,173 @@
+//! Steady-state distribution of the chain FSM (paper Eq. 2–4, Fig. 5).
+//!
+//! At equilibrium the birth–death chain satisfies detailed balance
+//! `π_{i+1} (1-p) = π_i p`, so `π_i ∝ t^i` with `t = p/(1-p)`.
+//! The numerically-stable closed form used here multiplies through by
+//! `(1-p)^{N-1}`:
+//!
+//! `π_i = p^i (1-p)^{N-1-i} / Σ_k p^k (1-p)^{N-1-k}`
+//!
+//! which is exact for the whole closed interval `p ∈ [0,1]` (no division
+//! by zero at the endpoints).
+
+/// Steady-state probabilities `π_0 … π_{n-1}` of an `n`-state chain FSM
+/// driven by i.i.d. Bernoulli(`p`) input bits.
+pub fn steady_state(n: usize, p: f64) -> Vec<f64> {
+    let mut w = vec![0.0; n];
+    steady_state_into(n, p, &mut w);
+    w
+}
+
+/// Allocation-free variant of [`steady_state`] writing into `out`
+/// (`out.len() == n`) — the serving hot path (§Perf).
+pub fn steady_state_into(n: usize, p: f64, out: &mut [f64]) {
+    assert!(n >= 1);
+    assert_eq!(out.len(), n);
+    let p = p.clamp(0.0, 1.0);
+    let q = 1.0 - p;
+    // Unnormalized weights p^i q^{n-1-i}, built by running products
+    // (two multiplies per state instead of two `powi` calls).
+    let mut fwd = 1.0; // p^i
+    for i in 0..n {
+        out[i] = fwd;
+        fwd *= p;
+    }
+    let mut bwd = 1.0; // q^{n-1-i}
+    for i in (0..n).rev() {
+        out[i] *= bwd;
+        bwd *= q;
+    }
+    let z: f64 = out.iter().sum();
+    if z == 0.0 {
+        // Unreachable for p in [0,1] and n >= 1, but stay total.
+        out.fill(1.0 / n as f64);
+        return;
+    }
+    let inv = 1.0 / z;
+    for wi in out.iter_mut() {
+        *wi *= inv;
+    }
+}
+
+/// Derivative `dπ_i/dp` by central difference — used by the L2 training
+/// surrogate sanity tests (JAX computes this analytically by autodiff).
+pub fn steady_state_grad(n: usize, p: f64, i: usize) -> f64 {
+    let h = 1e-6;
+    let lo = steady_state(n, (p - h).max(0.0));
+    let hi = steady_state(n, (p + h).min(1.0));
+    (hi[i] - lo[i]) / ((p + h).min(1.0) - (p - h).max(0.0))
+}
+
+/// The centre-of-mass of the steady state — the mean normalized state
+/// index, a monotone sigmoid-like curve in `p` (the reason a chain FSM can
+/// compute nonlinearities at all, §II-C).
+pub fn mean_state(n: usize, p: f64) -> f64 {
+    steady_state(n, p)
+        .iter()
+        .enumerate()
+        .map(|(i, pi)| i as f64 * pi)
+        .sum::<f64>()
+        / (n - 1).max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, UnitF64};
+
+    #[test]
+    fn sums_to_one() {
+        for n in [2, 3, 4, 5, 8] {
+            for p in [0.0, 0.1, 0.5, 0.9, 1.0] {
+                let pi = steady_state(n, p);
+                let s: f64 = pi.iter().sum();
+                assert!((s - 1.0).abs() < 1e-12, "n={n} p={p} sum={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn endpoint_degeneracy() {
+        // p=0: all mass in state 0. p=1: all mass in state n-1.
+        let pi0 = steady_state(4, 0.0);
+        assert_eq!(pi0[0], 1.0);
+        assert_eq!(pi0[3], 0.0);
+        let pi1 = steady_state(4, 1.0);
+        assert_eq!(pi1[3], 1.0);
+    }
+
+    #[test]
+    fn two_state_is_linear() {
+        // Paper §II-C: a 2-state FSM has completely linear steady-state
+        // probabilities — π_1 = p exactly.
+        for p in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let pi = steady_state(2, p);
+            assert!((pi[1] - p).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn symmetric_at_half() {
+        // At p=1/2 all states are equally likely (t=1).
+        let pi = steady_state(5, 0.5);
+        for &x in &pi {
+            assert!((x - 0.2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_detailed_balance_ratio() {
+        // π_{i+1}/π_i = t = p/(1-p) (Eq. 2).
+        let p: f64 = 0.3;
+        let t = p / (1.0 - p);
+        let pi = steady_state(6, p);
+        for i in 0..5 {
+            assert!((pi[i + 1] / pi[i] - t).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fig5_middle_states_hump_shape() {
+        // Fig. 5: edge states are monotone (left decreasing, right
+        // increasing); middle states are humps that vanish at both ends.
+        let n = 4;
+        for mid in 1..n - 1 {
+            let at0 = steady_state(n, 0.0)[mid];
+            let athalf = steady_state(n, 0.5)[mid];
+            let at1 = steady_state(n, 1.0)[mid];
+            assert_eq!(at0, 0.0);
+            assert_eq!(at1, 0.0);
+            assert!(athalf > 0.0);
+        }
+    }
+
+    #[test]
+    fn prop_edge_states_monotone() {
+        check(31, 128, &UnitF64 { lo: 0.0, hi: 0.99 }, |&p| {
+            let d = 0.01;
+            let a = steady_state(4, p);
+            let b = steady_state(4, p + d);
+            // leftmost decreasing, rightmost increasing in p
+            b[0] <= a[0] + 1e-12 && b[3] + 1e-12 >= a[3]
+        });
+    }
+
+    #[test]
+    fn mean_state_monotone_sigmoid() {
+        let mut prev = -1.0;
+        for k in 0..=20 {
+            let p = k as f64 / 20.0;
+            let m = mean_state(4, p);
+            assert!(m >= prev - 1e-12, "not monotone at p={p}");
+            assert!((0.0..=1.0).contains(&m));
+            prev = m;
+        }
+        assert!((mean_state(4, 0.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_positive_for_rightmost() {
+        assert!(steady_state_grad(4, 0.4, 3) > 0.0);
+        assert!(steady_state_grad(4, 0.4, 0) < 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Area/power cost accounting.
+
+use super::gates::{DYN_DENSITY, LAYOUT_OVERHEAD, LEAK_DENSITY};
+
+/// Cost of one block.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    /// Placed area, µm².
+    pub area_um2: f64,
+    /// Total power at 400 MHz, mW.
+    pub power_mw: f64,
+}
+
+impl Cost {
+    /// Synthesized logic: raw cell area × layout overhead; dynamic power
+    /// scaled by the block's switching activity.
+    pub fn logic(cell_area_um2: f64, activity: f64) -> Self {
+        let area = cell_area_um2 * LAYOUT_OVERHEAD;
+        Self { area_um2: area, power_mw: area * (DYN_DENSITY * activity + LEAK_DENSITY) }
+    }
+
+    /// Compiled ROM macro: no layout overhead, leakage-dominated.
+    pub fn rom(bits: u64) -> Self {
+        let area = bits as f64 * super::gates::ROM_BIT;
+        Self { area_um2: area, power_mw: area * LEAK_DENSITY }
+    }
+
+    pub fn add(self, other: Cost) -> Cost {
+        Cost { area_um2: self.area_um2 + other.area_um2, power_mw: self.power_mw + other.power_mw }
+    }
+
+    /// Area·power product, µm²·mW (Table VI's composite metric).
+    pub fn area_power(&self) -> f64 {
+        self.area_um2 * self.power_mw
+    }
+}
+
+/// A named breakdown of a full module.
+#[derive(Clone, Debug)]
+pub struct ModuleCost {
+    pub name: String,
+    pub blocks: Vec<(String, Cost)>,
+}
+
+impl ModuleCost {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), blocks: Vec::new() }
+    }
+
+    pub fn push(&mut self, block: impl Into<String>, cost: Cost) {
+        self.blocks.push((block.into(), cost));
+    }
+
+    pub fn total(&self) -> Cost {
+        self.blocks.iter().fold(Cost::default(), |acc, (_, c)| acc.add(*c))
+    }
+
+    pub fn block(&self, name: &str) -> Option<Cost> {
+        self.blocks.iter().find(|(n, _)| n == name).map(|(_, c)| *c)
+    }
+
+    /// Render the breakdown as an aligned text table.
+    pub fn table(&self) -> String {
+        let mut s = format!("{:<28} {:>12} {:>10}\n", self.name, "area/um^2", "power/mW");
+        for (n, c) in &self.blocks {
+            s += &format!("  {:<26} {:>12.2} {:>10.4}\n", n, c.area_um2, c.power_mw);
+        }
+        let t = self.total();
+        s += &format!("  {:<26} {:>12.2} {:>10.4}\n", "TOTAL", t.area_um2, t.power_mw);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logic_applies_overhead_and_activity() {
+        let idle = Cost::logic(1000.0, 0.0);
+        let busy = Cost::logic(1000.0, 1.0);
+        assert!((idle.area_um2 - 1350.0).abs() < 1e-9);
+        assert!(busy.power_mw > idle.power_mw);
+        assert!(idle.power_mw > 0.0, "leakage still present");
+    }
+
+    #[test]
+    fn rom_has_no_overhead() {
+        let r = Cost::rom(1000);
+        assert!((r.area_um2 - 220.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn module_totals() {
+        let mut m = ModuleCost::new("test");
+        m.push("a", Cost { area_um2: 10.0, power_mw: 0.1 });
+        m.push("b", Cost { area_um2: 20.0, power_mw: 0.2 });
+        let t = m.total();
+        assert!((t.area_um2 - 30.0).abs() < 1e-12);
+        assert!((t.power_mw - 0.3).abs() < 1e-12);
+        assert!(m.block("a").is_some());
+        assert!(m.block("zz").is_none());
+        assert!(m.table().contains("TOTAL"));
+    }
+
+    #[test]
+    fn area_power_product() {
+        let c = Cost { area_um2: 100.0, power_mw: 0.5 };
+        assert_eq!(c.area_power(), 50.0);
+    }
+}

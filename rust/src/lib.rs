@@ -1,0 +1,81 @@
+//! # SMURF — Stochastic Multivariate Universal-Radix Finite-State Machine
+//!
+//! Production-quality reproduction of *"Stochastic Multivariate
+//! Universal-Radix Finite-State Machine: a Theoretically and Practically
+//! Elegant Nonlinear Function Approximator"* (Feng et al., 2024).
+//!
+//! SMURF approximates arbitrary multivariate nonlinear functions
+//! `f(x_1, …, x_M) : [0,1]^M → [0,1]` with stochastic-computing hardware:
+//! one chained `N`-state FSM per input variable, the joint state forming a
+//! *universal-radix codeword* that selects one of `N^M` θ-gates through a
+//! CPT-gate (MUX). The mean of the output bitstream converges to the target
+//! function value; the θ-gate thresholds `w_t` are synthesized offline by a
+//! box-constrained quadratic program (paper Eq. 5–11).
+//!
+//! ## Crate layout
+//!
+//! - [`sc`] — stochastic-computing substrate: RNGs (LFSR / xorshift /
+//!   Sobol), packed bitstreams, θ-gates (SNGs) and CPT-gates.
+//! - [`fsm`] — chained N-state Moore FSMs, steady-state analytics,
+//!   Brown–Card and MM-FSM baselines.
+//! - [`smurf`] — the paper's contribution: configuration, universal-radix
+//!   codewords, the closed-form (analytic) evaluator and the cycle-accurate
+//!   bit-level simulator.
+//! - [`synth`] — coefficient synthesis: Gauss–Legendre quadrature for the
+//!   `H` matrix / `c` vector and the projected-gradient QP solver.
+//! - [`baselines`] — Taylor series, LUT, CORDIC and Bernstein-polynomial
+//!   comparators.
+//! - [`hw`] — gate-level area/power cost model (SMIC-65nm-calibrated).
+//! - [`nn`] — SC-based CNN inference (LeNet-5): SC-PwMM convolution,
+//!   SMURF-HT, SMURF activations.
+//! - [`data`] — synthetic MNIST corpus + IDX loader.
+//! - [`runtime`] — PJRT (XLA) execution of AOT-compiled artifacts.
+//! - [`coordinator`] — evaluation service: request router, dynamic
+//!   batcher, worker pool, metrics.
+//! - [`util`] — in-repo substrates the offline environment forces us to
+//!   own: JSON, deterministic PRNG for tests, statistics helpers.
+//! - [`testing`] — minimal property-testing harness (proptest is not
+//!   vendored in this environment; see DESIGN.md).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use smurf::prelude::*;
+//!
+//! // Synthesize a bivariate Euclidean-distance SMURF (paper Table I).
+//! let cfg = SmurfConfig::uniform(2, 4);
+//! let approx = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+//! // Analytic (infinite-stream) evaluation:
+//! let y = approx.eval_analytic(&[0.3, 0.4]);
+//! assert!((y - 0.5).abs() < 0.05);
+//! // Bit-level hardware simulation with 256-cycle bitstreams:
+//! let y_hw = approx.eval_bitstream(&[0.3, 0.4], 256, 7);
+//! assert!((y_hw - 0.5).abs() < 0.2);
+//! ```
+
+pub mod util;
+pub mod testing;
+pub mod sc;
+pub mod fsm;
+pub mod smurf;
+pub mod synth;
+pub mod baselines;
+pub mod hw;
+pub mod nn;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+
+/// Convenience re-exports of the most common entry points.
+pub mod prelude {
+    pub use crate::sc::bitstream::Bitstream;
+    pub use crate::sc::rng::{Lfsr16, Sobol, StreamRng, XorShift64};
+    pub use crate::sc::sng::ThetaGate;
+    pub use crate::smurf::analytic::AnalyticSmurf;
+    pub use crate::smurf::approximator::SmurfApproximator;
+    pub use crate::smurf::config::SmurfConfig;
+    pub use crate::smurf::sim::BitLevelSmurf;
+    pub use crate::synth::functions;
+    pub use crate::synth::functions::TargetFn;
+    pub use crate::synth::synthesize::{synthesize, SynthOptions, SynthResult};
+}

@@ -1,0 +1,197 @@
+//! `smurf` — CLI for the SMURF evaluation system.
+//!
+//! Subcommands:
+//!   synth <function> [--radix N]                synthesize + print w table
+//!   eval <function> <x1> <x2> …  [--len L]      bit-level evaluation
+//!   serve [--requests N]                        run the evaluation service
+//!   train [--epochs E] [--samples N]            train LeNet-5 (rust path)
+//!   hw                                          print the Table VI cost model
+//!   info                                        environment report
+
+use smurf::baselines::{lut::Lut, taylor::TaylorPoly};
+use smurf::coordinator::{Engine, EvalServer, ServerConfig};
+use smurf::data;
+use smurf::hw;
+use smurf::nn::{lenet::ScRuntime, train, LeNet, OpSet};
+use smurf::prelude::*;
+use smurf::runtime::{default_artifacts_dir, Runtime};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let code = match cmd {
+        "synth" => cmd_synth(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "train" => cmd_train(rest),
+        "hw" => cmd_hw(),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: smurf <synth|eval|serve|train|hw|info> [args]\n\
+                 functions: {}",
+                functions::registry()
+                    .iter()
+                    .map(|f| f.name().to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            if cmd == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny flag parser: `--key value` pairs after positional args.
+fn flag(args: &[String], key: &str, default: usize) -> usize {
+    args.windows(2)
+        .find(|w| w[0] == key)
+        .and_then(|w| w[1].parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_synth(args: &[String]) -> i32 {
+    let Some(name) = args.first() else {
+        eprintln!("synth: missing function name");
+        return 2;
+    };
+    let Some(f) = functions::by_name(name) else {
+        eprintln!("synth: unknown function {name}");
+        return 2;
+    };
+    let n = flag(args, "--radix", 4);
+    let cfg = SmurfConfig::uniform(f.arity(), n);
+    let res = synthesize(&cfg, &f, &SynthOptions::default());
+    println!("function: {name}   config: {cfg}");
+    println!(
+        "analytic MAE: {:.5}   L2: {:.5}   QP iters: {}",
+        res.mae, res.l2_error, res.qp.iterations
+    );
+    for (t, w) in res.smurf.coefficients().iter().enumerate() {
+        print!("w_{t} = {w:.4}  ");
+        if (t + 1) % cfg.radix(0) == 0 {
+            println!();
+        }
+    }
+    0
+}
+
+fn cmd_eval(args: &[String]) -> i32 {
+    let Some(name) = args.first() else {
+        eprintln!("eval: missing function name");
+        return 2;
+    };
+    let Some(f) = functions::by_name(name) else {
+        eprintln!("eval: unknown function {name}");
+        return 2;
+    };
+    let xs: Vec<f64> = args[1..]
+        .iter()
+        .take_while(|a| !a.starts_with("--"))
+        .filter_map(|a| a.parse().ok())
+        .collect();
+    if xs.len() != f.arity() {
+        eprintln!("eval: {} needs {} inputs", name, f.arity());
+        return 2;
+    }
+    let len = flag(args, "--len", 64);
+    let cfg = SmurfConfig::uniform(f.arity(), 4);
+    let approx = SmurfApproximator::synthesize(&cfg, &f, len);
+    let exact = f.eval(&xs);
+    let analytic = approx.eval_analytic(&xs);
+    let hw = approx.eval_bitstream(&xs, len, 0xC0FFEE);
+    println!("target     f(x) = {exact:.5}");
+    println!("analytic   P_y  = {analytic:.5}  (err {:+.5})", analytic - exact);
+    println!("bit-level  P_y  = {hw:.5}  (err {:+.5}, L={len})", hw - exact);
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let n_requests = flag(args, "--requests", 10_000);
+    let cfg = SmurfConfig::uniform(2, 4);
+    let funcs = vec![
+        SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64),
+        SmurfApproximator::synthesize(&cfg, &functions::sincos(), 64),
+        SmurfApproximator::synthesize(&cfg, &functions::softmax2(), 64),
+    ];
+    let server = EvalServer::start(funcs, Some(default_artifacts_dir()), ServerConfig::default());
+    println!("serving {:?}; driving {n_requests} requests…", server.functions());
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let x = (i % 100) as f64 / 99.0;
+        let y = ((i * 37) % 100) as f64 / 99.0;
+        let engine = if i % 3 == 0 { Engine::BitLevel } else { Engine::Analytic };
+        let r = server.eval_sync("euclidean2", vec![vec![x, y]], engine, 64);
+        if !r.is_ok() {
+            eprintln!("request {i} failed: {:?}", r.error);
+            return 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!("{}", server.metrics().report());
+    println!("drove {n_requests} sync requests in {dt:?}");
+    server.shutdown();
+    0
+}
+
+fn cmd_train(args: &[String]) -> i32 {
+    let epochs = flag(args, "--epochs", 4);
+    let samples = flag(args, "--samples", 2000);
+    let (train_set, test_set) = data::load_corpus(samples, samples / 5, 42);
+    let mut net = LeNet::random(7);
+    let cfg = train::TrainConfig { epochs, lr: 0.05, momentum: 0.9, log_every: 1 };
+    let losses = train::train(&mut net, &train_set, &cfg, 1);
+    println!("losses: {losses:?}");
+    let acc = net.accuracy(&test_set.images, &test_set.labels, OpSet::Vanilla, None);
+    println!("vanilla accuracy: {:.2}%", acc * 100.0);
+    let mut rt = ScRuntime::paper_config(3);
+    let acc_smurf =
+        net.accuracy(&test_set.images, &test_set.labels, OpSet::Smurf, Some(&mut rt));
+    println!("CNN/SMURF accuracy: {:.2}%", acc_smurf * 100.0);
+    // Persist for the examples.
+    let dir = default_artifacts_dir();
+    std::fs::create_dir_all(&dir).ok();
+    let path = dir.join("lenet_weights.json");
+    if std::fs::write(&path, net.to_json().dump()).is_ok() {
+        println!("weights saved to {}", path.display());
+    }
+    0
+}
+
+fn cmd_hw() -> i32 {
+    let f = functions::euclidean2();
+    let s = hw::smurf_design(&SmurfConfig::uniform(2, 4));
+    let t = hw::taylor_design(&TaylorPoly::expand(&f, &[0.5, 0.5], 3));
+    let l = hw::lut_design(&Lut::build(&f, 8, 16));
+    print!("{}", s.table());
+    print!("{}", t.table());
+    print!("{}", l.table());
+    let (st, tt, lt) = (s.total(), t.total(), l.total());
+    println!("\nSMURF/Taylor area  = {:.2}%  (paper 16.07%)", 100.0 * st.area_um2 / tt.area_um2);
+    println!("SMURF/Taylor power = {:.2}%  (paper 14.45%)", 100.0 * st.power_mw / tt.power_mw);
+    println!("SMURF/LUT area     = {:.2}%  (paper 2.22%)", 100.0 * st.area_um2 / lt.area_um2);
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("smurf {} — SMURF paper reproduction", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {}", default_artifacts_dir().display());
+    match Runtime::cpu(default_artifacts_dir()) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            for a in ["smurf_eval.hlo.txt", "lenet_infer.hlo.txt", "lenet_smurf_infer.hlo.txt"] {
+                println!(
+                    "  artifact {a}: {}",
+                    if rt.has_artifact(a) { "present" } else { "MISSING (make artifacts)" }
+                );
+            }
+        }
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    0
+}

@@ -1,0 +1,187 @@
+//! Hartley-transform convolution path (paper Eq. 13–15, ref [22]).
+//!
+//! `H(k,l) = (1/Q) Σ_{m,n} f[m,n]·cas(2π(km+ln)/Q)` with
+//! `cas x = cos x + sin x`. CNN/HSC computes the cas kernel from a LUT;
+//! CNN/SMURF computes the factored form `sin(x₁)cos(x₂)` (Eq. 14–15) with
+//! a bivariate SMURF. Both paths share the same transform plumbing so the
+//! only difference is the kernel generator — exactly the paper's
+//! comparison axis.
+
+use crate::baselines::lut::Lut;
+use crate::smurf::approximator::SmurfApproximator;
+use crate::smurf::config::SmurfConfig;
+use crate::synth::functions;
+
+/// How the cas kernel values are produced.
+pub enum CasKernel {
+    /// Exact f64 (vanilla reference).
+    Exact,
+    /// SMURF-HT: `sin(x₁)cos(x₂)` from the synthesized bivariate SMURF
+    /// (paper Table II coefficients), plus the complementary
+    /// `cos(x₁)sin(x₂)` term via the identity `cas a·b` expansion.
+    Smurf(Box<SmurfApproximator>),
+    /// LUT-HT (CNN/HSC): cas values from an 8-bit quantized table.
+    Lut(Box<Lut>),
+}
+
+impl CasKernel {
+    pub fn exact() -> Self {
+        CasKernel::Exact
+    }
+
+    /// Synthesize the SMURF sincos generator (N=4, M=2 — Table II).
+    pub fn smurf() -> Self {
+        let cfg = SmurfConfig::uniform(2, 4);
+        CasKernel::Smurf(Box::new(SmurfApproximator::synthesize(
+            &cfg,
+            &functions::sincos(),
+            256,
+        )))
+    }
+
+    /// Build the HSC LUT over the product form.
+    pub fn lut() -> Self {
+        CasKernel::Lut(Box::new(Lut::build(&functions::sincos(), 8, 11)))
+    }
+
+    /// `sin(a)·cos(b)` for `a, b ∈ [0, 1]` (normalized angle products —
+    /// the Eq. 15 target domain).
+    fn sincos_unit(&self, a: f64, b: f64) -> f64 {
+        match self {
+            CasKernel::Exact => a.sin() * b.cos(),
+            CasKernel::Smurf(s) => s.eval_analytic(&[a, b]),
+            CasKernel::Lut(l) => l.eval(&[a, b]),
+        }
+    }
+
+    /// `cas(θ) = cos θ + sin θ` for arbitrary θ, computed through the
+    /// unit-box generator by angle reduction:
+    /// `sin θ = sin(r)cos(0)`-style factored calls with r ∈ [0,1].
+    pub fn cas(&self, theta: f64) -> f64 {
+        // Reduce θ to [0, 2π).
+        let tau = std::f64::consts::TAU;
+        let mut r = theta % tau;
+        if r < 0.0 {
+            r += tau;
+        }
+        // sin/cos by quadrant reduction into [0, π/2] ⊂ radians, then the
+        // generator is exercised on its [0,1] domain (π/2 < 1.5708 —
+        // slightly beyond 1; fold at 1 rad via identities).
+        let sin_t = self.sin_reduced(r);
+        let cos_t = self.sin_reduced(r + std::f64::consts::FRAC_PI_2);
+        sin_t + cos_t
+    }
+
+    /// sin of any angle via quadrant symmetry + the unit-box generator.
+    fn sin_reduced(&self, theta: f64) -> f64 {
+        let tau = std::f64::consts::TAU;
+        let pi = std::f64::consts::PI;
+        let mut r = theta % tau;
+        if r < 0.0 {
+            r += tau;
+        }
+        let (mut x, sign) = if r <= pi { (r, 1.0) } else { (r - pi, -1.0) };
+        if x > pi / 2.0 {
+            x = pi - x;
+        }
+        // x ∈ [0, π/2]; the generator domain is [0,1] rad — fold the tail
+        // with sin(x) = sin(1)cos(x-1) + cos(1)sin(x-1).
+        let s = if x <= 1.0 {
+            // sin(x) = sin(x)·cos(0)
+            self.sincos_unit(x, 0.0)
+        } else {
+            let d = x - 1.0; // ≤ 0.5708, in domain
+            // sin(1+d) = sin(1)cos(d) + sin(d)cos(1)
+            self.sincos_unit(1.0, d) + self.sincos_unit(d, 1.0)
+        };
+        sign * s
+    }
+}
+
+/// Dense 2-D Hartley transform of a Q×Q tile (Eq. 13).
+pub fn hartley2(tile: &[f64], q: usize, kernel: &CasKernel) -> Vec<f64> {
+    assert_eq!(tile.len(), q * q);
+    let mut out = vec![0.0; q * q];
+    for k in 0..q {
+        for l in 0..q {
+            let mut acc = 0.0;
+            for m in 0..q {
+                for n in 0..q {
+                    let ang = std::f64::consts::TAU * ((k * m + l * n) as f64) / q as f64;
+                    acc += tile[m * q + n] * kernel.cas(ang);
+                }
+            }
+            out[k * q + l] = acc / q as f64;
+        }
+    }
+    out
+}
+
+/// The HT is an involution up to scale: `H(H(f)) = f`.
+pub fn inverse_hartley2(spec: &[f64], q: usize, kernel: &CasKernel) -> Vec<f64> {
+    hartley2(spec, q, kernel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cas_exact_matches_closed_form() {
+        let k = CasKernel::exact();
+        for &t in &[0.0f64, 0.5, 1.0, 2.0, 4.0, -1.3, 7.0] {
+            let want = t.cos() + t.sin();
+            assert!((k.cas(t) - want).abs() < 1e-9, "cas({t})");
+        }
+    }
+
+    #[test]
+    fn hartley_involution_exact() {
+        let q = 5;
+        let tile: Vec<f64> = (0..q * q).map(|i| ((i * 7 % 11) as f64) / 11.0).collect();
+        let k = CasKernel::exact();
+        let spec = hartley2(&tile, q, &k);
+        let back = inverse_hartley2(&spec, q, &k);
+        for (a, b) in tile.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn smurf_cas_tracks_exact() {
+        let smurf = CasKernel::smurf();
+        let exact = CasKernel::exact();
+        let mut worst = 0.0f64;
+        for i in 0..64 {
+            let t = i as f64 * 0.1;
+            worst = worst.max((smurf.cas(t) - exact.cas(t)).abs());
+        }
+        // Analytic SMURF sincos has MAE ≈ 0.01 on the unit box; the cas
+        // composition roughly doubles it.
+        assert!(worst < 0.1, "worst cas error {worst}");
+    }
+
+    #[test]
+    fn lut_cas_tracks_exact() {
+        let lut = CasKernel::lut();
+        let exact = CasKernel::exact();
+        let mut worst = 0.0f64;
+        for i in 0..64 {
+            let t = i as f64 * 0.1;
+            worst = worst.max((lut.cas(t) - exact.cas(t)).abs());
+        }
+        assert!(worst < 0.05, "worst LUT cas error {worst}");
+    }
+
+    #[test]
+    fn smurf_hartley_roundtrip_error_small() {
+        let q = 5;
+        let tile: Vec<f64> = (0..q * q).map(|i| (i as f64 / 25.0).sin().abs()).collect();
+        let smurf = CasKernel::smurf();
+        let spec = hartley2(&tile, q, &smurf);
+        let back = inverse_hartley2(&spec, q, &smurf);
+        let mae: f64 =
+            tile.iter().zip(&back).map(|(a, b)| (a - b).abs()).sum::<f64>() / tile.len() as f64;
+        assert!(mae < 0.15, "SMURF HT roundtrip MAE={mae}");
+    }
+}

@@ -1,0 +1,175 @@
+//! f32 reference layers (the "vanilla CNN" column of Table V).
+
+use super::tensor::Tensor;
+
+/// 2-D convolution, NCHW, stride 1, symmetric zero padding.
+/// `weight` is `[out_c, in_c, kh, kw]`, `bias` is `[out_c]`.
+pub fn conv2d(x: &Tensor, weight: &Tensor, bias: &[f32], pad: usize) -> Tensor {
+    let (n, in_c, h, w) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (out_c, wc, kh, kw) = (weight.dims[0], weight.dims[1], weight.dims[2], weight.dims[3]);
+    assert_eq!(in_c, wc, "channel mismatch");
+    assert_eq!(bias.len(), out_c);
+    let oh = h + 2 * pad - kh + 1;
+    let ow = w + 2 * pad - kw + 1;
+    let mut y = Tensor::zeros(&[n, out_c, oh, ow]);
+    for b in 0..n {
+        for oc in 0..out_c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bias[oc];
+                    for ic in 0..in_c {
+                        for ky in 0..kh {
+                            let iy = oy + ky;
+                            if iy < pad || iy - pad >= h {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = ox + kx;
+                                if ix < pad || ix - pad >= w {
+                                    continue;
+                                }
+                                acc += x.at4(b, ic, iy - pad, ix - pad)
+                                    * weight.at4(oc, ic, ky, kx);
+                            }
+                        }
+                    }
+                    *y.at4_mut(b, oc, oy, ox) = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// 2×2 average pooling, stride 2.
+pub fn avgpool2(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut y = Tensor::zeros(&[n, c, oh, ow]);
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let s = x.at4(b, ch, 2 * oy, 2 * ox)
+                        + x.at4(b, ch, 2 * oy, 2 * ox + 1)
+                        + x.at4(b, ch, 2 * oy + 1, 2 * ox)
+                        + x.at4(b, ch, 2 * oy + 1, 2 * ox + 1);
+                    *y.at4_mut(b, ch, oy, ox) = s * 0.25;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Dense layer: `y = W x + b`, `w` is `[out, in]` row-major.
+pub fn dense(x: &[f32], w: &Tensor, b: &[f32]) -> Vec<f32> {
+    let (out, inn) = (w.dims[0], w.dims[1]);
+    assert_eq!(x.len(), inn, "dense input mismatch");
+    assert_eq!(b.len(), out);
+    let mut y = vec![0.0f32; out];
+    for o in 0..out {
+        let row = &w.data[o * inn..(o + 1) * inn];
+        let mut acc = b[o];
+        for (xi, wi) in x.iter().zip(row) {
+            acc += xi * wi;
+        }
+        y[o] = acc;
+    }
+    y
+}
+
+/// Elementwise tanh.
+pub fn tanh_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// Elementwise ReLU.
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(x: &[f32]) -> Vec<f32> {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let e: Vec<f32> = x.iter().map(|&v| (v - m).exp()).collect();
+    let z: f32 = e.iter().sum();
+    e.iter().map(|&v| v / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1×1 kernel of weight 1 reproduces the input.
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, &[0.0], 0);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_known_sum() {
+        // 2×2 all-ones kernel over a 2×2 input (no pad) = sum of elements.
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0; 4]);
+        let y = conv2d(&x, &w, &[0.5], 0);
+        assert_eq!(y.dims, vec![1, 1, 1, 1]);
+        assert_eq!(y.data[0], 10.5);
+    }
+
+    #[test]
+    fn conv_padding_shape() {
+        let x = Tensor::zeros(&[2, 3, 28, 28]);
+        let w = Tensor::zeros(&[6, 3, 5, 5]);
+        let y = conv2d(&x, &w, &[0.0; 6], 2);
+        assert_eq!(y.dims, vec![2, 6, 28, 28]);
+    }
+
+    #[test]
+    fn conv_multichannel_accumulates() {
+        let x = Tensor::from_vec(&[1, 2, 1, 1], vec![2.0, 3.0]);
+        let w = Tensor::from_vec(&[1, 2, 1, 1], vec![10.0, 100.0]);
+        let y = conv2d(&x, &w, &[0.0], 0);
+        assert_eq!(y.data[0], 320.0);
+    }
+
+    #[test]
+    fn avgpool_means() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 3.0, 5.0, 7.0]);
+        let y = avgpool2(&x);
+        assert_eq!(y.data, vec![4.0]);
+    }
+
+    #[test]
+    fn dense_known() {
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 0.0, 0.0, 2.0, 0.0]);
+        let y = dense(&[5.0, 6.0, 7.0], &w, &[0.1, 0.2]);
+        assert!((y[0] - 5.1).abs() < 1e-6);
+        assert!((y[1] - 12.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let y = softmax(&[1000.0, 1001.0, 999.0]);
+        assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(y[1] > y[0] && y[0] > y[2]);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn activations() {
+        let mut x = vec![-1.0, 0.0, 1.0];
+        relu_inplace(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 1.0]);
+        let mut t = vec![0.0f32];
+        tanh_inplace(&mut t);
+        assert_eq!(t, vec![0.0]);
+    }
+}

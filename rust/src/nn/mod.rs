@@ -1,0 +1,25 @@
+//! SC-based CNN inference and training (paper §IV-B, Tables IV/V).
+//!
+//! - [`tensor`] — minimal NCHW f32 tensor.
+//! - [`layers`] — f32 reference ops: conv2d, avg-pool, dense, activations.
+//! - [`lenet`] — LeNet-5 with three operator sets (Table V): vanilla
+//!   (standard conv + ReLU/softmax), CNN/HSC (SC-PwMM conv + exact
+//!   activations), CNN/SMURF (SC-PwMM conv + SMURF activations).
+//! - [`sc_ops`] — the stochastic operators: SC-PwMM multiplication
+//!   (128-bit streams, exact bit-level or exact-distribution binomial
+//!   sampling), SMURF activation evaluation.
+//! - [`hartley`] — the Hartley-transform path: cas-kernel computed by
+//!   SMURF (`sin(x₁)cos(x₂)` per Eq. 14–15) vs LUT (CNN/HSC).
+//! - [`train`] — SGD training of the f32 reference network in rust
+//!   (the L2 JAX path exports `artifacts/lenet_weights.json`; this
+//!   in-repo trainer keeps Table IV reproducible without Python).
+
+pub mod hartley;
+pub mod layers;
+pub mod lenet;
+pub mod sc_ops;
+pub mod tensor;
+pub mod train;
+
+pub use lenet::{LeNet, OpSet};
+pub use tensor::Tensor;

@@ -1,0 +1,106 @@
+//! Minimal dense f32 tensor (row-major, NCHW for images).
+
+/// A dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Self { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { dims: dims.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// 4-D accessor (NCHW).
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 4);
+        let (_, cc, hh, ww) = (self.dims[0], self.dims[1], self.dims[2], self.dims[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut f32 {
+        debug_assert_eq!(self.dims.len(), 4);
+        let (_, cc, hh, ww) = (self.dims[0], self.dims[1], self.dims[2], self.dims[3]);
+        &mut self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    /// 2-D accessor.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    /// Reshape (must conserve element count).
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims.to_vec();
+        self
+    }
+
+    /// Index of the maximum element (argmax over the flat data).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t.len(), 120);
+        assert_eq!(t.at4(1, 2, 3, 4), 0.0);
+    }
+
+    #[test]
+    fn at4_layout_is_nchw() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 2]);
+        *t.at4_mut(0, 1, 0, 1) = 7.0;
+        // offset = ((0*2+1)*2+0)*2+1 = 5
+        assert_eq!(t.data[5], 7.0);
+        assert_eq!(t.at4(0, 1, 0, 1), 7.0);
+    }
+
+    #[test]
+    fn reshape_conserves() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.0; 6]).reshape(&[3, 2]);
+        assert_eq!(t.dims, vec![3, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_rejects_bad_count() {
+        Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        let t = Tensor::from_vec(&[4], vec![0.1, 0.9, 0.3, 0.2]);
+        assert_eq!(t.argmax(), 1);
+    }
+}

@@ -1,0 +1,363 @@
+//! In-rust SGD training of the f32 LeNet-5 reference.
+//!
+//! Full backprop through conv/pool/dense/tanh with cross-entropy loss.
+//! This keeps Table IV reproducible from the rust binary alone; the L2
+//! JAX path (python/compile/train.py) is the primary trainer and exports
+//! the same weight format.
+
+use super::layers;
+use super::lenet::LeNet;
+use super::tensor::Tensor;
+use crate::data::Dataset;
+use crate::util::prng::Pcg;
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { epochs: 4, lr: 0.05, momentum: 0.9, log_every: 0 }
+    }
+}
+
+/// Intermediate activations kept for backprop.
+struct Trace {
+    x: Tensor,
+    c1: Tensor,
+    a1: Tensor,
+    p1: Tensor,
+    c2: Tensor,
+    a2: Tensor,
+    p2: Tensor,
+    f1: Vec<f32>,
+    t1: Vec<f32>,
+    f2: Vec<f32>,
+    t2: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+fn forward_trace(net: &LeNet, image: &[f32]) -> Trace {
+    let x = Tensor::from_vec(&[1, 1, 28, 28], image.to_vec());
+    let c1 = layers::conv2d(&x, &net.conv1_w, &net.conv1_b, 2);
+    let mut a1 = c1.clone();
+    layers::tanh_inplace(&mut a1.data);
+    let p1 = layers::avgpool2(&a1);
+    let c2 = layers::conv2d(&p1, &net.conv2_w, &net.conv2_b, 0);
+    let mut a2 = c2.clone();
+    layers::tanh_inplace(&mut a2.data);
+    let p2 = layers::avgpool2(&a2);
+    let f1 = layers::dense(&p2.data, &net.fc1_w, &net.fc1_b);
+    let mut t1 = f1.clone();
+    layers::tanh_inplace(&mut t1);
+    let f2 = layers::dense(&t1, &net.fc2_w, &net.fc2_b);
+    let mut t2 = f2.clone();
+    layers::tanh_inplace(&mut t2);
+    let probs = layers::softmax(&layers::dense(&t2, &net.fc3_w, &net.fc3_b));
+    Trace { x, c1, a1, p1, c2, a2, p2, f1, t1, f2, t2, probs }
+}
+
+/// Gradient accumulator with the same shapes as the network.
+struct Grads {
+    conv1_w: Vec<f32>,
+    conv1_b: Vec<f32>,
+    conv2_w: Vec<f32>,
+    conv2_b: Vec<f32>,
+    fc1_w: Vec<f32>,
+    fc1_b: Vec<f32>,
+    fc2_w: Vec<f32>,
+    fc2_b: Vec<f32>,
+    fc3_w: Vec<f32>,
+    fc3_b: Vec<f32>,
+}
+
+impl Grads {
+    fn zero(net: &LeNet) -> Self {
+        Self {
+            conv1_w: vec![0.0; net.conv1_w.len()],
+            conv1_b: vec![0.0; 6],
+            conv2_w: vec![0.0; net.conv2_w.len()],
+            conv2_b: vec![0.0; 16],
+            fc1_w: vec![0.0; net.fc1_w.len()],
+            fc1_b: vec![0.0; 120],
+            fc2_w: vec![0.0; net.fc2_w.len()],
+            fc2_b: vec![0.0; 84],
+            fc3_w: vec![0.0; net.fc3_w.len()],
+            fc3_b: vec![0.0; 10],
+        }
+    }
+}
+
+/// Dense backward: given dL/dy, fill dW, db and return dL/dx.
+fn dense_backward(
+    x: &[f32],
+    w: &Tensor,
+    dy: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+) -> Vec<f32> {
+    let (out, inn) = (w.dims[0], w.dims[1]);
+    let mut dx = vec![0.0f32; inn];
+    for o in 0..out {
+        db[o] += dy[o];
+        let row = &w.data[o * inn..(o + 1) * inn];
+        let drow = &mut dw[o * inn..(o + 1) * inn];
+        for i in 0..inn {
+            drow[i] += dy[o] * x[i];
+            dx[i] += dy[o] * row[i];
+        }
+    }
+    dx
+}
+
+/// tanh backward (elementwise): dL/dx = dL/dy · (1 - tanh²).
+fn tanh_backward(pre: &[f32], dy: &[f32]) -> Vec<f32> {
+    pre.iter().zip(dy).map(|(&p, &d)| d * (1.0 - p.tanh().powi(2))).collect()
+}
+
+/// avgpool2 backward: spread gradient equally over the 2×2 window.
+fn avgpool2_backward(dy: &Tensor, in_dims: &[usize]) -> Tensor {
+    let mut dx = Tensor::zeros(in_dims);
+    let (n, c, oh, ow) = (dy.dims[0], dy.dims[1], dy.dims[2], dy.dims[3]);
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let g = dy.at4(b, ch, oy, ox) * 0.25;
+                    for dyy in 0..2 {
+                        for dxx in 0..2 {
+                            *dx.at4_mut(b, ch, 2 * oy + dyy, 2 * ox + dxx) += g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// conv2d backward: returns dL/dx; accumulates dW, db.
+fn conv2d_backward(
+    x: &Tensor,
+    weight: &Tensor,
+    dy: &Tensor,
+    pad: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) -> Tensor {
+    let (n, in_c, h, w) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (out_c, _, kh, kw) = (weight.dims[0], weight.dims[1], weight.dims[2], weight.dims[3]);
+    let (oh, ow) = (dy.dims[2], dy.dims[3]);
+    let mut dx = Tensor::zeros(&[n, in_c, h, w]);
+    for b in 0..n {
+        for oc in 0..out_c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let g = dy.at4(b, oc, oy, ox);
+                    if g == 0.0 {
+                        continue;
+                    }
+                    db[oc] += g;
+                    for ic in 0..in_c {
+                        for ky in 0..kh {
+                            let iy = oy + ky;
+                            if iy < pad || iy - pad >= h {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = ox + kx;
+                                if ix < pad || ix - pad >= w {
+                                    continue;
+                                }
+                                let xi = x.at4(b, ic, iy - pad, ix - pad);
+                                dw[((oc * in_c + ic) * kh + ky) * kw + kx] += g * xi;
+                                *dx.at4_mut(b, ic, iy - pad, ix - pad) +=
+                                    g * weight.at4(oc, ic, ky, kx);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// One sample's backward pass; returns the cross-entropy loss.
+fn backward(net: &LeNet, tr: &Trace, label: u8, g: &mut Grads) -> f32 {
+    // dL/dlogits = probs - onehot.
+    let mut dlogits = tr.probs.clone();
+    dlogits[label as usize] -= 1.0;
+    let loss = -tr.probs[label as usize].max(1e-12).ln();
+
+    let dt2 = dense_backward(&tr.t2, &net.fc3_w, &dlogits, &mut g.fc3_w, &mut g.fc3_b);
+    let df2 = tanh_backward(&tr.f2, &dt2);
+    let dt1 = dense_backward(&tr.t1, &net.fc2_w, &df2, &mut g.fc2_w, &mut g.fc2_b);
+    let df1 = tanh_backward(&tr.f1, &dt1);
+    let dp2_flat = dense_backward(&tr.p2.data, &net.fc1_w, &df1, &mut g.fc1_w, &mut g.fc1_b);
+    let dp2 = Tensor::from_vec(&tr.p2.dims, dp2_flat);
+    let da2 = avgpool2_backward(&dp2, &tr.a2.dims);
+    let dc2 = Tensor::from_vec(
+        &tr.c2.dims,
+        tanh_backward(&tr.c2.data, &da2.data),
+    );
+    let dp1 = conv2d_backward(&tr.p1, &net.conv2_w, &dc2, 0, &mut g.conv2_w, &mut g.conv2_b);
+    let da1 = avgpool2_backward(&dp1, &tr.a1.dims);
+    let dc1 = Tensor::from_vec(
+        &tr.c1.dims,
+        tanh_backward(&tr.c1.data, &da1.data),
+    );
+    let _ = conv2d_backward(&tr.x, &net.conv1_w, &dc1, 2, &mut g.conv1_w, &mut g.conv1_b);
+    loss
+}
+
+/// Train with minibatch SGD + momentum; returns per-epoch mean losses.
+pub fn train(net: &mut LeNet, data: &Dataset, cfg: &TrainConfig, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    let mut vel = Grads::zero(net);
+    // zero-init velocity: reuse Grads as the velocity buffers
+    for v in [
+        &mut vel.conv1_w,
+        &mut vel.conv1_b,
+        &mut vel.conv2_w,
+        &mut vel.conv2_b,
+        &mut vel.fc1_w,
+        &mut vel.fc1_b,
+        &mut vel.fc2_w,
+        &mut vel.fc2_b,
+        &mut vel.fc3_w,
+        &mut vel.fc3_b,
+    ] {
+        v.iter_mut().for_each(|x| *x = 0.0);
+    }
+    const BATCH: usize = 16;
+    let mut losses = Vec::new();
+    let mut order: Vec<usize> = (0..data.n).collect();
+    for epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0f32;
+        let mut batches = 0;
+        for chunk in order.chunks(BATCH) {
+            let mut g = Grads::zero(net);
+            let mut batch_loss = 0.0;
+            for &i in chunk {
+                let tr = forward_trace(net, data.image(i));
+                batch_loss += backward(net, &tr, data.labels[i], &mut g);
+            }
+            let inv = 1.0 / chunk.len() as f32;
+            epoch_loss += batch_loss * inv;
+            batches += 1;
+            // SGD + momentum update.
+            let step = |w: &mut [f32], gw: &[f32], v: &mut [f32]| {
+                for ((wi, &gi), vi) in w.iter_mut().zip(gw).zip(v.iter_mut()) {
+                    *vi = cfg.momentum * *vi - cfg.lr * gi * inv;
+                    *wi += *vi;
+                }
+            };
+            step(&mut net.conv1_w.data, &g.conv1_w, &mut vel.conv1_w);
+            step(&mut net.conv1_b, &g.conv1_b, &mut vel.conv1_b);
+            step(&mut net.conv2_w.data, &g.conv2_w, &mut vel.conv2_w);
+            step(&mut net.conv2_b, &g.conv2_b, &mut vel.conv2_b);
+            step(&mut net.fc1_w.data, &g.fc1_w, &mut vel.fc1_w);
+            step(&mut net.fc1_b, &g.fc1_b, &mut vel.fc1_b);
+            step(&mut net.fc2_w.data, &g.fc2_w, &mut vel.fc2_w);
+            step(&mut net.fc2_b, &g.fc2_b, &mut vel.fc2_b);
+            step(&mut net.fc3_w.data, &g.fc3_w, &mut vel.fc3_w);
+            step(&mut net.fc3_b, &g.fc3_b, &mut vel.fc3_b);
+        }
+        let mean = epoch_loss / batches as f32;
+        losses.push(mean);
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            eprintln!("epoch {epoch}: loss {mean:.4}");
+        }
+    }
+    losses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+    use crate::nn::lenet::OpSet;
+
+    #[test]
+    fn gradcheck_dense() {
+        // Numerical gradient check on fc3 weights through the full loss.
+        let mut net = LeNet::random(11);
+        let img: Vec<f32> = (0..784).map(|i| ((i % 7) as f32) / 7.0).collect();
+        let label = 3u8;
+        let mut g = Grads::zero(&net);
+        let tr = forward_trace(&net, &img);
+        backward(&net, &tr, label, &mut g);
+        // Perturb a few fc3 weights.
+        let eps = 1e-3f32;
+        for &k in &[0usize, 17, 100, 839] {
+            let orig = net.fc3_w.data[k];
+            net.fc3_w.data[k] = orig + eps;
+            let lp = -forward_trace(&net, &img).probs[label as usize].max(1e-12).ln();
+            net.fc3_w.data[k] = orig - eps;
+            let lm = -forward_trace(&net, &img).probs[label as usize].max(1e-12).ln();
+            net.fc3_w.data[k] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - g.fc3_w[k]).abs() < 2e-2_f32.max(0.15 * num.abs()),
+                "fc3_w[{k}]: numeric {num} vs backprop {}",
+                g.fc3_w[k]
+            );
+        }
+    }
+
+    #[test]
+    fn gradcheck_conv1() {
+        let mut net = LeNet::random(12);
+        let img: Vec<f32> = (0..784).map(|i| ((i % 5) as f32) / 5.0).collect();
+        let label = 1u8;
+        let mut g = Grads::zero(&net);
+        let tr = forward_trace(&net, &img);
+        backward(&net, &tr, label, &mut g);
+        let eps = 1e-3f32;
+        for &k in &[0usize, 31, 88] {
+            let orig = net.conv1_w.data[k];
+            net.conv1_w.data[k] = orig + eps;
+            let lp = -forward_trace(&net, &img).probs[label as usize].max(1e-12).ln();
+            net.conv1_w.data[k] = orig - eps;
+            let lm = -forward_trace(&net, &img).probs[label as usize].max(1e-12).ln();
+            net.conv1_w.data[k] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - g.conv1_w[k]).abs() < 2e-2_f32.max(0.15 * num.abs()),
+                "conv1_w[{k}]: numeric {num} vs backprop {}",
+                g.conv1_w[k]
+            );
+        }
+    }
+
+    #[test]
+    fn loss_decreases_on_tiny_corpus() {
+        let mut net = LeNet::random(13);
+        let data = synth_mnist::generate(60, 21);
+        let cfg = TrainConfig { epochs: 3, lr: 0.05, momentum: 0.9, log_every: 0 };
+        let losses = train(&mut net, &data, &cfg, 5);
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "losses: {losses:?}"
+        );
+    }
+
+    #[test]
+    #[ignore] // ~40 s: full Table IV-style training run; exercised by the bench
+    fn trains_to_high_accuracy() {
+        let mut net = LeNet::random(14);
+        let train_set = synth_mnist::generate(2000, 31);
+        let test_set = synth_mnist::generate(400, 32);
+        let cfg = TrainConfig::default();
+        train(&mut net, &train_set, &cfg, 6);
+        let acc = net.accuracy(&test_set.images, &test_set.labels, OpSet::Vanilla, None);
+        assert!(acc > 0.9, "vanilla accuracy {acc}");
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path (Python is build-time only).
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled, ready-to-run XLA executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Run on f32 buffers; returns the flattened f32 outputs of the
+    /// (1-tuple) result. Inputs are (shape, data) pairs.
+    pub fn run_f32(&self, inputs: &[(&[usize], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (dims, data) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims_i64).context("reshape input")?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple().context("untuple result")?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().context("read output")?);
+        }
+        Ok(out)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// PJRT CPU client + executable cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at the artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, artifact: &str) -> Result<std::sync::Arc<Executable>> {
+        let path = self.artifacts_dir.join(artifact);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(&path) {
+                return Ok(e.clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        let entry = std::sync::Arc::new(Executable {
+            exe,
+            name: artifact.to_string(),
+        });
+        self.cache.lock().unwrap().insert(path, entry.clone());
+        Ok(entry)
+    }
+
+    /// True if the artifact file exists (used to skip runtime-dependent
+    /// paths when `make artifacts` has not run).
+    pub fn has_artifact(&self, artifact: &str) -> bool {
+        self.artifacts_dir.join(artifact).exists()
+    }
+}
+
+/// Locate the artifacts directory relative to the repo root (works from
+/// tests, benches and installed binaries via `SMURF_ARTIFACTS`).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SMURF_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_dir_resolves() {
+        let d = default_artifacts_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+
+    #[test]
+    fn missing_artifact_detected() {
+        let rt = Runtime::cpu(default_artifacts_dir());
+        // PJRT CPU client creation must succeed in this environment.
+        let rt = rt.expect("PJRT CPU client");
+        assert!(!rt.has_artifact("definitely_not_there.hlo.txt"));
+        assert!(rt.load("definitely_not_there.hlo.txt").is_err());
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn loads_and_runs_artifact_if_present() {
+        // Full AOT round-trip — only meaningful after `make artifacts`.
+        let rt = Runtime::cpu(default_artifacts_dir()).expect("PJRT CPU client");
+        if !rt.has_artifact("smurf_eval.hlo.txt") {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let exe = rt.load("smurf_eval.hlo.txt").unwrap();
+        // smurf_eval: (batch=1024, 2) probabilities + (4,4) table -> (1024,).
+        let batch = 1024;
+        let xs: Vec<f32> = (0..batch * 2).map(|i| (i % 97) as f32 / 96.0).collect();
+        let w: Vec<f32> = (0..16).map(|i| i as f32 / 15.0).collect();
+        let out = exe.run_f32(&[(&[batch, 2], &xs), (&[4, 4], &w)]).unwrap();
+        assert_eq!(out[0].len(), batch);
+        for &y in &out[0] {
+            assert!((0.0..=1.0).contains(&y), "y={y}");
+        }
+        // Cache hit second time.
+        let exe2 = rt.load("smurf_eval.hlo.txt").unwrap();
+        assert_eq!(exe.name(), exe2.name());
+    }
+}

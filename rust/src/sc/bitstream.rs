@@ -1,0 +1,294 @@
+//! Packed stochastic bitstreams and the classic SC arithmetic (paper §II-A,
+//! Fig. 2).
+//!
+//! A stochastic number (SN) is a random bitstream whose mean encodes a
+//! value in `[0,1]`. We pack 64 stream bits per `u64` word so the hot path
+//! (SC-PwMM in the CNN, §IV-B) is a handful of word ops per multiply.
+
+use super::rng::StreamRng;
+
+/// A packed stochastic bitstream of `len` bits (LSB of word 0 is cycle 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitstream {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitstream {
+    /// All-zeros stream of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Generate a stream encoding probability `p` using `rng` as the
+    /// comparator entropy source (this is a θ-gate run for `len` cycles).
+    pub fn generate(p: f64, len: usize, rng: &mut impl StreamRng) -> Self {
+        let threshold = (p.clamp(0.0, 1.0) * 65536.0).round().min(65535.0) as u16;
+        let mut s = Self::zeros(len);
+        for i in 0..len {
+            if rng.next_u16() < threshold {
+                s.set(i, true);
+            }
+        }
+        s
+    }
+
+    /// Exact-length bit count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        let m = 1u64 << (i % 64);
+        if v {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    /// Number of '1' bits.
+    pub fn popcount(&self) -> u64 {
+        // Tail bits beyond `len` are maintained zero by construction.
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Decode the stream back into a value: mean of the bits (the binary
+    /// counter + average of Fig. 1's decode path).
+    pub fn mean(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.popcount() as f64 / self.len as f64
+    }
+
+    /// Stochastic multiplication: bitwise AND (Fig. 2 top). Requires
+    /// *independent* input streams for `E[z] = Px·Py` to hold.
+    pub fn and(&self, other: &Bitstream) -> Bitstream {
+        assert_eq!(self.len, other.len, "stream length mismatch");
+        Bitstream {
+            words: self.words.iter().zip(&other.words).map(|(a, b)| a & b).collect(),
+            len: self.len,
+        }
+    }
+
+    /// Scaled stochastic addition via MUX (Fig. 2 bottom): `sel` picks
+    /// `self` where its bit is 1, `other` where 0. With `P_sel = 1/2` the
+    /// output mean is `(Px + Py)/2`.
+    pub fn mux(&self, other: &Bitstream, sel: &Bitstream) -> Bitstream {
+        assert_eq!(self.len, other.len);
+        assert_eq!(self.len, sel.len);
+        Bitstream {
+            words: self
+                .words
+                .iter()
+                .zip(&other.words)
+                .zip(&sel.words)
+                .map(|((a, b), s)| (a & s) | (b & !s))
+                .collect(),
+            len: self.len,
+        }
+    }
+
+    /// Bitwise NOT: encodes `1 - p` (unipolar complement).
+    pub fn not(&self) -> Bitstream {
+        let mut out = Bitstream {
+            words: self.words.iter().map(|w| !w).collect(),
+            len: self.len,
+        };
+        out.mask_tail();
+        out
+    }
+
+    /// XNOR: bipolar-format multiplication (means map [0,1]→[-1,1]).
+    pub fn xnor(&self, other: &Bitstream) -> Bitstream {
+        assert_eq!(self.len, other.len);
+        let mut out = Bitstream {
+            words: self.words.iter().zip(&other.words).map(|(a, b)| !(a ^ b)).collect(),
+            len: self.len,
+        };
+        out.mask_tail();
+        out
+    }
+
+    /// Zero any bits at positions >= len (after whole-word inversions).
+    fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    /// Raw packed words (read-only) — used by the SC-PwMM hot path.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// Correlation (overlap) coefficient between two streams: the SCC metric.
+/// 0 for independent streams; +1 for maximally-overlapped; -1 for
+/// maximally-disjoint. Used in tests to verify decorrelation machinery.
+pub fn scc(a: &Bitstream, b: &Bitstream) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let p1 = a.mean();
+    let p2 = b.mean();
+    let p12 = a.and(b).popcount() as f64 / n;
+    let delta = p12 - p1 * p2;
+    if delta > 0.0 {
+        let d = p1.min(p2) - p1 * p2;
+        if d == 0.0 {
+            0.0
+        } else {
+            delta / d
+        }
+    } else {
+        let d = p1 * p2 - (p1 + p2 - 1.0).max(0.0);
+        if d == 0.0 {
+            0.0
+        } else {
+            delta / d
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::rng::{Lfsr16, Sobol, XorShift64};
+    use crate::testing::{check, UnitF64};
+
+    #[test]
+    fn generate_encodes_probability() {
+        let mut rng = XorShift64::new(5);
+        let s = Bitstream::generate(0.7, 4096, &mut rng);
+        assert!((s.mean() - 0.7).abs() < 0.03, "mean={}", s.mean());
+    }
+
+    #[test]
+    fn sobol_generate_is_tight() {
+        let mut rng = Sobol::new(0);
+        let s = Bitstream::generate(0.7, 256, &mut rng);
+        assert!((s.mean() - 0.7).abs() <= 1.0 / 256.0 + 1e-12);
+    }
+
+    #[test]
+    fn and_multiplies() {
+        let mut r1 = XorShift64::new(1);
+        let mut r2 = XorShift64::new(2);
+        let a = Bitstream::generate(0.6, 8192, &mut r1);
+        let b = Bitstream::generate(0.5, 8192, &mut r2);
+        let z = a.and(&b);
+        assert!((z.mean() - 0.3).abs() < 0.03, "mean={}", z.mean());
+    }
+
+    #[test]
+    fn mux_adds_scaled() {
+        let mut r1 = XorShift64::new(3);
+        let mut r2 = XorShift64::new(4);
+        let mut r3 = XorShift64::new(5);
+        let a = Bitstream::generate(0.8, 8192, &mut r1);
+        let b = Bitstream::generate(0.2, 8192, &mut r2);
+        let s = Bitstream::generate(0.5, 8192, &mut r3);
+        let z = a.mux(&b, &s);
+        assert!((z.mean() - 0.5).abs() < 0.03, "mean={}", z.mean());
+    }
+
+    #[test]
+    fn not_complements_exactly() {
+        let mut rng = Lfsr16::new(77);
+        let s = Bitstream::generate(0.3, 1000, &mut rng);
+        let ns = s.not();
+        assert_eq!(ns.popcount(), 1000 - s.popcount());
+        // Tail bits must stay masked.
+        assert!((s.mean() + ns.mean() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xnor_bipolar_multiplies() {
+        // bipolar value v = 2p-1. xnor: v_out = v1*v2.
+        let mut r1 = XorShift64::new(6);
+        let mut r2 = XorShift64::new(7);
+        let p1 = 0.9; // v=0.8
+        let p2 = 0.25; // v=-0.5
+        let a = Bitstream::generate(p1, 16384, &mut r1);
+        let b = Bitstream::generate(p2, 16384, &mut r2);
+        let z = a.xnor(&b);
+        let v = 2.0 * z.mean() - 1.0;
+        assert!((v - (0.8 * -0.5)).abs() < 0.03, "v={v}");
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut s = Bitstream::zeros(130);
+        s.set(0, true);
+        s.set(64, true);
+        s.set(129, true);
+        assert!(s.get(0) && s.get(64) && s.get(129));
+        assert!(!s.get(1) && !s.get(128));
+        assert_eq!(s.popcount(), 3);
+        s.set(64, false);
+        assert_eq!(s.popcount(), 2);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let s = Bitstream::zeros(0);
+        assert_eq!(s.mean(), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn scc_of_identical_is_one() {
+        let mut rng = XorShift64::new(8);
+        let s = Bitstream::generate(0.5, 2048, &mut rng);
+        assert!((scc(&s, &s) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scc_of_independent_near_zero() {
+        let mut r1 = XorShift64::new(9);
+        let mut r2 = XorShift64::new(10);
+        let a = Bitstream::generate(0.5, 65536, &mut r1);
+        let b = Bitstream::generate(0.5, 65536, &mut r2);
+        assert!(scc(&a, &b).abs() < 0.05, "scc={}", scc(&a, &b));
+    }
+
+    #[test]
+    fn prop_and_mean_bounded_by_min() {
+        // For ANY pair of streams, P(a AND b) <= min(Pa, Pb).
+        check(11, 64, &UnitF64::unit(), |&p| {
+            let mut r1 = XorShift64::new((p * 1e9) as u64 + 1);
+            let mut r2 = XorShift64::new((p * 1e9) as u64 + 2);
+            let a = Bitstream::generate(p, 2048, &mut r1);
+            let b = Bitstream::generate(1.0 - p, 2048, &mut r2);
+            a.and(&b).mean() <= a.mean().min(b.mean()) + 1e-12
+        });
+    }
+
+    #[test]
+    fn prop_generate_mean_within_clt_bound() {
+        // 6-sigma CLT bound on the empirical mean of a 4096-bit stream.
+        check(12, 64, &UnitF64::unit(), |&p| {
+            let mut rng = XorShift64::new((p.to_bits()).wrapping_mul(2654435761));
+            let s = Bitstream::generate(p, 4096, &mut rng);
+            let sigma = (p * (1.0 - p) / 4096.0).sqrt();
+            (s.mean() - p).abs() <= 6.0 * sigma + 1.0 / 65536.0 + 1e-12
+        });
+    }
+}

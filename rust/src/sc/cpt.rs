@@ -1,0 +1,97 @@
+//! CPT-gates (paper §II-B): a bank of θ-gates plus a MUX.
+//!
+//! "A CPT-gate is a collection of θ-gates, together with a MUX to select
+//! one of the θ-gates as its output." In SMURF the MUX select input is the
+//! universal-radix codeword `s`, and the bank holds the synthesized
+//! coefficients `w_0 … w_{N^M - 1}`.
+
+use super::rng::StreamRng;
+use super::sng::ThetaGate;
+
+/// A conditional-probability-table gate: `bank[sel]` sampled each cycle.
+#[derive(Clone, Debug)]
+pub struct CptGate {
+    bank: Vec<ThetaGate>,
+}
+
+impl CptGate {
+    /// Build the bank from coefficient probabilities (the `w_t`'s of
+    /// Tables I/II).
+    pub fn new(ws: &[f64]) -> Self {
+        Self { bank: ws.iter().map(|&w| ThetaGate::new(w)).collect() }
+    }
+
+    /// Number of θ-gates in the bank (`N^M` for SMURF).
+    pub fn len(&self) -> usize {
+        self.bank.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bank.is_empty()
+    }
+
+    /// Effective (quantized) coefficient of entry `t`.
+    pub fn effective_w(&self, t: usize) -> f64 {
+        self.bank[t].effective_p()
+    }
+
+    /// One clock cycle: the select codeword picks the θ-gate; that gate
+    /// compares against the entropy word. (Hardware note: *all* θ-gates
+    /// sample every cycle from their delayed RNG branches and the MUX picks
+    /// one output — electrically equivalent to sampling only the selected
+    /// gate, which is what we compute.)
+    #[inline]
+    pub fn sample(&self, sel: usize, rand16: u16) -> bool {
+        self.bank[sel].sample(rand16)
+    }
+
+    /// Run the gate for `len` cycles with a constant select, returning the
+    /// output mean — the conditional distribution given that state.
+    pub fn run_mean_const_sel(&self, sel: usize, len: usize, rng: &mut impl StreamRng) -> f64 {
+        let mut ones = 0u64;
+        for _ in 0..len {
+            ones += self.sample(sel, rng.next_u16()) as u64;
+        }
+        ones as f64 / len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::rng::{Sobol, XorShift64};
+
+    #[test]
+    fn bank_size() {
+        let g = CptGate::new(&[0.1, 0.5, 0.9, 1.0]);
+        assert_eq!(g.len(), 4);
+        assert!(!g.is_empty());
+    }
+
+    #[test]
+    fn constant_select_recovers_coefficient() {
+        let g = CptGate::new(&[0.2, 0.8]);
+        let mut rng = Sobol::new(0);
+        let m = g.run_mean_const_sel(1, 512, &mut rng);
+        assert!((m - 0.8).abs() < 1.0 / 512.0 + 1e-12, "m={m}");
+    }
+
+    #[test]
+    fn mixed_select_mixes_distributions() {
+        // Alternating selects between w0=0 and w1=1 gives mean 1/2 exactly.
+        let g = CptGate::new(&[0.0, 1.0]);
+        let mut rng = XorShift64::new(3);
+        let mut ones = 0;
+        let n = 1000;
+        for i in 0..n {
+            ones += g.sample(i % 2, rng.next_u16()) as usize;
+        }
+        assert_eq!(ones, 500);
+    }
+
+    #[test]
+    fn effective_w_quantized() {
+        let g = CptGate::new(&[0.6083]);
+        assert!((g.effective_w(0) - 0.6083).abs() < 1.0 / 65536.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Stochastic-computing substrate (paper §II).
+//!
+//! Everything the SMURF architecture in Fig. 6 is built from:
+//!
+//! - [`rng`] — hardware-faithful entropy sources: Fibonacci LFSRs (what the
+//!   paper's RTL uses — the RNG dominates the 5294.72 µm² area budget),
+//!   xorshift64* (software-quality), and Sobol/van-der-Corput low-
+//!   discrepancy sequences (§II-B notes θ-gates may sample Sobol).
+//! - [`bitstream`] — packed-`u64` stochastic numbers with the classic SC
+//!   ops: AND-gate multiplication, MUX scaled addition, popcount decode.
+//! - [`sng`] — the θ-gate (stochastic number generator, Fig. 1): a binary
+//!   comparator against an entropy source.
+//! - [`cpt`] — the CPT-gate (§II-B): a bank of θ-gates plus a MUX whose
+//!   select input is, in SMURF, the universal-radix codeword.
+
+pub mod bitstream;
+pub mod cpt;
+pub mod rng;
+pub mod sng;

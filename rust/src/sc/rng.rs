@@ -1,0 +1,269 @@
+//! Entropy sources for stochastic computing.
+//!
+//! The paper's hardware instantiates a *single* RNG whose sequence is
+//! branched into differently-delayed versions feeding each θ-gate
+//! (§III-A): `DelayedBranches` models exactly that. The RNG itself is a
+//! Fibonacci LFSR (the area/power driver in Table VI); a xorshift64*
+//! generator is provided for software-quality experiments, and a
+//! van-der-Corput/Sobol sequence for low-discrepancy θ-gate sampling
+//! (§II-B mentions Sobol explicitly).
+
+/// A stream of fixed-point random values in `[0, 1)`, one per clock cycle.
+///
+/// `next_u16` returns the raw 16-bit comparator word (what the RTL
+/// actually wires into a θ-gate); `next_f64` is its real-valued view.
+pub trait StreamRng {
+    /// Raw 16-bit output for the comparator datapath.
+    fn next_u16(&mut self) -> u16;
+
+    /// The same sample as a real in `[0,1)`.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        self.next_u16() as f64 / 65536.0
+    }
+}
+
+/// 16-bit Fibonacci LFSR with taps (16,15,13,4) — maximal length 2^16-1.
+///
+/// This is the hardware RNG: 16 D-FFs and 3 XOR2 gates. The paper's RNG
+/// block (~1600 µm²) is a bank of these plus output staging.
+#[derive(Clone, Debug)]
+pub struct Lfsr16 {
+    state: u16,
+}
+
+impl Lfsr16 {
+    /// Seed must be non-zero (the all-zeros state is the LFSR fixpoint);
+    /// a zero seed is mapped to a fixed non-zero constant.
+    pub fn new(seed: u16) -> Self {
+        Self { state: if seed == 0 { 0xACE1 } else { seed } }
+    }
+
+    /// Advance one clock; returns the new state.
+    #[inline(always)]
+    pub fn step(&mut self) -> u16 {
+        let s = self.state;
+        // Fibonacci taps 16,15,13,4 (1-indexed from MSB side of x^16 poly).
+        let bit = ((s >> 0) ^ (s >> 2) ^ (s >> 3) ^ (s >> 5)) & 1;
+        self.state = (s >> 1) | (bit << 15);
+        self.state
+    }
+}
+
+impl StreamRng for Lfsr16 {
+    #[inline(always)]
+    fn next_u16(&mut self) -> u16 {
+        self.step()
+    }
+}
+
+/// xorshift64* — software-quality generator for long-bitstream experiments
+/// where LFSR correlation artifacts would confound accuracy measurements.
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+}
+
+impl StreamRng for XorShift64 {
+    #[inline]
+    fn next_u16(&mut self) -> u16 {
+        (self.next_u64() >> 48) as u16
+    }
+}
+
+/// Van der Corput base-2 sequence (= 1-D Sobol): the bit-reversed counter.
+///
+/// Low-discrepancy sampling makes a θ-gate's empirical mean converge as
+/// O(1/L) instead of O(1/√L) — the paper's §II-B "complex probability
+/// distributions such as the Sobol sequences".
+#[derive(Clone, Debug)]
+pub struct Sobol {
+    counter: u32,
+}
+
+impl Sobol {
+    pub fn new(start: u32) -> Self {
+        Self { counter: start }
+    }
+}
+
+impl StreamRng for Sobol {
+    #[inline]
+    fn next_u16(&mut self) -> u16 {
+        let c = self.counter;
+        self.counter = self.counter.wrapping_add(1);
+        (c as u16).reverse_bits()
+    }
+}
+
+/// One RNG branched into `k` differently-delayed sequences (paper §III-A:
+/// "the random sequence from the RNG is branched into differently delayed
+/// versions, emulating distinct pseudo-random sequences").
+///
+/// Hardware: a shift-register chain tapping the single LFSR at different
+/// depths. Model: `k` LFSR replicas fast-forwarded by `delay*i` steps —
+/// bit-identical to tapping one LFSR `delay*i` cycles apart.
+#[derive(Clone, Debug)]
+pub struct DelayedBranches {
+    branches: Vec<Lfsr16>,
+}
+
+impl DelayedBranches {
+    pub fn new(seed: u16, k: usize, delay: usize) -> Self {
+        let mut branches = Vec::with_capacity(k);
+        for i in 0..k {
+            let mut l = Lfsr16::new(seed);
+            for _ in 0..(delay * i) {
+                l.step();
+            }
+            branches.push(l);
+        }
+        Self { branches }
+    }
+
+    pub fn len(&self) -> usize {
+        self.branches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.branches.is_empty()
+    }
+
+    /// Advance every branch one clock and return branch `i`'s output.
+    /// All branches tick together (they share the physical clock);
+    /// use [`Self::tick`] to get all outputs of one cycle.
+    pub fn tick(&mut self, out: &mut [u16]) {
+        assert_eq!(out.len(), self.branches.len());
+        for (o, b) in out.iter_mut().zip(self.branches.iter_mut()) {
+            *o = b.step();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lfsr_full_period() {
+        // Maximal-length 16-bit LFSR visits all 2^16-1 non-zero states.
+        let mut l = Lfsr16::new(1);
+        let first = l.step();
+        let mut period = 1u32;
+        while l.step() != first {
+            period += 1;
+            assert!(period <= 65536, "period exceeds 2^16");
+        }
+        assert_eq!(period, 65535);
+    }
+
+    #[test]
+    fn lfsr_zero_seed_fixed() {
+        let mut l = Lfsr16::new(0);
+        assert_ne!(l.step(), 0);
+    }
+
+    #[test]
+    fn lfsr_never_zero() {
+        let mut l = Lfsr16::new(0xBEEF);
+        for _ in 0..70_000 {
+            assert_ne!(l.step(), 0);
+        }
+    }
+
+    #[test]
+    fn lfsr_mean_near_half() {
+        let mut l = Lfsr16::new(0x1234);
+        let n = 65535;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += l.next_f64();
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.001, "mean={mean}");
+    }
+
+    #[test]
+    fn xorshift_mean_near_half() {
+        let mut x = XorShift64::new(99);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| x.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn sobol_is_low_discrepancy() {
+        // Empirical mean of first 256 Sobol points is exactly the threshold
+        // up to 1/256 resolution for any threshold comparator.
+        let mut s = Sobol::new(0);
+        let p = 0.7;
+        let n = 256;
+        let ones = (0..n).filter(|_| s.next_f64() < p).count();
+        let err = (ones as f64 / n as f64 - p).abs();
+        assert!(err <= 1.0 / 256.0 + 1e-12, "err={err}");
+    }
+
+    #[test]
+    fn sobol_first_points() {
+        let mut s = Sobol::new(0);
+        let seq: Vec<f64> = (0..4).map(|_| s.next_f64()).collect();
+        assert_eq!(seq, vec![0.0, 0.5, 0.25, 0.75]);
+    }
+
+    #[test]
+    fn delayed_branches_match_shifted_lfsr() {
+        let k = 4;
+        let delay = 7;
+        let mut db = DelayedBranches::new(0x5555, k, delay);
+        let mut out = vec![0u16; k];
+        // Reference: independent LFSRs stepped (delay*i + t) times.
+        let mut refs: Vec<Lfsr16> = (0..k)
+            .map(|i| {
+                let mut l = Lfsr16::new(0x5555);
+                for _ in 0..(delay * i) {
+                    l.step();
+                }
+                l
+            })
+            .collect();
+        for _ in 0..100 {
+            db.tick(&mut out);
+            for (i, r) in refs.iter_mut().enumerate() {
+                assert_eq!(out[i], r.step());
+            }
+        }
+    }
+
+    #[test]
+    fn branches_decorrelated() {
+        // Delayed branches should have low pairwise bit correlation.
+        let mut db = DelayedBranches::new(0x0BAD, 2, 31);
+        let mut out = vec![0u16; 2];
+        let n = 10_000;
+        let mut same = 0;
+        for _ in 0..n {
+            db.tick(&mut out);
+            if (out[0] & 1) == (out[1] & 1) {
+                same += 1;
+            }
+        }
+        let frac = same as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "agreement={frac}");
+    }
+}

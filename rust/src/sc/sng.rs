@@ -1,0 +1,118 @@
+//! θ-gates — stochastic number generators (paper Fig. 1, §II-B).
+//!
+//! A θ-gate is a binary comparator between a prescribed threshold and a
+//! random entropy source: per clock cycle it emits `1` iff
+//! `rand < threshold`. The SNG of Fig. 1 *is* a θ-gate; the CPT-gate is a
+//! bank of them behind a MUX ([`crate::sc::cpt`]).
+
+use super::rng::StreamRng;
+
+/// Fixed-point threshold width used by the datapath (16 bits — the paper's
+/// "standard fixed-point representation ... whose quantization error is
+/// negligible", §IV-A).
+pub const THRESHOLD_BITS: u32 = 16;
+
+/// A θ-gate: comparator + threshold register.
+#[derive(Clone, Debug)]
+pub struct ThetaGate {
+    /// 16-bit threshold; the gate fires when `rand16 < threshold`.
+    threshold: u16,
+}
+
+impl ThetaGate {
+    /// Quantize a probability into the 16-bit threshold register.
+    pub fn new(p: f64) -> Self {
+        let t = (p.clamp(0.0, 1.0) * 65536.0).round().min(65535.0) as u16;
+        Self { threshold: t }
+    }
+
+    /// Construct from the raw register value.
+    pub fn from_raw(threshold: u16) -> Self {
+        Self { threshold }
+    }
+
+    /// The exact probability this gate realizes after quantization.
+    pub fn effective_p(&self) -> f64 {
+        self.threshold as f64 / 65536.0
+    }
+
+    /// Raw register value.
+    pub fn raw(&self) -> u16 {
+        self.threshold
+    }
+
+    /// One clock cycle: compare against the entropy word.
+    #[inline(always)]
+    pub fn sample(&self, rand16: u16) -> bool {
+        rand16 < self.threshold
+    }
+
+    /// Convenience: run `len` cycles against `rng` and return the mean.
+    pub fn run_mean(&self, len: usize, rng: &mut impl StreamRng) -> f64 {
+        let mut ones = 0u64;
+        for _ in 0..len {
+            ones += self.sample(rng.next_u16()) as u64;
+        }
+        ones as f64 / len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::rng::{Lfsr16, Sobol};
+    use crate::testing::{check, UnitF64};
+
+    #[test]
+    fn threshold_quantization() {
+        assert_eq!(ThetaGate::new(0.0).raw(), 0);
+        assert_eq!(ThetaGate::new(1.0).raw(), 65535);
+        assert_eq!(ThetaGate::new(0.5).raw(), 32768);
+    }
+
+    #[test]
+    fn zero_threshold_never_fires() {
+        let g = ThetaGate::new(0.0);
+        let mut rng = Lfsr16::new(1);
+        assert_eq!(g.run_mean(10_000, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn effective_p_roundtrip() {
+        let g = ThetaGate::new(0.7);
+        assert!((g.effective_p() - 0.7).abs() < 1.0 / 65536.0);
+    }
+
+    #[test]
+    fn lfsr_driven_mean_converges() {
+        // Over a full LFSR period the mean is exact to 1/65536 (each
+        // non-zero comparator word appears exactly once).
+        let g = ThetaGate::new(0.7);
+        let mut rng = Lfsr16::new(0x1357);
+        let mean = g.run_mean(65535, &mut rng);
+        assert!((mean - 0.7).abs() < 2.0 / 65536.0 + 1e-9, "mean={mean}");
+    }
+
+    #[test]
+    fn prop_sobol_mean_error_is_o_one_over_l() {
+        check(21, 64, &UnitF64::unit(), |&p| {
+            let g = ThetaGate::new(p);
+            let mut rng = Sobol::new(0);
+            let l = 1024;
+            let mean = g.run_mean(l, &mut rng);
+            (mean - g.effective_p()).abs() <= 1.0 / l as f64 + 1e-12
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_threshold() {
+        // A higher threshold can never fire less often on the same entropy.
+        check(22, 64, &UnitF64::unit(), |&p| {
+            let g1 = ThetaGate::new(p * 0.5);
+            let g2 = ThetaGate::new(p);
+            let mut r1 = Lfsr16::new(42);
+            let mut r2 = Lfsr16::new(42);
+            g1.run_mean(2048, &mut r1) <= g2.run_mean(2048, &mut r2) + 1e-12
+        });
+    }
+}

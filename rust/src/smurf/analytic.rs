@@ -1,0 +1,199 @@
+//! Closed-form SMURF evaluation (paper Eq. 21): the infinite-bitstream
+//! steady-state output
+//!
+//! `P_y(P_x; w) = Σ_s P_s(P_x) · w_s`,   `P_s = Π_j π^{(j)}_{i_j}(P_{x_j})`
+//!
+//! where `π^{(j)}` is the per-variable chain steady state (Eq. 4). The
+//! joint factorizes across variables because the FSMs transition
+//! independently — the property that makes both evaluation and synthesis
+//! tractable (the `H` matrix is a Kronecker product of 1-D Gram matrices).
+
+use super::config::SmurfConfig;
+use crate::fsm::steady::{steady_state, steady_state_into};
+
+/// An analytic SMURF: configuration + synthesized CPT coefficients.
+#[derive(Clone, Debug)]
+pub struct AnalyticSmurf {
+    cfg: SmurfConfig,
+    /// `w[t]` for MUX select `t` (mixed-radix codeword index).
+    w: Vec<f64>,
+}
+
+impl AnalyticSmurf {
+    pub fn new(cfg: SmurfConfig, w: Vec<f64>) -> Self {
+        assert_eq!(
+            w.len(),
+            cfg.num_aggregate_states(),
+            "coefficient count must equal the number of aggregate states"
+        );
+        Self { cfg, w }
+    }
+
+    pub fn config(&self) -> &SmurfConfig {
+        &self.cfg
+    }
+
+    pub fn coefficients(&self) -> &[f64] {
+        &self.w
+    }
+
+    /// Joint steady-state probability of every aggregate state at input
+    /// `p` — the vector `[P_s]_s` of Eq. 21, in MUX-select order.
+    ///
+    /// Computed as the outer product of per-variable marginals, built up
+    /// digit-by-digit (variable 0 is the least-significant digit).
+    pub fn joint_steady_state(&self, p: &[f64]) -> Vec<f64> {
+        assert_eq!(p.len(), self.cfg.num_vars());
+        let mut joint = vec![1.0];
+        for j in 0..self.cfg.num_vars() {
+            let marg = steady_state(self.cfg.radix(j), p[j]);
+            // New joint has marg ⊗ joint layout: digit j varies slower
+            // than digits < j.
+            let mut next = Vec::with_capacity(joint.len() * marg.len());
+            for &mj in &marg {
+                for &jv in &joint {
+                    next.push(mj * jv);
+                }
+            }
+            joint = next;
+        }
+        joint
+    }
+
+    /// Eq. 21: the expected output for input probabilities `p`.
+    ///
+    /// Allocation-free fast path for configurations up to 64 aggregate
+    /// states (every paper configuration); the general case falls back to
+    /// the heap (§Perf: the serving engine calls this per request point).
+    pub fn eval(&self, p: &[f64]) -> f64 {
+        assert_eq!(p.len(), self.cfg.num_vars());
+        let states = self.w.len();
+        if states <= 64 && self.cfg.radices().iter().all(|&n| n <= 16) {
+            let mut joint = [0.0f64; 64];
+            let mut len = 1usize;
+            joint[0] = 1.0;
+            let mut marg = [0.0f64; 16];
+            for j in 0..self.cfg.num_vars() {
+                let n = self.cfg.radix(j);
+                steady_state_into(n, p[j], &mut marg[..n]);
+                // In-place outer product, filling from the back so lower
+                // entries are not clobbered before they are read.
+                for mi in (0..n).rev() {
+                    let m = marg[mi];
+                    let base = mi * len;
+                    for k in (0..len).rev() {
+                        joint[base + k] = m * joint[k];
+                    }
+                }
+                len *= n;
+            }
+            let mut acc = 0.0;
+            for (a, b) in joint[..len].iter().zip(&self.w) {
+                acc += a * b;
+            }
+            acc
+        } else {
+            self.joint_steady_state(p)
+                .iter()
+                .zip(&self.w)
+                .map(|(ps, ws)| ps * ws)
+                .sum()
+        }
+    }
+
+    /// Batch evaluation (the L1 Pallas kernel computes exactly this shape:
+    /// `(B, M) -> (B,)`).
+    pub fn eval_batch(&self, ps: &[Vec<f64>]) -> Vec<f64> {
+        ps.iter().map(|p| self.eval(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, UnitVec};
+
+    fn cfg24() -> SmurfConfig {
+        SmurfConfig::uniform(2, 4)
+    }
+
+    #[test]
+    fn joint_sums_to_one() {
+        let s = AnalyticSmurf::new(cfg24(), vec![0.0; 16]);
+        for p in [[0.1, 0.9], [0.5, 0.5], [0.0, 1.0]] {
+            let j = s.joint_steady_state(&p);
+            assert!((j.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn joint_factorizes() {
+        // P_[i2,i1] must equal π2[i2]·π1[i1] with the right index order.
+        let s = AnalyticSmurf::new(cfg24(), vec![0.0; 16]);
+        let p = [0.3, 0.8];
+        let joint = s.joint_steady_state(&p);
+        let m1 = steady_state(4, p[0]);
+        let m2 = steady_state(4, p[1]);
+        for i2 in 0..4 {
+            for i1 in 0..4 {
+                let idx = i1 + 4 * i2;
+                assert!((joint[idx] - m1[i1] * m2[i2]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_coefficients_give_constant_output() {
+        let s = AnalyticSmurf::new(cfg24(), vec![0.37; 16]);
+        for p in [[0.0, 0.0], [0.2, 0.9], [1.0, 1.0]] {
+            assert!((s.eval(&p) - 0.37).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn corner_saturation_reads_corner_coefficient() {
+        // At p=(1,1) both chains saturate at state 3 → w_15 is read out.
+        let mut w = vec![0.0; 16];
+        w[15] = 0.9846; // paper Table I corner value
+        let s = AnalyticSmurf::new(cfg24(), w);
+        assert!((s.eval(&[1.0, 1.0]) - 0.9846).abs() < 1e-12);
+        // At p=(0,0) → w_0.
+        assert!(s.eval(&[0.0, 0.0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn output_bounded_by_coefficient_range() {
+        // P_y is a convex combination of the w's.
+        let w: Vec<f64> = (0..16).map(|i| 0.1 + 0.05 * i as f64).collect();
+        let lo = w.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let s = AnalyticSmurf::new(cfg24(), w);
+        check(41, 128, &UnitVec { len: 2 }, |p| {
+            let y = s.eval(p);
+            y >= lo - 1e-12 && y <= hi + 1e-12
+        });
+    }
+
+    #[test]
+    fn eval_batch_matches_eval() {
+        let w: Vec<f64> = (0..16).map(|i| i as f64 / 15.0).collect();
+        let s = AnalyticSmurf::new(cfg24(), w);
+        let batch = vec![vec![0.1, 0.2], vec![0.7, 0.9]];
+        let ys = s.eval_batch(&batch);
+        assert_eq!(ys.len(), 2);
+        assert_eq!(ys[0], s.eval(&batch[0]));
+        assert_eq!(ys[1], s.eval(&batch[1]));
+    }
+
+    #[test]
+    fn mixed_radix_joint_is_consistent() {
+        let cfg = SmurfConfig::new(vec![3, 5]);
+        let s = AnalyticSmurf::new(cfg, vec![0.0; 15]);
+        let j = s.joint_steady_state(&[0.25, 0.75]);
+        assert_eq!(j.len(), 15);
+        assert!((j.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let m1 = steady_state(3, 0.25);
+        let m2 = steady_state(5, 0.75);
+        assert!((j[1 + 3 * 2] - m1[1] * m2[2]).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,180 @@
+//! High-level façade: synthesize once, evaluate anywhere (analytic,
+//! bit-level, batch), serialize coefficient tables.
+
+use super::analytic::AnalyticSmurf;
+use super::config::SmurfConfig;
+use super::sim::{BitLevelSmurf, EntropyMode};
+use crate::synth::functions::TargetFn;
+use crate::synth::synthesize::{synthesize, SynthOptions, SynthResult};
+use crate::util::json::Json;
+
+/// A synthesized SMURF ready for evaluation.
+#[derive(Clone, Debug)]
+pub struct SmurfApproximator {
+    name: String,
+    analytic: AnalyticSmurf,
+    sim: BitLevelSmurf,
+    /// Default bitstream length used by `eval` (paper fixes 64, §IV-A).
+    pub default_len: usize,
+    /// Analytic MAE reported by synthesis.
+    pub synth_mae: f64,
+}
+
+impl SmurfApproximator {
+    /// Synthesize coefficients for `target` with default options.
+    pub fn synthesize(cfg: &SmurfConfig, target: &TargetFn, default_len: usize) -> Self {
+        Self::synthesize_with(cfg, target, default_len, &SynthOptions::default())
+    }
+
+    pub fn synthesize_with(
+        cfg: &SmurfConfig,
+        target: &TargetFn,
+        default_len: usize,
+        opts: &SynthOptions,
+    ) -> Self {
+        let SynthResult { smurf, mae, .. } = synthesize(cfg, target, opts);
+        Self::from_analytic(target.name().to_string(), smurf, default_len, mae)
+    }
+
+    /// Wrap pre-computed coefficients (e.g. the paper's Table I values).
+    pub fn from_coefficients(
+        name: impl Into<String>,
+        cfg: SmurfConfig,
+        w: Vec<f64>,
+        default_len: usize,
+    ) -> Self {
+        let analytic = AnalyticSmurf::new(cfg, w);
+        Self::from_analytic(name.into(), analytic, default_len, f64::NAN)
+    }
+
+    fn from_analytic(name: String, analytic: AnalyticSmurf, default_len: usize, mae: f64) -> Self {
+        let sim = BitLevelSmurf::from_analytic(&analytic, EntropyMode::SharedLfsr);
+        Self { name, analytic, sim, default_len, synth_mae: mae }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn config(&self) -> &SmurfConfig {
+        self.analytic.config()
+    }
+
+    pub fn coefficients(&self) -> &[f64] {
+        self.analytic.coefficients()
+    }
+
+    /// Infinite-bitstream (expected) output — Eq. 21.
+    pub fn eval_analytic(&self, p: &[f64]) -> f64 {
+        self.analytic.eval(p)
+    }
+
+    /// Hardware-faithful bit-level output with an explicit stream length.
+    pub fn eval_bitstream(&self, p: &[f64], len: usize, seed: u64) -> f64 {
+        self.sim.eval(p, len, seed)
+    }
+
+    /// Bit-level output at the configured default stream length.
+    pub fn eval(&self, p: &[f64], seed: u64) -> f64 {
+        self.sim.eval(p, self.default_len, seed)
+    }
+
+    /// Underlying analytic instance.
+    pub fn analytic(&self) -> &AnalyticSmurf {
+        &self.analytic
+    }
+
+    /// Underlying bit-level simulator.
+    pub fn simulator(&self) -> &BitLevelSmurf {
+        &self.sim
+    }
+
+    /// Serialize the coefficient table (for artifacts/ and the python
+    /// compile path, which embeds the same table into the Pallas kernel).
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".into(), Json::Str(self.name.clone()));
+        obj.insert(
+            "radices".into(),
+            Json::Arr(self.config().radices().iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        obj.insert("w".into(), Json::from_f64s(self.coefficients()));
+        obj.insert("default_len".into(), Json::Num(self.default_len as f64));
+        Json::Obj(obj)
+    }
+
+    /// Deserialize from [`Self::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let name = j.get("name").and_then(Json::as_str).ok_or("missing name")?;
+        let radices: Vec<usize> = j
+            .get("radices")
+            .and_then(Json::as_f64_vec)
+            .ok_or("missing radices")?
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        let w = j.get("w").and_then(Json::as_f64_vec).ok_or("missing w")?;
+        let default_len = j
+            .get("default_len")
+            .and_then(Json::as_f64)
+            .ok_or("missing default_len")? as usize;
+        let cfg = SmurfConfig::new(radices);
+        if w.len() != cfg.num_aggregate_states() {
+            return Err(format!(
+                "coefficient count {} does not match config {}",
+                w.len(),
+                cfg
+            ));
+        }
+        Ok(Self::from_coefficients(name.to_string(), cfg, w, default_len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::functions;
+
+    #[test]
+    fn synthesize_and_eval() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let a = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+        let y = a.eval_analytic(&[0.3, 0.4]);
+        assert!((y - 0.5).abs() < 0.05, "y={y}");
+        assert!(a.synth_mae < 0.02);
+        assert_eq!(a.name(), "euclidean2");
+    }
+
+    #[test]
+    fn bitstream_eval_uses_default_len() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let a = SmurfApproximator::synthesize(&cfg, &functions::product2(), 64);
+        let y1 = a.eval(&[0.5, 0.5], 3);
+        let y2 = a.eval_bitstream(&[0.5, 0.5], 64, 3);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let a = SmurfApproximator::synthesize(&cfg, &functions::sincos(), 128);
+        let j = a.to_json();
+        let b = SmurfApproximator::from_json(&j).unwrap();
+        assert_eq!(a.coefficients(), b.coefficients());
+        assert_eq!(b.default_len, 128);
+        assert_eq!(b.name(), "sincos");
+        // Same analytic output.
+        assert_eq!(a.eval_analytic(&[0.2, 0.9]), b.eval_analytic(&[0.2, 0.9]));
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shape() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let a = SmurfApproximator::synthesize(&cfg, &functions::product2(), 64);
+        let mut j = a.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("w".into(), Json::from_f64s(&[0.5; 3]));
+        }
+        assert!(SmurfApproximator::from_json(&j).is_err());
+    }
+}

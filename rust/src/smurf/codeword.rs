@@ -1,0 +1,114 @@
+//! The universal-radix codeword `s = [i_M, …, i_1]` (paper §III-A).
+//!
+//! Each digit is the current state of one variable's FSM; the mixed-radix
+//! integer encoding of the codeword is the CPT MUX select. The paper
+//! indexes coefficient tables (Tables I/II) with variable 1 as the
+//! least-significant digit: `t = i_1 + N_1·i_2 + N_1N_2·i_3 + …` — e.g.
+//! for `N=4, M=2`, `w_t` at `t = i_1 + 4·i_2`.
+
+use super::config::SmurfConfig;
+
+/// A decoded codeword (digit `j` = state of variable `j`'s FSM).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Codeword {
+    digits: Vec<usize>,
+}
+
+impl Codeword {
+    pub fn new(digits: Vec<usize>, cfg: &SmurfConfig) -> Self {
+        assert_eq!(digits.len(), cfg.num_vars());
+        for (j, &d) in digits.iter().enumerate() {
+            assert!(d < cfg.radix(j), "digit {j} out of range");
+        }
+        Self { digits }
+    }
+
+    /// Decode a MUX select index into its digits.
+    pub fn from_index(mut idx: usize, cfg: &SmurfConfig) -> Self {
+        assert!(idx < cfg.num_aggregate_states());
+        let mut digits = Vec::with_capacity(cfg.num_vars());
+        for j in 0..cfg.num_vars() {
+            let n = cfg.radix(j);
+            digits.push(idx % n);
+            idx /= n;
+        }
+        Self { digits }
+    }
+
+    /// Mixed-radix encode into the MUX select index.
+    pub fn to_index(&self, cfg: &SmurfConfig) -> usize {
+        let strides = cfg.strides();
+        self.digits.iter().zip(&strides).map(|(d, s)| d * s).sum()
+    }
+
+    pub fn digits(&self) -> &[usize] {
+        &self.digits
+    }
+
+    /// Iterate all codewords of a configuration in index order.
+    pub fn all(cfg: &SmurfConfig) -> impl Iterator<Item = Codeword> + '_ {
+        (0..cfg.num_aggregate_states()).map(move |i| Codeword::from_index(i, cfg))
+    }
+}
+
+impl std::fmt::Display for Codeword {
+    /// Paper notation: `[i_M, …, i_1]` (most-significant digit first).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (k, d) in self.digits.iter().rev().enumerate() {
+            if k > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_uniform() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        for i in 0..16 {
+            let cw = Codeword::from_index(i, &cfg);
+            assert_eq!(cw.to_index(&cfg), i);
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_radix() {
+        let cfg = SmurfConfig::new(vec![3, 5, 2]);
+        for i in 0..30 {
+            let cw = Codeword::from_index(i, &cfg);
+            assert_eq!(cw.to_index(&cfg), i);
+        }
+    }
+
+    #[test]
+    fn paper_table1_indexing() {
+        // Table I is indexed t = i_1 + 4*i_2 (N=4, M=2): w_5 ↔ [i_2,i_1]=[1,1].
+        let cfg = SmurfConfig::uniform(2, 4);
+        let cw = Codeword::from_index(5, &cfg);
+        assert_eq!(cw.digits(), &[1, 1]);
+        let cw = Codeword::from_index(7, &cfg);
+        assert_eq!(cw.digits(), &[3, 1]); // i_1=3, i_2=1
+        assert_eq!(cw.to_string(), "[1,3]");
+    }
+
+    #[test]
+    fn all_enumerates_everything_once() {
+        let cfg = SmurfConfig::new(vec![2, 3]);
+        let v: Vec<usize> = Codeword::all(&cfg).map(|c| c.to_index(&cfg)).collect();
+        assert_eq!(v, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_digit() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        Codeword::new(vec![4, 0], &cfg);
+    }
+}

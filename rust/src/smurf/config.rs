@@ -1,0 +1,104 @@
+//! SMURF configuration: variable count and per-variable radix.
+
+/// Configuration of a SMURF instance.
+///
+/// `radices[j]` is the number of states `N_j` of the FSM attached to input
+/// variable `j` (paper: "universal-radix ... can even be different for
+/// each FSM", §III-A). The CPT bank holds `Π_j N_j` coefficients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SmurfConfig {
+    radices: Vec<usize>,
+}
+
+impl SmurfConfig {
+    /// Per-variable radices. Each must be ≥ 2; ≥ 3 is required for
+    /// nonlinear approximation (§II-C: two states are "completely linear"),
+    /// which we allow but is worth a warning in synthesis diagnostics.
+    pub fn new(radices: Vec<usize>) -> Self {
+        assert!(!radices.is_empty(), "need at least one variable");
+        assert!(radices.iter().all(|&n| n >= 2), "each FSM needs >= 2 states");
+        Self { radices }
+    }
+
+    /// All `m` variables share radix `n` — the paper's usual setting
+    /// (`N=4` works well "in all practical cases", §II-C).
+    pub fn uniform(m: usize, n: usize) -> Self {
+        Self::new(vec![n; m])
+    }
+
+    /// Number of input variables `M`.
+    pub fn num_vars(&self) -> usize {
+        self.radices.len()
+    }
+
+    /// Radix (state count) of variable `j`'s FSM.
+    pub fn radix(&self, j: usize) -> usize {
+        self.radices[j]
+    }
+
+    pub fn radices(&self) -> &[usize] {
+        &self.radices
+    }
+
+    /// Total number of aggregate states = CPT bank size `Π N_j`.
+    pub fn num_aggregate_states(&self) -> usize {
+        self.radices.iter().product()
+    }
+
+    /// Mixed-radix strides: `stride[j] = Π_{k<j} N_k` so that
+    /// `sel = Σ_j i_j · stride[j]` (variable 1 is the least-significant
+    /// digit, matching the paper's `s = [i_M, …, i_1]` ordering).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = Vec::with_capacity(self.radices.len());
+        let mut acc = 1;
+        for &n in &self.radices {
+            s.push(acc);
+            acc *= n;
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for SmurfConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SMURF(M={}, N={:?})", self.num_vars(), self.radices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_config() {
+        let c = SmurfConfig::uniform(2, 4);
+        assert_eq!(c.num_vars(), 2);
+        assert_eq!(c.radix(0), 4);
+        assert_eq!(c.num_aggregate_states(), 16);
+        assert_eq!(c.strides(), vec![1, 4]);
+    }
+
+    #[test]
+    fn mixed_radix() {
+        let c = SmurfConfig::new(vec![3, 4, 5]);
+        assert_eq!(c.num_aggregate_states(), 60);
+        assert_eq!(c.strides(), vec![1, 3, 12]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty() {
+        SmurfConfig::new(vec![]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_radix_one() {
+        SmurfConfig::new(vec![4, 1]);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(SmurfConfig::uniform(2, 4).to_string(), "SMURF(M=2, N=[4, 4])");
+    }
+}

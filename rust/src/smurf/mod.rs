@@ -1,0 +1,26 @@
+//! SMURF — the paper's contribution (§III).
+//!
+//! - [`config`] — number of variables `M` and per-variable radix `N_j`
+//!   ("universal-radix": the radix may differ per FSM).
+//! - [`codeword`] — the aggregate-state codeword `s = [i_M, …, i_1]` and
+//!   its mixed-radix encoding into the CPT MUX select.
+//! - [`analytic`] — the closed-form steady-state evaluator (Eq. 21):
+//!   `P_y = Σ_s P_s(P_x) · w_s`. This is the infinite-bitstream limit and
+//!   the differentiable surrogate the L2 JAX model trains through.
+//! - [`sim`] — the cycle-accurate bit-level simulator of Fig. 6: input
+//!   θ-gates, M chained FSMs, CPT-gate, output counter — gate-for-gate the
+//!   paper's RTL, with the single-RNG delayed-branch entropy wiring.
+//! - [`approximator`] — synthesis + evaluation façade.
+
+pub mod analytic;
+pub mod approximator;
+pub mod codeword;
+pub mod config;
+pub mod multi_output;
+pub mod sim;
+
+pub use analytic::AnalyticSmurf;
+pub use approximator::SmurfApproximator;
+pub use codeword::Codeword;
+pub use config::SmurfConfig;
+pub use sim::BitLevelSmurf;

@@ -1,0 +1,290 @@
+//! Target-function library.
+//!
+//! Every nonlinearity the paper evaluates, normalized to
+//! `[0,1]^M → [0,1]` (paper §II-A: any function is brought to the unit
+//! box by a bijective linear map, Fig. 3), plus extras for the examples.
+//!
+//! A [`TargetFn`] carries its arity, a human name, and the domain/range
+//! mapping metadata so callers can un-normalize outputs.
+
+use std::sync::Arc;
+
+/// A target function for SMURF synthesis.
+#[derive(Clone)]
+pub struct TargetFn {
+    name: String,
+    arity: usize,
+    f: Arc<dyn Fn(&[f64]) -> f64 + Send + Sync>,
+}
+
+impl TargetFn {
+    pub fn new(
+        name: impl Into<String>,
+        arity: usize,
+        f: impl Fn(&[f64]) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        Self { name: name.into(), arity, f: Arc::new(f) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Evaluate at a point in the unit box.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.arity);
+        (self.f)(x)
+    }
+
+    /// Borrow as the `dyn Fn` the quadrature assembler expects.
+    pub fn as_fn(&self) -> impl Fn(&[f64]) -> f64 + '_ {
+        move |x: &[f64]| (self.f)(x)
+    }
+}
+
+impl std::fmt::Debug for TargetFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TargetFn({}, arity={})", self.name, self.arity)
+    }
+}
+
+/// Paper §III-B Example 1: 2-D Euclidean distance `√(x₁²+x₂²)`, clipped
+/// into [0,1] (the paper treats outputs as SNs, hence ≤ 1).
+pub fn euclidean2() -> TargetFn {
+    TargetFn::new("euclidean2", 2, |x| (x[0] * x[0] + x[1] * x[1]).sqrt().min(1.0))
+}
+
+/// Paper §III-B Example 2 (Eq. 15): the Hartley-transform kernel
+/// `sin(x₁)cos(x₂)` on the unit box (already in [0,1] there).
+pub fn sincos() -> TargetFn {
+    TargetFn::new("sincos", 2, |x| x[0].sin() * x[1].cos())
+}
+
+/// Bivariate softmax component `exp(x₁)/(exp(x₁)+exp(x₂))` (Table III
+/// column 3, Fig. 10c).
+pub fn softmax2() -> TargetFn {
+    TargetFn::new("softmax2", 2, |x| {
+        let e1 = x[0].exp();
+        let e2 = x[1].exp();
+        e1 / (e1 + e2)
+    })
+}
+
+/// 3-variate softmax, first component (paper Eq. 22, Fig. 7).
+pub fn softmax3() -> TargetFn {
+    TargetFn::new("softmax3", 3, |x| {
+        let e: Vec<f64> = x.iter().map(|v| v.exp()).collect();
+        e[0] / (e[0] + e[1] + e[2])
+    })
+}
+
+/// tanh in the *bipolar* SC convention (Fig. 8): the SN value `P ∈ [0,1]`
+/// encodes `v = 2P−1 ∈ [-1,1]`, and the target encodes `tanh(k·v)` the
+/// same way: `T(P) = (tanh(k(2P−1)) + 1)/2`. This is the convention under
+/// which the Brown–Card tanh FSM (Eq. 1) is the exact binary-label
+/// special case — the QP recovers labels ≈ [0,0,1,1] at k=N/2.
+pub fn tanh_bipolar(k: f64) -> TargetFn {
+    TargetFn::new(format!("tanh_k{k}"), 1, move |x| {
+        ((k * (2.0 * x[0] - 1.0)).tanh() + 1.0) / 2.0
+    })
+}
+
+/// swish = v·σ(v) over v ∈ [-R, R] in the bipolar convention, output
+/// min-max normalized to [0,1] (Fig. 9). The true minimum of swish is
+/// interior (≈ −0.278 at v ≈ −1.278), so normalization uses it rather
+/// than the endpoint.
+pub fn swish_bipolar(r: f64) -> TargetFn {
+    let s = |v: f64| v / (1.0 + (-v).exp());
+    // Global minimum of swish: at the root of σ(v)(1 + v(1−σ(v))) — for
+    // r ≥ 1.278 it is the interior minimum, else the left endpoint.
+    let vmin = if r >= 1.278 { -1.2784645427610738 } else { -r };
+    let lo = s(vmin);
+    let hi = s(r);
+    TargetFn::new(format!("swish_r{r}"), 1, move |x| {
+        let u = r * (2.0 * x[0] - 1.0);
+        (s(u) - lo) / (hi - lo)
+    })
+}
+
+/// GeLU over [-R, R], min-max normalized (extension beyond the paper).
+/// Like swish, GeLU's minimum is interior (≈ −0.170 at v ≈ −0.751).
+pub fn gelu_bipolar(r: f64) -> TargetFn {
+    let g = |v: f64| 0.5 * v * (1.0 + (v / std::f64::consts::SQRT_2).erf_approx());
+    let vmin = if r >= 0.7518 { -0.7517916243860019 } else { -r };
+    let lo = g(vmin);
+    let hi = g(r);
+    TargetFn::new(format!("gelu_r{r}"), 1, move |x| {
+        let u = r * (2.0 * x[0] - 1.0);
+        (g(u) - lo) / (hi - lo)
+    })
+}
+
+/// Sigmoid σ(k(2P−1)) — already [0,1]-valued.
+pub fn sigmoid_bipolar(k: f64) -> TargetFn {
+    TargetFn::new(format!("sigmoid_k{k}"), 1, move |x| {
+        1.0 / (1.0 + (-(k * (2.0 * x[0] - 1.0))).exp())
+    })
+}
+
+/// Product `x₁·x₂` — the stochastic-multiplication sanity target.
+pub fn product2() -> TargetFn {
+    TargetFn::new("product2", 2, |x| x[0] * x[1])
+}
+
+/// `log(1+x)/log 2` — univariate log example.
+pub fn log1p_unit() -> TargetFn {
+    TargetFn::new("log1p", 1, |x| (1.0 + x[0]).ln() / std::f64::consts::LN_2)
+}
+
+/// `exp(-x)` — decay kernel.
+pub fn exp_neg() -> TargetFn {
+    TargetFn::new("exp_neg", 1, |x| (-x[0]).exp())
+}
+
+/// Trivariate Euclidean norm `√(x₁²+x₂²+x₃²)/√3`.
+pub fn euclidean3() -> TargetFn {
+    TargetFn::new("euclidean3", 3, |x| {
+        (x.iter().map(|v| v * v).sum::<f64>()).sqrt() / 3f64.sqrt()
+    })
+}
+
+/// All named functions, for CLI/bench lookup.
+pub fn registry() -> Vec<TargetFn> {
+    vec![
+        euclidean2(),
+        sincos(),
+        softmax2(),
+        softmax3(),
+        tanh_bipolar(2.0),
+        swish_bipolar(2.0),
+        gelu_bipolar(2.0),
+        sigmoid_bipolar(4.0),
+        product2(),
+        log1p_unit(),
+        exp_neg(),
+        euclidean3(),
+    ]
+}
+
+/// Find by name.
+pub fn by_name(name: &str) -> Option<TargetFn> {
+    registry().into_iter().find(|f| f.name() == name)
+}
+
+/// Small erf approximation (Abramowitz–Stegun 7.1.26, |err| < 1.5e-7) so
+/// GeLU needs no libm beyond exp.
+trait ErfApprox {
+    fn erf_approx(self) -> f64;
+}
+
+impl ErfApprox for f64 {
+    fn erf_approx(self) -> f64 {
+        let sign = if self < 0.0 { -1.0 } else { 1.0 };
+        let x = self.abs();
+        let t = 1.0 / (1.0 + 0.3275911 * x);
+        let y = 1.0
+            - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+                + 0.254829592)
+                * t
+                * (-x * x).exp();
+        sign * y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arities() {
+        assert_eq!(euclidean2().arity(), 2);
+        assert_eq!(softmax3().arity(), 3);
+        assert_eq!(tanh_bipolar(2.0).arity(), 1);
+    }
+
+    #[test]
+    fn ranges_within_unit_interval() {
+        // All registry functions map the unit box into [0,1].
+        let mut rng = crate::util::prng::Pcg::new(9);
+        for f in registry() {
+            for _ in 0..500 {
+                let x: Vec<f64> = (0..f.arity()).map(|_| rng.uniform()).collect();
+                let y = f.eval(&x);
+                assert!(
+                    (-1e-9..=1.0 + 1e-9).contains(&y),
+                    "{} out of range at {:?}: {}",
+                    f.name(),
+                    x,
+                    y
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn euclid_known_values() {
+        let f = euclidean2();
+        assert!((f.eval(&[0.3, 0.4]) - 0.5).abs() < 1e-12);
+        assert!((f.eval(&[1.0, 1.0]) - 1.0).abs() < 1e-12, "clipped at 1");
+        assert_eq!(f.eval(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn softmax_components_sum_to_one() {
+        let x: [f64; 3] = [0.2, 0.5, 0.9];
+        let e: Vec<f64> = x.iter().map(|v| v.exp()).collect();
+        let z: f64 = e.iter().sum();
+        let s1 = softmax3().eval(&x);
+        assert!((s1 - e[0] / z).abs() < 1e-12);
+    }
+
+    #[test]
+    fn softmax2_symmetry() {
+        let f = softmax2();
+        assert!((f.eval(&[0.5, 0.5]) - 0.5).abs() < 1e-12);
+        assert!((f.eval(&[0.3, 0.7]) + f.eval(&[0.7, 0.3]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tanh_bipolar_symmetry_and_endpoints() {
+        let f = tanh_bipolar(2.0);
+        // Odd symmetry about the bipolar origin P=0.5.
+        assert!((f.eval(&[0.5]) - 0.5).abs() < 1e-12);
+        assert!((f.eval(&[0.2]) + f.eval(&[0.8]) - 1.0).abs() < 1e-12);
+        // Near-saturation at the endpoints.
+        assert!(f.eval(&[0.0]) < 0.02);
+        assert!(f.eval(&[1.0]) > 0.98);
+    }
+
+    #[test]
+    fn swish_bipolar_endpoints_and_monotone_tail() {
+        let f = swish_bipolar(2.0);
+        // Normalized by the interior minimum: the left endpoint sits just
+        // above 0, the minimum itself hits exactly 0, max is 1.
+        let left = f.eval(&[0.0]);
+        assert!((0.0..0.05).contains(&left), "left={left}");
+        // Interior minimum at v≈-1.278 → x = (v/2+1)/2 ≈ 0.180.
+        assert!(f.eval(&[0.180]).abs() < 1e-4);
+        assert!((f.eval(&[1.0]) - 1.0).abs() < 1e-12);
+        assert!(f.eval(&[0.75]) < f.eval(&[1.0]));
+    }
+
+    #[test]
+    fn erf_approx_accuracy() {
+        // Check against known values.
+        assert!((1.0f64.erf_approx() - 0.8427007929).abs() < 1e-6);
+        assert!((0.5f64.erf_approx() - 0.5204998778).abs() < 1e-6);
+        assert!(((-1.0f64).erf_approx() + 0.8427007929).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert!(by_name("euclidean2").is_some());
+        assert!(by_name("tanh_k2").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,24 @@
+//! Coefficient synthesis (paper §III-B, Eq. 5–11).
+//!
+//! Finds the CPT coefficients `b = [P_{w_0} … P_{w_{ΠN_j - 1}}]` minimizing
+//! the L2 error `ε = ∫ (T(P_x) − P_y)² dP_x` over the unit hypercube,
+//! which reduces to the box-constrained quadratic program
+//!
+//! `min_{0 ≤ b ≤ 1}  φ(b) = bᵀ H b + 2 cᵀ b`
+//!
+//! with `H_{s,s'} = ∫ P_s P_{s'}` and `c_s = −∫ T P_s` (Eq. 8–10).
+//!
+//! - [`quadrature`] — Gauss–Legendre nodes/weights; `H` exploits the
+//!   Kronecker factorization `H = G^{(M)} ⊗ … ⊗ G^{(1)}`.
+//! - [`qp`] — projected-gradient solver with Nesterov acceleration.
+//! - [`functions`] — every target function the paper evaluates, plus a
+//!   library of extras.
+//! - [`synthesize`] — the end-to-end flow.
+
+pub mod functions;
+pub mod paper_tables;
+pub mod qp;
+pub mod quadrature;
+pub mod synthesize;
+
+pub use synthesize::{synthesize, SynthOptions, SynthResult};

@@ -1,0 +1,274 @@
+//! Gauss–Legendre quadrature and the SMURF integral assembly.
+//!
+//! The synthesis integrals (Eq. 8–10) are over smooth rational functions
+//! on `[0,1]^M`; tensor-product Gauss–Legendre converges spectrally.
+//!
+//! Key structural fact: the joint steady state factorizes,
+//! `P_s(x) = Π_j π^{(j)}_{s_j}(x_j)`, so
+//!
+//! `H_{s,s'} = Π_j ∫₀¹ π_{s_j} π_{s'_j} dx = (G^{(M)} ⊗ … ⊗ G^{(1)})_{s,s'}`
+//!
+//! with the 1-D Gram matrices `G^{(j)}_{a,b} = ∫ π_a π_b dx`. We therefore
+//! assemble `H` from M small `N_j × N_j` quadratures instead of an
+//! `(ΠN_j)²`-entry M-dimensional integral. `c` needs the target `T` and is
+//! evaluated on the full tensor grid, accumulating all states per node via
+//! the factored marginals.
+
+use crate::fsm::steady::steady_state;
+use crate::smurf::config::SmurfConfig;
+use crate::util::linalg::Mat;
+
+/// Gauss–Legendre nodes and weights on `[0,1]`, computed by Newton on
+/// Legendre polynomials (standard Golub-free construction, adequate to
+/// machine precision for n ≤ 128).
+pub fn gauss_legendre_unit(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 1);
+    let mut nodes = vec![0.0; n];
+    let mut weights = vec![0.0; n];
+    let m = (n + 1) / 2;
+    for i in 0..m {
+        // Initial guess (Chebyshev-like).
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        // Newton iterations on P_n(x).
+        for _ in 0..100 {
+            let (p, dp) = legendre_and_deriv(n, x);
+            let dx = p / dp;
+            x -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        let (_, dp) = legendre_and_deriv(n, x);
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        // Map [-1,1] → [0,1].
+        nodes[i] = 0.5 * (1.0 - x);
+        nodes[n - 1 - i] = 0.5 * (1.0 + x);
+        weights[i] = 0.5 * w;
+        weights[n - 1 - i] = 0.5 * w;
+    }
+    (nodes, weights)
+}
+
+fn legendre_and_deriv(n: usize, x: f64) -> (f64, f64) {
+    let mut p0 = 1.0;
+    let mut p1 = x;
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    for k in 2..=n {
+        let pk = ((2 * k - 1) as f64 * x * p1 - (k - 1) as f64 * p0) / k as f64;
+        p0 = p1;
+        p1 = pk;
+    }
+    let dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+    (p1, dp)
+}
+
+/// 1-D Gram matrix `G_{a,b} = ∫₀¹ π_a(x) π_b(x) dx` for an `n`-state chain,
+/// with `quad_nodes` GL points.
+pub fn gram_1d(n_states: usize, quad_nodes: usize) -> Mat {
+    let (xs, ws) = gauss_legendre_unit(quad_nodes);
+    let mut g = Mat::zeros(n_states, n_states);
+    for (x, w) in xs.iter().zip(&ws) {
+        let pi = steady_state(n_states, *x);
+        for a in 0..n_states {
+            let wa = w * pi[a];
+            for b in 0..n_states {
+                g.a[a * n_states + b] += wa * pi[b];
+            }
+        }
+    }
+    g
+}
+
+/// Assemble the full `H` matrix (Eq. 9–10) as the Kronecker product of the
+/// per-variable Gram matrices. Digit 0 (variable 1) is least significant,
+/// so `H = G^{(M)} ⊗ … ⊗ G^{(1)}`.
+pub fn h_matrix(cfg: &SmurfConfig, quad_nodes: usize) -> Mat {
+    let mut h = Mat::from_fn(1, 1, |_, _| 1.0);
+    for j in 0..cfg.num_vars() {
+        let g = gram_1d(cfg.radix(j), quad_nodes);
+        // Kron with the new (more significant) factor on the LEFT:
+        // index = i_j * stride + rest.
+        h = g.kron(&h);
+    }
+    h
+}
+
+/// Assemble the `c` vector (Eq. 8): `c_s = −∫ T(x) P_s(x) dx` on the
+/// tensor-product GL grid.
+pub fn c_vector(
+    cfg: &SmurfConfig,
+    target: &dyn Fn(&[f64]) -> f64,
+    quad_nodes: usize,
+) -> Vec<f64> {
+    let m = cfg.num_vars();
+    let (xs, ws) = gauss_legendre_unit(quad_nodes);
+    let total_states = cfg.num_aggregate_states();
+    let mut c = vec![0.0; total_states];
+
+    // Iterate the tensor grid with an M-digit odometer.
+    let mut idx = vec![0usize; m];
+    let mut point = vec![0.0; m];
+    // Per-variable marginals cached per node index to avoid recompute:
+    // marginals[j][k] = steady_state(N_j, xs[k]).
+    let marginals: Vec<Vec<Vec<f64>>> = (0..m)
+        .map(|j| xs.iter().map(|&x| steady_state(cfg.radix(j), x)).collect())
+        .collect();
+
+    loop {
+        let mut wgt = 1.0;
+        for j in 0..m {
+            point[j] = xs[idx[j]];
+            wgt *= ws[idx[j]];
+        }
+        let t = target(&point);
+        if t != 0.0 {
+            // Accumulate over all aggregate states via the factored joint:
+            // joint[s] = Π_j marginals[j][idx[j]][s_j], built incrementally.
+            let mut joint = vec![t * wgt];
+            for j in 0..m {
+                let marg = &marginals[j][idx[j]];
+                let mut next = Vec::with_capacity(joint.len() * marg.len());
+                for &mj in marg {
+                    for &jv in &joint {
+                        next.push(mj * jv);
+                    }
+                }
+                joint = next;
+            }
+            for (cs, jv) in c.iter_mut().zip(&joint) {
+                *cs -= jv;
+            }
+        }
+        // Odometer increment.
+        let mut j = 0;
+        loop {
+            idx[j] += 1;
+            if idx[j] < xs.len() {
+                break;
+            }
+            idx[j] = 0;
+            j += 1;
+            if j == m {
+                return c;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gl_integrates_polynomials_exactly() {
+        // n-point GL is exact to degree 2n-1 on [0,1].
+        let (xs, ws) = gauss_legendre_unit(4);
+        // ∫ x^7 = 1/8
+        let s: f64 = xs.iter().zip(&ws).map(|(x, w)| w * x.powi(7)).sum();
+        assert!((s - 0.125).abs() < 1e-14, "s={s}");
+        // weights sum to 1
+        assert!((ws.iter().sum::<f64>() - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn gl_many_nodes_smooth_function() {
+        let (xs, ws) = gauss_legendre_unit(32);
+        let s: f64 = xs.iter().zip(&ws).map(|(x, w)| w * (x * 3.0).sin()).sum();
+        let exact = (1.0 - (3.0f64).cos()) / 3.0;
+        assert!((s - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd() {
+        let g = gram_1d(4, 32);
+        for a in 0..4 {
+            for b in 0..4 {
+                assert!((g.at(a, b) - g.at(b, a)).abs() < 1e-14);
+            }
+            assert!(g.at(a, a) > 0.0);
+        }
+        // PSD: x^T G x >= 0 for a few random x.
+        let mut rng = crate::util::prng::Pcg::new(1);
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..4).map(|_| rng.range(-1.0, 1.0)).collect();
+            let gx = g.matvec(&x);
+            let q: f64 = x.iter().zip(&gx).map(|(a, b)| a * b).sum();
+            assert!(q >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_rows_integrate_marginals() {
+        // Σ_b G_{a,b} = ∫ π_a(x) Σ_b π_b(x) dx = ∫ π_a dx.
+        let n = 4;
+        let g = gram_1d(n, 48);
+        let (xs, ws) = gauss_legendre_unit(48);
+        for a in 0..n {
+            let direct: f64 = xs
+                .iter()
+                .zip(&ws)
+                .map(|(&x, &w)| w * steady_state(n, x)[a])
+                .sum();
+            let row: f64 = (0..n).map(|b| g.at(a, b)).sum();
+            assert!((row - direct).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn h_is_kron_of_grams() {
+        let cfg = SmurfConfig::uniform(2, 3);
+        let h = h_matrix(&cfg, 24);
+        let g = gram_1d(3, 24);
+        // Spot-check H[(i2,i1),(k2,k1)] = G[i2,k2]*G[i1,k1].
+        for i2 in 0..3 {
+            for i1 in 0..3 {
+                for k2 in 0..3 {
+                    for k1 in 0..3 {
+                        let r = i1 + 3 * i2;
+                        let c = k1 + 3 * k2;
+                        assert!(
+                            (h.at(r, c) - g.at(i2, k2) * g.at(i1, k1)).abs() < 1e-14
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn h_entries_sum_to_one() {
+        // Σ_{s,s'} H_{s,s'} = ∫ (Σ_s P_s)(Σ_{s'} P_{s'}) = ∫ 1 = 1.
+        let cfg = SmurfConfig::uniform(2, 4);
+        let h = h_matrix(&cfg, 32);
+        let total: f64 = h.a.iter().sum();
+        assert!((total - 1.0).abs() < 1e-10, "total={total}");
+    }
+
+    #[test]
+    fn c_for_constant_target_sums() {
+        // T ≡ 1 → Σ_s (−c_s) = ∫ Σ_s P_s = 1.
+        let cfg = SmurfConfig::uniform(2, 4);
+        let c = c_vector(&cfg, &|_| 1.0, 24);
+        let s: f64 = c.iter().sum();
+        assert!((s + 1.0).abs() < 1e-10, "sum={s}");
+    }
+
+    #[test]
+    fn c_univariate_matches_direct_integral() {
+        // M=1: c_a = −∫ T(x) π_a(x) dx, computable directly.
+        let cfg = SmurfConfig::uniform(1, 4);
+        let t = |x: &[f64]| x[0] * x[0];
+        let c = c_vector(&cfg, &t, 40);
+        let (xs, ws) = gauss_legendre_unit(40);
+        for a in 0..4 {
+            let direct: f64 = xs
+                .iter()
+                .zip(&ws)
+                .map(|(&x, &w)| -w * x * x * steady_state(4, x)[a])
+                .sum();
+            assert!((c[a] - direct).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! End-to-end coefficient synthesis (paper §III-B/III-C).
+//!
+//! Assemble `H` and `c` by quadrature, solve the box QP, report residuals
+//! and the resulting L2/analytic errors.
+
+use super::functions::TargetFn;
+use super::qp::{solve_box_qp, QpReport};
+use super::quadrature::{c_vector, gauss_legendre_unit, h_matrix};
+use crate::smurf::analytic::AnalyticSmurf;
+use crate::smurf::config::SmurfConfig;
+
+/// Synthesis options.
+#[derive(Clone, Debug)]
+pub struct SynthOptions {
+    /// Gauss–Legendre nodes per dimension (spectral accuracy; 32 is ample
+    /// for every paper target at N ≤ 8).
+    pub quad_nodes: usize,
+    /// QP iteration cap.
+    pub max_iters: usize,
+    /// QP convergence tolerance.
+    pub tol: f64,
+}
+
+impl Default for SynthOptions {
+    fn default() -> Self {
+        Self { quad_nodes: 32, max_iters: 50_000, tol: 1e-12 }
+    }
+}
+
+/// Result of a synthesis run.
+#[derive(Clone, Debug)]
+pub struct SynthResult {
+    pub smurf: AnalyticSmurf,
+    pub qp: QpReport,
+    /// √ of the mean squared analytic error over the quadrature grid
+    /// (the quantity Eq. 5 minimizes, after adding the T² constant).
+    pub l2_error: f64,
+    /// Mean absolute analytic error over the same grid.
+    pub mae: f64,
+}
+
+/// Synthesize SMURF coefficients for `target` under `cfg`.
+pub fn synthesize(cfg: &SmurfConfig, target: &TargetFn, opts: &SynthOptions) -> SynthResult {
+    assert_eq!(
+        cfg.num_vars(),
+        target.arity(),
+        "configuration arity must match the target function"
+    );
+    let h = h_matrix(cfg, opts.quad_nodes);
+    let f = target.as_fn();
+    let c = c_vector(cfg, &f, opts.quad_nodes);
+    let (b, qp) = solve_box_qp(&h, &c, opts.max_iters, opts.tol);
+    let smurf = AnalyticSmurf::new(cfg.clone(), b);
+
+    // Evaluate residuals on the quadrature grid.
+    let (xs, ws) = gauss_legendre_unit(opts.quad_nodes);
+    let m = cfg.num_vars();
+    let mut idx = vec![0usize; m];
+    let mut point = vec![0.0; m];
+    let mut sq = 0.0;
+    let mut abs = 0.0;
+    loop {
+        let mut wgt = 1.0;
+        for j in 0..m {
+            point[j] = xs[idx[j]];
+            wgt *= ws[idx[j]];
+        }
+        let d = smurf.eval(&point) - target.eval(&point);
+        sq += wgt * d * d;
+        abs += wgt * d.abs();
+        let mut j = 0;
+        loop {
+            idx[j] += 1;
+            if idx[j] < xs.len() {
+                break;
+            }
+            idx[j] = 0;
+            j += 1;
+            if j == m {
+                return SynthResult { smurf, qp, l2_error: sq.sqrt(), mae: abs };
+            }
+        }
+    }
+}
+
+/// Synthesize a *univariate* function on a dual-FSM SMURF: both FSMs of a
+/// bivariate (N×N) SMURF are fed the same variable through independent
+/// SNG branches (the paper's architecture at x₁ = x₂ = x). The joint
+/// steady state on the diagonal is `π(x) ⊗ π(x)`, doubling the basis
+/// richness over a single chain — this is how asymmetric activations like
+/// swish reach the paper's reported accuracy (Fig. 9).
+///
+/// The objective integrates along the diagonal only (that is where the
+/// generator operates).
+pub fn synthesize_univariate_dual(
+    n_states: usize,
+    target: &TargetFn,
+    opts: &SynthOptions,
+) -> SynthResult {
+    assert_eq!(target.arity(), 1);
+    use crate::fsm::steady::steady_state;
+    use crate::util::linalg::Mat;
+    let cfg = SmurfConfig::uniform(2, n_states);
+    let dim = n_states * n_states;
+    let (xs, ws) = gauss_legendre_unit(opts.quad_nodes);
+    let mut h = Mat::zeros(dim, dim);
+    let mut c = vec![0.0; dim];
+    for (&x, &w) in xs.iter().zip(&ws) {
+        let pi = steady_state(n_states, x);
+        // joint[s] with digit-0 fast: kron(pi, pi).
+        let mut joint = vec![0.0; dim];
+        for i2 in 0..n_states {
+            for i1 in 0..n_states {
+                joint[i1 + n_states * i2] = pi[i2] * pi[i1];
+            }
+        }
+        let t = target.eval(&[x]);
+        for a in 0..dim {
+            c[a] -= w * t * joint[a];
+            let wa = w * joint[a];
+            for b in 0..dim {
+                h.a[a * dim + b] += wa * joint[b];
+            }
+        }
+    }
+    let (b, qp) = crate::synth::qp::solve_box_qp(&h, &c, opts.max_iters, opts.tol);
+    let smurf = AnalyticSmurf::new(cfg, b);
+    // Diagonal residuals.
+    let mut sq = 0.0;
+    let mut abs = 0.0;
+    for (&x, &w) in xs.iter().zip(&ws) {
+        let d = smurf.eval(&[x, x]) - target.eval(&[x]);
+        sq += w * d * d;
+        abs += w * d.abs();
+    }
+    SynthResult { smurf, qp, l2_error: sq.sqrt(), mae: abs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::functions;
+
+    #[test]
+    fn euclid_table1_structure_and_accuracy() {
+        // The published Table I values are inconsistent with the paper's
+        // own Eq. 21 (see synth::paper_tables); the reproducible claims
+        // are accuracy + structure, asserted here.
+        let cfg = SmurfConfig::uniform(2, 4);
+        let res = synthesize(&cfg, &functions::euclidean2(), &SynthOptions::default());
+        let got = res.smurf.coefficients();
+        // Accuracy matches the paper's reported regime (≈0.032 at 64 bits;
+        // the analytic bound must be below the bit-level number).
+        assert!(res.mae < 0.03, "analytic MAE {} too large", res.mae);
+        // Corners: w_0 reads out at (0,0) where f=0; w_15 at (1,1), f=1.
+        assert!(got[0] < 0.05, "w_0={}", got[0]);
+        assert!(got[15] > 0.95, "w_15={}", got[15]);
+        // Symmetric target → symmetric table: w[i1 + 4 i2] == w[i2 + 4 i1].
+        for i1 in 0..4 {
+            for i2 in 0..4 {
+                let a = got[i1 + 4 * i2];
+                let b = got[i2 + 4 * i1];
+                assert!((a - b).abs() < 1e-6, "asymmetry at ({i1},{i2})");
+            }
+        }
+        // And the edge-corner entries track the univariate boundary:
+        // at (1,0) state [0,3] dominates, so w_3 ≈ f(1,0) = 1.
+        assert!(got[3] > 0.9, "w_3={} should approach f(1,0)=1", got[3]);
+    }
+
+    #[test]
+    fn synthesized_tables_beat_paper_tables_under_eq21() {
+        // The QP optimum must dominate the published tables in the
+        // paper's own objective (Eq. 5) — the documented discrepancy.
+        use crate::synth::paper_tables::{TABLE1_EUCLID, TABLE2_SINCOS};
+        use crate::synth::qp::objective;
+        use crate::synth::quadrature::{c_vector, h_matrix};
+        let cfg = SmurfConfig::uniform(2, 4);
+        for (f, table) in [
+            (functions::euclidean2(), &TABLE1_EUCLID),
+            (functions::sincos(), &TABLE2_SINCOS),
+        ] {
+            let res = synthesize(&cfg, &f, &SynthOptions::default());
+            let h = h_matrix(&cfg, 32);
+            let g = f.as_fn();
+            let c = c_vector(&cfg, &g, 32);
+            let ours = objective(&h, &c, res.smurf.coefficients());
+            let theirs = objective(&h, &c, table.as_slice());
+            assert!(
+                ours <= theirs + 1e-9,
+                "{}: QP optimum {ours} must not exceed paper-table objective {theirs}",
+                f.name()
+            );
+        }
+    }
+
+    #[test]
+    fn sincos_table2_structure_and_accuracy() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let res = synthesize(&cfg, &functions::sincos(), &SynthOptions::default());
+        let got = res.smurf.coefficients();
+        assert!(res.mae < 0.02, "analytic MAE {}", res.mae);
+        // Corners: f(0,·)=0 at x1=0 edge; f(1,0)=sin(1)≈0.8415.
+        assert!(got[0] < 0.05);
+        assert!((got[3] - 1f64.sin()).abs() < 0.1, "w_3={}", got[3]);
+        // f(1,1)=sin(1)cos(1)≈0.4546 at the (1,1) corner.
+        assert!((got[15] - 1f64.sin() * 1f64.cos()).abs() < 0.1, "w_15={}", got[15]);
+    }
+
+    #[test]
+    fn analytic_error_small_for_smooth_targets() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        for f in [functions::softmax2(), functions::product2()] {
+            let res = synthesize(&cfg, &f, &SynthOptions::default());
+            assert!(
+                res.mae < 0.01,
+                "{}: analytic MAE {} too large",
+                f.name(),
+                res.mae
+            );
+        }
+    }
+
+    #[test]
+    fn univariate_tanh_synthesis_recovers_brown_card() {
+        // tanh(2v) bipolar with a 4-state chain: the QP optimum is the
+        // Brown-Card binary labelling [0,0,1,1] (Eq. 1 with N/2 = k = 2).
+        let cfg = SmurfConfig::uniform(1, 4);
+        let res = synthesize(&cfg, &functions::tanh_bipolar(2.0), &SynthOptions::default());
+        assert!(res.mae < 0.01, "tanh MAE={}", res.mae);
+        let w = res.smurf.coefficients();
+        assert!(w[0] < 0.1 && w[1] < 0.1, "left labels {w:?}");
+        assert!(w[2] > 0.9 && w[3] > 0.9, "right labels {w:?}");
+    }
+
+    #[test]
+    fn univariate_swish_via_dual_fsm() {
+        // Univariate swish through the bivariate SMURF with both FSMs fed
+        // the same variable (paper's architecture at x1 = x2) — the basis
+        // doubles and the fit reaches the paper's reported regime
+        // (Fig. 9: ≈0.010 analytic at 256 bits).
+        let f = functions::swish_bipolar(2.0);
+        let res = synthesize_univariate_dual(4, &f, &SynthOptions::default());
+        assert!(res.mae < 0.012, "dual-FSM swish diagonal MAE={}", res.mae);
+        // Single-chain fit is materially worse — the ablation the dual
+        // basis justifies.
+        let single = synthesize(
+            &SmurfConfig::uniform(1, 4),
+            &f,
+            &SynthOptions::default(),
+        );
+        assert!(single.mae > res.mae * 2.0, "single {} vs dual {}", single.mae, res.mae);
+    }
+
+    #[test]
+    fn trivariate_softmax_synthesis() {
+        let cfg = SmurfConfig::uniform(3, 4);
+        let res = synthesize(&cfg, &functions::softmax3(), &SynthOptions::default());
+        assert!(res.mae < 0.01, "softmax3 MAE={}", res.mae);
+        // Sanity: at equal inputs the output is 1/3.
+        let y = res.smurf.eval(&[0.5, 0.5, 0.5]);
+        assert!((y - 1.0 / 3.0).abs() < 0.02, "y={y}");
+    }
+
+    #[test]
+    fn mixed_radix_synthesis_works() {
+        let cfg = SmurfConfig::new(vec![3, 5]);
+        let res = synthesize(&cfg, &functions::product2(), &SynthOptions::default());
+        assert_eq!(res.smurf.coefficients().len(), 15);
+        assert!(res.mae < 0.01, "MAE={}", res.mae);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let cfg = SmurfConfig::uniform(3, 4);
+        synthesize(&cfg, &functions::euclidean2(), &SynthOptions::default());
+    }
+}

@@ -1,0 +1,207 @@
+//! Dense column-free linear algebra at the scale the synthesis engine
+//! needs: symmetric `N^M × N^M` systems with `N^M ≤ 4096`.
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, a: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.a[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.a[i * self.cols + j]
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = &self.a[i * self.cols..(i + 1) * self.cols];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Kronecker product `self ⊗ other`.
+    pub fn kron(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows * other.rows, self.cols * other.cols);
+        for i1 in 0..self.rows {
+            for j1 in 0..self.cols {
+                let s = self.at(i1, j1);
+                if s == 0.0 {
+                    continue;
+                }
+                for i2 in 0..other.rows {
+                    for j2 in 0..other.cols {
+                        *out.at_mut(i1 * other.rows + i2, j1 * other.cols + j2) =
+                            s * other.at(i2, j2);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Largest eigenvalue of a symmetric PSD matrix by power iteration.
+    pub fn spectral_radius_sym(&self, iters: usize) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut v = vec![1.0 / (n as f64).sqrt(); n];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let w = self.matvec(&v);
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm == 0.0 {
+                return 0.0;
+            }
+            lambda = norm;
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / norm;
+            }
+        }
+        lambda
+    }
+
+    /// Solve `A x = b` for symmetric positive-definite `A` via Cholesky.
+    /// Returns `None` when the matrix is not (numerically) PD.
+    pub fn solve_spd(&self, b: &[f64]) -> Option<Vec<f64>> {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(b.len(), self.rows);
+        let n = self.rows;
+        // Cholesky factor L (lower), in place on a copy.
+        let mut l = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self.at(i, j);
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        // Forward solve L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= l[i * n + k] * y[k];
+            }
+            y[i] = sum / l[i * n + i];
+        }
+        // Back solve L^T x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= l[k * n + i] * x[k];
+            }
+            x[i] = sum / l[i * n + i];
+        }
+        Some(x)
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let eye = Mat::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert_eq!(eye.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn kron_shapes_and_values() {
+        let a = Mat::from_fn(2, 2, |i, j| (i * 2 + j) as f64 + 1.0); // [[1,2],[3,4]]
+        let b = Mat::from_fn(2, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        let k = a.kron(&b);
+        assert_eq!(k.rows, 4);
+        assert_eq!(k.at(0, 0), 1.0);
+        assert_eq!(k.at(0, 2), 2.0);
+        assert_eq!(k.at(3, 3), 4.0);
+        assert_eq!(k.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn spectral_radius_of_diag() {
+        let d = Mat::from_fn(3, 3, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let lam = d.spectral_radius_sym(100);
+        assert!((lam - 3.0).abs() < 1e-9, "lam={lam}");
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // A = M^T M + I is SPD.
+        let m = Mat::from_fn(3, 3, |i, j| ((i * 3 + j) as f64).sin());
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..3 {
+                    s += m.at(k, i) * m.at(k, j);
+                }
+                *a.at_mut(i, j) = s;
+            }
+        }
+        let x_true = vec![1.0, -2.0, 0.5];
+        let b = a.matvec(&x_true);
+        let x = a.solve_spd(&b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_fn(2, 2, |i, j| if i == j { -1.0 } else { 0.0 });
+        assert!(a.solve_spd(&[1.0, 1.0]).is_none());
+    }
+}

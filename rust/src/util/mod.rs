@@ -1,0 +1,62 @@
+//! In-repo substrates: JSON, deterministic PRNG, statistics and small
+//! linear-algebra helpers.
+//!
+//! The build environment is fully offline and only vendors the `xla`
+//! crate's dependency closure, so serde/rand/etc. are implemented here at
+//! the (small) scale this project needs.
+
+pub mod json;
+pub mod linalg;
+pub mod prng;
+pub mod stats;
+
+/// Relative-or-absolute closeness check used across tests.
+///
+/// Returns `true` when `|a-b| <= atol + rtol*|b|`.
+pub fn allclose(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+/// Mean absolute error between two equally-long slices.
+///
+/// Panics if lengths differ or are zero.
+pub fn mae(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "mae: length mismatch");
+    assert!(!a.is_empty(), "mae: empty input");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Clamp a probability into the closed unit interval.
+#[inline]
+pub fn clamp01(p: f64) -> f64 {
+    p.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allclose_basic() {
+        assert!(allclose(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!allclose(1.0, 1.1, 1e-9, 1e-9));
+    }
+
+    #[test]
+    fn mae_basic() {
+        assert_eq!(mae(&[1.0, 2.0], &[1.0, 4.0]), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mae_len_mismatch_panics() {
+        mae(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn clamp01_edges() {
+        assert_eq!(clamp01(-0.5), 0.0);
+        assert_eq!(clamp01(1.5), 1.0);
+        assert_eq!(clamp01(0.25), 0.25);
+    }
+}

@@ -1,0 +1,215 @@
+//! Cross-module integration tests: synthesis → simulation → serving,
+//! weights interchange, runtime artifacts, and failure injection.
+
+use smurf::coordinator::batcher::BatchPolicy;
+use smurf::coordinator::{Engine, EvalServer, ServerConfig};
+use smurf::data;
+use smurf::nn::lenet::ScRuntime;
+use smurf::nn::{train, LeNet, OpSet};
+use smurf::prelude::*;
+use smurf::runtime::{default_artifacts_dir, Runtime};
+use smurf::smurf::multi_output::softmax3_vector;
+use smurf::smurf::sim::{BitLevelSmurf, EntropyMode};
+use std::time::Duration;
+
+/// Synthesis → analytic → bit-level: the three views agree within the
+/// expected stochastic envelope for every paper function.
+#[test]
+fn synthesis_to_silicon_pipeline_agrees() {
+    for f in [functions::euclidean2(), functions::softmax2(), functions::product2()] {
+        let cfg = SmurfConfig::uniform(f.arity(), 4);
+        let res = synthesize(&cfg, &f, &SynthOptions::default());
+        let sim = BitLevelSmurf::new(
+            cfg.clone(),
+            res.smurf.coefficients(),
+            EntropyMode::IndependentXorshift,
+        );
+        for &(a, b) in &[(0.2, 0.8), (0.5, 0.5), (0.9, 0.1)] {
+            let p = [a, b];
+            let target = f.eval(&p);
+            let analytic = res.smurf.eval(&p);
+            let hw = sim.eval_avg(&p, 4096, 8, 5);
+            assert!(
+                (analytic - target).abs() < 0.05,
+                "{}: analytic {analytic} vs target {target}",
+                f.name()
+            );
+            assert!(
+                (hw - analytic).abs() < 0.02,
+                "{}: hw {hw} vs analytic {analytic}",
+                f.name()
+            );
+        }
+    }
+}
+
+/// The serving layer returns the same numbers as direct evaluation.
+#[test]
+fn server_matches_direct_evaluation() {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let approx = SmurfApproximator::synthesize(&cfg, &functions::sincos(), 64);
+    let direct: Vec<f64> = (0..10)
+        .map(|i| approx.eval_analytic(&[i as f64 / 9.0, 0.4]))
+        .collect();
+    let server = EvalServer::start(
+        vec![approx],
+        None,
+        ServerConfig {
+            workers: 2,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+            xla_artifact: "smurf_eval.hlo.txt".into(),
+        },
+    );
+    let points: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64 / 9.0, 0.4]).collect();
+    let resp = server.eval_sync("sincos", points, Engine::Analytic, 64);
+    assert!(resp.is_ok());
+    for (got, want) in resp.outputs.iter().zip(&direct) {
+        assert_eq!(got, want, "server must be bit-identical to direct eval");
+    }
+    server.shutdown();
+}
+
+/// Weights trained by the rust trainer survive the JSON round-trip and
+/// give identical accuracy.
+#[test]
+fn weights_roundtrip_preserves_behaviour() {
+    let (train_set, test_set) = data::load_corpus(120, 40, 7);
+    let mut net = LeNet::random(3);
+    train::train(
+        &mut net,
+        &train_set,
+        &train::TrainConfig { epochs: 1, lr: 0.05, momentum: 0.9, log_every: 0 },
+        1,
+    );
+    let json = net.to_json().dump();
+    let net2 = LeNet::from_json(&smurf::util::json::Json::parse(&json).unwrap()).unwrap();
+    let a1 = net.accuracy(&test_set.images, &test_set.labels, OpSet::Vanilla, None);
+    let a2 = net2.accuracy(&test_set.images, &test_set.labels, OpSet::Vanilla, None);
+    assert_eq!(a1, a2);
+}
+
+/// SC inference: longer streams monotonically approach vanilla accuracy
+/// (statistically — checked with generous envelopes).
+#[test]
+fn sc_accuracy_improves_with_stream_length() {
+    let (train_set, test_set) = data::load_corpus(300, 60, 11);
+    let mut net = LeNet::random(5);
+    train::train(
+        &mut net,
+        &train_set,
+        &train::TrainConfig { epochs: 2, lr: 0.05, momentum: 0.9, log_every: 0 },
+        2,
+    );
+    let vanilla = net.accuracy(&test_set.images, &test_set.labels, OpSet::Vanilla, None);
+    let mut rt_short = ScRuntime::paper_config(1);
+    rt_short.ctx.len = 8; // starve the streams
+    let short = net.accuracy(&test_set.images, &test_set.labels, OpSet::Hsc, Some(&mut rt_short));
+    let mut rt_long = ScRuntime::paper_config(1);
+    rt_long.ctx.len = 1024;
+    let long = net.accuracy(&test_set.images, &test_set.labels, OpSet::Hsc, Some(&mut rt_long));
+    assert!(
+        long + 0.05 >= short,
+        "1024-bit streams ({long}) should not lose to 8-bit ({short})"
+    );
+    assert!(
+        (long - vanilla).abs() < 0.15,
+        "long streams ({long}) should approach vanilla ({vanilla})"
+    );
+}
+
+/// Multi-output SMURF (paper §V extension): the vector generator serves
+/// the full softmax and stays consistent with its scalar components.
+#[test]
+fn multi_output_vector_softmax() {
+    let ms = softmax3_vector(4);
+    let p = [0.2, 0.9, 0.5];
+    let y = ms.eval_analytic(&p);
+    let s: f64 = y.iter().sum();
+    assert!((s - 1.0).abs() < 0.02, "vector softmax sum {s}");
+    // argmax preserved vs the true softmax.
+    let e: Vec<f64> = p.iter().map(|v| v.exp()).collect();
+    let true_arg = e
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let got_arg = y
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(true_arg, got_arg);
+}
+
+/// AOT artifact integration: when `make artifacts` has run, the XLA
+/// engine serves numbers matching the rust analytic evaluator.
+#[test]
+fn xla_engine_matches_analytic_when_artifacts_present() {
+    let rt = Runtime::cpu(default_artifacts_dir()).expect("PJRT CPU client");
+    if !rt.has_artifact("smurf_eval.hlo.txt") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = SmurfConfig::uniform(2, 4);
+    let approx = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+    let direct: Vec<f64> = (0..16)
+        .map(|i| approx.eval_analytic(&[i as f64 / 15.0, 0.3]))
+        .collect();
+    let server = EvalServer::start(
+        vec![approx],
+        Some(default_artifacts_dir()),
+        ServerConfig::default(),
+    );
+    let points: Vec<Vec<f64>> = (0..16).map(|i| vec![i as f64 / 15.0, 0.3]).collect();
+    let resp = server.eval_sync("euclidean2", points, Engine::Xla, 64);
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    for (got, want) in resp.outputs.iter().zip(&direct) {
+        assert!((got - want).abs() < 1e-4, "xla {got} vs analytic {want}");
+    }
+    server.shutdown();
+}
+
+/// Failure injection: dropping reply receivers must not wedge the
+/// server; subsequent requests still succeed.
+#[test]
+fn server_survives_dropped_clients() {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let approx = SmurfApproximator::synthesize(&cfg, &functions::product2(), 64);
+    let server = EvalServer::start(vec![approx], None, ServerConfig::default());
+    // Fire-and-forget requests whose receivers die immediately.
+    for i in 0..50 {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        drop(rrx);
+        let _ = server.submit(smurf::coordinator::EvalRequest {
+            function: "product2".into(),
+            points: vec![vec![i as f64 / 50.0, 0.5]],
+            engine: Engine::Analytic,
+            stream_len: 64,
+            enqueued: std::time::Instant::now(),
+            reply: rtx,
+        });
+    }
+    // A healthy request afterwards still completes.
+    let r = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::Analytic, 64);
+    assert!(r.is_ok());
+    assert!((r.outputs[0] - 0.25).abs() < 0.01);
+    server.shutdown();
+}
+
+/// Unknown engines/functions degrade to clean errors, and metrics
+/// reflect them.
+#[test]
+fn error_paths_are_observable() {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let approx = SmurfApproximator::synthesize(&cfg, &functions::product2(), 64);
+    let server = EvalServer::start(vec![approx], None, ServerConfig::default());
+    let r = server.eval_sync("missing_fn", vec![vec![0.1, 0.2]], Engine::Analytic, 64);
+    assert!(!r.is_ok());
+    let r = server.eval_sync("product2", vec![vec![0.1, 0.2]], Engine::Xla, 64);
+    assert!(!r.is_ok(), "XLA without runtime must fail cleanly");
+    let snap = server.metrics();
+    assert!(snap.errors >= 2);
+    server.shutdown();
+}
