@@ -1,0 +1,28 @@
+# SMURF repo targets. The rust crate is dependency-free by default; the
+# optional `xla` feature (PJRT runtime) needs deps uncommented in
+# rust/Cargo.toml — see that file.
+
+CARGO ?= cargo
+MANIFEST := rust/Cargo.toml
+
+.PHONY: build test tier1 bench-json bench ci
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+# Tier-1 verification gate (see ROADMAP.md): must stay green per PR.
+tier1: build test
+
+# Machine-readable perf record: runs the wide-vs-scalar simulation bench
+# (which writes BENCH_perf.json in the repo root; override with BENCH_OUT)
+# and the serving-stack bench (human-readable log).
+bench-json:
+	$(CARGO) bench --bench perf_wide --manifest-path $(MANIFEST)
+	$(CARGO) bench --bench perf_serve --manifest-path $(MANIFEST)
+
+bench: bench-json
+
+ci: tier1

@@ -1,0 +1,184 @@
+//! §Perf: scalar vs bit-sliced wide SMURF simulation.
+//!
+//! Measures trial throughput of the Monte-Carlo estimator (`eval_avg`) on
+//! the paper's Euclid M=2/N=4 configuration — the
+//! `euclid_paper_accuracy_at_64_bits` workload shape (L=64, 32 trials per
+//! point) — comparing the scalar one-bit-per-cycle simulator against the
+//! 64-lane bit-sliced engine, for every entropy mode. Also measures the
+//! coordinator-shaped batch (64 distinct points per pass).
+//!
+//! Wall-clock methodology as in perf_serve (criterion is not vendored):
+//! warmup + N timed iterations. Results are printed and written as
+//! machine-readable rows to `BENCH_perf.json` (override with `BENCH_OUT`)
+//! so the perf trajectory is tracked per-PR:
+//! `{"bench", "us_per_iter", "throughput", "unit"}`.
+
+use smurf::prelude::*;
+use smurf::smurf::sim::EntropyMode;
+use smurf::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+fn timed<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<52} {:>12.3} us/iter", per * 1e6);
+    per
+}
+
+fn row(bench: &str, us_per_iter: f64, throughput: f64, unit: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("bench".into(), Json::Str(bench.into()));
+    m.insert("us_per_iter".into(), Json::Num(us_per_iter));
+    m.insert("throughput".into(), Json::Num(throughput));
+    m.insert("unit".into(), Json::Str(unit.into()));
+    Json::Obj(m)
+}
+
+fn mode_name(mode: EntropyMode) -> &'static str {
+    match mode {
+        EntropyMode::SharedLfsr => "shared_lfsr",
+        EntropyMode::IndependentXorshift => "xorshift",
+        EntropyMode::SobolCpt => "sobol_cpt",
+    }
+}
+
+fn main() {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let res = synthesize(&cfg, &functions::euclidean2(), &SynthOptions::default());
+    let w = res.smurf.coefficients().to_vec();
+    let p = [0.3, 0.4];
+    let (len, trials) = (64usize, 32usize);
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!("=== §Perf: scalar vs wide (bit-sliced) SMURF, Euclid M=2 N=4 ===\n");
+    for mode in [
+        EntropyMode::SharedLfsr,
+        EntropyMode::IndependentXorshift,
+        EntropyMode::SobolCpt,
+    ] {
+        let scalar = BitLevelSmurf::new(cfg.clone(), &w, mode);
+        let wide = WideBitLevelSmurf::from_scalar(&scalar);
+        let mut st = wide.make_run_state();
+
+        // Sanity: the two engines must agree bit-exactly before we
+        // compare their speed.
+        let a = scalar.eval_avg_scalar(&p, len, trials, 42);
+        let b = wide.eval_avg(&p, len, trials, 42, &mut st);
+        assert_eq!(a, b, "wide/scalar divergence in {mode:?}");
+
+        let name = mode_name(mode);
+        let per_s = timed(
+            &format!("scalar eval_avg L={len} T={trials} ({name})"),
+            2_000,
+            || {
+                std::hint::black_box(scalar.eval_avg_scalar(&p, len, trials, 42));
+            },
+        );
+        let per_w = timed(
+            &format!("wide   eval_avg L={len} T={trials} ({name})"),
+            2_000,
+            || {
+                std::hint::black_box(wide.eval_avg(&p, len, trials, 42, &mut st));
+            },
+        );
+        let tput_s = trials as f64 / per_s;
+        let tput_w = trials as f64 / per_w;
+        println!(
+            "{:<52} {:>11.2}x  ({:.2} → {:.2} Mtrials/s)\n",
+            format!("  → wide speedup ({name})"),
+            per_s / per_w,
+            tput_s / 1e6,
+            tput_w / 1e6
+        );
+        rows.push(row(
+            &format!("eval_avg_scalar/{name}/L{len}/T{trials}"),
+            per_s * 1e6,
+            tput_s,
+            "trials/s",
+        ));
+        rows.push(row(
+            &format!("eval_avg_wide/{name}/L{len}/T{trials}"),
+            per_w * 1e6,
+            tput_w,
+            "trials/s",
+        ));
+        rows.push(row(
+            &format!("speedup/{name}/L{len}/T{trials}"),
+            0.0,
+            per_s / per_w,
+            "x",
+        ));
+    }
+
+    // Full-word shape: 64 trials per pass (no idle lanes), hardware mode.
+    let scalar = BitLevelSmurf::new(cfg.clone(), &w, EntropyMode::SharedLfsr);
+    let wide = WideBitLevelSmurf::from_scalar(&scalar);
+    let mut st = wide.make_run_state();
+    let per_s64 = timed("scalar eval_avg L=64 T=64 (shared_lfsr)", 1_000, || {
+        std::hint::black_box(scalar.eval_avg_scalar(&p, 64, 64, 7));
+    });
+    let per_w64 = timed("wide   eval_avg L=64 T=64 (shared_lfsr)", 1_000, || {
+        std::hint::black_box(wide.eval_avg(&p, 64, 64, 7, &mut st));
+    });
+    rows.push(row("eval_avg_scalar/shared_lfsr/L64/T64", per_s64 * 1e6, 64.0 / per_s64, "trials/s"));
+    rows.push(row("eval_avg_wide/shared_lfsr/L64/T64", per_w64 * 1e6, 64.0 / per_w64, "trials/s"));
+    rows.push(row("speedup/shared_lfsr/L64/T64", 0.0, per_s64 / per_w64, "x"));
+    println!("{:<52} {:>11.2}x\n", "  → wide speedup (T=64, no idle lanes)", per_s64 / per_w64);
+
+    // Simulated clock rate of the wide engine (64 lanes × L cycles/iter).
+    let mcycles = 64.0 * 64.0 / per_w64 / 1e6;
+    println!("{:<52} {:>12.1} Mcycles/s (lane-cycles)", "  → wide simulated clock rate", mcycles);
+    rows.push(row("wide_lane_cycle_rate/shared_lfsr", 0.0, mcycles * 1e6, "lane-cycles/s"));
+
+    // Coordinator batch shape: 64 distinct points, one trial each.
+    let pts: Vec<Vec<f64>> = (0..64)
+        .map(|i| vec![(i % 8) as f64 / 7.0, (i / 8) as f64 / 7.0])
+        .collect();
+    let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
+    let seeds: Vec<u64> = (0..64).map(|i| 0x5EED ^ i as u64).collect();
+    let mut out = [0.0f64; 64];
+    let per_batch_s = timed("scalar 64-point batch L=64 (shared_lfsr)", 1_000, || {
+        for (i, pt) in refs.iter().enumerate() {
+            out[i] = scalar.eval(pt, 64, seeds[i]);
+        }
+        std::hint::black_box(out[63]);
+    });
+    let per_batch_w = timed("wide   64-point batch L=64 (shared_lfsr)", 1_000, || {
+        wide.eval_points(&refs, 64, &seeds, &mut st, &mut out);
+        std::hint::black_box(out[63]);
+    });
+    rows.push(row("batch64_scalar/shared_lfsr/L64", per_batch_s * 1e6, 64.0 / per_batch_s, "points/s"));
+    rows.push(row("batch64_wide/shared_lfsr/L64", per_batch_w * 1e6, 64.0 / per_batch_w, "points/s"));
+    rows.push(row("speedup/batch64/shared_lfsr/L64", 0.0, per_batch_s / per_batch_w, "x"));
+    println!(
+        "{:<52} {:>11.2}x\n",
+        "  → wide speedup (coordinator batch shape)",
+        per_batch_s / per_batch_w
+    );
+
+    // Emit the machine-readable perf record. Cargo runs bench binaries
+    // with cwd = the package root (rust/), so default to the repo root
+    // explicitly; BENCH_OUT overrides.
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        format!("{}/../BENCH_perf.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".into(), Json::Str("smurf-bench-v1".into()));
+    doc.insert(
+        "config".into(),
+        Json::Str("euclidean2 M=2 N=4 (QP-synthesized), eval_avg shapes".into()),
+    );
+    doc.insert("rows".into(), Json::Arr(rows));
+    match std::fs::write(&out_path, Json::Obj(doc).dump()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    println!("\nperf_wide done");
+}

@@ -236,11 +236,7 @@ fn execute_batch(shared: &Shared, batch: Batch) {
         Engine::Analytic => Ok(all_points.iter().map(|p| func.eval_analytic(p)).collect()),
         Engine::BitLevel => {
             let len = batch.requests.first().map(|r| r.stream_len.max(1)).unwrap_or(64);
-            Ok(all_points
-                .iter()
-                .enumerate()
-                .map(|(i, p)| func.eval_bitstream(p, len, 0x5EED ^ i as u64))
-                .collect())
+            Ok(eval_bitlevel_batch(&func, &all_points, len))
         }
         Engine::Xla => execute_xla(shared, &func, &all_points),
     };
@@ -273,6 +269,47 @@ fn execute_batch(shared: &Shared, batch: Batch) {
             }
         }
     }
+}
+
+/// Points per wide pass (one trial per bit lane of a `u64` word).
+const WIDE_LANES: usize = crate::smurf::sim_wide::LANES;
+
+/// Batch size at which the bit-level engine switches from per-point scalar
+/// simulation to the bit-sliced wide engine; below this the fixed 64-lane
+/// word cost is not amortized (same threshold as the estimator routing).
+const WIDE_BATCH_MIN: usize = crate::smurf::sim::WIDE_TRIALS_MIN;
+
+/// Bit-level engine over a flattened batch: chunk the points into 64-lane
+/// words and run each chunk through the wide simulator (each lane is one
+/// point of the batch). Per-point outputs are bit-exact equal to the
+/// scalar `eval_bitstream(p, len, 0x5EED ^ i)` this replaces, so clients
+/// observe identical streams regardless of batch size.
+fn eval_bitlevel_batch(
+    func: &SmurfApproximator,
+    points: &[&[f64]],
+    len: usize,
+) -> Vec<f64> {
+    if points.len() < WIDE_BATCH_MIN {
+        return points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| func.eval_bitstream(p, len, 0x5EED ^ i as u64))
+            .collect();
+    }
+    let wide = func.wide_simulator();
+    let mut st = wide.make_run_state();
+    let mut outputs = vec![0.0f64; points.len()];
+    let mut seeds = [0u64; WIDE_LANES];
+    let mut lane_out = [0.0f64; WIDE_LANES];
+    for (c, chunk) in points.chunks(WIDE_LANES).enumerate() {
+        for (k, s) in seeds.iter_mut().enumerate().take(chunk.len()) {
+            *s = 0x5EED ^ (c * WIDE_LANES + k) as u64;
+        }
+        wide.eval_points(chunk, len, &seeds[..chunk.len()], &mut st, &mut lane_out);
+        outputs[c * WIDE_LANES..c * WIDE_LANES + chunk.len()]
+            .copy_from_slice(&lane_out[..chunk.len()]);
+    }
+    outputs
 }
 
 /// Execute a batch on the AOT XLA kernel via the owner thread. The
@@ -345,6 +382,30 @@ mod tests {
         let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::BitLevel, 256);
         assert!(resp.is_ok());
         assert!((resp.outputs[0] - 0.25).abs() < 0.2, "y={}", resp.outputs[0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bitlevel_batch_matches_scalar_per_point() {
+        // The wide 64-lane batch path must reproduce the per-point scalar
+        // streams bit-exactly (same 0x5EED ^ i seeds), across the chunk
+        // boundary at 64 and the scalar fallback below 8 points.
+        let server = test_server(1);
+        let cfg = SmurfConfig::uniform(2, 4);
+        let reference =
+            SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+        for n in [3usize, 8, 64, 70] {
+            let points: Vec<Vec<f64>> = (0..n)
+                .map(|i| vec![(i % 9) as f64 / 8.0, (i % 7) as f64 / 6.0])
+                .collect();
+            let resp = server.eval_sync("euclidean2", points.clone(), Engine::BitLevel, 128);
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            assert_eq!(resp.outputs.len(), n);
+            for (i, p) in points.iter().enumerate() {
+                let expect = reference.eval_bitstream(p, 128, 0x5EED ^ i as u64);
+                assert_eq!(resp.outputs[i], expect, "n={n} point {i}");
+            }
+        }
         server.shutdown();
     }
 

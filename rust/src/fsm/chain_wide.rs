@@ -1,0 +1,188 @@
+//! Bit-sliced chained FSM: 64 independent saturating chains per word.
+//!
+//! The scalar [`crate::fsm::chain::ChainFsm`] walks one state per clock;
+//! the wide SMURF engine needs 64 of them stepping together. State is held
+//! as `ceil(log2 N)` *bit planes*: plane `b`, bit `l` is bit `b` of lane
+//! `l`'s state index. One clock is then a masked ripple-carry increment
+//! (lanes whose input bit is 1) plus a masked ripple-borrow decrement
+//! (lanes whose input bit is 0), with the saturation masks computed first
+//! so lanes already at `0`/`N-1` hold — branch-free word ops instead of 64
+//! data-dependent branches (the scalar simulator's main mispredict source).
+
+/// Up to 64 saturating chain FSMs over states `0 ..= n-1`, one per bit lane.
+#[derive(Clone, Debug)]
+pub struct WideChainFsm {
+    n: usize,
+    nbits: usize,
+    /// State planes; only `planes[..nbits]` are live.
+    planes: [u64; 8],
+}
+
+impl WideChainFsm {
+    /// All 64 lanes start at `initial` (the scalar reset convention).
+    pub fn new(n: usize, initial: usize) -> Self {
+        assert!(n >= 2, "chain FSM needs at least 2 states");
+        assert!(n <= 256, "wide chain FSM supports radix <= 256");
+        assert!(initial < n, "initial state out of range");
+        let nbits = (usize::BITS - (n - 1).leading_zeros()) as usize;
+        let mut planes = [0u64; 8];
+        for (b, p) in planes.iter_mut().enumerate().take(nbits) {
+            *p = if (initial >> b) & 1 == 1 { !0 } else { 0 };
+        }
+        Self { n, nbits, planes }
+    }
+
+    /// Start every lane in the middle state, like `ChainFsm::centered`.
+    pub fn centered(n: usize) -> Self {
+        Self::new(n, n / 2)
+    }
+
+    pub fn num_states(&self) -> usize {
+        self.n
+    }
+
+    /// Lane mask of FSMs currently in state `s`.
+    #[inline(always)]
+    pub fn eq_const(&self, s: usize) -> u64 {
+        debug_assert!(s < self.n);
+        let mut m = !0u64;
+        for b in 0..self.nbits {
+            let p = self.planes[b];
+            m &= if (s >> b) & 1 == 1 { p } else { !p };
+        }
+        m
+    }
+
+    /// One clock edge for all lanes: bit `l` of `up` high → lane `l` moves
+    /// right (saturating at `N-1`), low → left (saturating at 0). Matches
+    /// `ChainFsm::step` lane-for-lane.
+    #[inline]
+    pub fn step(&mut self, up: u64) {
+        let at_max = self.eq_const(self.n - 1);
+        let at_min = self.eq_const(0);
+        // Masked +1 over the state planes (ripple carry).
+        let mut carry = up & !at_max;
+        for b in 0..self.nbits {
+            if carry == 0 {
+                break;
+            }
+            let t = self.planes[b];
+            self.planes[b] = t ^ carry;
+            carry &= t;
+        }
+        // Masked -1 (ripple borrow). Disjoint from the increment lanes.
+        let mut borrow = !up & !at_min;
+        for b in 0..self.nbits {
+            if borrow == 0 {
+                break;
+            }
+            let t = self.planes[b];
+            self.planes[b] = t ^ borrow;
+            borrow &= !t;
+        }
+    }
+
+    /// Write the per-state lane masks (`out[s]` = lanes in state `s`) —
+    /// the codeword digits the CPT MUX select consumes, in one-hot form.
+    #[inline]
+    pub fn digit_masks(&self, out: &mut [u64]) {
+        debug_assert_eq!(out.len(), self.n);
+        for (s, o) in out.iter_mut().enumerate() {
+            *o = self.eq_const(s);
+        }
+    }
+
+    /// Lane `l`'s state index (test/debug path; the hot loop never needs it).
+    pub fn state_of_lane(&self, l: usize) -> usize {
+        let mut s = 0usize;
+        for b in 0..self.nbits {
+            s |= (((self.planes[b] >> l) & 1) as usize) << b;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fsm::chain::ChainFsm;
+    use crate::util::prng::Pcg;
+
+    /// Drive wide + 64 scalar FSMs with the same random bits; they must
+    /// agree lane-for-lane at every clock.
+    fn check_against_scalar(n: usize, cycles: usize, seed: u64) {
+        let mut wide = WideChainFsm::centered(n);
+        let mut scalars: Vec<ChainFsm> = (0..64).map(|_| ChainFsm::centered(n)).collect();
+        let mut rng = Pcg::new(seed);
+        for cycle in 0..cycles {
+            let up = rng.next_u64();
+            wide.step(up);
+            for (l, f) in scalars.iter_mut().enumerate() {
+                let expect = f.step((up >> l) & 1 == 1);
+                assert_eq!(
+                    wide.state_of_lane(l),
+                    expect,
+                    "n={n} cycle={cycle} lane={l}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_scalar_pow2_radix() {
+        check_against_scalar(4, 500, 11);
+        check_against_scalar(2, 500, 12);
+        check_against_scalar(8, 500, 13);
+    }
+
+    #[test]
+    fn matches_scalar_non_pow2_radix() {
+        check_against_scalar(3, 500, 21);
+        check_against_scalar(5, 500, 22);
+        check_against_scalar(7, 500, 23);
+    }
+
+    #[test]
+    fn saturates_at_ends() {
+        let mut w = WideChainFsm::new(4, 0);
+        w.step(0); // all lanes down from 0 → stay 0
+        assert_eq!(w.state_of_lane(0), 0);
+        for _ in 0..10 {
+            w.step(!0); // all lanes up
+        }
+        for l in [0, 31, 63] {
+            assert_eq!(w.state_of_lane(l), 3, "must saturate at N-1");
+        }
+    }
+
+    #[test]
+    fn digit_masks_partition_lanes() {
+        let mut w = WideChainFsm::centered(5);
+        let mut rng = Pcg::new(77);
+        for _ in 0..200 {
+            w.step(rng.next_u64());
+        }
+        let mut masks = vec![0u64; 5];
+        w.digit_masks(&mut masks);
+        let mut union = 0u64;
+        for (s, &m) in masks.iter().enumerate() {
+            assert_eq!(union & m, 0, "state {s} overlaps another");
+            union |= m;
+        }
+        assert_eq!(union, !0u64, "every lane must be in exactly one state");
+    }
+
+    #[test]
+    fn centered_matches_scalar_reset() {
+        for n in 2..=9 {
+            let w = WideChainFsm::centered(n);
+            assert_eq!(w.state_of_lane(17), ChainFsm::centered(n).state());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_one_state() {
+        WideChainFsm::new(1, 0);
+    }
+}

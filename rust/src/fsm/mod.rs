@@ -3,8 +3,10 @@
 
 pub mod brown_card;
 pub mod chain;
+pub mod chain_wide;
 pub mod mm_fsm;
 pub mod steady;
 
 pub use chain::ChainFsm;
+pub use chain_wide::WideChainFsm;
 pub use steady::steady_state;

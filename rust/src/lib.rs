@@ -75,6 +75,7 @@ pub mod prelude {
     pub use crate::smurf::approximator::SmurfApproximator;
     pub use crate::smurf::config::SmurfConfig;
     pub use crate::smurf::sim::BitLevelSmurf;
+    pub use crate::smurf::sim_wide::{WideBitLevelSmurf, WideRunState};
     pub use crate::synth::functions;
     pub use crate::synth::functions::TargetFn;
     pub use crate::synth::synthesize::{synthesize, SynthOptions, SynthResult};

@@ -22,15 +22,26 @@ impl Bitstream {
 
     /// Generate a stream encoding probability `p` using `rng` as the
     /// comparator entropy source (this is a θ-gate run for `len` cycles).
+    ///
+    /// Comparator bits are accumulated 64 at a time into a register and
+    /// written one whole word per 64 cycles — no per-bit div/mod/bounds
+    /// path (this generator sits on the SC-PwMM and wide-engine setup hot
+    /// paths). Bit order matches the per-bit reference exactly (LSB of
+    /// word 0 is cycle 0).
     pub fn generate(p: f64, len: usize, rng: &mut impl StreamRng) -> Self {
         let threshold = (p.clamp(0.0, 1.0) * 65536.0).round().min(65535.0) as u16;
-        let mut s = Self::zeros(len);
-        for i in 0..len {
-            if rng.next_u16() < threshold {
-                s.set(i, true);
+        let mut words = Vec::with_capacity(len.div_ceil(64));
+        let mut remaining = len;
+        while remaining > 0 {
+            let take = remaining.min(64);
+            let mut w = 0u64;
+            for b in 0..take {
+                w |= ((rng.next_u16() < threshold) as u64) << b;
             }
+            words.push(w);
+            remaining -= take;
         }
-        s
+        Self { words, len }
     }
 
     /// Exact-length bit count.
@@ -185,6 +196,44 @@ mod tests {
         let mut rng = Sobol::new(0);
         let s = Bitstream::generate(0.7, 256, &mut rng);
         assert!((s.mean() - 0.7).abs() <= 1.0 / 256.0 + 1e-12);
+    }
+
+    #[test]
+    fn generate_word_built_equals_per_bit_reference() {
+        // The word-accumulating generator must emit bit-for-bit the same
+        // stream as the naive per-bit set() construction on the same rng.
+        fn per_bit_reference(p: f64, len: usize, rng: &mut impl StreamRng) -> Bitstream {
+            let threshold = (p.clamp(0.0, 1.0) * 65536.0).round().min(65535.0) as u16;
+            let mut s = Bitstream::zeros(len);
+            for i in 0..len {
+                if rng.next_u16() < threshold {
+                    s.set(i, true);
+                }
+            }
+            s
+        }
+        for (p, len, seed) in [
+            (0.7, 4096, 5u64),
+            (0.3, 1, 6),
+            (0.5, 63, 7),
+            (0.5, 64, 8),
+            (0.9, 65, 9),
+            (0.0, 130, 10),
+            (1.0, 130, 11),
+        ] {
+            let mut r1 = XorShift64::new(seed);
+            let mut r2 = XorShift64::new(seed);
+            let fast = Bitstream::generate(p, len, &mut r1);
+            let slow = per_bit_reference(p, len, &mut r2);
+            assert_eq!(fast, slow, "p={p} len={len}");
+        }
+        // LFSR entropy too (different word widths exercised).
+        let mut r1 = Lfsr16::new(0x1357);
+        let mut r2 = Lfsr16::new(0x1357);
+        assert_eq!(
+            Bitstream::generate(0.42, 1000, &mut r1),
+            per_bit_reference(0.42, 1000, &mut r2)
+        );
     }
 
     #[test]

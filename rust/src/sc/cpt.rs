@@ -45,6 +45,37 @@ impl CptGate {
         self.bank[sel].sample(rand16)
     }
 
+    /// Raw 16-bit threshold register of entry `t`.
+    pub fn raw_threshold(&self, t: usize) -> u16 {
+        self.bank[t].raw()
+    }
+
+    /// Wide (64-lane) MUX select in masked plane logic: `eq[t]` is the
+    /// lane mask whose codeword currently selects bank entry `t` (the
+    /// masks must partition the active lanes). Writes each lane's selected
+    /// 16-bit threshold as bit planes into `out`, ready for
+    /// [`crate::sc::sng::wide_lt_planes`] against the entropy planes.
+    ///
+    /// This is the bit-sliced equivalent of `bank[sel]`: instead of 64
+    /// indexed loads, every coefficient ORs its threshold bits into the
+    /// planes under its select mask — exactly the AND-OR MUX tree the
+    /// paper's Fig. 6 CPT block synthesizes to.
+    pub fn threshold_planes(&self, eq: &[u64], out: &mut [u64; 16]) {
+        assert_eq!(eq.len(), self.bank.len(), "one select mask per bank entry");
+        out.fill(0);
+        for (gate, &mask) in self.bank.iter().zip(eq) {
+            if mask == 0 {
+                continue;
+            }
+            let mut bits = gate.raw();
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                out[b] |= mask;
+                bits &= bits - 1;
+            }
+        }
+    }
+
     /// Run the gate for `len` cycles with a constant select, returning the
     /// output mean — the conditional distribution given that state.
     pub fn run_mean_const_sel(&self, sel: usize, len: usize, rng: &mut impl StreamRng) -> f64 {
@@ -87,6 +118,37 @@ mod tests {
             ones += g.sample(i % 2, rng.next_u16()) as usize;
         }
         assert_eq!(ones, 500);
+    }
+
+    #[test]
+    fn threshold_planes_select_per_lane() {
+        use crate::sc::rng::lane_from_planes;
+        // 4-entry bank; lanes 0..64 cycle through the 4 selects.
+        let g = CptGate::new(&[0.1, 0.35, 0.6, 0.95]);
+        let mut eq = [0u64; 4];
+        for l in 0..64 {
+            eq[l % 4] |= 1u64 << l;
+        }
+        let mut planes = [0u64; 16];
+        g.threshold_planes(&eq, &mut planes);
+        for l in 0..64 {
+            assert_eq!(
+                lane_from_planes(&planes, l),
+                g.raw_threshold(l % 4),
+                "lane {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn threshold_planes_idle_lanes_zero() {
+        let g = CptGate::new(&[0.5, 0.5]);
+        let eq = [0b1u64, 0b10u64]; // only lanes 0 and 1 active
+        let mut planes = [0u64; 16];
+        g.threshold_planes(&eq, &mut planes);
+        for p in planes {
+            assert_eq!(p & !0b11, 0, "idle lanes must stay zero");
+        }
     }
 
     #[test]

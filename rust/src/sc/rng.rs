@@ -48,6 +48,43 @@ impl Lfsr16 {
         self.state = (s >> 1) | (bit << 15);
         self.state
     }
+
+    /// Current register state (what [`Self::step`] last returned, or the
+    /// seed if never stepped).
+    pub fn state(&self) -> u16 {
+        self.state
+    }
+
+    /// Precompute the `steps`-clock transition as a GF(2) basis: entry `b`
+    /// is the state reached from the unit state `1 << b`. The LFSR update
+    /// is linear over GF(2), so any jumped state is the XOR of the basis
+    /// images of its set bits — this turns the delayed-branch fast-forward
+    /// (§III-A) from O(steps) into O(16) per lane, which the wide engine
+    /// relies on when seeding 64 lanes at once.
+    pub fn jump_basis(steps: usize) -> [u16; 16] {
+        let mut basis = [0u16; 16];
+        for (b, e) in basis.iter_mut().enumerate() {
+            let mut l = Lfsr16 { state: 1 << b };
+            for _ in 0..steps {
+                l.step();
+            }
+            *e = l.state;
+        }
+        basis
+    }
+
+    /// Apply a precomputed [`Self::jump_basis`] to a state.
+    #[inline]
+    pub fn jump(state: u16, basis: &[u16; 16]) -> u16 {
+        let mut out = 0u16;
+        let mut bits = state;
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            out ^= basis[b];
+            bits &= bits - 1;
+        }
+        out
+    }
 }
 
 impl StreamRng for Lfsr16 {
@@ -156,6 +193,196 @@ impl DelayedBranches {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wide (bit-sliced) entropy: 64 independent lanes per word.
+//
+// The wide SMURF engine ([`crate::smurf::sim_wide`]) simulates 64 bitstream
+// trials per clock by keeping every 16-bit comparator word as 16 *bit
+// planes*: plane `b` is a `u64` whose bit `l` is bit `b` of lane `l`'s
+// word. A θ-gate comparison against all 64 lanes is then ~2 word ops per
+// plane instead of 64 scalar compares (see `crate::sc::sng::wide_lt_const`).
+// ---------------------------------------------------------------------------
+
+/// Transpose up to 64 per-lane 16-bit words into 16 bit planes
+/// (plane `b`, bit `l` = bit `b` of `lanes[l]`). Missing lanes are zero.
+pub fn planes_from_lanes(lanes: &[u16]) -> [u64; 16] {
+    assert!(lanes.len() <= 64, "at most 64 lanes per word");
+    let mut planes = [0u64; 16];
+    for (l, &v) in lanes.iter().enumerate() {
+        let mut bits = v;
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            planes[b] |= 1u64 << l;
+            bits &= bits - 1;
+        }
+    }
+    planes
+}
+
+/// Read lane `l`'s 16-bit word back out of a plane set (test/debug path).
+pub fn lane_from_planes(planes: &[u64; 16], l: usize) -> u16 {
+    let mut v = 0u16;
+    for (b, &p) in planes.iter().enumerate() {
+        v |= (((p >> l) & 1) as u16) << b;
+    }
+    v
+}
+
+/// 64 independent [`Lfsr16`] lanes stepped together in bit-sliced form.
+///
+/// State is held as 16 planes in a ring buffer: the scalar update
+/// `state' = (state >> 1) | (feedback << 15)` becomes "advance the head
+/// and write one feedback plane" — ~6 word ops per clock for all 64 lanes
+/// versus 64 scalar steps.
+#[derive(Clone, Debug)]
+pub struct WideLfsr16 {
+    buf: [u64; 16],
+    head: usize,
+}
+
+impl WideLfsr16 {
+    /// Build from per-lane register states (lane `l` behaves exactly like
+    /// a scalar `Lfsr16` whose current state is `lanes[l]`). Unspecified
+    /// lanes sit at the all-zeros fixpoint and emit constant zeros.
+    pub fn from_lane_states(lanes: &[u16]) -> Self {
+        Self { buf: planes_from_lanes(lanes), head: 0 }
+    }
+
+    /// Bit plane `b` of the current 64 lane states.
+    #[inline(always)]
+    pub fn plane(&self, b: usize) -> u64 {
+        self.buf[(self.head + b) & 15]
+    }
+
+    /// Advance all lanes one clock (each lane matches `Lfsr16::step`).
+    #[inline(always)]
+    pub fn step(&mut self) {
+        // Taps 16,15,13,4: feedback = s0 ^ s2 ^ s3 ^ s5 per lane.
+        let fb = self.plane(0) ^ self.plane(2) ^ self.plane(3) ^ self.plane(5);
+        self.head = (self.head + 1) & 15;
+        self.buf[(self.head + 15) & 15] = fb;
+    }
+
+    /// One clock for all lanes, then the θ-gate comparator mask
+    /// (lane `l` set iff its fresh word `< threshold`) — the wide
+    /// equivalent of `gate.sample(lfsr.next_u16())`.
+    #[inline]
+    pub fn next_lt_const(&mut self, threshold: u16) -> u64 {
+        self.step();
+        crate::sc::sng::wide_lt_const_with(|b| self.plane(b), threshold)
+    }
+
+    /// One clock for all lanes, then write this cycle's 16 rand planes.
+    #[inline]
+    pub fn next_planes_into(&mut self, out: &mut [u64; 16]) {
+        self.step();
+        for (b, o) in out.iter_mut().enumerate() {
+            *o = self.plane(b);
+        }
+    }
+}
+
+/// 64 independent [`XorShift64`] lanes.
+///
+/// The 64-bit multiply in xorshift64* does not bit-slice (carries cross
+/// lanes), so lanes are stepped scalarly; the wide win here is the packed
+/// comparator mask plus the branch-free downstream pipeline. Lanes live
+/// in a fixed inline array so reseeding allocates nothing.
+#[derive(Clone, Debug)]
+pub struct WideXorShift64 {
+    lanes: [XorShift64; 64],
+    active: usize,
+}
+
+impl WideXorShift64 {
+    /// One lane per seed (at most 64), seeded exactly like
+    /// `XorShift64::new` so lane `l` reproduces the scalar sequence.
+    /// Unused lanes stay idle (their mask/plane bits are zero).
+    pub fn from_seeds(seeds: &[u64]) -> Self {
+        assert!(seeds.len() <= 64, "at most 64 lanes per word");
+        Self {
+            lanes: core::array::from_fn(|l| {
+                XorShift64::new(seeds.get(l).copied().unwrap_or(0))
+            }),
+            active: seeds.len(),
+        }
+    }
+
+    /// One clock for all lanes, then the θ-gate comparator mask.
+    #[inline]
+    pub fn next_lt_const(&mut self, threshold: u16) -> u64 {
+        let mut mask = 0u64;
+        for (l, r) in self.lanes[..self.active].iter_mut().enumerate() {
+            mask |= ((r.next_u16() < threshold) as u64) << l;
+        }
+        mask
+    }
+
+    /// One clock for all lanes, then write this cycle's 16 rand planes.
+    pub fn next_planes_into(&mut self, out: &mut [u64; 16]) {
+        out.fill(0);
+        for (l, r) in self.lanes[..self.active].iter_mut().enumerate() {
+            let mut bits = r.next_u16();
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                out[b] |= 1u64 << l;
+                bits &= bits - 1;
+            }
+        }
+    }
+}
+
+/// 64 independent [`Sobol`] (van der Corput) lanes in bit-sliced form.
+///
+/// The scalar generator emits the bit-reversed low 16 bits of a counter;
+/// bit-sliced, the reversal is free (read the counter planes in reverse
+/// order) and the shared increment is a ripple-carry over planes.
+#[derive(Clone, Debug)]
+pub struct WideSobol16 {
+    /// Counter planes: plane `b` holds bit `b` of each lane's counter.
+    counter: [u64; 16],
+}
+
+impl WideSobol16 {
+    /// Per-lane counter start values (low 16 bits of `Sobol::new(start)`;
+    /// higher counter bits never reach the 16-bit output).
+    pub fn from_lane_counters(lanes: &[u16]) -> Self {
+        Self { counter: planes_from_lanes(lanes) }
+    }
+
+    #[inline(always)]
+    fn increment_all(&mut self) {
+        let mut carry = !0u64;
+        for p in self.counter.iter_mut() {
+            let t = *p;
+            *p = t ^ carry;
+            carry &= t;
+            if carry == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Comparator mask for this cycle (output = bit-reversed counter,
+    /// matching `Sobol::next_u16`), then advance every lane's counter.
+    #[inline]
+    pub fn next_lt_const(&mut self, threshold: u16) -> u64 {
+        let mask =
+            crate::sc::sng::wide_lt_const_with(|b| self.counter[15 - b], threshold);
+        self.increment_all();
+        mask
+    }
+
+    /// Write this cycle's 16 rand planes, then advance every counter.
+    #[inline]
+    pub fn next_planes_into(&mut self, out: &mut [u64; 16]) {
+        for (b, o) in out.iter_mut().enumerate() {
+            *o = self.counter[15 - b];
+        }
+        self.increment_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +474,116 @@ mod tests {
             for (i, r) in refs.iter_mut().enumerate() {
                 assert_eq!(out[i], r.step());
             }
+        }
+    }
+
+    #[test]
+    fn jump_basis_matches_stepping() {
+        for steps in [0usize, 1, 17, 34, 51, 170] {
+            let basis = Lfsr16::jump_basis(steps);
+            for seed in [1u16, 0x5555, 0xBEEF, 0xFFFF] {
+                let mut l = Lfsr16::new(seed);
+                for _ in 0..steps {
+                    l.step();
+                }
+                assert_eq!(
+                    Lfsr16::jump(seed, &basis),
+                    l.state(),
+                    "seed={seed:#06x} steps={steps}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn planes_roundtrip_lanes() {
+        let lanes: Vec<u16> = (0..64).map(|l| (l as u16).wrapping_mul(0x9E37) ^ 0x1234).collect();
+        let planes = planes_from_lanes(&lanes);
+        for (l, &v) in lanes.iter().enumerate() {
+            assert_eq!(lane_from_planes(&planes, l), v);
+        }
+    }
+
+    #[test]
+    fn wide_lfsr_matches_64_scalar_lfsrs() {
+        let lanes: Vec<u16> = (0..64).map(|l| (l as u16) * 977 + 1).collect();
+        let mut wide = WideLfsr16::from_lane_states(&lanes);
+        let mut scalars: Vec<Lfsr16> = lanes.iter().map(|&s| Lfsr16::new(s)).collect();
+        for cycle in 0..200 {
+            wide.step();
+            for (l, s) in scalars.iter_mut().enumerate() {
+                let expect = s.step();
+                let got = {
+                    let mut v = 0u16;
+                    for b in 0..16 {
+                        v |= (((wide.plane(b) >> l) & 1) as u16) << b;
+                    }
+                    v
+                };
+                assert_eq!(got, expect, "cycle {cycle} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_lfsr_lt_mask_matches_scalar_compares() {
+        let lanes: Vec<u16> = (0..64).map(|l| (l as u16) * 31 + 7).collect();
+        let mut wide = WideLfsr16::from_lane_states(&lanes);
+        let mut scalars: Vec<Lfsr16> = lanes.iter().map(|&s| Lfsr16::new(s)).collect();
+        for t in [0u16, 1, 0x8000, 0xABCD, 0xFFFF] {
+            let mask = wide.next_lt_const(t);
+            for (l, s) in scalars.iter_mut().enumerate() {
+                let expect = s.next_u16() < t;
+                assert_eq!((mask >> l) & 1 == 1, expect, "t={t:#06x} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_xorshift_matches_scalar() {
+        let seeds: Vec<u64> = (0..64).map(|l| l as u64 * 0xDEAD_BEEF + 3).collect();
+        let mut wide = WideXorShift64::from_seeds(&seeds);
+        let mut scalars: Vec<XorShift64> = seeds.iter().map(|&s| XorShift64::new(s)).collect();
+        let mut planes = [0u64; 16];
+        for _ in 0..50 {
+            wide.next_planes_into(&mut planes);
+            for (l, s) in scalars.iter_mut().enumerate() {
+                assert_eq!(lane_from_planes(&planes, l), s.next_u16());
+            }
+        }
+        let t = 0x7777;
+        let mask = wide.next_lt_const(t);
+        for (l, s) in scalars.iter_mut().enumerate() {
+            assert_eq!((mask >> l) & 1 == 1, s.next_u16() < t);
+        }
+    }
+
+    #[test]
+    fn wide_sobol_matches_scalar() {
+        let starts: Vec<u16> = (0..64).map(|l| (l as u16).wrapping_mul(4099)).collect();
+        let mut wide = WideSobol16::from_lane_counters(&starts);
+        let mut scalars: Vec<Sobol> = starts.iter().map(|&s| Sobol::new(s as u32)).collect();
+        let mut planes = [0u64; 16];
+        for _ in 0..300 {
+            wide.next_planes_into(&mut planes);
+            for (l, s) in scalars.iter_mut().enumerate() {
+                assert_eq!(lane_from_planes(&planes, l), s.next_u16());
+            }
+        }
+    }
+
+    #[test]
+    fn wide_sobol_counter_wraps_like_scalar_low_bits() {
+        // A lane sitting at 0xFFFF must wrap to 0x0000 (the scalar u32
+        // counter's higher bits never reach the 16-bit output).
+        let mut wide = WideSobol16::from_lane_counters(&[0xFFFF, 3]);
+        let mut a = Sobol::new(0xFFFF);
+        let mut b = Sobol::new(3);
+        let mut planes = [0u64; 16];
+        for _ in 0..4 {
+            wide.next_planes_into(&mut planes);
+            assert_eq!(lane_from_planes(&planes, 0), a.next_u16());
+            assert_eq!(lane_from_planes(&planes, 1), b.next_u16());
         }
     }
 

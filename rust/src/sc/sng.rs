@@ -55,6 +55,72 @@ impl ThetaGate {
         }
         ones as f64 / len as f64
     }
+
+    /// 64 comparisons per call: one clock of this θ-gate across 64 lanes
+    /// whose entropy words are given as bit planes (see
+    /// [`crate::sc::rng::planes_from_lanes`]). Bit `l` of the result is
+    /// `rand_l < threshold`.
+    #[inline]
+    pub fn sample_wide(&self, rand_planes: &[u64; 16]) -> u64 {
+        wide_lt_const(rand_planes, self.threshold)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wide (bit-sliced) comparators: the θ-gate datapath over 64 lanes/word.
+//
+// A 16-bit unsigned compare `rand < t` is evaluated MSB-first: the first
+// bit position where the operands differ decides. Keeping `eq` = "lanes
+// still tied" and folding one plane at a time gives all 64 lane verdicts
+// in ≤ 2–5 word ops per plane — this is the Fig. 6 comparator bank run 64
+// trials at a time.
+// ---------------------------------------------------------------------------
+
+/// 64-lane `rand < threshold` with the rand planes supplied by an accessor
+/// (lets ring-buffered plane stores avoid a copy).
+#[inline]
+pub fn wide_lt_const_with(plane: impl Fn(usize) -> u64, threshold: u16) -> u64 {
+    let mut lt = 0u64;
+    let mut eq = !0u64;
+    for b in (0..16).rev() {
+        let p = plane(b);
+        if (threshold >> b) & 1 == 1 {
+            lt |= eq & !p;
+            eq &= p;
+        } else {
+            eq &= !p;
+        }
+        if eq == 0 {
+            break;
+        }
+    }
+    lt
+}
+
+/// 64-lane `rand < threshold` over materialized planes.
+#[inline]
+pub fn wide_lt_const(rand_planes: &[u64; 16], threshold: u16) -> u64 {
+    wide_lt_const_with(|b| rand_planes[b], threshold)
+}
+
+/// 64-lane `rand_l < threshold_l` where *both* sides vary per lane —
+/// the CPT-gate case, where each lane's codeword selects its own
+/// coefficient threshold (threshold planes built by
+/// [`crate::sc::cpt::CptGate::threshold_planes`]).
+#[inline]
+pub fn wide_lt_planes(rand_planes: &[u64; 16], threshold_planes: &[u64; 16]) -> u64 {
+    let mut lt = 0u64;
+    let mut eq = !0u64;
+    for b in (0..16).rev() {
+        let r = rand_planes[b];
+        let t = threshold_planes[b];
+        lt |= eq & !r & t;
+        eq &= !(r ^ t);
+        if eq == 0 {
+            break;
+        }
+    }
+    lt
 }
 
 #[cfg(test)]
@@ -102,6 +168,48 @@ mod tests {
             let mean = g.run_mean(l, &mut rng);
             (mean - g.effective_p()).abs() <= 1.0 / l as f64 + 1e-12
         });
+    }
+
+    #[test]
+    fn prop_wide_lt_const_matches_scalar_compare() {
+        use crate::sc::rng::planes_from_lanes;
+        use crate::util::prng::Pcg;
+        check(23, 64, &UnitF64::unit(), |&p| {
+            let t = ThetaGate::new(p).raw();
+            let mut rng = Pcg::new(p.to_bits());
+            let lanes: Vec<u16> = (0..64).map(|_| rng.next_u64() as u16).collect();
+            let planes = planes_from_lanes(&lanes);
+            let mask = wide_lt_const(&planes, t);
+            lanes
+                .iter()
+                .enumerate()
+                .all(|(l, &r)| ((mask >> l) & 1 == 1) == (r < t))
+        });
+    }
+
+    #[test]
+    fn prop_wide_lt_planes_matches_scalar_compare() {
+        use crate::sc::rng::planes_from_lanes;
+        use crate::util::prng::Pcg;
+        check(24, 64, &UnitF64::unit(), |&p| {
+            let mut rng = Pcg::new(p.to_bits() ^ 0xABCD);
+            let rs: Vec<u16> = (0..64).map(|_| rng.next_u64() as u16).collect();
+            let ts: Vec<u16> = (0..64).map(|_| rng.next_u64() as u16).collect();
+            let mask = wide_lt_planes(&planes_from_lanes(&rs), &planes_from_lanes(&ts));
+            (0..64).all(|l| ((mask >> l) & 1 == 1) == (rs[l] < ts[l]))
+        });
+    }
+
+    #[test]
+    fn wide_lt_boundary_thresholds() {
+        use crate::sc::rng::planes_from_lanes;
+        let lanes: Vec<u16> = (0..64).map(|l| (l as u16).wrapping_mul(1031)).collect();
+        let planes = planes_from_lanes(&lanes);
+        assert_eq!(wide_lt_const(&planes, 0), 0, "t=0 never fires");
+        let all = wide_lt_const(&planes, 0xFFFF);
+        for (l, &v) in lanes.iter().enumerate() {
+            assert_eq!((all >> l) & 1 == 1, v < 0xFFFF);
+        }
     }
 
     #[test]

@@ -3,7 +3,8 @@
 
 use super::analytic::AnalyticSmurf;
 use super::config::SmurfConfig;
-use super::sim::{BitLevelSmurf, EntropyMode};
+use super::sim::{BitLevelSmurf, EntropyMode, WIDE_TRIALS_MIN};
+use super::sim_wide::WideBitLevelSmurf;
 use crate::synth::functions::TargetFn;
 use crate::synth::synthesize::{synthesize, SynthOptions, SynthResult};
 use crate::util::json::Json;
@@ -14,6 +15,9 @@ pub struct SmurfApproximator {
     name: String,
     analytic: AnalyticSmurf,
     sim: BitLevelSmurf,
+    /// Bit-sliced 64-lane engine sharing `sim`'s coefficients and entropy
+    /// wiring; serves the multi-trial and batch-point fast paths.
+    wide: WideBitLevelSmurf,
     /// Default bitstream length used by `eval` (paper fixes 64, §IV-A).
     pub default_len: usize,
     /// Analytic MAE reported by synthesis.
@@ -49,7 +53,8 @@ impl SmurfApproximator {
 
     fn from_analytic(name: String, analytic: AnalyticSmurf, default_len: usize, mae: f64) -> Self {
         let sim = BitLevelSmurf::from_analytic(&analytic, EntropyMode::SharedLfsr);
-        Self { name, analytic, sim, default_len, synth_mae: mae }
+        let wide = WideBitLevelSmurf::from_scalar(&sim);
+        Self { name, analytic, sim, wide, default_len, synth_mae: mae }
     }
 
     pub fn name(&self) -> &str {
@@ -74,6 +79,19 @@ impl SmurfApproximator {
         self.sim.eval(p, len, seed)
     }
 
+    /// Monte-Carlo average of `trials` bit-level runs. From
+    /// [`WIDE_TRIALS_MIN`] trials upward this runs on the prebuilt wide
+    /// engine (64 trials per pass), bit-identical to averaging
+    /// [`Self::eval_bitstream`] over the same seeds.
+    pub fn eval_bitstream_avg(&self, p: &[f64], len: usize, trials: usize, seed: u64) -> f64 {
+        if trials >= WIDE_TRIALS_MIN {
+            let mut st = self.wide.make_run_state();
+            self.wide.eval_avg(p, len, trials, seed, &mut st)
+        } else {
+            self.sim.eval_avg_scalar(p, len, trials, seed)
+        }
+    }
+
     /// Bit-level output at the configured default stream length.
     pub fn eval(&self, p: &[f64], seed: u64) -> f64 {
         self.sim.eval(p, self.default_len, seed)
@@ -87,6 +105,13 @@ impl SmurfApproximator {
     /// Underlying bit-level simulator.
     pub fn simulator(&self) -> &BitLevelSmurf {
         &self.sim
+    }
+
+    /// Underlying wide (bit-sliced, 64-lane) simulator. Callers that want
+    /// allocation-free steady state own the scratch:
+    /// `let mut st = approx.wide_simulator().make_run_state();`.
+    pub fn wide_simulator(&self) -> &WideBitLevelSmurf {
+        &self.wide
     }
 
     /// Serialize the coefficient table (for artifacts/ and the python
@@ -152,6 +177,17 @@ mod tests {
         let y1 = a.eval(&[0.5, 0.5], 3);
         let y2 = a.eval_bitstream(&[0.5, 0.5], 64, 3);
         assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn bitstream_avg_matches_scalar_average() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let a = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+        for trials in [2usize, 8, 40] {
+            let fast = a.eval_bitstream_avg(&[0.3, 0.4], 64, trials, 5);
+            let slow = a.simulator().eval_avg_scalar(&[0.3, 0.4], 64, trials, 5);
+            assert_eq!(fast, slow, "trials={trials}");
+        }
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //! - [`sim`] — the cycle-accurate bit-level simulator of Fig. 6: input
 //!   θ-gates, M chained FSMs, CPT-gate, output counter — gate-for-gate the
 //!   paper's RTL, with the single-RNG delayed-branch entropy wiring.
+//! - [`sim_wide`] — the bit-sliced wide engine: the same Fig. 6 pipeline
+//!   run 64 independent trials (or batch points) per clock using bit-plane
+//!   arithmetic; lane-for-lane bit-exact with [`sim`] given matched seeds.
 //! - [`approximator`] — synthesis + evaluation façade.
 
 pub mod analytic;
@@ -18,9 +21,11 @@ pub mod codeword;
 pub mod config;
 pub mod multi_output;
 pub mod sim;
+pub mod sim_wide;
 
 pub use analytic::AnalyticSmurf;
 pub use approximator::SmurfApproximator;
 pub use codeword::Codeword;
 pub use config::SmurfConfig;
 pub use sim::BitLevelSmurf;
+pub use sim_wide::{WideBitLevelSmurf, WideRunState};

@@ -45,7 +45,14 @@ pub struct BitLevelSmurf {
     cfg: SmurfConfig,
     cpt: CptGate,
     mode: EntropyMode,
+    /// Mixed-radix codeword strides, hoisted out of the per-eval hot path.
+    strides: Vec<usize>,
 }
+
+/// Trial count at or above which the batch estimators route through the
+/// bit-sliced wide engine ([`crate::smurf::sim_wide::WideBitLevelSmurf`]).
+/// Below this the fixed 64-lane word cost is not amortized.
+pub const WIDE_TRIALS_MIN: usize = 8;
 
 /// Devirtualized entropy source (§Perf: the simulator ticks every θ-gate
 /// every cycle, so `Box<dyn StreamRng>` indirect calls were ~20% of the
@@ -82,7 +89,8 @@ struct RunState {
 impl BitLevelSmurf {
     pub fn new(cfg: SmurfConfig, w: &[f64], mode: EntropyMode) -> Self {
         assert_eq!(w.len(), cfg.num_aggregate_states());
-        Self { cfg, cpt: CptGate::new(w), mode }
+        let strides = cfg.strides();
+        Self { cfg, cpt: CptGate::new(w), mode, strides }
     }
 
     /// Build from an analytic instance (same coefficients).
@@ -94,9 +102,37 @@ impl BitLevelSmurf {
         &self.cfg
     }
 
+    /// Entropy wiring of this instance.
+    pub fn mode(&self) -> EntropyMode {
+        self.mode
+    }
+
+    /// CPT-gate (shared with the wide engine so both sample identical
+    /// quantized coefficient thresholds).
+    pub(crate) fn cpt(&self) -> &CptGate {
+        &self.cpt
+    }
+
     fn make_state(&self, seed: u64) -> RunState {
+        let mut st = RunState {
+            fsms: Vec::with_capacity(self.cfg.num_vars()),
+            input_rngs: Vec::with_capacity(self.cfg.num_vars()),
+            cpt_rng: RngKind::Sobol(Sobol::new(0)),
+        };
+        self.reset_state(seed, &mut st);
+        st
+    }
+
+    /// Re-seed an existing [`RunState`] in place: `eval_avg`/`abs_error`
+    /// construct the buffers once and reset per trial, so the scalar
+    /// estimators are allocation-free across trials.
+    fn reset_state(&self, seed: u64, st: &mut RunState) {
         let m = self.cfg.num_vars();
-        let mut input_rngs: Vec<RngKind> = Vec::with_capacity(m);
+        st.fsms.clear();
+        st.fsms
+            .extend((0..m).map(|j| ChainFsm::centered(self.cfg.radix(j))));
+        let input_rngs = &mut st.input_rngs;
+        input_rngs.clear();
         let cpt_rng: RngKind;
         match self.mode {
             EntropyMode::SharedLfsr => {
@@ -142,11 +178,26 @@ impl BitLevelSmurf {
                 cpt_rng = RngKind::Sobol(Sobol::new(seed as u32));
             }
         }
-        RunState {
-            fsms: (0..m).map(|j| ChainFsm::centered(self.cfg.radix(j))).collect(),
-            input_rngs,
-            cpt_rng,
+        st.cpt_rng = cpt_rng;
+    }
+
+    /// One seeded bitstream run on pre-built θ-gates and scratch state —
+    /// the shared core of `eval`/`eval_avg`/`abs_error`.
+    fn run(&self, gates: &[ThetaGate], len: usize, st: &mut RunState) -> f64 {
+        assert!(len > 0);
+        let mut ones = 0u64;
+        for _ in 0..len {
+            // 1. Input θ-gates sample this cycle's entropy words.
+            // 2. FSMs transition on the sampled bits.
+            // 3. The (updated) codeword selects the CPT θ-gate.
+            let mut sel = 0;
+            for j in 0..st.fsms.len() {
+                let bit = gates[j].sample(st.input_rngs[j].next_u16());
+                sel += st.fsms[j].step(bit) * self.strides[j];
+            }
+            ones += self.cpt.sample(sel, st.cpt_rng.next_u16()) as u64;
         }
+        ones as f64 / len as f64
     }
 
     /// Run the machine for `len` clock cycles on input probabilities `p`
@@ -156,53 +207,78 @@ impl BitLevelSmurf {
     /// always reproduces the same bitstream.
     pub fn eval(&self, p: &[f64], len: usize, seed: u64) -> f64 {
         assert_eq!(p.len(), self.cfg.num_vars());
-        assert!(len > 0);
         let mut st = self.make_state(seed);
         let gates: Vec<ThetaGate> = p.iter().map(|&pj| ThetaGate::new(pj)).collect();
-        let strides = self.cfg.strides();
-        let mut sel: usize = st
-            .fsms
-            .iter()
-            .zip(&strides)
-            .map(|(f, s)| f.state() * s)
-            .sum();
-        let mut ones = 0u64;
-        for _ in 0..len {
-            // 1. Input θ-gates sample this cycle's entropy words.
-            // 2. FSMs transition on the sampled bits.
-            // 3. The (updated) codeword selects the CPT θ-gate.
-            sel = 0;
-            for j in 0..st.fsms.len() {
-                let bit = gates[j].sample(st.input_rngs[j].next_u16());
-                sel += st.fsms[j].step(bit) * strides[j];
-            }
-            ones += self.cpt.sample(sel, st.cpt_rng.next_u16()) as u64;
-        }
-        let _ = sel;
-        ones as f64 / len as f64
+        self.run(&gates, len, &mut st)
     }
 
     /// Average of `trials` independent bitstream runs — the Monte-Carlo
     /// estimator the accuracy figures (7–10) report.
+    ///
+    /// At [`WIDE_TRIALS_MIN`] trials or more this routes through the
+    /// bit-sliced wide engine (64 trials per pass); the result is
+    /// bit-identical to the scalar loop — same per-trial seeds, same
+    /// summation order — just ~an order of magnitude faster.
     pub fn eval_avg(&self, p: &[f64], len: usize, trials: usize, seed: u64) -> f64 {
         assert!(trials > 0);
-        (0..trials)
-            .map(|t| self.eval(p, len, seed.wrapping_add(t as u64).wrapping_mul(0x5DEECE66D)))
-            .sum::<f64>()
-            / trials as f64
+        if trials >= WIDE_TRIALS_MIN {
+            let wide = super::sim_wide::WideBitLevelSmurf::from_scalar(self);
+            let mut st = wide.make_run_state();
+            return wide.eval_avg(p, len, trials, seed, &mut st);
+        }
+        self.eval_avg_scalar(p, len, trials, seed)
+    }
+
+    /// The scalar (one bit per cycle per trial) reference estimator.
+    /// θ-gates and run state are built once and reset per trial, so the
+    /// loop itself is allocation-free. Public for benchmarks and
+    /// equivalence tests; `eval_avg` is the fast path.
+    pub fn eval_avg_scalar(&self, p: &[f64], len: usize, trials: usize, seed: u64) -> f64 {
+        assert!(trials > 0);
+        assert_eq!(p.len(), self.cfg.num_vars());
+        let gates: Vec<ThetaGate> = p.iter().map(|&pj| ThetaGate::new(pj)).collect();
+        let mut st = self.make_state(seed);
+        let mut sum = 0.0;
+        for t in 0..trials {
+            self.reset_state(seed.wrapping_add(t as u64).wrapping_mul(0x5DEECE66D), &mut st);
+            sum += self.run(&gates, len, &mut st);
+        }
+        sum / trials as f64
     }
 
     /// Mean absolute error against a target over `trials` runs at one
     /// input point: E[|P_y_hat - target|] (paper's "average absolute
-    /// error" is this averaged over the input grid).
+    /// error" is this averaged over the input grid). Routes through the
+    /// wide engine at [`WIDE_TRIALS_MIN`]+ trials, bit-identically.
     pub fn abs_error(&self, p: &[f64], target: f64, len: usize, trials: usize, seed: u64) -> f64 {
-        (0..trials)
-            .map(|t| {
-                let y = self.eval(p, len, seed.wrapping_add(t as u64).wrapping_mul(0x2545F4914F));
-                (y - target).abs()
-            })
-            .sum::<f64>()
-            / trials as f64
+        assert!(trials > 0);
+        if trials >= WIDE_TRIALS_MIN {
+            let wide = super::sim_wide::WideBitLevelSmurf::from_scalar(self);
+            let mut st = wide.make_run_state();
+            return wide.abs_error(p, target, len, trials, seed, &mut st);
+        }
+        self.abs_error_scalar(p, target, len, trials, seed)
+    }
+
+    /// Scalar reference for [`Self::abs_error`] (see `eval_avg_scalar`).
+    pub fn abs_error_scalar(
+        &self,
+        p: &[f64],
+        target: f64,
+        len: usize,
+        trials: usize,
+        seed: u64,
+    ) -> f64 {
+        assert!(trials > 0);
+        assert_eq!(p.len(), self.cfg.num_vars());
+        let gates: Vec<ThetaGate> = p.iter().map(|&pj| ThetaGate::new(pj)).collect();
+        let mut st = self.make_state(seed);
+        let mut sum = 0.0;
+        for t in 0..trials {
+            self.reset_state(seed.wrapping_add(t as u64).wrapping_mul(0x2545F4914F), &mut st);
+            sum += (self.run(&gates, len, &mut st) - target).abs();
+        }
+        sum / trials as f64
     }
 }
 

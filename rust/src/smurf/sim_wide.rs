@@ -1,0 +1,635 @@
+//! Wide (bit-sliced) SMURF simulator: 64 independent bitstream trials per
+//! clock cycle.
+//!
+//! # The bit-slicing scheme
+//!
+//! The scalar simulator ([`super::sim::BitLevelSmurf`]) walks Fig. 6 one
+//! bit per cycle per trial: every θ-gate compare, FSM branch and CPT MUX
+//! load is a data-dependent scalar operation, and the random comparator
+//! bits make the FSM branches ~50% mispredicted. SC bitstreams are the
+//! canonical bit-parallel workload, so this engine transposes the problem:
+//! every 16-bit datapath word is stored as 16 *bit planes*, where plane
+//! `b` is a `u64` whose bit `l` belongs to lane (= trial or batch point)
+//! `l`. All 64 lanes then move through one clock of the whole
+//! comparator → FSM → CPT pipeline in a few dozen branch-free word ops.
+//!
+//! Mapping back to the Fig. 6 blocks:
+//!
+//! - **RNG + delayed branches (§III-A)** — [`crate::sc::rng::WideLfsr16`]
+//!   keeps the 16 LFSR register bits as planes in a ring buffer; one clock
+//!   of all 64 lanes is "compute the feedback plane, rotate the head".
+//!   Per-lane branch delays are applied at seed time with the GF(2) jump
+//!   basis ([`crate::sc::rng::Lfsr16::jump_basis`]). Sobol output sampling
+//!   is a plane ripple-carry counter read in bit-reversed plane order;
+//!   xorshift64* lanes step scalarly (the 64-bit multiply does not slice)
+//!   but still feed the packed pipeline.
+//! - **Input θ-gates** — a 16-bit `rand < threshold` compare is folded
+//!   MSB-first over the planes ([`crate::sc::sng::wide_lt_const`]): ~2 word
+//!   ops per plane yield all 64 verdicts, i.e. the M comparator columns of
+//!   Fig. 6 run 64 trials at a time.
+//! - **Chained N-state FSMs** — [`crate::fsm::chain_wide::WideChainFsm`]
+//!   holds each chain's state index as `ceil(log2 N)` planes; a clock edge
+//!   is a masked ripple-carry **saturating add** (lanes whose input bit is
+//!   1 and not yet at `N-1`) followed by a masked ripple-borrow
+//!   **saturating sub** — plane logic, no branches.
+//! - **Universal-radix codeword + CPT MUX** — each FSM exposes one-hot
+//!   per-digit lane masks; ANDing one mask per variable gives `eq[t]`, the
+//!   lanes whose codeword selects coefficient `w_t`. The CPT-gate ORs each
+//!   coefficient's threshold bits into shared planes under its `eq[t]`
+//!   mask ([`crate::sc::cpt::CptGate::threshold_planes`]) — the AND-OR MUX
+//!   tree of Fig. 6 in word form — and one plane-vs-plane compare
+//!   ([`crate::sc::sng::wide_lt_planes`]) samples all 64 output bits.
+//! - **Output counter** — output masks accumulate into a *vertical
+//!   counter* (one plane per count bit, ripple carry), so per-cycle cost
+//!   is O(1) amortized; per-lane totals are read out once at the end.
+//!
+//! Lanes are fully independent, so the engine serves two shapes through
+//! the same core: `eval_trials` (one input point, up to 64 Monte-Carlo
+//! trials — the [`eval_avg`](WideBitLevelSmurf::eval_avg) estimator) and
+//! `eval_points` (up to 64 distinct batch points, one trial each — the
+//! coordinator's `Engine::BitLevel` path). Both are bit-exact matches of
+//! the scalar simulator lane-for-lane given the same per-lane seeds: same
+//! LFSR branch delays, same xorshift seeding formula, same Sobol counter
+//! phase, same θ-gate quantization, same within-cycle ordering.
+//!
+//! All scratch state lives in a caller-owned [`WideRunState`], so repeated
+//! evaluations are allocation-free end-to-end.
+
+use super::config::SmurfConfig;
+use super::sim::{BitLevelSmurf, EntropyMode};
+use crate::fsm::chain_wide::WideChainFsm;
+use crate::sc::cpt::CptGate;
+use crate::sc::rng::{Lfsr16, WideLfsr16, WideSobol16, WideXorShift64};
+use crate::sc::sng::{wide_lt_planes, ThetaGate};
+
+/// Max count-bit planes in the output counter: supports `len < 2^40`.
+const COUNT_PLANES: usize = 41;
+
+/// Hardware lane width: one trial per bit of a `u64` word.
+pub const LANES: usize = 64;
+
+/// Devirtualized wide entropy source (mirrors the scalar `RngKind`).
+#[derive(Clone, Debug)]
+enum WideRng {
+    Lfsr(WideLfsr16),
+    Xor(WideXorShift64),
+    Sobol(WideSobol16),
+}
+
+impl WideRng {
+    /// One clock for all lanes, then the comparator mask against a
+    /// threshold shared by every lane.
+    #[inline(always)]
+    fn next_lt_const(&mut self, threshold: u16) -> u64 {
+        match self {
+            WideRng::Lfsr(r) => r.next_lt_const(threshold),
+            WideRng::Xor(r) => r.next_lt_const(threshold),
+            WideRng::Sobol(r) => r.next_lt_const(threshold),
+        }
+    }
+
+    /// One clock for all lanes, materializing this cycle's rand planes.
+    #[inline(always)]
+    fn next_planes_into(&mut self, out: &mut [u64; 16]) {
+        match self {
+            WideRng::Lfsr(r) => r.next_planes_into(out),
+            WideRng::Xor(r) => r.next_planes_into(out),
+            WideRng::Sobol(r) => r.next_planes_into(out),
+        }
+    }
+}
+
+/// Per-input-gate threshold: one shared value (`eval_trials` — every lane
+/// evaluates the same point) or per-lane planes (`eval_points`).
+#[derive(Clone, Debug)]
+enum GateThreshold {
+    Shared(u16),
+    PerLane([u64; 16]),
+}
+
+/// Caller-owned scratch for wide evaluations. Construct once with
+/// [`WideBitLevelSmurf::make_run_state`]; every buffer is reused across
+/// runs, so steady-state evaluation performs no heap allocation.
+pub struct WideRunState {
+    fsms: Vec<WideChainFsm>,
+    input_rngs: Vec<WideRng>,
+    cpt_rng: WideRng,
+    gate_thresholds: Vec<GateThreshold>,
+    /// Per-variable one-hot digit masks, flattened (`digit_offsets`).
+    digit_masks: Vec<u64>,
+    /// Per-coefficient select masks (`eq[t]` = lanes selecting `w_t`).
+    eq: Vec<u64>,
+    rand_planes: [u64; 16],
+    thresh_planes: [u64; 16],
+    count_planes: [u64; COUNT_PLANES],
+}
+
+/// Wide bit-sliced SMURF instance. Shares coefficients/entropy semantics
+/// with a scalar [`BitLevelSmurf`]; see the module docs for the scheme.
+#[derive(Clone, Debug)]
+pub struct WideBitLevelSmurf {
+    cfg: SmurfConfig,
+    cpt: CptGate,
+    mode: EntropyMode,
+    /// `digits[t * M + j]` = variable `j`'s digit of codeword `t`.
+    digits: Vec<u16>,
+    /// Start of variable `j`'s digit-mask block in `WideRunState::digit_masks`.
+    digit_offsets: Vec<usize>,
+    /// LFSR fast-forward bases for branch delays `17*k`, `k in 0..=M`.
+    lfsr_jumps: Vec<[u16; 16]>,
+}
+
+impl WideBitLevelSmurf {
+    pub fn new(cfg: SmurfConfig, w: &[f64], mode: EntropyMode) -> Self {
+        assert_eq!(w.len(), cfg.num_aggregate_states());
+        Self::from_parts(cfg, CptGate::new(w), mode)
+    }
+
+    /// Build from a scalar simulator (identical coefficients, config and
+    /// entropy wiring — the lane-equivalence contract).
+    pub fn from_scalar(sim: &BitLevelSmurf) -> Self {
+        Self::from_parts(sim.config().clone(), sim.cpt().clone(), sim.mode())
+    }
+
+    fn from_parts(cfg: SmurfConfig, cpt: CptGate, mode: EntropyMode) -> Self {
+        let m = cfg.num_vars();
+        let bank = cfg.num_aggregate_states();
+        // Precompute each codeword's mixed-radix digits once; the hot loop
+        // indexes this table instead of doing div/mod per cycle.
+        let mut digits = Vec::with_capacity(bank * m);
+        for t in 0..bank {
+            let mut rem = t;
+            for j in 0..m {
+                let n = cfg.radix(j);
+                digits.push((rem % n) as u16);
+                rem /= n;
+            }
+        }
+        let mut digit_offsets = Vec::with_capacity(m);
+        let mut off = 0;
+        for j in 0..m {
+            digit_offsets.push(off);
+            off += cfg.radix(j);
+        }
+        // §III-A branch delays: branch k lags 17*k clocks; k == M feeds
+        // the CPT-gate. Precomputed as GF(2) jumps for O(16) lane seeding.
+        const DELAY: usize = 17;
+        let lfsr_jumps = (0..=m).map(|k| Lfsr16::jump_basis(DELAY * k)).collect();
+        Self { cfg, cpt, mode, digits, digit_offsets, lfsr_jumps }
+    }
+
+    pub fn config(&self) -> &SmurfConfig {
+        &self.cfg
+    }
+
+    pub fn mode(&self) -> EntropyMode {
+        self.mode
+    }
+
+    /// Allocate the reusable scratch buffers for this configuration.
+    pub fn make_run_state(&self) -> WideRunState {
+        let m = self.cfg.num_vars();
+        WideRunState {
+            fsms: Vec::with_capacity(m),
+            input_rngs: Vec::with_capacity(m),
+            cpt_rng: WideRng::Sobol(WideSobol16::from_lane_counters(&[])),
+            gate_thresholds: Vec::with_capacity(m),
+            digit_masks: vec![0; self.cfg.radices().iter().sum::<usize>()],
+            eq: vec![0; self.cfg.num_aggregate_states()],
+            rand_planes: [0; 16],
+            thresh_planes: [0; 16],
+            count_planes: [0; COUNT_PLANES],
+        }
+    }
+
+    /// Seed the entropy lanes exactly like `BitLevelSmurf::make_state`
+    /// does per trial: lane `l` reproduces the scalar run with `seeds[l]`.
+    fn reset_entropy(&self, seeds: &[u64], st: &mut WideRunState) {
+        let m = self.cfg.num_vars();
+        let lanes = seeds.len();
+        st.input_rngs.clear();
+        let mut lane_states = [0u16; LANES];
+        match self.mode {
+            EntropyMode::SharedLfsr => {
+                for k in 0..=m {
+                    let basis = &self.lfsr_jumps[k];
+                    for (l, &s) in seeds.iter().enumerate() {
+                        let base = (s as u16) | 1;
+                        lane_states[l] = Lfsr16::jump(base, basis);
+                    }
+                    let rng = WideRng::Lfsr(WideLfsr16::from_lane_states(
+                        &lane_states[..lanes],
+                    ));
+                    if k < m {
+                        st.input_rngs.push(rng);
+                    } else {
+                        st.cpt_rng = rng;
+                    }
+                }
+            }
+            EntropyMode::IndependentXorshift => {
+                let mut lane_seeds = [0u64; LANES];
+                for k in 0..=m {
+                    for (l, &s) in seeds.iter().enumerate() {
+                        lane_seeds[l] = s
+                            .wrapping_mul(0x9E3779B97F4A7C15)
+                            .wrapping_add(k as u64 + 1);
+                    }
+                    let rng = WideRng::Xor(WideXorShift64::from_seeds(
+                        &lane_seeds[..lanes],
+                    ));
+                    if k < m {
+                        st.input_rngs.push(rng);
+                    } else {
+                        st.cpt_rng = rng;
+                    }
+                }
+            }
+            EntropyMode::SobolCpt => {
+                for k in 0..m {
+                    let basis = &self.lfsr_jumps[k];
+                    for (l, &s) in seeds.iter().enumerate() {
+                        let base = (s as u16) | 1;
+                        lane_states[l] = Lfsr16::jump(base, basis);
+                    }
+                    st.input_rngs.push(WideRng::Lfsr(WideLfsr16::from_lane_states(
+                        &lane_states[..lanes],
+                    )));
+                }
+                // Scalar: Sobol::new(seed as u32); only the low 16 counter
+                // bits ever reach the bit-reversed 16-bit output.
+                for (l, &s) in seeds.iter().enumerate() {
+                    lane_states[l] = s as u16;
+                }
+                st.cpt_rng = WideRng::Sobol(WideSobol16::from_lane_counters(
+                    &lane_states[..lanes],
+                ));
+            }
+        }
+        st.fsms.clear();
+        for j in 0..m {
+            st.fsms.push(WideChainFsm::centered(self.cfg.radix(j)));
+        }
+        st.count_planes = [0; COUNT_PLANES];
+    }
+
+    /// The shared 64-lane core: `len` clocks of the Fig. 6 pipeline, then
+    /// per-lane bitstream means for the first `lanes` lanes into `out`.
+    fn run(&self, len: usize, lanes: usize, st: &mut WideRunState, out: &mut [f64]) {
+        assert!(len > 0, "need at least one clock cycle");
+        assert!((len as u64) < (1u64 << (COUNT_PLANES - 1)), "stream too long for counter");
+        let m = self.cfg.num_vars();
+        let bank = self.cfg.num_aggregate_states();
+        let WideRunState {
+            fsms,
+            input_rngs,
+            cpt_rng,
+            gate_thresholds,
+            digit_masks,
+            eq,
+            rand_planes,
+            thresh_planes,
+            count_planes,
+        } = st;
+        for _ in 0..len {
+            // 1. Input θ-gates sample this cycle's entropy; 2. FSMs
+            // transition on the comparator masks (same within-cycle order
+            // as the scalar simulator).
+            for j in 0..m {
+                let up = match &gate_thresholds[j] {
+                    GateThreshold::Shared(t) => input_rngs[j].next_lt_const(*t),
+                    GateThreshold::PerLane(tp) => {
+                        input_rngs[j].next_planes_into(rand_planes);
+                        wide_lt_planes(rand_planes, tp)
+                    }
+                };
+                fsms[j].step(up);
+            }
+            // 3. Updated codeword digits → one-hot lane masks → per-
+            // coefficient select masks.
+            for (j, f) in fsms.iter().enumerate() {
+                let off = self.digit_offsets[j];
+                f.digit_masks(&mut digit_masks[off..off + f.num_states()]);
+            }
+            for t in 0..bank {
+                let row = &self.digits[t * m..t * m + m];
+                let mut mask = !0u64;
+                for (j, &d) in row.iter().enumerate() {
+                    mask &= digit_masks[self.digit_offsets[j] + d as usize];
+                    if mask == 0 {
+                        break;
+                    }
+                }
+                eq[t] = mask;
+            }
+            // 4. CPT-gate: MUX the per-lane coefficient thresholds in
+            // plane form, sample against the CPT entropy branch.
+            self.cpt.threshold_planes(eq.as_slice(), thresh_planes);
+            cpt_rng.next_planes_into(rand_planes);
+            let ones = wide_lt_planes(rand_planes, thresh_planes);
+            // 5. Output counter (vertical: one plane per count bit).
+            let mut carry = ones;
+            let mut b = 0;
+            while carry != 0 {
+                let t = count_planes[b];
+                count_planes[b] = t ^ carry;
+                carry &= t;
+                b += 1;
+            }
+        }
+        // Decode per-lane totals from the vertical counter.
+        for (l, o) in out.iter_mut().enumerate().take(lanes) {
+            let mut count = 0u64;
+            for (b, &p) in count_planes.iter().enumerate() {
+                count |= ((p >> l) & 1) << b;
+            }
+            *o = count as f64 / len as f64;
+        }
+    }
+
+    /// Up to 64 Monte-Carlo trials of one input point in a single pass:
+    /// `out[i]` is bit-exact equal to scalar `eval(p, len, seeds[i])`.
+    pub fn eval_trials(
+        &self,
+        p: &[f64],
+        len: usize,
+        seeds: &[u64],
+        st: &mut WideRunState,
+        out: &mut [f64],
+    ) {
+        assert_eq!(p.len(), self.cfg.num_vars());
+        assert!(!seeds.is_empty() && seeds.len() <= LANES, "1..=64 trials per pass");
+        assert!(out.len() >= seeds.len());
+        st.gate_thresholds.clear();
+        for &pj in p {
+            st.gate_thresholds.push(GateThreshold::Shared(ThetaGate::new(pj).raw()));
+        }
+        self.reset_entropy(seeds, st);
+        self.run(len, seeds.len(), st, out);
+    }
+
+    /// Up to 64 distinct batch points, one bitstream trial each: `out[i]`
+    /// is bit-exact equal to scalar `eval(points[i], len, seeds[i])`.
+    /// This is the coordinator's `Engine::BitLevel` batch shape.
+    pub fn eval_points(
+        &self,
+        points: &[&[f64]],
+        len: usize,
+        seeds: &[u64],
+        st: &mut WideRunState,
+        out: &mut [f64],
+    ) {
+        let m = self.cfg.num_vars();
+        assert!(!points.is_empty() && points.len() <= LANES, "1..=64 points per pass");
+        assert_eq!(points.len(), seeds.len());
+        assert!(out.len() >= points.len());
+        let mut lane_t = [0u16; LANES];
+        st.gate_thresholds.clear();
+        for j in 0..m {
+            for (l, pt) in points.iter().enumerate() {
+                assert_eq!(pt.len(), m, "point arity mismatch");
+                lane_t[l] = ThetaGate::new(pt[j]).raw();
+            }
+            st.gate_thresholds.push(GateThreshold::PerLane(
+                crate::sc::rng::planes_from_lanes(&lane_t[..points.len()]),
+            ));
+        }
+        self.reset_entropy(seeds, st);
+        self.run(len, points.len(), st, out);
+    }
+
+    /// Monte-Carlo average over `trials` runs — the same estimator (same
+    /// per-trial seed derivation, same summation order, bit-identical
+    /// result) as the scalar `BitLevelSmurf::eval_avg`, at 64 trials per
+    /// pass.
+    pub fn eval_avg(
+        &self,
+        p: &[f64],
+        len: usize,
+        trials: usize,
+        seed: u64,
+        st: &mut WideRunState,
+    ) -> f64 {
+        assert!(trials > 0);
+        let mut seeds = [0u64; LANES];
+        let mut out = [0.0f64; LANES];
+        let mut sum = 0.0;
+        let mut done = 0;
+        while done < trials {
+            let k = (trials - done).min(LANES);
+            for (i, s) in seeds.iter_mut().enumerate().take(k) {
+                *s = seed.wrapping_add((done + i) as u64).wrapping_mul(0x5DEECE66D);
+            }
+            self.eval_trials(p, len, &seeds[..k], st, &mut out);
+            for &y in &out[..k] {
+                sum += y;
+            }
+            done += k;
+        }
+        sum / trials as f64
+    }
+
+    /// Mean absolute error against a target over `trials` runs —
+    /// bit-identical to the scalar `BitLevelSmurf::abs_error`.
+    pub fn abs_error(
+        &self,
+        p: &[f64],
+        target: f64,
+        len: usize,
+        trials: usize,
+        seed: u64,
+        st: &mut WideRunState,
+    ) -> f64 {
+        assert!(trials > 0);
+        let mut seeds = [0u64; LANES];
+        let mut out = [0.0f64; LANES];
+        let mut sum = 0.0;
+        let mut done = 0;
+        while done < trials {
+            let k = (trials - done).min(LANES);
+            for (i, s) in seeds.iter_mut().enumerate().take(k) {
+                *s = seed.wrapping_add((done + i) as u64).wrapping_mul(0x2545F4914F);
+            }
+            self.eval_trials(p, len, &seeds[..k], st, &mut out);
+            for &y in &out[..k] {
+                sum += (y - target).abs();
+            }
+            done += k;
+        }
+        sum / trials as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::smurf::analytic::AnalyticSmurf;
+    use crate::testing::{check, UnitVec};
+
+    fn euclid_w() -> Vec<f64> {
+        vec![
+            0.0, 0.6083, 0.0474, 0.6911, //
+            0.6083, 0.3749, 0.4527, 0.8372, //
+            0.0474, 0.4527, 0.0159, 0.5946, //
+            0.6911, 0.8372, 0.5946, 0.9846,
+        ]
+    }
+
+    fn modes() -> [EntropyMode; 3] {
+        [
+            EntropyMode::SharedLfsr,
+            EntropyMode::IndependentXorshift,
+            EntropyMode::SobolCpt,
+        ]
+    }
+
+    /// The tentpole contract: every wide lane equals the scalar simulator
+    /// run with that lane's seed, bit-exactly.
+    #[test]
+    fn prop_lanes_match_scalar_eval() {
+        for mode in modes() {
+            let cfg = SmurfConfig::uniform(2, 4);
+            let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
+            let wide = WideBitLevelSmurf::from_scalar(&scalar);
+            check(31, 8, &UnitVec { len: 2 }, |p| {
+                let mut st = wide.make_run_state();
+                let seeds: Vec<u64> =
+                    (0..64).map(|l| (l as u64) * 0x9E37 + p[0].to_bits()).collect();
+                let mut out = [0.0f64; 64];
+                wide.eval_trials(p, 96, &seeds, &mut st, &mut out);
+                seeds
+                    .iter()
+                    .enumerate()
+                    .all(|(l, &s)| out[l] == scalar.eval(p, 96, s))
+            });
+        }
+    }
+
+    #[test]
+    fn partial_lane_counts_match_scalar() {
+        // 1, 7, 33 lanes — unused lanes must not disturb active ones.
+        let cfg = SmurfConfig::uniform(2, 4);
+        for mode in modes() {
+            let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
+            let wide = WideBitLevelSmurf::from_scalar(&scalar);
+            let mut st = wide.make_run_state();
+            let p = [0.3, 0.7];
+            for lanes in [1usize, 7, 33] {
+                let seeds: Vec<u64> = (0..lanes as u64).map(|l| l * 31 + 5).collect();
+                let mut out = vec![0.0f64; lanes];
+                wide.eval_trials(&p, 64, &seeds, &mut st, &mut out);
+                for (l, &s) in seeds.iter().enumerate() {
+                    assert_eq!(out[l], scalar.eval(&p, 64, s), "{mode:?} lanes={lanes} l={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_points_matches_scalar_per_point() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        for mode in modes() {
+            let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
+            let wide = WideBitLevelSmurf::from_scalar(&scalar);
+            let mut st = wide.make_run_state();
+            let pts: Vec<Vec<f64>> = (0..40)
+                .map(|i| vec![(i % 8) as f64 / 7.0, (i / 8) as f64 / 5.0])
+                .collect();
+            let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
+            let seeds: Vec<u64> = (0..40).map(|i| 0x5EED ^ i as u64).collect();
+            let mut out = vec![0.0f64; 40];
+            wide.eval_points(&refs, 64, &seeds, &mut st, &mut out);
+            for (i, p) in refs.iter().enumerate() {
+                assert_eq!(out[i], scalar.eval(p, 64, seeds[i]), "{mode:?} point {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_radix_lanes_match_scalar() {
+        // Non-power-of-2 radices exercise the general digit plane logic.
+        let cfg = SmurfConfig::new(vec![3, 5]);
+        let w: Vec<f64> = (0..15).map(|i| (i as f64 + 0.5) / 15.0).collect();
+        for mode in modes() {
+            let scalar = BitLevelSmurf::new(cfg.clone(), &w, mode);
+            let wide = WideBitLevelSmurf::from_scalar(&scalar);
+            let mut st = wide.make_run_state();
+            let p = [0.45, 0.8];
+            let seeds: Vec<u64> = (0..64).map(|l| l as u64 + 100).collect();
+            let mut out = [0.0f64; 64];
+            wide.eval_trials(&p, 128, &seeds, &mut st, &mut out);
+            for (l, &s) in seeds.iter().enumerate() {
+                assert_eq!(out[l], scalar.eval(&p, 128, s), "{mode:?} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_avg_bit_identical_to_scalar_reference() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        for mode in modes() {
+            let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
+            let wide = WideBitLevelSmurf::from_scalar(&scalar);
+            let mut st = wide.make_run_state();
+            for trials in [1usize, 8, 32, 64, 100, 130] {
+                let a = wide.eval_avg(&[0.3, 0.4], 64, trials, 9, &mut st);
+                let b = scalar.eval_avg_scalar(&[0.3, 0.4], 64, trials, 9);
+                assert_eq!(a, b, "{mode:?} trials={trials}");
+            }
+            let a = wide.abs_error(&[0.6, 0.2], 0.63, 64, 48, 7, &mut st);
+            let b = scalar.abs_error_scalar(&[0.6, 0.2], 0.63, 64, 48, 7);
+            assert_eq!(a, b, "{mode:?} abs_error");
+        }
+    }
+
+    #[test]
+    fn long_stream_converges_to_analytic_wide() {
+        // Mirror of the scalar `long_stream_converges_to_analytic`, driven
+        // through the wide engine.
+        let cfg = SmurfConfig::uniform(2, 4);
+        let w = euclid_w();
+        let analytic = AnalyticSmurf::new(cfg.clone(), w.clone());
+        let wide = WideBitLevelSmurf::new(cfg, &w, EntropyMode::IndependentXorshift);
+        let mut st = wide.make_run_state();
+        for p in [[0.3, 0.4], [0.7, 0.2], [0.5, 0.5]] {
+            let y_inf = analytic.eval(&p);
+            let y_hw = wide.eval_avg(&p, 4096, 16, 1, &mut st);
+            assert!(
+                (y_hw - y_inf).abs() < 0.02,
+                "p={p:?}: wide={y_hw} analytic={y_inf}"
+            );
+        }
+    }
+
+    #[test]
+    fn run_state_reuse_across_shapes() {
+        // One RunState must serve trials → points → trials without any
+        // cross-contamination.
+        let cfg = SmurfConfig::uniform(2, 4);
+        let scalar = BitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
+        let wide = WideBitLevelSmurf::from_scalar(&scalar);
+        let mut st = wide.make_run_state();
+        let p = [0.25, 0.65];
+        let seeds = [3u64, 99, 1234];
+        let mut out = [0.0f64; 3];
+        wide.eval_trials(&p, 64, &seeds, &mut st, &mut out);
+        let first = out;
+        let pts: Vec<Vec<f64>> = vec![vec![0.9, 0.1], vec![0.2, 0.2]];
+        let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
+        let mut pout = [0.0f64; 2];
+        wide.eval_points(&refs, 32, &[1, 2], &mut st, &mut pout);
+        wide.eval_trials(&p, 64, &seeds, &mut st, &mut out);
+        assert_eq!(first, out, "RunState reuse must be deterministic");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_too_many_lanes() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let wide = WideBitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
+        let mut st = wide.make_run_state();
+        let seeds = vec![0u64; 65];
+        let mut out = vec![0.0f64; 65];
+        wide.eval_trials(&[0.5, 0.5], 16, &seeds, &mut st, &mut out);
+    }
+}

@@ -7,6 +7,7 @@ use smurf::data;
 use smurf::nn::lenet::ScRuntime;
 use smurf::nn::{train, LeNet, OpSet};
 use smurf::prelude::*;
+#[cfg(feature = "xla")]
 use smurf::runtime::{default_artifacts_dir, Runtime};
 use smurf::smurf::multi_output::softmax3_vector;
 use smurf::smurf::sim::{BitLevelSmurf, EntropyMode};
@@ -145,6 +146,8 @@ fn multi_output_vector_softmax() {
 
 /// AOT artifact integration: when `make artifacts` has run, the XLA
 /// engine serves numbers matching the rust analytic evaluator.
+/// (Needs the real PJRT runtime — the default build ships the stub.)
+#[cfg(feature = "xla")]
 #[test]
 fn xla_engine_matches_analytic_when_artifacts_present() {
     let rt = Runtime::cpu(default_artifacts_dir()).expect("PJRT CPU client");
