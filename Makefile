@@ -5,7 +5,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test tier1 bench-json bench ci
+.PHONY: build test tier1 clippy bench-json bench ci
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -16,13 +16,21 @@ test:
 # Tier-1 verification gate (see ROADMAP.md): must stay green per PR.
 tier1: build test
 
+# Lint gate (CI `lint` job): warnings are errors across every target, so
+# an uncompilable or warning-ridden state cannot land again.
+clippy:
+	$(CARGO) clippy --all-targets --manifest-path $(MANIFEST) -- -D warnings
+
 # Machine-readable perf record: runs the wide-vs-scalar simulation bench
 # (which writes BENCH_perf.json in the repo root; override with BENCH_OUT)
-# and the serving-stack bench (human-readable log).
+# and the serving-stack bench (human-readable log). perf_wide equality-
+# gates every wide/scalar pair before timing and panics on divergence, so
+# a tripped assertion fails this target with a non-zero exit instead of
+# committing numbers from a wrong engine.
 bench-json:
 	$(CARGO) bench --bench perf_wide --manifest-path $(MANIFEST)
 	$(CARGO) bench --bench perf_serve --manifest-path $(MANIFEST)
 
 bench: bench-json
 
-ci: tier1
+ci: tier1 clippy

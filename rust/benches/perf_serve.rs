@@ -117,6 +117,8 @@ fn main() {
         400.0 / per_dot / 1e6
     );
 
-    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
     println!("\nperf_serve done");
 }

@@ -223,22 +223,28 @@ fn execute_batch(shared: &Shared, batch: Batch) {
         return;
     };
 
-    // Flatten points across requests, execute once, scatter results.
+    // Execute the whole batch once, then scatter results per request.
+    // (The BitLevel engine works on the request structure directly —
+    // stream lengths and seeds are per-request — so only the engines
+    // that are length-agnostic flatten the points.)
     let spans: Vec<usize> = batch.requests.iter().map(|r| r.points.len()).collect();
-    let all_points: Vec<&[f64]> = batch
-        .requests
-        .iter()
-        .flat_map(|r| r.points.iter().map(|p| p.as_slice()))
-        .collect();
-
     let exec_start = Instant::now();
     let result: Result<Vec<f64>, String> = match engine {
-        Engine::Analytic => Ok(all_points.iter().map(|p| func.eval_analytic(p)).collect()),
-        Engine::BitLevel => {
-            let len = batch.requests.first().map(|r| r.stream_len.max(1)).unwrap_or(64);
-            Ok(eval_bitlevel_batch(&func, &all_points, len))
+        Engine::Analytic => Ok(batch
+            .requests
+            .iter()
+            .flat_map(|r| r.points.iter())
+            .map(|p| func.eval_analytic(p))
+            .collect()),
+        Engine::BitLevel => Ok(eval_bitlevel_batch(&func, &batch.requests)),
+        Engine::Xla => {
+            let all_points: Vec<&[f64]> = batch
+                .requests
+                .iter()
+                .flat_map(|r| r.points.iter().map(|p| p.as_slice()))
+                .collect();
+            execute_xla(shared, &func, &all_points)
         }
-        Engine::Xla => execute_xla(shared, &func, &all_points),
     };
     let exec_ns = exec_start.elapsed().as_nanos() as u64;
 
@@ -279,35 +285,114 @@ const WIDE_LANES: usize = crate::smurf::sim_wide::LANES;
 /// word cost is not amortized (same threshold as the estimator routing).
 const WIDE_BATCH_MIN: usize = crate::smurf::sim::WIDE_TRIALS_MIN;
 
-/// Bit-level engine over a flattened batch: chunk the points into 64-lane
-/// words and run each chunk through the wide simulator (each lane is one
-/// point of the batch). Per-point outputs are bit-exact equal to the
-/// scalar `eval_bitstream(p, len, 0x5EED ^ i)` this replaces, so clients
-/// observe identical streams regardless of batch size.
-fn eval_bitlevel_batch(
-    func: &SmurfApproximator,
-    points: &[&[f64]],
-    len: usize,
-) -> Vec<f64> {
-    if points.len() < WIDE_BATCH_MIN {
-        return points
-            .iter()
-            .enumerate()
-            .map(|(i, p)| func.eval_bitstream(p, len, 0x5EED ^ i as u64))
-            .collect();
-    }
-    let wide = func.wide_simulator();
-    let mut st = wide.make_run_state();
-    let mut outputs = vec![0.0f64; points.len()];
-    let mut seeds = [0u64; WIDE_LANES];
-    let mut lane_out = [0.0f64; WIDE_LANES];
-    for (c, chunk) in points.chunks(WIDE_LANES).enumerate() {
-        for (k, s) in seeds.iter_mut().enumerate().take(chunk.len()) {
-            *s = 0x5EED ^ (c * WIDE_LANES + k) as u64;
+/// Bit-level engine over a batch of requests, flattened in request order.
+///
+/// Two batching guarantees the previous flattened-slice implementation
+/// broke, both load-bearing for a deterministic service:
+///
+/// - **Per-request stream lengths.** Points are grouped by `stream_len`
+///   before chunking, so a mixed-L batch evaluates every request at *its
+///   own* L instead of the first request's (and the groups run
+///   independently — no serialization on the first request's length).
+/// - **Batch-independent streams.** Seeds derive from the point's index
+///   *within its request* (`0x5EED ^ i`), not its slot in the flattened
+///   batch, so a client observes the same bitstream for the same request
+///   regardless of what it was batched with.
+///
+/// Points run through [`SmurfApproximator::eval_bitstream_points_into`]
+/// — 64 lanes per wide pass, points from different requests sharing
+/// passes, on the calling worker's persistent thread-local
+/// [`WideRunState`](crate::smurf::sim_wide::WideRunState) scratch.
+/// The dominant uniform-L batch streams lanes directly and allocates only
+/// the output vector; a mixed-L batch additionally builds small
+/// per-length index lists so each group chunks independently. Per-point
+/// outputs stay bit-exact equal to the scalar
+/// `eval_bitstream(p, len, 0x5EED ^ i)`.
+fn eval_bitlevel_batch(func: &SmurfApproximator, requests: &[EvalRequest]) -> Vec<f64> {
+    let total: usize = requests.iter().map(|r| r.points.len()).sum();
+    let mut outputs = vec![0.0f64; total];
+
+    // Fast path: every request shares one stream length (the common case
+    // — the batcher keys on function+engine, and clients of one function
+    // typically agree on L). Slots are then contiguous in flattened
+    // order, so lanes stream straight into the output vector with no
+    // grouping structures at all.
+    let uniform_len = {
+        let mut lens = requests.iter().map(|r| r.stream_len.max(1));
+        let first = lens.next();
+        first.filter(|&l| lens.all(|x| x == l))
+    };
+    if let Some(len) = uniform_len {
+        if total < WIDE_BATCH_MIN {
+            // Below this the fixed 64-lane word cost is not amortized.
+            let mut slot = 0usize;
+            for r in requests {
+                for (i, p) in r.points.iter().enumerate() {
+                    outputs[slot] = func.eval_bitstream(p, len, 0x5EED ^ i as u64);
+                    slot += 1;
+                }
+            }
+            return outputs;
         }
-        wide.eval_points(chunk, len, &seeds[..chunk.len()], &mut st, &mut lane_out);
-        outputs[c * WIDE_LANES..c * WIDE_LANES + chunk.len()]
-            .copy_from_slice(&lane_out[..chunk.len()]);
+        let mut pts: [&[f64]; WIDE_LANES] = [&[]; WIDE_LANES];
+        let mut seeds = [0u64; WIDE_LANES];
+        let mut lane_out = [0.0f64; WIDE_LANES];
+        let mut fill = 0usize;
+        let mut flushed = 0usize;
+        for r in requests {
+            for (i, p) in r.points.iter().enumerate() {
+                pts[fill] = p.as_slice();
+                seeds[fill] = 0x5EED ^ i as u64;
+                fill += 1;
+                if fill == WIDE_LANES {
+                    func.eval_bitstream_points_into(&pts, len, &seeds, &mut lane_out);
+                    outputs[flushed..flushed + WIDE_LANES].copy_from_slice(&lane_out);
+                    flushed += WIDE_LANES;
+                    fill = 0;
+                }
+            }
+        }
+        if fill > 0 {
+            func.eval_bitstream_points_into(
+                &pts[..fill],
+                len,
+                &seeds[..fill],
+                &mut lane_out[..fill],
+            );
+            outputs[flushed..flushed + fill].copy_from_slice(&lane_out[..fill]);
+        }
+        return outputs;
+    }
+
+    // Mixed-L batch: group (flattened output slot, seed, point) by stream
+    // length so every request evaluates at its own L.
+    let mut groups: std::collections::BTreeMap<usize, Vec<(usize, u64, &[f64])>> =
+        std::collections::BTreeMap::new();
+    let mut off = 0usize;
+    for r in requests {
+        let len = r.stream_len.max(1);
+        let group = groups.entry(len).or_default();
+        for (i, p) in r.points.iter().enumerate() {
+            group.push((off + i, 0x5EED ^ i as u64, p.as_slice()));
+        }
+        off += r.points.len();
+    }
+    for (len, entries) in &groups {
+        if entries.len() < WIDE_BATCH_MIN {
+            for &(slot, seed, p) in entries {
+                outputs[slot] = func.eval_bitstream(p, *len, seed);
+            }
+            continue;
+        }
+        // The group is already heap-materialized, so hand the whole thing
+        // to the approximator (which owns the 64-lane chunking) and
+        // scatter the results to their flattened slots.
+        let gpts: Vec<&[f64]> = entries.iter().map(|&(_, _, p)| p).collect();
+        let gseeds: Vec<u64> = entries.iter().map(|&(_, s, _)| s).collect();
+        let gout = func.eval_bitstream_points(&gpts, *len, &gseeds);
+        for (&(slot, _, _), y) in entries.iter().zip(gout) {
+            outputs[slot] = y;
+        }
     }
     outputs
 }
@@ -410,6 +495,75 @@ mod tests {
     }
 
     #[test]
+    fn mixed_stream_lengths_evaluate_at_their_own_length() {
+        // A batch mixing stream lengths must evaluate every request at
+        // its own L (the old flattened path ran everything at the first
+        // request's L), with seeds from the within-request point index.
+        // Group shapes: len=32 gets 10 + 60 points (cross-request 64-lane
+        // packing + tail), len=128 gets 3 (scalar fallback).
+        let cfg = SmurfConfig::uniform(2, 4);
+        let func = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+        let mk = |n: usize, len: usize, salt: usize| -> EvalRequest {
+            let (rtx, _rrx) = channel();
+            EvalRequest {
+                function: "euclidean2".into(),
+                points: (0..n)
+                    .map(|i| vec![((i + salt) % 10) as f64 / 9.0, (i % 7) as f64 / 6.0])
+                    .collect(),
+                engine: Engine::BitLevel,
+                stream_len: len,
+                enqueued: Instant::now(),
+                reply: rtx,
+            }
+        };
+        let reqs = vec![mk(10, 32, 1), mk(3, 128, 2), mk(60, 32, 3)];
+        let out = eval_bitlevel_batch(&func, &reqs);
+        assert_eq!(out.len(), 73);
+        let mut off = 0;
+        for (ri, r) in reqs.iter().enumerate() {
+            for (i, p) in r.points.iter().enumerate() {
+                let want = func.eval_bitstream(p, r.stream_len, 0x5EED ^ i as u64);
+                assert_eq!(out[off + i], want, "request {ri} point {i}");
+            }
+            off += r.points.len();
+        }
+    }
+
+    #[test]
+    fn uniform_length_multi_request_batch_streams_lanes() {
+        // The uniform-L fast path: 50+30+1 points from three requests
+        // stream through shared 64-lane passes (one full flush + a
+        // 17-lane tail), each point still seeded by its within-request
+        // index.
+        let cfg = SmurfConfig::uniform(2, 4);
+        let func = SmurfApproximator::synthesize(&cfg, &functions::product2(), 64);
+        let mk = |n: usize, salt: usize| -> EvalRequest {
+            let (rtx, _rrx) = channel();
+            EvalRequest {
+                function: "product2".into(),
+                points: (0..n)
+                    .map(|i| vec![((i + salt) % 8) as f64 / 7.0, (i % 5) as f64 / 4.0])
+                    .collect(),
+                engine: Engine::BitLevel,
+                stream_len: 64,
+                enqueued: Instant::now(),
+                reply: rtx,
+            }
+        };
+        let reqs = vec![mk(50, 0), mk(30, 5), mk(1, 9)];
+        let out = eval_bitlevel_batch(&func, &reqs);
+        assert_eq!(out.len(), 81);
+        let mut off = 0;
+        for (ri, r) in reqs.iter().enumerate() {
+            for (i, p) in r.points.iter().enumerate() {
+                let want = func.eval_bitstream(p, 64, 0x5EED ^ i as u64);
+                assert_eq!(out[off + i], want, "request {ri} point {i}");
+            }
+            off += r.points.len();
+        }
+    }
+
+    #[test]
     fn unknown_function_errors() {
         let server = test_server(1);
         let resp = server.eval_sync("nope", vec![vec![0.1, 0.1]], Engine::Analytic, 64);
@@ -447,7 +601,9 @@ mod tests {
         assert_eq!(snap.requests, 200);
         assert!(snap.mean_batch_size >= 1.0);
         assert_eq!(snap.errors, 0);
-        Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
     }
 
     #[test]

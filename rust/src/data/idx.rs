@@ -87,7 +87,7 @@ mod tests {
         v.extend_from_slice(&(n as u32).to_be_bytes());
         v.extend_from_slice(&28u32.to_be_bytes());
         v.extend_from_slice(&28u32.to_be_bytes());
-        v.extend(std::iter::repeat(128u8).take(n * 784));
+        v.resize(v.len() + n * 784, 128u8);
         v
     }
 

@@ -62,22 +62,22 @@ impl WideChainFsm {
         let at_min = self.eq_const(0);
         // Masked +1 over the state planes (ripple carry).
         let mut carry = up & !at_max;
-        for b in 0..self.nbits {
+        for p in self.planes.iter_mut().take(self.nbits) {
             if carry == 0 {
                 break;
             }
-            let t = self.planes[b];
-            self.planes[b] = t ^ carry;
+            let t = *p;
+            *p = t ^ carry;
             carry &= t;
         }
         // Masked -1 (ripple borrow). Disjoint from the increment lanes.
         let mut borrow = !up & !at_min;
-        for b in 0..self.nbits {
+        for p in self.planes.iter_mut().take(self.nbits) {
             if borrow == 0 {
                 break;
             }
-            let t = self.planes[b];
-            self.planes[b] = t ^ borrow;
+            let t = *p;
+            *p = t ^ borrow;
             borrow &= !t;
         }
     }

@@ -28,13 +28,13 @@ pub fn steady_state_into(n: usize, p: f64, out: &mut [f64]) {
     // Unnormalized weights p^i q^{n-1-i}, built by running products
     // (two multiplies per state instead of two `powi` calls).
     let mut fwd = 1.0; // p^i
-    for i in 0..n {
-        out[i] = fwd;
+    for o in out.iter_mut() {
+        *o = fwd;
         fwd *= p;
     }
     let mut bwd = 1.0; // q^{n-1-i}
-    for i in (0..n).rev() {
-        out[i] *= bwd;
+    for o in out.iter_mut().rev() {
+        *o *= bwd;
         bwd *= q;
     }
     let z: f64 = out.iter().sum();

@@ -86,6 +86,17 @@ pub fn tanh_inplace(x: &mut [f32]) {
     }
 }
 
+/// SMURF bit-level activation of a whole layer in place: the slice goes
+/// through [`super::sc_ops::SmurfActivation::eval_bitlevel_inplace`], which
+/// runs 64 activations per bit-plane pass of the wide engine with zero
+/// heap allocation — element-for-element bit-identical to calling
+/// `eval_bitlevel` per neuron, at a fraction of the cost. This is the
+/// layer-granularity entry the SC forward passes ([`super::lenet`]) use
+/// instead of per-neuron simulation.
+pub fn smurf_activate_inplace(xs: &mut [f32], act: &super::sc_ops::SmurfActivation) {
+    act.eval_bitlevel_inplace(xs);
+}
+
 /// Elementwise ReLU.
 pub fn relu_inplace(x: &mut [f32]) {
     for v in x.iter_mut() {
@@ -161,6 +172,18 @@ mod tests {
         assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-6);
         assert!(y[1] > y[0] && y[0] > y[2]);
         assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn smurf_activate_matches_per_neuron_bitlevel() {
+        use super::super::sc_ops::SmurfActivation;
+        let layer_act = SmurfActivation::tanh(64, 4);
+        let neuron_act = SmurfActivation::tanh(64, 4);
+        // 70 elements: one full wide word + tail.
+        let mut xs: Vec<f32> = (0..70).map(|i| i as f32 / 10.0 - 3.5).collect();
+        let want: Vec<f32> = xs.iter().map(|&x| neuron_act.eval_bitlevel(x)).collect();
+        smurf_activate_inplace(&mut xs, &layer_act);
+        assert_eq!(xs, want);
     }
 
     #[test]

@@ -40,22 +40,43 @@ pub struct LeNet {
     pub fc3_b: Vec<f32>,
 }
 
+/// Fidelity of the SMURF activation inside the SC forward pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActFidelity {
+    /// Analytic mean + exact binomial bitstream-sampling noise — fast,
+    /// statistically identical to the hardware; the Table IV default.
+    Stochastic,
+    /// Cycle-accurate FSM simulation, batched through the wide engine at
+    /// 64 activations per bit-plane pass (one
+    /// [`SmurfActivation::eval_bitlevel_batch`] call per layer).
+    BitLevel,
+}
+
 /// Runtime context for the SC operator sets.
 pub struct ScRuntime {
     pub ctx: ScContext,
     pub act: SmurfActivation,
     pub act_rng: Pcg,
+    pub act_fidelity: ActFidelity,
 }
 
 impl ScRuntime {
     /// Paper configuration: 128-bit SC-PwMM streams, 64-bit SMURF
-    /// activation streams, 4-state chains.
+    /// activation streams, 4-state chains, stochastic activation fidelity.
     pub fn paper_config(seed: u64) -> Self {
         Self {
             ctx: ScContext::new(128, ScMode::Binomial, seed),
             act: SmurfActivation::tanh(64, 4),
             act_rng: Pcg::new(seed ^ 0xAC70),
+            act_fidelity: ActFidelity::Stochastic,
         }
+    }
+
+    /// Hardware-faithful variant of [`Self::paper_config`]: SMURF
+    /// activations run through the cycle-accurate bit-sliced engine,
+    /// one batched pass per layer.
+    pub fn bitlevel_config(seed: u64) -> Self {
+        Self { act_fidelity: ActFidelity::BitLevel, ..Self::paper_config(seed) }
     }
 }
 
@@ -223,6 +244,10 @@ impl LeNet {
     }
 }
 
+/// Apply the op set's activation to one whole layer. The SMURF paths are
+/// layer-granular: bit-level fidelity hands the entire slice to the wide
+/// engine (64 activations per pass) instead of simulating neuron by
+/// neuron.
 fn activate(xs: &mut [f32], ops: OpSet, rt: &mut ScRuntime) {
     match ops {
         OpSet::Vanilla => layers::tanh_inplace(xs),
@@ -230,11 +255,14 @@ fn activate(xs: &mut [f32], ops: OpSet, rt: &mut ScRuntime) {
         // mentioned how the nonlinear activations are done" — they are
         // exact there).
         OpSet::Hsc => layers::tanh_inplace(xs),
-        OpSet::Smurf => {
-            for v in xs.iter_mut() {
-                *v = rt.act.eval_stochastic(*v, &mut rt.act_rng);
+        OpSet::Smurf => match rt.act_fidelity {
+            ActFidelity::Stochastic => {
+                for v in xs.iter_mut() {
+                    *v = rt.act.eval_stochastic(*v, &mut rt.act_rng);
+                }
             }
-        }
+            ActFidelity::BitLevel => layers::smurf_activate_inplace(xs, &rt.act),
+        },
     }
 }
 
@@ -328,6 +356,7 @@ mod tests {
             ctx: ScContext::new(4096, ScMode::Binomial, 7),
             act: SmurfActivation::tanh(4096, 4),
             act_rng: Pcg::new(8),
+            act_fidelity: ActFidelity::Stochastic,
         };
         let p_sc = net.forward(&img, OpSet::Hsc, Some(&mut rt));
         let top_ref = p_ref
@@ -350,6 +379,19 @@ mod tests {
         let net = LeNet::random(3);
         let img = vec![0.3f32; 784];
         let mut rt = ScRuntime::paper_config(5);
+        let p = net.forward(&img, OpSet::Smurf, Some(&mut rt));
+        assert_eq!(p.len(), 10);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bitlevel_smurf_opset_runs() {
+        // The hardware-faithful activation path (batched wide engine,
+        // one pass per layer) through the whole forward pass.
+        let net = LeNet::random(3);
+        let img = vec![0.3f32; 784];
+        let mut rt = ScRuntime::bitlevel_config(5);
+        assert_eq!(rt.act_fidelity, ActFidelity::BitLevel);
         let p = net.forward(&img, OpSet::Smurf, Some(&mut rt));
         assert_eq!(p.len(), 10);
         assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);

@@ -21,5 +21,5 @@ pub mod sc_ops;
 pub mod tensor;
 pub mod train;
 
-pub use lenet::{LeNet, OpSet};
+pub use lenet::{ActFidelity, LeNet, OpSet};
 pub use tensor::Tensor;

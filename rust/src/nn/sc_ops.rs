@@ -12,9 +12,20 @@
 //!   identical for independent streams and ~100× faster, making full
 //!   test-set evaluation practical. The equivalence is property-tested.
 //!
-//! **SMURF activation**: the synthesized SMURF for tanh, evaluated per
-//! neuron at `L = 64` (paper §IV-A fixes 64-bit streams), with the output
-//! sampled from the bitstream-mean distribution.
+//! **SMURF activation**: the synthesized SMURF for tanh at `L = 64`
+//! (paper §IV-A fixes 64-bit streams). Three fidelities:
+//!
+//! - analytic ([`SmurfActivation::eval_analytic`]) — the infinite-stream
+//!   mean, used by training;
+//! - stochastic ([`SmurfActivation::eval_stochastic`]) — analytic mean
+//!   plus exact binomial bitstream-sampling noise;
+//! - bit-level ([`SmurfActivation::eval_bitlevel`] /
+//!   [`SmurfActivation::eval_bitlevel_batch`]) — the cycle-accurate FSM
+//!   simulator. The batched entry point packs up to 64 activations into
+//!   one bit-plane pass of the wide engine
+//!   ([`crate::smurf::sim_wide::WideBitLevelSmurf::eval_points`]), so a
+//!   whole CNN layer is activated per-layer rather than per-neuron while
+//!   staying element-for-element bit-identical to the scalar path.
 
 use crate::sc::bitstream::Bitstream;
 use crate::sc::rng::XorShift64;
@@ -175,13 +186,62 @@ impl SmurfActivation {
         2.0 * (ones as f64 / self.len as f64) as f32 - 1.0
     }
 
-    /// Full hardware-faithful evaluation through the FSM simulator
-    /// (slow; used in validation tests).
+    /// Full hardware-faithful evaluation through the FSM simulator, one
+    /// neuron at a time. Each call consumes one seed from the per-instance
+    /// counter; [`Self::eval_bitlevel_batch`] consumes the same seeds in
+    /// the same order, which is what makes the two paths bit-identical.
     pub fn eval_bitlevel(&self, x: f32) -> f32 {
         let p = self.encode(x);
         let s = self.seed_ctr.get();
         self.seed_ctr.set(s + 1);
         2.0 * self.approx.eval_bitstream(&[p], self.len, s) as f32 - 1.0
+    }
+
+    /// Hardware-faithful activation of a whole layer, in place: packs up
+    /// to [`LANES`](crate::smurf::sim_wide::LANES) activations per
+    /// bit-plane pass of the prebuilt wide engine via
+    /// [`SmurfApproximator::eval_bitstream_points_into`] (thread-local
+    /// scratch) and overwrites `xs` chunk by chunk — zero heap
+    /// allocation, the steady-state layer path.
+    ///
+    /// Element-for-element bit-identical to calling
+    /// [`Self::eval_bitlevel`] on each `xs[i]` in order: element `i` uses
+    /// seed `ctr + i`, and the counter advances by `xs.len()` exactly as
+    /// the scalar loop would.
+    pub fn eval_bitlevel_inplace(&self, xs: &mut [f32]) {
+        use crate::smurf::sim_wide::LANES;
+        if xs.is_empty() {
+            return;
+        }
+        let s0 = self.seed_ctr.get();
+        self.seed_ctr.set(s0 + xs.len() as u64);
+        let mut ps = [[0.0f64; 1]; LANES];
+        let mut seeds = [0u64; LANES];
+        let mut lane_out = [0.0f64; LANES];
+        for (c, chunk) in xs.chunks_mut(LANES).enumerate() {
+            let k = chunk.len();
+            for (l, &x) in chunk.iter().enumerate() {
+                ps[l][0] = self.encode(x);
+                seeds[l] = s0 + (c * LANES + l) as u64;
+            }
+            let mut refs: [&[f64]; LANES] = [&[]; LANES];
+            for (l, p) in ps.iter().enumerate().take(k) {
+                refs[l] = p;
+            }
+            self.approx
+                .eval_bitstream_points_into(&refs[..k], self.len, &seeds[..k], &mut lane_out[..k]);
+            for (o, &y) in chunk.iter_mut().zip(&lane_out[..k]) {
+                *o = 2.0 * y as f32 - 1.0;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Self::eval_bitlevel_inplace`]
+    /// (same seed-counter contract).
+    pub fn eval_bitlevel_batch(&self, xs: &[f32]) -> Vec<f32> {
+        let mut out = xs.to_vec();
+        self.eval_bitlevel_inplace(&mut out);
+        out
     }
 
     pub fn synth_mae(&self) -> f64 {
@@ -285,6 +345,41 @@ mod tests {
             "bitlevel mean={mean} analytic={}",
             act.eval_analytic(x)
         );
+    }
+
+    #[test]
+    fn bitlevel_batch_bit_identical_to_scalar_path() {
+        // 130 activations = two full 64-lane words + a 2-lane tail. Two
+        // identically-synthesized instances keep the seed counters in
+        // lockstep between the batched and the per-neuron path.
+        let batched = SmurfActivation::tanh(64, 4);
+        let scalar = SmurfActivation::tanh(64, 4);
+        let xs: Vec<f32> = (0..130).map(|i| (i as f32 / 129.0) * 6.0 - 3.0).collect();
+        let a = batched.eval_bitlevel_batch(&xs);
+        let b: Vec<f32> = xs.iter().map(|&x| scalar.eval_bitlevel(x)).collect();
+        assert_eq!(a, b);
+        // The counters advanced identically, so a second (short) round
+        // still matches — the layer-after-layer shape of a forward pass.
+        let a2 = batched.eval_bitlevel_batch(&xs[..5]);
+        let b2: Vec<f32> = xs[..5].iter().map(|&x| scalar.eval_bitlevel(x)).collect();
+        assert_eq!(a2, b2);
+        assert!(batched.eval_bitlevel_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn prop_bitlevel_batch_matches_scalar_elementwise() {
+        // Random batch sizes, including non-multiples of 64; every
+        // element must be bit-identical to the scalar path.
+        use crate::testing::{check, RangeUsize};
+        let batched = SmurfActivation::tanh(32, 4);
+        let scalar = SmurfActivation::tanh(32, 4);
+        check(53, 8, &RangeUsize { lo: 1, hi: 150 }, |&n| {
+            let xs: Vec<f32> =
+                (0..n).map(|i| ((i * 37 % 101) as f32 / 50.0) - 1.0).collect();
+            let a = batched.eval_bitlevel_batch(&xs);
+            let b: Vec<f32> = xs.iter().map(|&x| scalar.eval_bitlevel(x)).collect();
+            a == b
+        });
     }
 
     #[test]

@@ -44,7 +44,7 @@ impl Lfsr16 {
     pub fn step(&mut self) -> u16 {
         let s = self.state;
         // Fibonacci taps 16,15,13,4 (1-indexed from MSB side of x^16 poly).
-        let bit = ((s >> 0) ^ (s >> 2) ^ (s >> 3) ^ (s >> 5)) & 1;
+        let bit = (s ^ (s >> 2) ^ (s >> 3) ^ (s >> 5)) & 1;
         self.state = (s >> 1) | (bit << 15);
         self.state
     }

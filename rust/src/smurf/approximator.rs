@@ -4,7 +4,7 @@
 use super::analytic::AnalyticSmurf;
 use super::config::SmurfConfig;
 use super::sim::{BitLevelSmurf, EntropyMode, WIDE_TRIALS_MIN};
-use super::sim_wide::WideBitLevelSmurf;
+use super::sim_wide::{with_thread_scratch, WideBitLevelSmurf, LANES};
 use crate::synth::functions::TargetFn;
 use crate::synth::synthesize::{synthesize, SynthOptions, SynthResult};
 use crate::util::json::Json;
@@ -14,10 +14,10 @@ use crate::util::json::Json;
 pub struct SmurfApproximator {
     name: String,
     analytic: AnalyticSmurf,
+    /// Bit-level simulator; its `OnceLock`-cached wide companion
+    /// ([`BitLevelSmurf::wide`]) serves the multi-trial and batch-point
+    /// fast paths — one cache, one construction path.
     sim: BitLevelSmurf,
-    /// Bit-sliced 64-lane engine sharing `sim`'s coefficients and entropy
-    /// wiring; serves the multi-trial and batch-point fast paths.
-    wide: WideBitLevelSmurf,
     /// Default bitstream length used by `eval` (paper fixes 64, §IV-A).
     pub default_len: usize,
     /// Analytic MAE reported by synthesis.
@@ -53,8 +53,7 @@ impl SmurfApproximator {
 
     fn from_analytic(name: String, analytic: AnalyticSmurf, default_len: usize, mae: f64) -> Self {
         let sim = BitLevelSmurf::from_analytic(&analytic, EntropyMode::SharedLfsr);
-        let wide = WideBitLevelSmurf::from_scalar(&sim);
-        Self { name, analytic, sim, wide, default_len, synth_mae: mae }
+        Self { name, analytic, sim, default_len, synth_mae: mae }
     }
 
     pub fn name(&self) -> &str {
@@ -80,16 +79,52 @@ impl SmurfApproximator {
     }
 
     /// Monte-Carlo average of `trials` bit-level runs. From
-    /// [`WIDE_TRIALS_MIN`] trials upward this runs on the prebuilt wide
-    /// engine (64 trials per pass), bit-identical to averaging
+    /// [`WIDE_TRIALS_MIN`] trials upward this runs on the cached wide
+    /// companion engine (64 trials per pass), bit-identical to averaging
     /// [`Self::eval_bitstream`] over the same seeds.
     pub fn eval_bitstream_avg(&self, p: &[f64], len: usize, trials: usize, seed: u64) -> f64 {
         if trials >= WIDE_TRIALS_MIN {
-            let mut st = self.wide.make_run_state();
-            self.wide.eval_avg(p, len, trials, seed, &mut st)
+            let wide = self.sim.wide();
+            with_thread_scratch(|st| wide.eval_avg(p, len, trials, seed, st))
         } else {
             self.sim.eval_avg_scalar(p, len, trials, seed)
         }
+    }
+
+    /// Batch of distinct points, one seeded bitstream trial each, through
+    /// the wide engine at 64 points per pass. Allocation-free: evaluates
+    /// into `out` (`out.len() == points.len()`) on the thread-local
+    /// scratch. `out[i]` is bit-exact equal to
+    /// `eval_bitstream(points[i], len, seeds[i])`, so callers get
+    /// identical streams regardless of how a batch is chunked. This is
+    /// the single owner of the 64-lane chunking logic — the coordinator's
+    /// `BitLevel` engine and the NN activation layers route through it.
+    pub fn eval_bitstream_points_into(
+        &self,
+        points: &[&[f64]],
+        len: usize,
+        seeds: &[u64],
+        out: &mut [f64],
+    ) {
+        assert_eq!(points.len(), seeds.len());
+        assert_eq!(points.len(), out.len());
+        let wide = self.sim.wide();
+        let mut lane_out = [0.0f64; LANES];
+        with_thread_scratch(|st| {
+            for (chunk_idx, chunk) in points.chunks(LANES).enumerate() {
+                let base = chunk_idx * LANES;
+                wide.eval_points(chunk, len, &seeds[base..base + chunk.len()], st, &mut lane_out);
+                out[base..base + chunk.len()].copy_from_slice(&lane_out[..chunk.len()]);
+            }
+        });
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`Self::eval_bitstream_points_into`].
+    pub fn eval_bitstream_points(&self, points: &[&[f64]], len: usize, seeds: &[u64]) -> Vec<f64> {
+        let mut out = vec![0.0f64; points.len()];
+        self.eval_bitstream_points_into(points, len, seeds, &mut out);
+        out
     }
 
     /// Bit-level output at the configured default stream length.
@@ -107,11 +142,12 @@ impl SmurfApproximator {
         &self.sim
     }
 
-    /// Underlying wide (bit-sliced, 64-lane) simulator. Callers that want
-    /// allocation-free steady state own the scratch:
+    /// Underlying wide (bit-sliced, 64-lane) simulator — the simulator's
+    /// lazily-built cached companion. Callers that want allocation-free
+    /// steady state own the scratch:
     /// `let mut st = approx.wide_simulator().make_run_state();`.
     pub fn wide_simulator(&self) -> &WideBitLevelSmurf {
-        &self.wide
+        self.sim.wide()
     }
 
     /// Serialize the coefficient table (for artifacts/ and the python
@@ -187,6 +223,22 @@ mod tests {
             let fast = a.eval_bitstream_avg(&[0.3, 0.4], 64, trials, 5);
             let slow = a.simulator().eval_avg_scalar(&[0.3, 0.4], 64, trials, 5);
             assert_eq!(fast, slow, "trials={trials}");
+        }
+    }
+
+    #[test]
+    fn bitstream_points_matches_per_point_eval() {
+        // 70 points exercises the 64-lane chunk boundary and the tail.
+        let cfg = SmurfConfig::uniform(2, 4);
+        let a = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+        let pts: Vec<Vec<f64>> = (0..70)
+            .map(|i| vec![(i % 9) as f64 / 8.0, (i % 5) as f64 / 4.0])
+            .collect();
+        let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
+        let seeds: Vec<u64> = (0..70).map(|i| 0xFACE ^ i as u64).collect();
+        let batch = a.eval_bitstream_points(&refs, 96, &seeds);
+        for (i, p) in refs.iter().enumerate() {
+            assert_eq!(batch[i], a.eval_bitstream(p, 96, seeds[i]), "point {i}");
         }
     }
 

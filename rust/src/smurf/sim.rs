@@ -13,10 +13,12 @@
 
 use super::analytic::AnalyticSmurf;
 use super::config::SmurfConfig;
+use super::sim_wide::{with_thread_scratch, WideBitLevelSmurf};
 use crate::fsm::chain::ChainFsm;
 use crate::sc::cpt::CptGate;
 use crate::sc::rng::{Lfsr16, Sobol, StreamRng, XorShift64};
 use crate::sc::sng::ThetaGate;
+use std::sync::OnceLock;
 
 /// Entropy wiring choice for the simulator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +49,11 @@ pub struct BitLevelSmurf {
     mode: EntropyMode,
     /// Mixed-radix codeword strides, hoisted out of the per-eval hot path.
     strides: Vec<usize>,
+    /// Lazily-built bit-sliced companion engine, shared by every
+    /// multi-trial estimator call on this instance (previously rebuilt
+    /// per `eval_avg`/`abs_error` call — the ROADMAP "amortize `eval_avg`
+    /// engine construction" item).
+    wide: OnceLock<WideBitLevelSmurf>,
 }
 
 /// Trial count at or above which the batch estimators route through the
@@ -90,7 +97,7 @@ impl BitLevelSmurf {
     pub fn new(cfg: SmurfConfig, w: &[f64], mode: EntropyMode) -> Self {
         assert_eq!(w.len(), cfg.num_aggregate_states());
         let strides = cfg.strides();
-        Self { cfg, cpt: CptGate::new(w), mode, strides }
+        Self { cfg, cpt: CptGate::new(w), mode, strides, wide: OnceLock::new() }
     }
 
     /// Build from an analytic instance (same coefficients).
@@ -113,6 +120,13 @@ impl BitLevelSmurf {
         &self.cpt
     }
 
+    /// The cached bit-sliced companion engine (identical coefficients and
+    /// entropy wiring), built on first use and reused for the life of
+    /// this instance.
+    pub fn wide(&self) -> &WideBitLevelSmurf {
+        self.wide.get_or_init(|| WideBitLevelSmurf::from_scalar(self))
+    }
+
     fn make_state(&self, seed: u64) -> RunState {
         let mut st = RunState {
             fsms: Vec::with_capacity(self.cfg.num_vars()),
@@ -133,8 +147,7 @@ impl BitLevelSmurf {
             .extend((0..m).map(|j| ChainFsm::centered(self.cfg.radix(j))));
         let input_rngs = &mut st.input_rngs;
         input_rngs.clear();
-        let cpt_rng: RngKind;
-        match self.mode {
+        st.cpt_rng = match self.mode {
             EntropyMode::SharedLfsr => {
                 // One physical LFSR seeded from `seed`; branch k is the
                 // same sequence delayed by 17*k cycles.
@@ -151,7 +164,7 @@ impl BitLevelSmurf {
                 for _ in 0..(DELAY * m) {
                     l.step();
                 }
-                cpt_rng = RngKind::Lfsr(l);
+                RngKind::Lfsr(l)
             }
             EntropyMode::IndependentXorshift => {
                 for k in 0..m {
@@ -159,9 +172,9 @@ impl BitLevelSmurf {
                         seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(k as u64 + 1),
                     )));
                 }
-                cpt_rng = RngKind::Xor(XorShift64::new(
+                RngKind::Xor(XorShift64::new(
                     seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(m as u64 + 1),
-                ));
+                ))
             }
             EntropyMode::SobolCpt => {
                 let base = (seed as u16) | 1;
@@ -175,10 +188,9 @@ impl BitLevelSmurf {
                 }
                 // Phase-offset the Sobol counter by the seed so trials
                 // stay independent.
-                cpt_rng = RngKind::Sobol(Sobol::new(seed as u32));
+                RngKind::Sobol(Sobol::new(seed as u32))
             }
-        }
-        st.cpt_rng = cpt_rng;
+        };
     }
 
     /// One seeded bitstream run on pre-built θ-gates and scratch state —
@@ -222,9 +234,8 @@ impl BitLevelSmurf {
     pub fn eval_avg(&self, p: &[f64], len: usize, trials: usize, seed: u64) -> f64 {
         assert!(trials > 0);
         if trials >= WIDE_TRIALS_MIN {
-            let wide = super::sim_wide::WideBitLevelSmurf::from_scalar(self);
-            let mut st = wide.make_run_state();
-            return wide.eval_avg(p, len, trials, seed, &mut st);
+            let wide = self.wide();
+            return with_thread_scratch(|st| wide.eval_avg(p, len, trials, seed, st));
         }
         self.eval_avg_scalar(p, len, trials, seed)
     }
@@ -253,9 +264,8 @@ impl BitLevelSmurf {
     pub fn abs_error(&self, p: &[f64], target: f64, len: usize, trials: usize, seed: u64) -> f64 {
         assert!(trials > 0);
         if trials >= WIDE_TRIALS_MIN {
-            let wide = super::sim_wide::WideBitLevelSmurf::from_scalar(self);
-            let mut st = wide.make_run_state();
-            return wide.abs_error(p, target, len, trials, seed, &mut st);
+            let wide = self.wide();
+            return with_thread_scratch(|st| wide.abs_error(p, target, len, trials, seed, st));
         }
         self.abs_error_scalar(p, target, len, trials, seed)
     }
@@ -384,6 +394,24 @@ mod tests {
         assert!(
             e_long < e_short,
             "short={e_short} long={e_long} — error must decay with L"
+        );
+    }
+
+    #[test]
+    fn wide_companion_is_cached_and_bit_identical() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let s = BitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
+        let a: *const _ = s.wide();
+        let b: *const _ = s.wide();
+        assert_eq!(a, b, "OnceLock must build the wide companion once");
+        // The routed estimator stays bit-identical to the scalar loop.
+        assert_eq!(
+            s.eval_avg(&[0.3, 0.4], 64, 16, 5),
+            s.eval_avg_scalar(&[0.3, 0.4], 64, 16, 5)
+        );
+        assert_eq!(
+            s.abs_error(&[0.3, 0.4], 0.5, 64, 16, 5),
+            s.abs_error_scalar(&[0.3, 0.4], 0.5, 64, 16, 5)
         );
     }
 

@@ -69,6 +69,10 @@ const COUNT_PLANES: usize = 41;
 pub const LANES: usize = 64;
 
 /// Devirtualized wide entropy source (mirrors the scalar `RngKind`).
+// The xorshift variant inlines its 64 scalar lanes (~0.5 KiB) so reseeding
+// allocates nothing; boxing it to shrink the enum would put a heap
+// allocation back on the per-eval reset path.
+#[allow(clippy::large_enum_variant)]
 #[derive(Clone, Debug)]
 enum WideRng {
     Lfsr(WideLfsr16),
@@ -107,9 +111,13 @@ enum GateThreshold {
     PerLane([u64; 16]),
 }
 
-/// Caller-owned scratch for wide evaluations. Construct once with
-/// [`WideBitLevelSmurf::make_run_state`]; every buffer is reused across
-/// runs, so steady-state evaluation performs no heap allocation.
+/// Caller-owned scratch for wide evaluations. Construct with
+/// [`WideRunState::new`] (or [`WideBitLevelSmurf::make_run_state`]);
+/// every buffer is reused across runs, so steady-state evaluation
+/// performs no heap allocation. One scratch serves engines of *different*
+/// configurations: each eval entry point resizes the per-configuration
+/// buffers to fit before running (allocation-free once warmed to the
+/// largest configuration seen).
 pub struct WideRunState {
     fsms: Vec<WideChainFsm>,
     input_rngs: Vec<WideRng>,
@@ -122,6 +130,47 @@ pub struct WideRunState {
     rand_planes: [u64; 16],
     thresh_planes: [u64; 16],
     count_planes: [u64; COUNT_PLANES],
+}
+
+impl WideRunState {
+    /// Empty scratch; buffers grow (and shrink) to fit whichever engine
+    /// uses it next, so one instance can be shared across functions of
+    /// different arities/radices.
+    pub fn new() -> Self {
+        Self {
+            fsms: Vec::new(),
+            input_rngs: Vec::new(),
+            cpt_rng: WideRng::Sobol(WideSobol16::from_lane_counters(&[])),
+            gate_thresholds: Vec::new(),
+            digit_masks: Vec::new(),
+            eq: Vec::new(),
+            rand_planes: [0; 16],
+            thresh_planes: [0; 16],
+            count_planes: [0; COUNT_PLANES],
+        }
+    }
+}
+
+impl Default for WideRunState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    static THREAD_SCRATCH: std::cell::RefCell<WideRunState> =
+        std::cell::RefCell::new(WideRunState::new());
+}
+
+/// Run `f` with this thread's shared [`WideRunState`] scratch. The
+/// buffers persist for the life of the thread, so repeated evaluations
+/// (the coordinator's per-worker batches, the estimator routing in
+/// `BitLevelSmurf::eval_avg`, the NN activation layers) are
+/// allocation-free after the first call without every caller owning its
+/// own state. Do not call it reentrantly from inside `f` — the scratch is
+/// a `RefCell` and a nested borrow panics.
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut WideRunState) -> R) -> R {
+    THREAD_SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 /// Wide bit-sliced SMURF instance. Shares coefficients/entropy semantics
@@ -188,18 +237,17 @@ impl WideBitLevelSmurf {
 
     /// Allocate the reusable scratch buffers for this configuration.
     pub fn make_run_state(&self) -> WideRunState {
-        let m = self.cfg.num_vars();
-        WideRunState {
-            fsms: Vec::with_capacity(m),
-            input_rngs: Vec::with_capacity(m),
-            cpt_rng: WideRng::Sobol(WideSobol16::from_lane_counters(&[])),
-            gate_thresholds: Vec::with_capacity(m),
-            digit_masks: vec![0; self.cfg.radices().iter().sum::<usize>()],
-            eq: vec![0; self.cfg.num_aggregate_states()],
-            rand_planes: [0; 16],
-            thresh_planes: [0; 16],
-            count_planes: [0; COUNT_PLANES],
-        }
+        let mut st = WideRunState::new();
+        self.prepare(&mut st);
+        st
+    }
+
+    /// Size the per-configuration buffers (idempotent). Every eval entry
+    /// point calls this, so any [`WideRunState`] — including one last
+    /// used by an engine of a different shape — is valid scratch.
+    fn prepare(&self, st: &mut WideRunState) {
+        st.digit_masks.resize(self.cfg.radices().iter().sum::<usize>(), 0);
+        st.eq.resize(self.cfg.num_aggregate_states(), 0);
     }
 
     /// Seed the entropy lanes exactly like `BitLevelSmurf::make_state`
@@ -360,6 +408,7 @@ impl WideBitLevelSmurf {
         assert_eq!(p.len(), self.cfg.num_vars());
         assert!(!seeds.is_empty() && seeds.len() <= LANES, "1..=64 trials per pass");
         assert!(out.len() >= seeds.len());
+        self.prepare(st);
         st.gate_thresholds.clear();
         for &pj in p {
             st.gate_thresholds.push(GateThreshold::Shared(ThetaGate::new(pj).raw()));
@@ -383,6 +432,7 @@ impl WideBitLevelSmurf {
         assert!(!points.is_empty() && points.len() <= LANES, "1..=64 points per pass");
         assert_eq!(points.len(), seeds.len());
         assert!(out.len() >= points.len());
+        self.prepare(st);
         let mut lane_t = [0u16; LANES];
         st.gate_thresholds.clear();
         for j in 0..m {
@@ -620,6 +670,41 @@ mod tests {
         wide.eval_points(&refs, 32, &[1, 2], &mut st, &mut pout);
         wide.eval_trials(&p, 64, &seeds, &mut st, &mut out);
         assert_eq!(first, out, "RunState reuse must be deterministic");
+    }
+
+    #[test]
+    fn scratch_adapts_across_configs() {
+        // One WideRunState (the thread-local sharing shape) must serve
+        // engines of different arity/radix, bit-identically to a
+        // per-engine make_run_state.
+        let big_cfg = SmurfConfig::new(vec![3, 5]);
+        let big_w: Vec<f64> = (0..15).map(|i| (i as f64 + 0.5) / 15.0).collect();
+        let big = WideBitLevelSmurf::new(big_cfg, &big_w, EntropyMode::SharedLfsr);
+        let small = WideBitLevelSmurf::new(
+            SmurfConfig::uniform(2, 4),
+            &euclid_w(),
+            EntropyMode::SharedLfsr,
+        );
+        let mut shared = WideRunState::new();
+        let seeds = [1u64, 2, 3];
+        let mut got = [0.0f64; 3];
+        let mut want = [0.0f64; 3];
+        for engine in [&big, &small, &big] {
+            let p = vec![0.4; engine.config().num_vars()];
+            engine.eval_trials(&p, 48, &seeds, &mut shared, &mut got);
+            engine.eval_trials(&p, 48, &seeds, &mut engine.make_run_state(), &mut want);
+            assert_eq!(got, want, "{}", engine.config());
+        }
+    }
+
+    #[test]
+    fn thread_scratch_matches_owned_state() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let wide = WideBitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SobolCpt);
+        let mut owned = wide.make_run_state();
+        let a = wide.eval_avg(&[0.3, 0.4], 64, 40, 11, &mut owned);
+        let b = with_thread_scratch(|st| wide.eval_avg(&[0.3, 0.4], 64, 40, 11, st));
+        assert_eq!(a, b);
     }
 
     #[test]
