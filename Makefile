@@ -1,17 +1,23 @@
 # SMURF repo targets. The rust crate is dependency-free by default; the
 # optional `xla` feature (PJRT runtime) needs deps uncommented in
 # rust/Cargo.toml — see that file.
+#
+# FEATURES selects optional crate features for build/test/clippy/bench,
+# e.g. `make tier1 FEATURES=wide512` runs the suite with 512-lane bit
+# planes (CI exercises both feature sets).
 
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
+FEATURES ?=
+FEATFLAGS := $(if $(FEATURES),--features $(FEATURES),)
 
-.PHONY: build test tier1 clippy bench-json bench ci
+.PHONY: build test tier1 clippy bench-json bench bench-build ci
 
 build:
-	$(CARGO) build --release --manifest-path $(MANIFEST)
+	$(CARGO) build --release --manifest-path $(MANIFEST) $(FEATFLAGS)
 
 test:
-	$(CARGO) test -q --manifest-path $(MANIFEST)
+	$(CARGO) test -q --manifest-path $(MANIFEST) $(FEATFLAGS)
 
 # Tier-1 verification gate (see ROADMAP.md): must stay green per PR.
 tier1: build test
@@ -19,7 +25,12 @@ tier1: build test
 # Lint gate (CI `lint` job): warnings are errors across every target, so
 # an uncompilable or warning-ridden state cannot land again.
 clippy:
-	$(CARGO) clippy --all-targets --manifest-path $(MANIFEST) -- -D warnings
+	$(CARGO) clippy --all-targets --manifest-path $(MANIFEST) $(FEATFLAGS) -- -D warnings
+
+# Compile every bench target without running it (CI): bench-only code
+# cannot silently rot between perf sessions.
+bench-build:
+	$(CARGO) bench --no-run --manifest-path $(MANIFEST) $(FEATFLAGS)
 
 # Machine-readable perf record: runs the wide-vs-scalar simulation bench
 # (which writes BENCH_perf.json in the repo root; override with BENCH_OUT)
@@ -28,8 +39,8 @@ clippy:
 # a tripped assertion fails this target with a non-zero exit instead of
 # committing numbers from a wrong engine.
 bench-json:
-	$(CARGO) bench --bench perf_wide --manifest-path $(MANIFEST)
-	$(CARGO) bench --bench perf_serve --manifest-path $(MANIFEST)
+	$(CARGO) bench --bench perf_wide --manifest-path $(MANIFEST) $(FEATFLAGS)
+	$(CARGO) bench --bench perf_serve --manifest-path $(MANIFEST) $(FEATFLAGS)
 
 bench: bench-json
 

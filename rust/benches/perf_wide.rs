@@ -5,9 +5,16 @@
 //! `euclid_paper_accuracy_at_64_bits` workload shape (L=64, 32 trials per
 //! point) — comparing the scalar one-bit-per-cycle simulator against the
 //! 64-lane bit-sliced engine, for every entropy mode. Also measures the
-//! coordinator-shaped batch (64 distinct points per pass) and the NN
-//! activation shape: a 120-neuron layer of SMURF tanh at L=4096,
-//! per-neuron scalar vs `SmurfActivation::eval_bitlevel_batch`.
+//! coordinator-shaped batch (64 distinct points per pass), the NN
+//! activation shape (a 120-neuron layer of SMURF tanh at L=4096,
+//! per-neuron scalar vs `SmurfActivation::eval_bitlevel_batch`), and the
+//! **plane-width sweep**: the same tanh workload on the `u64` (64-lane),
+//! `[u64; 4]` (256-lane) and — under `--features wide512` — `[u64; 8]`
+//! (512-lane) `BitPlane` engines, both the L=4096 `eval_avg` row and the
+//! activation-batch row. The `u64x4` plane must reach ≥ 2× the `u64`
+//! plane's trials/s on the L=4096 `eval_avg` row (the ISSUE 4 acceptance
+//! floor; `BENCH_NO_ENFORCE=1` opts a noisy runner out of the ratio,
+//! never out of the equality gates).
 //!
 //! Every scalar/wide pair is equality-gated before timing: any bit-level
 //! divergence panics (non-zero exit from `make bench-json`) instead of
@@ -25,6 +32,69 @@ use smurf::smurf::sim::EntropyMode;
 use smurf::util::json::Json;
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// One plane width of the sweep: equality-gate the width against the
+/// scalar reference (a divergence aborts the perf record), then time the
+/// tanh L=4096 `eval_avg` row (T=256 trials, chunked by `P::LANES`) and
+/// the activation-batch row (B=120 distinct points, one trial each).
+/// Returns the two per-iteration times.
+fn sweep_plane<P: BitPlane>(
+    label: &str,
+    scalar: &BitLevelSmurf,
+    rows: &mut Vec<Json>,
+) -> (f64, f64) {
+    let wide = WideBitLevelSmurf::<P>::from_scalar(scalar);
+    let mut st = wide.make_run_state();
+    let p = [0.62f64];
+    let (len, trials) = (4096usize, 256usize);
+    let want = scalar.eval_avg_scalar(&p, len, trials, 42);
+    let got = wide.eval_avg(&p, len, trials, 42, &mut st);
+    assert_eq!(
+        want, got,
+        "FATAL: {label} plane eval_avg diverges from scalar — perf record aborted"
+    );
+    let per_avg = timed(&format!("plane  eval_avg tanh L={len} T={trials} ({label})"), 30, || {
+        std::hint::black_box(wide.eval_avg(&p, len, trials, 42, &mut st));
+    });
+    rows.push(row(
+        &format!("plane_sweep/eval_avg/tanh_n4/L4096/T256/{label}"),
+        per_avg * 1e6,
+        trials as f64 / per_avg,
+        "trials/s",
+    ));
+
+    // Activation-batch shape: 120 distinct univariate points, one trial
+    // each, chunked by this width's lane count.
+    let pts: Vec<Vec<f64>> = (0..120).map(|i| vec![i as f64 / 119.0]).collect();
+    let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
+    let seeds: Vec<u64> = (0..120).map(|i| 1 + i as u64).collect();
+    let mut out = vec![0.0f64; 120];
+    let mut run_batch = |st: &mut WideRunState<P>, out: &mut [f64]| {
+        for (ci, chunk) in refs.chunks(P::LANES).enumerate() {
+            let base = ci * P::LANES;
+            wide.eval_points(chunk, len, &seeds[base..base + chunk.len()], st, &mut out[base..]);
+        }
+    };
+    run_batch(&mut st, &mut out);
+    for (i, pt) in refs.iter().enumerate() {
+        assert_eq!(
+            out[i],
+            scalar.eval(pt, len, seeds[i]),
+            "FATAL: {label} plane batch point {i} diverges — perf record aborted"
+        );
+    }
+    let per_batch = timed(&format!("plane  batch B=120 tanh L={len} ({label})"), 30, || {
+        run_batch(&mut st, &mut out);
+        std::hint::black_box(out[119]);
+    });
+    rows.push(row(
+        &format!("plane_sweep/activation_batch/tanh_n4/L4096/B120/{label}"),
+        per_batch * 1e6,
+        120.0 / per_batch,
+        "points/s",
+    ));
+    (per_avg, per_batch)
+}
 
 fn timed<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     for _ in 0..iters / 10 + 1 {
@@ -71,7 +141,7 @@ fn main() {
         EntropyMode::SobolCpt,
     ] {
         let scalar = BitLevelSmurf::new(cfg.clone(), &w, mode);
-        let wide = WideBitLevelSmurf::from_scalar(&scalar);
+        let wide = WideBitLevelSmurf::<u64>::from_scalar(&scalar);
         let mut st = wide.make_run_state();
 
         // Equality gate: the two engines must agree bit-exactly before we
@@ -128,7 +198,7 @@ fn main() {
 
     // Full-word shape: 64 trials per pass (no idle lanes), hardware mode.
     let scalar = BitLevelSmurf::new(cfg.clone(), &w, EntropyMode::SharedLfsr);
-    let wide = WideBitLevelSmurf::from_scalar(&scalar);
+    let wide = WideBitLevelSmurf::<u64>::from_scalar(&scalar);
     let mut st = wide.make_run_state();
     let per_s64 = timed("scalar eval_avg L=64 T=64 (shared_lfsr)", 1_000, || {
         std::hint::black_box(scalar.eval_avg_scalar(&p, 64, 64, 7));
@@ -213,18 +283,61 @@ fn main() {
         per_act_s / per_act_w
     );
     // Enforced acceptance criterion (ISSUE 3): the batched path must show
-    // ≥ 4x throughput over per-neuron scalar at L=4096. The floor has
-    // never been measured on real hardware (no toolchain has compiled
-    // this repo yet), so a noisy/underpowered runner can opt out with
-    // BENCH_NO_ENFORCE=1 — the ratio is still printed and recorded above
-    // either way; the bit-equality gates are never skippable.
-    if std::env::var("BENCH_NO_ENFORCE").is_err() {
-        assert!(
-            per_act_s / per_act_w >= 4.0,
-            "FATAL: batched activation speedup {:.2}x below the 4x acceptance floor \
-             (set BENCH_NO_ENFORCE=1 to record anyway)",
+    // ≥ 4x throughput over per-neuron scalar at L=4096. Throughput floors
+    // are DEFERRED until after the perf record is written (a slow runner
+    // still exits non-zero but keeps its measured rows); a noisy or
+    // underpowered runner (e.g. CI perf-smoke) opts out entirely with
+    // BENCH_NO_ENFORCE=1. The bit-equality gates above are never
+    // skippable and always abort before the record exists.
+    let mut floor_failures: Vec<String> = Vec::new();
+    if per_act_s / per_act_w < 4.0 {
+        floor_failures.push(format!(
+            "batched activation speedup {:.2}x below the 4x acceptance floor",
             per_act_s / per_act_w
-        );
+        ));
+    }
+
+    // Plane-width sweep: the identical bit-slicing scheme at 64, 256 and
+    // (with `wide512`) 512 lanes per plane word, on the tanh activation
+    // workload. Every width is equality-gated against the scalar
+    // reference before timing.
+    println!(
+        "=== Plane-width sweep: u64 vs u64x4{} (tanh N=4) ===\n",
+        if cfg!(feature = "wide512") { " vs u64x8" } else { "" }
+    );
+    let tanh_cfg = SmurfConfig::uniform(1, 4);
+    let tanh_res =
+        synthesize(&tanh_cfg, &functions::tanh_bipolar(2.0), &SynthOptions::default());
+    let tanh_scalar = BitLevelSmurf::new(
+        tanh_cfg,
+        tanh_res.smurf.coefficients(),
+        EntropyMode::SharedLfsr,
+    );
+    let (avg_u64, batch_u64) = sweep_plane::<u64>("u64", &tanh_scalar, &mut rows);
+    let (avg_u64x4, batch_u64x4) = sweep_plane::<[u64; 4]>("u64x4", &tanh_scalar, &mut rows);
+    #[cfg(feature = "wide512")]
+    sweep_plane::<[u64; 8]>("u64x8", &tanh_scalar, &mut rows);
+    let plane_ratio = avg_u64 / avg_u64x4;
+    rows.push(row("speedup/plane/u64x4_vs_u64/eval_avg_L4096", 0.0, plane_ratio, "x"));
+    rows.push(row(
+        "speedup/plane/u64x4_vs_u64/batch_L4096",
+        0.0,
+        batch_u64 / batch_u64x4,
+        "x",
+    ));
+    println!(
+        "{:<52} {:>11.2}x  (acceptance floor: 2x)\n",
+        "  → u64x4 plane speedup (eval_avg L=4096)", plane_ratio
+    );
+    // Enforced acceptance criterion (ISSUE 4): the 256-lane plane must
+    // reach ≥ 2x the 64-lane plane's trials/s on the L=4096 eval_avg row
+    // (relies on AVX2/NEON autovectorization of the [u64; 4] ops).
+    // Deferred like the activation floor so the record survives a slow
+    // runner.
+    if plane_ratio < 2.0 {
+        floor_failures.push(format!(
+            "u64x4 plane speedup {plane_ratio:.2}x below the 2x acceptance floor"
+        ));
     }
 
     // Emit the machine-readable perf record. Cargo runs bench binaries
@@ -243,6 +356,16 @@ fn main() {
     match std::fs::write(&out_path, Json::Obj(doc).dump()) {
         Ok(()) => println!("wrote {out_path}"),
         Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    // Throughput floors fire only now, AFTER the record is written: the
+    // measured rows are never discarded, but an under-floor run still
+    // exits non-zero unless the runner opted out with BENCH_NO_ENFORCE=1.
+    if std::env::var("BENCH_NO_ENFORCE").is_err() && !floor_failures.is_empty() {
+        panic!(
+            "FATAL: acceptance floor(s) missed (record written; set BENCH_NO_ENFORCE=1 \
+             on noisy runners): {}",
+            floor_failures.join("; ")
+        );
     }
     println!("\nperf_wide done");
 }

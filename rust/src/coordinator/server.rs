@@ -277,11 +277,12 @@ fn execute_batch(shared: &Shared, batch: Batch) {
     }
 }
 
-/// Points per wide pass (one trial per bit lane of a `u64` word).
-const WIDE_LANES: usize = crate::smurf::sim_wide::LANES;
+/// Points per wide pass: one trial per lane of the widest bit plane
+/// compiled into the build (256, or 512 with the `wide512` feature).
+const WIDE_LANES: usize = crate::smurf::sim_wide::MAX_LANES;
 
 /// Batch size at which the bit-level engine switches from per-point scalar
-/// simulation to the bit-sliced wide engine; below this the fixed 64-lane
+/// simulation to the bit-sliced wide engine; below this the fixed lane
 /// word cost is not amortized (same threshold as the estimator routing).
 const WIDE_BATCH_MIN: usize = crate::smurf::sim::WIDE_TRIALS_MIN;
 
@@ -300,14 +301,15 @@ const WIDE_BATCH_MIN: usize = crate::smurf::sim::WIDE_TRIALS_MIN;
 ///   regardless of what it was batched with.
 ///
 /// Points run through [`SmurfApproximator::eval_bitstream_points_into`]
-/// — 64 lanes per wide pass, points from different requests sharing
-/// passes, on the calling worker's persistent thread-local
+/// — [`WIDE_LANES`] lanes per wide pass (the widest plane in the build),
+/// points from different requests sharing passes, on the calling worker's
+/// persistent thread-local
 /// [`WideRunState`](crate::smurf::sim_wide::WideRunState) scratch.
 /// The dominant uniform-L batch streams lanes directly and allocates only
 /// the output vector; a mixed-L batch additionally builds small
 /// per-length index lists so each group chunks independently. Per-point
 /// outputs stay bit-exact equal to the scalar
-/// `eval_bitstream(p, len, 0x5EED ^ i)`.
+/// `eval_bitstream(p, len, 0x5EED ^ i)` at every plane width.
 fn eval_bitlevel_batch(func: &SmurfApproximator, requests: &[EvalRequest]) -> Vec<f64> {
     let total: usize = requests.iter().map(|r| r.points.len()).sum();
     let mut outputs = vec![0.0f64; total];
@@ -324,7 +326,9 @@ fn eval_bitlevel_batch(func: &SmurfApproximator, requests: &[EvalRequest]) -> Ve
     };
     if let Some(len) = uniform_len {
         if total < WIDE_BATCH_MIN {
-            // Below this the fixed 64-lane word cost is not amortized.
+            // Below this the fixed plane-word cost is not amortized
+            // (small wide-eligible batches route to the 64-lane engine
+            // inside eval_bitstream_points_into).
             let mut slot = 0usize;
             for r in requests {
                 for (i, p) in r.points.iter().enumerate() {
@@ -472,14 +476,15 @@ mod tests {
 
     #[test]
     fn bitlevel_batch_matches_scalar_per_point() {
-        // The wide 64-lane batch path must reproduce the per-point scalar
-        // streams bit-exactly (same 0x5EED ^ i seeds), across the chunk
-        // boundary at 64 and the scalar fallback below 8 points.
+        // The wide batch path must reproduce the per-point scalar streams
+        // bit-exactly (same 0x5EED ^ i seeds), across the u64-word mark
+        // at 64, the auto-width chunk boundary at WIDE_LANES, and the
+        // scalar fallback below 8 points.
         let server = test_server(1);
         let cfg = SmurfConfig::uniform(2, 4);
         let reference =
             SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
-        for n in [3usize, 8, 64, 70] {
+        for n in [3usize, 8, 64, 70, WIDE_LANES, WIDE_LANES + 6] {
             let points: Vec<Vec<f64>> = (0..n)
                 .map(|i| vec![(i % 9) as f64 / 8.0, (i % 7) as f64 / 6.0])
                 .collect();
@@ -499,8 +504,10 @@ mod tests {
         // A batch mixing stream lengths must evaluate every request at
         // its own L (the old flattened path ran everything at the first
         // request's L), with seeds from the within-request point index.
-        // Group shapes: len=32 gets 10 + 60 points (cross-request 64-lane
-        // packing + tail), len=128 gets 3 (scalar fallback).
+        // Group shapes: len=32 gets 10 + (WIDE_LANES + 20) points — the
+        // cross-request lane packing fills one whole plane word and
+        // spills a tail past the auto-width chunk boundary — while
+        // len=128 gets 3 (scalar fallback).
         let cfg = SmurfConfig::uniform(2, 4);
         let func = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
         let mk = |n: usize, len: usize, salt: usize| -> EvalRequest {
@@ -516,9 +523,9 @@ mod tests {
                 reply: rtx,
             }
         };
-        let reqs = vec![mk(10, 32, 1), mk(3, 128, 2), mk(60, 32, 3)];
+        let reqs = vec![mk(10, 32, 1), mk(3, 128, 2), mk(WIDE_LANES + 20, 32, 3)];
         let out = eval_bitlevel_batch(&func, &reqs);
-        assert_eq!(out.len(), 73);
+        assert_eq!(out.len(), WIDE_LANES + 33);
         let mut off = 0;
         for (ri, r) in reqs.iter().enumerate() {
             for (i, p) in r.points.iter().enumerate() {
@@ -531,10 +538,10 @@ mod tests {
 
     #[test]
     fn uniform_length_multi_request_batch_streams_lanes() {
-        // The uniform-L fast path: 50+30+1 points from three requests
-        // stream through shared 64-lane passes (one full flush + a
-        // 17-lane tail), each point still seeded by its within-request
-        // index.
+        // The uniform-L fast path: 50 + (WIDE_LANES - 30) + 1 points from
+        // three requests stream through shared WIDE_LANES-wide passes
+        // (one full flush + a 21-lane tail), each point still seeded by
+        // its within-request index.
         let cfg = SmurfConfig::uniform(2, 4);
         let func = SmurfApproximator::synthesize(&cfg, &functions::product2(), 64);
         let mk = |n: usize, salt: usize| -> EvalRequest {
@@ -550,9 +557,9 @@ mod tests {
                 reply: rtx,
             }
         };
-        let reqs = vec![mk(50, 0), mk(30, 5), mk(1, 9)];
+        let reqs = vec![mk(50, 0), mk(WIDE_LANES - 30, 5), mk(1, 9)];
         let out = eval_bitlevel_batch(&func, &reqs);
-        assert_eq!(out.len(), 81);
+        assert_eq!(out.len(), WIDE_LANES + 21);
         let mut off = 0;
         for (ri, r) in reqs.iter().enumerate() {
             for (i, p) in r.points.iter().enumerate() {

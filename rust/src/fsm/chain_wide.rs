@@ -1,33 +1,39 @@
-//! Bit-sliced chained FSM: 64 independent saturating chains per word.
+//! Bit-sliced chained FSM: one independent saturating chain per plane
+//! lane.
 //!
 //! The scalar [`crate::fsm::chain::ChainFsm`] walks one state per clock;
-//! the wide SMURF engine needs 64 of them stepping together. State is held
-//! as `ceil(log2 N)` *bit planes*: plane `b`, bit `l` is bit `b` of lane
-//! `l`'s state index. One clock is then a masked ripple-carry increment
-//! (lanes whose input bit is 1) plus a masked ripple-borrow decrement
-//! (lanes whose input bit is 0), with the saturation masks computed first
-//! so lanes already at `0`/`N-1` hold — branch-free word ops instead of 64
-//! data-dependent branches (the scalar simulator's main mispredict source).
+//! the wide SMURF engine needs `P::LANES` of them stepping together
+//! (64 for the default `u64` plane, 256/512 for the SIMD planes — see
+//! [`crate::sc::plane`]). State is held as `ceil(log2 N)` *bit planes*:
+//! plane `b`, lane `l` is bit `b` of lane `l`'s state index. One clock is
+//! then a masked ripple-carry increment (lanes whose input bit is 1) plus
+//! a masked ripple-borrow decrement (lanes whose input bit is 0), with
+//! the saturation masks computed first so lanes already at `0`/`N-1`
+//! hold — branch-free plane ops instead of one data-dependent branch per
+//! lane (the scalar simulator's main mispredict source).
 
-/// Up to 64 saturating chain FSMs over states `0 ..= n-1`, one per bit lane.
+use crate::sc::plane::BitPlane;
+
+/// Up to `P::LANES` saturating chain FSMs over states `0 ..= n-1`, one
+/// per bit lane.
 #[derive(Clone, Debug)]
-pub struct WideChainFsm {
+pub struct WideChainFsm<P: BitPlane = u64> {
     n: usize,
     nbits: usize,
     /// State planes; only `planes[..nbits]` are live.
-    planes: [u64; 8],
+    planes: [P; 8],
 }
 
-impl WideChainFsm {
-    /// All 64 lanes start at `initial` (the scalar reset convention).
+impl<P: BitPlane> WideChainFsm<P> {
+    /// All lanes start at `initial` (the scalar reset convention).
     pub fn new(n: usize, initial: usize) -> Self {
         assert!(n >= 2, "chain FSM needs at least 2 states");
         assert!(n <= 256, "wide chain FSM supports radix <= 256");
         assert!(initial < n, "initial state out of range");
         let nbits = (usize::BITS - (n - 1).leading_zeros()) as usize;
-        let mut planes = [0u64; 8];
+        let mut planes = [P::zero(); 8];
         for (b, p) in planes.iter_mut().enumerate().take(nbits) {
-            *p = if (initial >> b) & 1 == 1 { !0 } else { 0 };
+            *p = P::splat((initial >> b) & 1 == 1);
         }
         Self { n, nbits, planes }
     }
@@ -43,49 +49,49 @@ impl WideChainFsm {
 
     /// Lane mask of FSMs currently in state `s`.
     #[inline(always)]
-    pub fn eq_const(&self, s: usize) -> u64 {
+    pub fn eq_const(&self, s: usize) -> P {
         debug_assert!(s < self.n);
-        let mut m = !0u64;
+        let mut m = P::ones();
         for b in 0..self.nbits {
             let p = self.planes[b];
-            m &= if (s >> b) & 1 == 1 { p } else { !p };
+            m = if (s >> b) & 1 == 1 { m.and(p) } else { m.and_not(p) };
         }
         m
     }
 
-    /// One clock edge for all lanes: bit `l` of `up` high → lane `l` moves
-    /// right (saturating at `N-1`), low → left (saturating at 0). Matches
-    /// `ChainFsm::step` lane-for-lane.
+    /// One clock edge for all lanes: lane `l` of `up` high → lane `l`
+    /// moves right (saturating at `N-1`), low → left (saturating at 0).
+    /// Matches `ChainFsm::step` lane-for-lane.
     #[inline]
-    pub fn step(&mut self, up: u64) {
+    pub fn step(&mut self, up: P) {
         let at_max = self.eq_const(self.n - 1);
         let at_min = self.eq_const(0);
         // Masked +1 over the state planes (ripple carry).
-        let mut carry = up & !at_max;
+        let mut carry = up.and_not(at_max);
         for p in self.planes.iter_mut().take(self.nbits) {
-            if carry == 0 {
+            if carry.is_zero() {
                 break;
             }
-            let t = *p;
-            *p = t ^ carry;
-            carry &= t;
+            let (sum, c) = p.half_add(carry);
+            *p = sum;
+            carry = c;
         }
         // Masked -1 (ripple borrow). Disjoint from the increment lanes.
-        let mut borrow = !up & !at_min;
+        let mut borrow = up.not().and_not(at_min);
         for p in self.planes.iter_mut().take(self.nbits) {
-            if borrow == 0 {
+            if borrow.is_zero() {
                 break;
             }
-            let t = *p;
-            *p = t ^ borrow;
-            borrow &= !t;
+            let (diff, b) = p.half_sub(borrow);
+            *p = diff;
+            borrow = b;
         }
     }
 
     /// Write the per-state lane masks (`out[s]` = lanes in state `s`) —
     /// the codeword digits the CPT MUX select consumes, in one-hot form.
     #[inline]
-    pub fn digit_masks(&self, out: &mut [u64]) {
+    pub fn digit_masks(&self, out: &mut [P]) {
         debug_assert_eq!(out.len(), self.n);
         for (s, o) in out.iter_mut().enumerate() {
             *o = self.eq_const(s);
@@ -96,7 +102,7 @@ impl WideChainFsm {
     pub fn state_of_lane(&self, l: usize) -> usize {
         let mut s = 0usize;
         for b in 0..self.nbits {
-            s |= (((self.planes[b] >> l) & 1) as usize) << b;
+            s |= (self.planes[b].lane(l) as usize) << b;
         }
         s
     }
@@ -108,17 +114,23 @@ mod tests {
     use crate::fsm::chain::ChainFsm;
     use crate::util::prng::Pcg;
 
-    /// Drive wide + 64 scalar FSMs with the same random bits; they must
-    /// agree lane-for-lane at every clock.
-    fn check_against_scalar(n: usize, cycles: usize, seed: u64) {
-        let mut wide = WideChainFsm::centered(n);
-        let mut scalars: Vec<ChainFsm> = (0..64).map(|_| ChainFsm::centered(n)).collect();
+    /// Drive wide + `P::LANES` scalar FSMs with the same random bits;
+    /// they must agree lane-for-lane at every clock.
+    fn check_against_scalar<P: BitPlane>(n: usize, cycles: usize, seed: u64) {
+        let mut wide = WideChainFsm::<P>::centered(n);
+        let mut scalars: Vec<ChainFsm> =
+            (0..P::LANES).map(|_| ChainFsm::centered(n)).collect();
         let mut rng = Pcg::new(seed);
         for cycle in 0..cycles {
-            let up = rng.next_u64();
+            let mut up = P::zero();
+            for l in 0..P::LANES {
+                if rng.next_u64() & 1 == 1 {
+                    up.set_lane(l);
+                }
+            }
             wide.step(up);
             for (l, f) in scalars.iter_mut().enumerate() {
-                let expect = f.step((up >> l) & 1 == 1);
+                let expect = f.step(up.lane(l));
                 assert_eq!(
                     wide.state_of_lane(l),
                     expect,
@@ -128,61 +140,74 @@ mod tests {
         }
     }
 
-    #[test]
-    fn matches_scalar_pow2_radix() {
-        check_against_scalar(4, 500, 11);
-        check_against_scalar(2, 500, 12);
-        check_against_scalar(8, 500, 13);
+    fn check_all_radices<P: BitPlane>() {
+        for n in [2usize, 3, 4, 5, 7, 8] {
+            check_against_scalar::<P>(n, 200, 11 + (P::LANES + n) as u64);
+        }
     }
 
     #[test]
-    fn matches_scalar_non_pow2_radix() {
-        check_against_scalar(3, 500, 21);
-        check_against_scalar(5, 500, 22);
-        check_against_scalar(7, 500, 23);
+    fn matches_scalar_all_widths() {
+        crate::for_each_plane_width!(check_all_radices);
     }
 
-    #[test]
-    fn saturates_at_ends() {
-        let mut w = WideChainFsm::new(4, 0);
-        w.step(0); // all lanes down from 0 → stay 0
+    fn saturates_at_ends_generic<P: BitPlane>() {
+        let mut w = WideChainFsm::<P>::new(4, 0);
+        w.step(P::zero()); // all lanes down from 0 → stay 0
         assert_eq!(w.state_of_lane(0), 0);
         for _ in 0..10 {
-            w.step(!0); // all lanes up
+            w.step(P::ones()); // all lanes up
         }
-        for l in [0, 31, 63] {
+        for l in [0, P::LANES / 2 - 1, P::LANES - 1] {
             assert_eq!(w.state_of_lane(l), 3, "must saturate at N-1");
         }
     }
 
     #[test]
-    fn digit_masks_partition_lanes() {
-        let mut w = WideChainFsm::centered(5);
+    fn saturates_at_ends() {
+        crate::for_each_plane_width!(saturates_at_ends_generic);
+    }
+
+    fn digit_masks_partition_generic<P: BitPlane>() {
+        let mut w = WideChainFsm::<P>::centered(5);
         let mut rng = Pcg::new(77);
         for _ in 0..200 {
-            w.step(rng.next_u64());
+            let mut up = P::zero();
+            for l in 0..P::LANES {
+                if rng.next_u64() & 1 == 1 {
+                    up.set_lane(l);
+                }
+            }
+            w.step(up);
         }
-        let mut masks = vec![0u64; 5];
+        let mut masks = vec![P::zero(); 5];
         w.digit_masks(&mut masks);
-        let mut union = 0u64;
+        let mut union = P::zero();
         for (s, &m) in masks.iter().enumerate() {
-            assert_eq!(union & m, 0, "state {s} overlaps another");
-            union |= m;
+            assert!(union.and(m).is_zero(), "state {s} overlaps another");
+            union = union.or(m);
         }
-        assert_eq!(union, !0u64, "every lane must be in exactly one state");
+        assert_eq!(union, P::ones(), "every lane must be in exactly one state");
+    }
+
+    #[test]
+    fn digit_masks_partition_lanes() {
+        crate::for_each_plane_width!(digit_masks_partition_generic);
     }
 
     #[test]
     fn centered_matches_scalar_reset() {
         for n in 2..=9 {
-            let w = WideChainFsm::centered(n);
+            let w = WideChainFsm::<u64>::centered(n);
             assert_eq!(w.state_of_lane(17), ChainFsm::centered(n).state());
+            let w = WideChainFsm::<[u64; 4]>::centered(n);
+            assert_eq!(w.state_of_lane(170), ChainFsm::centered(n).state());
         }
     }
 
     #[test]
     #[should_panic]
     fn rejects_one_state() {
-        WideChainFsm::new(1, 0);
+        WideChainFsm::<u64>::new(1, 0);
     }
 }

@@ -15,7 +15,9 @@
 //! ## Crate layout
 //!
 //! - [`sc`] — stochastic-computing substrate: RNGs (LFSR / xorshift /
-//!   Sobol), packed bitstreams, θ-gates (SNGs) and CPT-gates.
+//!   Sobol), packed bitstreams, θ-gates (SNGs), CPT-gates, and the
+//!   [`BitPlane`](sc::plane::BitPlane) SIMD-lane abstraction behind the
+//!   wide engine (64/256/512 lanes per plane word).
 //! - [`fsm`] — chained N-state Moore FSMs, steady-state analytics,
 //!   Brown–Card and MM-FSM baselines.
 //! - [`smurf`] — the paper's contribution: configuration, universal-radix
@@ -69,13 +71,14 @@ pub mod coordinator;
 /// Convenience re-exports of the most common entry points.
 pub mod prelude {
     pub use crate::sc::bitstream::Bitstream;
+    pub use crate::sc::plane::BitPlane;
     pub use crate::sc::rng::{Lfsr16, Sobol, StreamRng, XorShift64};
     pub use crate::sc::sng::ThetaGate;
     pub use crate::smurf::analytic::AnalyticSmurf;
     pub use crate::smurf::approximator::SmurfApproximator;
     pub use crate::smurf::config::SmurfConfig;
     pub use crate::smurf::sim::BitLevelSmurf;
-    pub use crate::smurf::sim_wide::{WideBitLevelSmurf, WideRunState};
+    pub use crate::smurf::sim_wide::{MaxPlane, WideBitLevelSmurf, WideRunState, MAX_LANES};
     pub use crate::synth::functions;
     pub use crate::synth::functions::TargetFn;
     pub use crate::synth::synthesize::{synthesize, SynthOptions, SynthResult};

@@ -21,8 +21,10 @@
 //!   plus exact binomial bitstream-sampling noise;
 //! - bit-level ([`SmurfActivation::eval_bitlevel`] /
 //!   [`SmurfActivation::eval_bitlevel_batch`]) — the cycle-accurate FSM
-//!   simulator. The batched entry point packs up to 64 activations into
-//!   one bit-plane pass of the wide engine
+//!   simulator. The batched entry point packs up to
+//!   [`MAX_LANES`](crate::smurf::sim_wide::MAX_LANES) activations (the
+//!   widest bit plane in the build: 256, or 512 with `wide512`) into one
+//!   bit-plane pass of the wide engine
 //!   ([`crate::smurf::sim_wide::WideBitLevelSmurf::eval_points`]), so a
 //!   whole CNN layer is activated per-layer rather than per-neuron while
 //!   staying element-for-element bit-identical to the scalar path.
@@ -198,8 +200,9 @@ impl SmurfActivation {
     }
 
     /// Hardware-faithful activation of a whole layer, in place: packs up
-    /// to [`LANES`](crate::smurf::sim_wide::LANES) activations per
-    /// bit-plane pass of the prebuilt wide engine via
+    /// to [`MAX_LANES`](crate::smurf::sim_wide::MAX_LANES) activations
+    /// (the widest bit plane compiled into the build) per bit-plane pass
+    /// of the prebuilt wide engine via
     /// [`SmurfApproximator::eval_bitstream_points_into`] (thread-local
     /// scratch) and overwrites `xs` chunk by chunk — zero heap
     /// allocation, the steady-state layer path.
@@ -207,24 +210,25 @@ impl SmurfActivation {
     /// Element-for-element bit-identical to calling
     /// [`Self::eval_bitlevel`] on each `xs[i]` in order: element `i` uses
     /// seed `ctr + i`, and the counter advances by `xs.len()` exactly as
-    /// the scalar loop would.
+    /// the scalar loop would — regardless of the plane width doing the
+    /// chunking.
     pub fn eval_bitlevel_inplace(&self, xs: &mut [f32]) {
-        use crate::smurf::sim_wide::LANES;
+        use crate::smurf::sim_wide::MAX_LANES;
         if xs.is_empty() {
             return;
         }
         let s0 = self.seed_ctr.get();
         self.seed_ctr.set(s0 + xs.len() as u64);
-        let mut ps = [[0.0f64; 1]; LANES];
-        let mut seeds = [0u64; LANES];
-        let mut lane_out = [0.0f64; LANES];
-        for (c, chunk) in xs.chunks_mut(LANES).enumerate() {
+        let mut ps = [[0.0f64; 1]; MAX_LANES];
+        let mut seeds = [0u64; MAX_LANES];
+        let mut lane_out = [0.0f64; MAX_LANES];
+        for (c, chunk) in xs.chunks_mut(MAX_LANES).enumerate() {
             let k = chunk.len();
             for (l, &x) in chunk.iter().enumerate() {
                 ps[l][0] = self.encode(x);
-                seeds[l] = s0 + (c * LANES + l) as u64;
+                seeds[l] = s0 + (c * MAX_LANES + l) as u64;
             }
-            let mut refs: [&[f64]; LANES] = [&[]; LANES];
+            let mut refs: [&[f64]; MAX_LANES] = [&[]; MAX_LANES];
             for (l, p) in ps.iter().enumerate().take(k) {
                 refs[l] = p;
             }
@@ -349,12 +353,16 @@ mod tests {
 
     #[test]
     fn bitlevel_batch_bit_identical_to_scalar_path() {
-        // 130 activations = two full 64-lane words + a 2-lane tail. Two
+        // MAX_LANES*2 + 2 activations = two full plane words + a 2-lane
+        // tail at whichever width the build auto-selected. Two
         // identically-synthesized instances keep the seed counters in
         // lockstep between the batched and the per-neuron path.
+        use crate::smurf::sim_wide::MAX_LANES;
+        let n = MAX_LANES * 2 + 2;
         let batched = SmurfActivation::tanh(64, 4);
         let scalar = SmurfActivation::tanh(64, 4);
-        let xs: Vec<f32> = (0..130).map(|i| (i as f32 / 129.0) * 6.0 - 3.0).collect();
+        let xs: Vec<f32> =
+            (0..n).map(|i| (i as f32 / (n - 1) as f32) * 6.0 - 3.0).collect();
         let a = batched.eval_bitlevel_batch(&xs);
         let b: Vec<f32> = xs.iter().map(|&x| scalar.eval_bitlevel(x)).collect();
         assert_eq!(a, b);
@@ -368,12 +376,14 @@ mod tests {
 
     #[test]
     fn prop_bitlevel_batch_matches_scalar_elementwise() {
-        // Random batch sizes, including non-multiples of 64; every
-        // element must be bit-identical to the scalar path.
+        // Random batch sizes up past the auto-width chunk boundary
+        // (non-multiples of the lane count included); every element must
+        // be bit-identical to the scalar path.
+        use crate::smurf::sim_wide::MAX_LANES;
         use crate::testing::{check, RangeUsize};
         let batched = SmurfActivation::tanh(32, 4);
         let scalar = SmurfActivation::tanh(32, 4);
-        check(53, 8, &RangeUsize { lo: 1, hi: 150 }, |&n| {
+        check(53, 8, &RangeUsize { lo: 1, hi: MAX_LANES + 50 }, |&n| {
             let xs: Vec<f32> =
                 (0..n).map(|i| ((i * 37 % 101) as f32 / 50.0) - 1.0).collect();
             let a = batched.eval_bitlevel_batch(&xs);

@@ -5,6 +5,7 @@
 //! universal-radix codeword `s`, and the bank holds the synthesized
 //! coefficients `w_0 … w_{N^M - 1}`.
 
+use super::plane::BitPlane;
 use super::rng::StreamRng;
 use super::sng::ThetaGate;
 
@@ -50,27 +51,27 @@ impl CptGate {
         self.bank[t].raw()
     }
 
-    /// Wide (64-lane) MUX select in masked plane logic: `eq[t]` is the
-    /// lane mask whose codeword currently selects bank entry `t` (the
-    /// masks must partition the active lanes). Writes each lane's selected
-    /// 16-bit threshold as bit planes into `out`, ready for
+    /// Wide (`P::LANES`-lane) MUX select in masked plane logic: `eq[t]`
+    /// is the lane mask whose codeword currently selects bank entry `t`
+    /// (the masks must partition the active lanes). Writes each lane's
+    /// selected 16-bit threshold as bit planes into `out`, ready for
     /// [`crate::sc::sng::wide_lt_planes`] against the entropy planes.
     ///
-    /// This is the bit-sliced equivalent of `bank[sel]`: instead of 64
-    /// indexed loads, every coefficient ORs its threshold bits into the
-    /// planes under its select mask — exactly the AND-OR MUX tree the
-    /// paper's Fig. 6 CPT block synthesizes to.
-    pub fn threshold_planes(&self, eq: &[u64], out: &mut [u64; 16]) {
+    /// This is the bit-sliced equivalent of `bank[sel]`: instead of one
+    /// indexed load per lane, every coefficient ORs its threshold bits
+    /// into the planes under its select mask — exactly the AND-OR MUX
+    /// tree the paper's Fig. 6 CPT block synthesizes to.
+    pub fn threshold_planes<P: BitPlane>(&self, eq: &[P], out: &mut [P; 16]) {
         assert_eq!(eq.len(), self.bank.len(), "one select mask per bank entry");
-        out.fill(0);
+        *out = [P::zero(); 16];
         for (gate, &mask) in self.bank.iter().zip(eq) {
-            if mask == 0 {
+            if mask.is_zero() {
                 continue;
             }
             let mut bits = gate.raw();
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
-                out[b] |= mask;
+                out[b] = out[b].or(mask);
                 bits &= bits - 1;
             }
         }
@@ -120,18 +121,17 @@ mod tests {
         assert_eq!(ones, 500);
     }
 
-    #[test]
-    fn threshold_planes_select_per_lane() {
+    fn threshold_planes_select_generic<P: BitPlane>() {
         use crate::sc::rng::lane_from_planes;
-        // 4-entry bank; lanes 0..64 cycle through the 4 selects.
+        // 4-entry bank; all lanes cycle through the 4 selects.
         let g = CptGate::new(&[0.1, 0.35, 0.6, 0.95]);
-        let mut eq = [0u64; 4];
-        for l in 0..64 {
-            eq[l % 4] |= 1u64 << l;
+        let mut eq = [P::zero(); 4];
+        for l in 0..P::LANES {
+            eq[l % 4].set_lane(l);
         }
-        let mut planes = [0u64; 16];
+        let mut planes = [P::zero(); 16];
         g.threshold_planes(&eq, &mut planes);
-        for l in 0..64 {
+        for l in 0..P::LANES {
             assert_eq!(
                 lane_from_planes(&planes, l),
                 g.raw_threshold(l % 4),
@@ -141,14 +141,27 @@ mod tests {
     }
 
     #[test]
-    fn threshold_planes_idle_lanes_zero() {
+    fn threshold_planes_select_per_lane() {
+        crate::for_each_plane_width!(threshold_planes_select_generic);
+    }
+
+    fn threshold_planes_idle_generic<P: BitPlane>() {
         let g = CptGate::new(&[0.5, 0.5]);
-        let eq = [0b1u64, 0b10u64]; // only lanes 0 and 1 active
-        let mut planes = [0u64; 16];
+        let mut eq = [P::zero(); 2]; // only lanes 0 and 1 active
+        eq[0].set_lane(0);
+        eq[1].set_lane(1);
+        let mut planes = [P::zero(); 16];
         g.threshold_planes(&eq, &mut planes);
         for p in planes {
-            assert_eq!(p & !0b11, 0, "idle lanes must stay zero");
+            for l in 2..P::LANES {
+                assert!(!p.lane(l), "idle lane {l} must stay zero");
+            }
         }
+    }
+
+    #[test]
+    fn threshold_planes_idle_lanes_zero() {
+        crate::for_each_plane_width!(threshold_planes_idle_generic);
     }
 
     #[test]

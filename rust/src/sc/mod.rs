@@ -12,8 +12,12 @@
 //!   comparator against an entropy source.
 //! - [`cpt`] — the CPT-gate (§II-B): a bank of θ-gates plus a MUX whose
 //!   select input is, in SMURF, the universal-radix codeword.
+//! - [`plane`] — the [`BitPlane`](plane::BitPlane) trait behind the
+//!   bit-sliced wide engine: 64 (`u64`), 256 (`[u64; 4]`) or 512
+//!   (`[u64; 8]`, feature `wide512`) SIMD lanes per plane word.
 
 pub mod bitstream;
 pub mod cpt;
+pub mod plane;
 pub mod rng;
 pub mod sng;

@@ -194,25 +194,30 @@ impl DelayedBranches {
 }
 
 // ---------------------------------------------------------------------------
-// Wide (bit-sliced) entropy: 64 independent lanes per word.
+// Wide (bit-sliced) entropy: one independent lane per bit of a plane word.
 //
-// The wide SMURF engine ([`crate::smurf::sim_wide`]) simulates 64 bitstream
-// trials per clock by keeping every 16-bit comparator word as 16 *bit
-// planes*: plane `b` is a `u64` whose bit `l` is bit `b` of lane `l`'s
-// word. A θ-gate comparison against all 64 lanes is then ~2 word ops per
-// plane instead of 64 scalar compares (see `crate::sc::sng::wide_lt_const`).
+// The wide SMURF engine ([`crate::smurf::sim_wide`]) simulates `P::LANES`
+// bitstream trials per clock by keeping every 16-bit comparator word as 16
+// *bit planes*: plane `b` is a [`BitPlane`] word whose lane `l` is bit `b`
+// of lane `l`'s word. A θ-gate comparison against all lanes is then ~2
+// plane ops per bit instead of one scalar compare per lane (see
+// `crate::sc::sng::wide_lt_const`). The plane type defaults to `u64`
+// (64 lanes); `[u64; 4]` / `[u64; 8]` widen to 256 / 512 lanes with the
+// identical scheme (see `crate::sc::plane`).
 // ---------------------------------------------------------------------------
 
-/// Transpose up to 64 per-lane 16-bit words into 16 bit planes
-/// (plane `b`, bit `l` = bit `b` of `lanes[l]`). Missing lanes are zero.
-pub fn planes_from_lanes(lanes: &[u16]) -> [u64; 16] {
-    assert!(lanes.len() <= 64, "at most 64 lanes per word");
-    let mut planes = [0u64; 16];
+use crate::sc::plane::BitPlane;
+
+/// Transpose up to `P::LANES` per-lane 16-bit words into 16 bit planes
+/// (plane `b`, lane `l` = bit `b` of `lanes[l]`). Missing lanes are zero.
+pub fn planes_from_lanes<P: BitPlane>(lanes: &[u16]) -> [P; 16] {
+    assert!(lanes.len() <= P::LANES, "at most P::LANES lanes per plane word");
+    let mut planes = [P::zero(); 16];
     for (l, &v) in lanes.iter().enumerate() {
         let mut bits = v;
         while bits != 0 {
             let b = bits.trailing_zeros() as usize;
-            planes[b] |= 1u64 << l;
+            planes[b].set_lane(l);
             bits &= bits - 1;
         }
     }
@@ -220,27 +225,28 @@ pub fn planes_from_lanes(lanes: &[u16]) -> [u64; 16] {
 }
 
 /// Read lane `l`'s 16-bit word back out of a plane set (test/debug path).
-pub fn lane_from_planes(planes: &[u64; 16], l: usize) -> u16 {
+pub fn lane_from_planes<P: BitPlane>(planes: &[P; 16], l: usize) -> u16 {
     let mut v = 0u16;
     for (b, &p) in planes.iter().enumerate() {
-        v |= (((p >> l) & 1) as u16) << b;
+        v |= (p.lane(l) as u16) << b;
     }
     v
 }
 
-/// 64 independent [`Lfsr16`] lanes stepped together in bit-sliced form.
+/// `P::LANES` independent [`Lfsr16`] lanes stepped together in bit-sliced
+/// form.
 ///
 /// State is held as 16 planes in a ring buffer: the scalar update
 /// `state' = (state >> 1) | (feedback << 15)` becomes "advance the head
-/// and write one feedback plane" — ~6 word ops per clock for all 64 lanes
-/// versus 64 scalar steps.
+/// and write one feedback plane" — ~6 plane ops per clock for all lanes
+/// versus one scalar step per lane.
 #[derive(Clone, Debug)]
-pub struct WideLfsr16 {
-    buf: [u64; 16],
+pub struct WideLfsr16<P: BitPlane = u64> {
+    buf: [P; 16],
     head: usize,
 }
 
-impl WideLfsr16 {
+impl<P: BitPlane> WideLfsr16<P> {
     /// Build from per-lane register states (lane `l` behaves exactly like
     /// a scalar `Lfsr16` whose current state is `lanes[l]`). Unspecified
     /// lanes sit at the all-zeros fixpoint and emit constant zeros.
@@ -248,9 +254,17 @@ impl WideLfsr16 {
         Self { buf: planes_from_lanes(lanes), head: 0 }
     }
 
-    /// Bit plane `b` of the current 64 lane states.
+    /// Reset to new per-lane states in place (same semantics as
+    /// [`Self::from_lane_states`]; lets run-state scratch reseed without
+    /// reconstructing).
+    pub fn reseed(&mut self, lanes: &[u16]) {
+        self.buf = planes_from_lanes(lanes);
+        self.head = 0;
+    }
+
+    /// Bit plane `b` of the current lane states.
     #[inline(always)]
-    pub fn plane(&self, b: usize) -> u64 {
+    pub fn plane(&self, b: usize) -> P {
         self.buf[(self.head + b) & 15]
     }
 
@@ -258,7 +272,7 @@ impl WideLfsr16 {
     #[inline(always)]
     pub fn step(&mut self) {
         // Taps 16,15,13,4: feedback = s0 ^ s2 ^ s3 ^ s5 per lane.
-        let fb = self.plane(0) ^ self.plane(2) ^ self.plane(3) ^ self.plane(5);
+        let fb = self.plane(0).xor(self.plane(2)).xor(self.plane(3)).xor(self.plane(5));
         self.head = (self.head + 1) & 15;
         self.buf[(self.head + 15) & 15] = fb;
     }
@@ -267,14 +281,14 @@ impl WideLfsr16 {
     /// (lane `l` set iff its fresh word `< threshold`) — the wide
     /// equivalent of `gate.sample(lfsr.next_u16())`.
     #[inline]
-    pub fn next_lt_const(&mut self, threshold: u16) -> u64 {
+    pub fn next_lt_const(&mut self, threshold: u16) -> P {
         self.step();
         crate::sc::sng::wide_lt_const_with(|b| self.plane(b), threshold)
     }
 
     /// One clock for all lanes, then write this cycle's 16 rand planes.
     #[inline]
-    pub fn next_planes_into(&mut self, out: &mut [u64; 16]) {
+    pub fn next_planes_into(&mut self, out: &mut [P; 16]) {
         self.step();
         for (b, o) in out.iter_mut().enumerate() {
             *o = self.plane(b);
@@ -282,82 +296,101 @@ impl WideLfsr16 {
     }
 }
 
-/// 64 independent [`XorShift64`] lanes.
+/// Up to `P::LANES` independent [`XorShift64`] lanes.
 ///
 /// The 64-bit multiply in xorshift64* does not bit-slice (carries cross
 /// lanes), so lanes are stepped scalarly; the wide win here is the packed
-/// comparator mask plus the branch-free downstream pipeline. Lanes live
-/// in a fixed inline array so reseeding allocates nothing.
+/// comparator mask plus the branch-free downstream pipeline. The lane
+/// generators live in a heap buffer (inlining `P::LANES` of them made
+/// this by far the largest `WideRng` variant — the PR 2
+/// `large_enum_variant` lint debt); [`Self::reseed`] rewrites it in
+/// place, so steady-state resets stay allocation-free.
 #[derive(Clone, Debug)]
-pub struct WideXorShift64 {
-    lanes: [XorShift64; 64],
-    active: usize,
+pub struct WideXorShift64<P: BitPlane = u64> {
+    lanes: Vec<XorShift64>,
+    _plane: std::marker::PhantomData<P>,
 }
 
-impl WideXorShift64 {
-    /// One lane per seed (at most 64), seeded exactly like
+impl<P: BitPlane> WideXorShift64<P> {
+    /// One lane per seed (at most `P::LANES`), seeded exactly like
     /// `XorShift64::new` so lane `l` reproduces the scalar sequence.
     /// Unused lanes stay idle (their mask/plane bits are zero).
     pub fn from_seeds(seeds: &[u64]) -> Self {
-        assert!(seeds.len() <= 64, "at most 64 lanes per word");
-        Self {
-            lanes: core::array::from_fn(|l| {
-                XorShift64::new(seeds.get(l).copied().unwrap_or(0))
-            }),
-            active: seeds.len(),
-        }
+        let mut rng = Self {
+            lanes: Vec::with_capacity(seeds.len()),
+            _plane: std::marker::PhantomData,
+        };
+        rng.reseed(seeds);
+        rng
+    }
+
+    /// Re-seed in place (same semantics as [`Self::from_seeds`]),
+    /// reusing the lane buffer's capacity.
+    pub fn reseed(&mut self, seeds: &[u64]) {
+        assert!(seeds.len() <= P::LANES, "at most P::LANES lanes per plane word");
+        self.lanes.clear();
+        self.lanes.extend(seeds.iter().map(|&s| XorShift64::new(s)));
     }
 
     /// One clock for all lanes, then the θ-gate comparator mask.
     #[inline]
-    pub fn next_lt_const(&mut self, threshold: u16) -> u64 {
-        let mut mask = 0u64;
-        for (l, r) in self.lanes[..self.active].iter_mut().enumerate() {
-            mask |= ((r.next_u16() < threshold) as u64) << l;
+    pub fn next_lt_const(&mut self, threshold: u16) -> P {
+        let mut mask = P::zero();
+        for (l, r) in self.lanes.iter_mut().enumerate() {
+            if r.next_u16() < threshold {
+                mask.set_lane(l);
+            }
         }
         mask
     }
 
     /// One clock for all lanes, then write this cycle's 16 rand planes.
-    pub fn next_planes_into(&mut self, out: &mut [u64; 16]) {
-        out.fill(0);
-        for (l, r) in self.lanes[..self.active].iter_mut().enumerate() {
+    pub fn next_planes_into(&mut self, out: &mut [P; 16]) {
+        *out = [P::zero(); 16];
+        for (l, r) in self.lanes.iter_mut().enumerate() {
             let mut bits = r.next_u16();
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
-                out[b] |= 1u64 << l;
+                out[b].set_lane(l);
                 bits &= bits - 1;
             }
         }
     }
 }
 
-/// 64 independent [`Sobol`] (van der Corput) lanes in bit-sliced form.
+/// `P::LANES` independent [`Sobol`] (van der Corput) lanes in bit-sliced
+/// form.
 ///
 /// The scalar generator emits the bit-reversed low 16 bits of a counter;
 /// bit-sliced, the reversal is free (read the counter planes in reverse
 /// order) and the shared increment is a ripple-carry over planes.
 #[derive(Clone, Debug)]
-pub struct WideSobol16 {
+pub struct WideSobol16<P: BitPlane = u64> {
     /// Counter planes: plane `b` holds bit `b` of each lane's counter.
-    counter: [u64; 16],
+    counter: [P; 16],
 }
 
-impl WideSobol16 {
+impl<P: BitPlane> WideSobol16<P> {
     /// Per-lane counter start values (low 16 bits of `Sobol::new(start)`;
     /// higher counter bits never reach the 16-bit output).
     pub fn from_lane_counters(lanes: &[u16]) -> Self {
         Self { counter: planes_from_lanes(lanes) }
     }
 
+    /// Reset the counters in place (same semantics as
+    /// [`Self::from_lane_counters`]).
+    pub fn reseed(&mut self, lanes: &[u16]) {
+        self.counter = planes_from_lanes(lanes);
+    }
+
     #[inline(always)]
     fn increment_all(&mut self) {
-        let mut carry = !0u64;
+        let mut carry = P::ones();
         for p in self.counter.iter_mut() {
-            let t = *p;
-            *p = t ^ carry;
-            carry &= t;
-            if carry == 0 {
+            let (sum, c) = p.half_add(carry);
+            *p = sum;
+            carry = c;
+            if carry.is_zero() {
                 break;
             }
         }
@@ -366,7 +399,7 @@ impl WideSobol16 {
     /// Comparator mask for this cycle (output = bit-reversed counter,
     /// matching `Sobol::next_u16`), then advance every lane's counter.
     #[inline]
-    pub fn next_lt_const(&mut self, threshold: u16) -> u64 {
+    pub fn next_lt_const(&mut self, threshold: u16) -> P {
         let mask =
             crate::sc::sng::wide_lt_const_with(|b| self.counter[15 - b], threshold);
         self.increment_all();
@@ -375,7 +408,7 @@ impl WideSobol16 {
 
     /// Write this cycle's 16 rand planes, then advance every counter.
     #[inline]
-    pub fn next_planes_into(&mut self, out: &mut [u64; 16]) {
+    pub fn next_planes_into(&mut self, out: &mut [P; 16]) {
         for (b, o) in out.iter_mut().enumerate() {
             *o = self.counter[15 - b];
         }
@@ -495,56 +528,73 @@ mod tests {
         }
     }
 
-    #[test]
-    fn planes_roundtrip_lanes() {
-        let lanes: Vec<u16> = (0..64).map(|l| (l as u16).wrapping_mul(0x9E37) ^ 0x1234).collect();
-        let planes = planes_from_lanes(&lanes);
+    fn planes_roundtrip_generic<P: BitPlane>() {
+        let lanes: Vec<u16> = (0..P::LANES)
+            .map(|l| (l as u16).wrapping_mul(0x9E37) ^ 0x1234)
+            .collect();
+        let planes: [P; 16] = planes_from_lanes(&lanes);
         for (l, &v) in lanes.iter().enumerate() {
             assert_eq!(lane_from_planes(&planes, l), v);
         }
     }
 
     #[test]
-    fn wide_lfsr_matches_64_scalar_lfsrs() {
-        let lanes: Vec<u16> = (0..64).map(|l| (l as u16) * 977 + 1).collect();
-        let mut wide = WideLfsr16::from_lane_states(&lanes);
+    fn planes_roundtrip_lanes() {
+        crate::for_each_plane_width!(planes_roundtrip_generic);
+    }
+
+    fn wide_lfsr_matches_scalar_generic<P: BitPlane>() {
+        // A partial lane count exercises the idle-lane (all-zeros
+        // fixpoint) tail alongside full planes.
+        for lanes_n in [P::LANES, P::LANES - 3] {
+            let lanes: Vec<u16> = (0..lanes_n).map(|l| (l as u16) * 977 + 1).collect();
+            let mut wide = WideLfsr16::<P>::from_lane_states(&lanes);
+            let mut scalars: Vec<Lfsr16> = lanes.iter().map(|&s| Lfsr16::new(s)).collect();
+            for cycle in 0..200 {
+                wide.step();
+                for (l, s) in scalars.iter_mut().enumerate() {
+                    let expect = s.step();
+                    let got = {
+                        let mut v = 0u16;
+                        for b in 0..16 {
+                            v |= (wide.plane(b).lane(l) as u16) << b;
+                        }
+                        v
+                    };
+                    assert_eq!(got, expect, "cycle {cycle} lane {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_lfsr_matches_scalar_lfsrs_all_widths() {
+        crate::for_each_plane_width!(wide_lfsr_matches_scalar_generic);
+    }
+
+    fn wide_lfsr_lt_mask_generic<P: BitPlane>() {
+        let lanes: Vec<u16> = (0..P::LANES).map(|l| (l as u16) * 31 + 7).collect();
+        let mut wide = WideLfsr16::<P>::from_lane_states(&lanes);
         let mut scalars: Vec<Lfsr16> = lanes.iter().map(|&s| Lfsr16::new(s)).collect();
-        for cycle in 0..200 {
-            wide.step();
+        for t in [0u16, 1, 0x8000, 0xABCD, 0xFFFF] {
+            let mask = wide.next_lt_const(t);
             for (l, s) in scalars.iter_mut().enumerate() {
-                let expect = s.step();
-                let got = {
-                    let mut v = 0u16;
-                    for b in 0..16 {
-                        v |= (((wide.plane(b) >> l) & 1) as u16) << b;
-                    }
-                    v
-                };
-                assert_eq!(got, expect, "cycle {cycle} lane {l}");
+                let expect = s.next_u16() < t;
+                assert_eq!(mask.lane(l), expect, "t={t:#06x} lane {l}");
             }
         }
     }
 
     #[test]
     fn wide_lfsr_lt_mask_matches_scalar_compares() {
-        let lanes: Vec<u16> = (0..64).map(|l| (l as u16) * 31 + 7).collect();
-        let mut wide = WideLfsr16::from_lane_states(&lanes);
-        let mut scalars: Vec<Lfsr16> = lanes.iter().map(|&s| Lfsr16::new(s)).collect();
-        for t in [0u16, 1, 0x8000, 0xABCD, 0xFFFF] {
-            let mask = wide.next_lt_const(t);
-            for (l, s) in scalars.iter_mut().enumerate() {
-                let expect = s.next_u16() < t;
-                assert_eq!((mask >> l) & 1 == 1, expect, "t={t:#06x} lane {l}");
-            }
-        }
+        crate::for_each_plane_width!(wide_lfsr_lt_mask_generic);
     }
 
-    #[test]
-    fn wide_xorshift_matches_scalar() {
-        let seeds: Vec<u64> = (0..64).map(|l| l as u64 * 0xDEAD_BEEF + 3).collect();
-        let mut wide = WideXorShift64::from_seeds(&seeds);
+    fn wide_xorshift_matches_scalar_generic<P: BitPlane>() {
+        let seeds: Vec<u64> = (0..P::LANES).map(|l| l as u64 * 0xDEAD_BEEF + 3).collect();
+        let mut wide = WideXorShift64::<P>::from_seeds(&seeds);
         let mut scalars: Vec<XorShift64> = seeds.iter().map(|&s| XorShift64::new(s)).collect();
-        let mut planes = [0u64; 16];
+        let mut planes = [P::zero(); 16];
         for _ in 0..50 {
             wide.next_planes_into(&mut planes);
             for (l, s) in scalars.iter_mut().enumerate() {
@@ -554,16 +604,27 @@ mod tests {
         let t = 0x7777;
         let mask = wide.next_lt_const(t);
         for (l, s) in scalars.iter_mut().enumerate() {
-            assert_eq!((mask >> l) & 1 == 1, s.next_u16() < t);
+            assert_eq!(mask.lane(l), s.next_u16() < t);
         }
+        // Reseeding in place must reproduce a fresh construction.
+        wide.reseed(&seeds[..5]);
+        let mut fresh = WideXorShift64::<P>::from_seeds(&seeds[..5]);
+        wide.next_planes_into(&mut planes);
+        let mut fresh_planes = [P::zero(); 16];
+        fresh.next_planes_into(&mut fresh_planes);
+        assert_eq!(planes, fresh_planes, "in-place reseed must equal fresh seeding");
     }
 
     #[test]
-    fn wide_sobol_matches_scalar() {
-        let starts: Vec<u16> = (0..64).map(|l| (l as u16).wrapping_mul(4099)).collect();
-        let mut wide = WideSobol16::from_lane_counters(&starts);
+    fn wide_xorshift_matches_scalar() {
+        crate::for_each_plane_width!(wide_xorshift_matches_scalar_generic);
+    }
+
+    fn wide_sobol_matches_scalar_generic<P: BitPlane>() {
+        let starts: Vec<u16> = (0..P::LANES).map(|l| (l as u16).wrapping_mul(4099)).collect();
+        let mut wide = WideSobol16::<P>::from_lane_counters(&starts);
         let mut scalars: Vec<Sobol> = starts.iter().map(|&s| Sobol::new(s as u32)).collect();
-        let mut planes = [0u64; 16];
+        let mut planes = [P::zero(); 16];
         for _ in 0..300 {
             wide.next_planes_into(&mut planes);
             for (l, s) in scalars.iter_mut().enumerate() {
@@ -573,10 +634,15 @@ mod tests {
     }
 
     #[test]
+    fn wide_sobol_matches_scalar() {
+        crate::for_each_plane_width!(wide_sobol_matches_scalar_generic);
+    }
+
+    #[test]
     fn wide_sobol_counter_wraps_like_scalar_low_bits() {
         // A lane sitting at 0xFFFF must wrap to 0x0000 (the scalar u32
         // counter's higher bits never reach the 16-bit output).
-        let mut wide = WideSobol16::from_lane_counters(&[0xFFFF, 3]);
+        let mut wide = WideSobol16::<u64>::from_lane_counters(&[0xFFFF, 3]);
         let mut a = Sobol::new(0xFFFF);
         let mut b = Sobol::new(3);
         let mut planes = [0u64; 16];

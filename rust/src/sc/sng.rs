@@ -5,6 +5,7 @@
 //! `rand < threshold`. The SNG of Fig. 1 *is* a θ-gate; the CPT-gate is a
 //! bank of them behind a MUX ([`crate::sc::cpt`]).
 
+use super::plane::BitPlane;
 use super::rng::StreamRng;
 
 /// Fixed-point threshold width used by the datapath (16 bits — the paper's
@@ -56,67 +57,69 @@ impl ThetaGate {
         ones as f64 / len as f64
     }
 
-    /// 64 comparisons per call: one clock of this θ-gate across 64 lanes
-    /// whose entropy words are given as bit planes (see
-    /// [`crate::sc::rng::planes_from_lanes`]). Bit `l` of the result is
+    /// `P::LANES` comparisons per call: one clock of this θ-gate across
+    /// every lane whose entropy words are given as bit planes (see
+    /// [`crate::sc::rng::planes_from_lanes`]). Lane `l` of the result is
     /// `rand_l < threshold`.
     #[inline]
-    pub fn sample_wide(&self, rand_planes: &[u64; 16]) -> u64 {
+    pub fn sample_wide<P: BitPlane>(&self, rand_planes: &[P; 16]) -> P {
         wide_lt_const(rand_planes, self.threshold)
     }
 }
 
 // ---------------------------------------------------------------------------
-// Wide (bit-sliced) comparators: the θ-gate datapath over 64 lanes/word.
+// Wide (bit-sliced) comparators: the θ-gate datapath over P::LANES
+// lanes per plane word (64 for the default `u64`, 256/512 for the SIMD
+// planes — see `crate::sc::plane`).
 //
 // A 16-bit unsigned compare `rand < t` is evaluated MSB-first: the first
 // bit position where the operands differ decides. Keeping `eq` = "lanes
-// still tied" and folding one plane at a time gives all 64 lane verdicts
-// in ≤ 2–5 word ops per plane — this is the Fig. 6 comparator bank run 64
-// trials at a time.
+// still tied" and folding one plane at a time gives every lane's verdict
+// in ≤ 2–5 plane ops per bit — this is the Fig. 6 comparator bank run
+// P::LANES trials at a time.
 // ---------------------------------------------------------------------------
 
-/// 64-lane `rand < threshold` with the rand planes supplied by an accessor
-/// (lets ring-buffered plane stores avoid a copy).
+/// Lane-wise `rand < threshold` with the rand planes supplied by an
+/// accessor (lets ring-buffered plane stores avoid a copy).
 #[inline]
-pub fn wide_lt_const_with(plane: impl Fn(usize) -> u64, threshold: u16) -> u64 {
-    let mut lt = 0u64;
-    let mut eq = !0u64;
+pub fn wide_lt_const_with<P: BitPlane>(plane: impl Fn(usize) -> P, threshold: u16) -> P {
+    let mut lt = P::zero();
+    let mut eq = P::ones();
     for b in (0..16).rev() {
         let p = plane(b);
         if (threshold >> b) & 1 == 1 {
-            lt |= eq & !p;
-            eq &= p;
+            lt = lt.or(eq.and_not(p));
+            eq = eq.and(p);
         } else {
-            eq &= !p;
+            eq = eq.and_not(p);
         }
-        if eq == 0 {
+        if eq.is_zero() {
             break;
         }
     }
     lt
 }
 
-/// 64-lane `rand < threshold` over materialized planes.
+/// Lane-wise `rand < threshold` over materialized planes.
 #[inline]
-pub fn wide_lt_const(rand_planes: &[u64; 16], threshold: u16) -> u64 {
+pub fn wide_lt_const<P: BitPlane>(rand_planes: &[P; 16], threshold: u16) -> P {
     wide_lt_const_with(|b| rand_planes[b], threshold)
 }
 
-/// 64-lane `rand_l < threshold_l` where *both* sides vary per lane —
+/// Lane-wise `rand_l < threshold_l` where *both* sides vary per lane —
 /// the CPT-gate case, where each lane's codeword selects its own
 /// coefficient threshold (threshold planes built by
 /// [`crate::sc::cpt::CptGate::threshold_planes`]).
 #[inline]
-pub fn wide_lt_planes(rand_planes: &[u64; 16], threshold_planes: &[u64; 16]) -> u64 {
-    let mut lt = 0u64;
-    let mut eq = !0u64;
+pub fn wide_lt_planes<P: BitPlane>(rand_planes: &[P; 16], threshold_planes: &[P; 16]) -> P {
+    let mut lt = P::zero();
+    let mut eq = P::ones();
     for b in (0..16).rev() {
         let r = rand_planes[b];
         let t = threshold_planes[b];
-        lt |= eq & !r & t;
-        eq &= !(r ^ t);
-        if eq == 0 {
+        lt = lt.or(eq.and_not(r).and(t));
+        eq = eq.and(r.xor(t).not());
+        if eq.is_zero() {
             break;
         }
     }
@@ -170,46 +173,55 @@ mod tests {
         });
     }
 
-    #[test]
-    fn prop_wide_lt_const_matches_scalar_compare() {
+    fn wide_lt_const_matches_generic<P: BitPlane>() {
         use crate::sc::rng::planes_from_lanes;
         use crate::util::prng::Pcg;
-        check(23, 64, &UnitF64::unit(), |&p| {
+        check(23 + P::LANES as u64, 32, &UnitF64::unit(), |&p| {
             let t = ThetaGate::new(p).raw();
             let mut rng = Pcg::new(p.to_bits());
-            let lanes: Vec<u16> = (0..64).map(|_| rng.next_u64() as u16).collect();
-            let planes = planes_from_lanes(&lanes);
+            let lanes: Vec<u16> = (0..P::LANES).map(|_| rng.next_u64() as u16).collect();
+            let planes: [P; 16] = planes_from_lanes(&lanes);
             let mask = wide_lt_const(&planes, t);
-            lanes
-                .iter()
-                .enumerate()
-                .all(|(l, &r)| ((mask >> l) & 1 == 1) == (r < t))
+            lanes.iter().enumerate().all(|(l, &r)| mask.lane(l) == (r < t))
+        });
+    }
+
+    #[test]
+    fn prop_wide_lt_const_matches_scalar_compare() {
+        crate::for_each_plane_width!(wide_lt_const_matches_generic);
+    }
+
+    fn wide_lt_planes_matches_generic<P: BitPlane>() {
+        use crate::sc::rng::planes_from_lanes;
+        use crate::util::prng::Pcg;
+        check(24 + P::LANES as u64, 32, &UnitF64::unit(), |&p| {
+            let mut rng = Pcg::new(p.to_bits() ^ 0xABCD);
+            let rs: Vec<u16> = (0..P::LANES).map(|_| rng.next_u64() as u16).collect();
+            let ts: Vec<u16> = (0..P::LANES).map(|_| rng.next_u64() as u16).collect();
+            let mask: P = wide_lt_planes(&planes_from_lanes(&rs), &planes_from_lanes(&ts));
+            (0..P::LANES).all(|l| mask.lane(l) == (rs[l] < ts[l]))
         });
     }
 
     #[test]
     fn prop_wide_lt_planes_matches_scalar_compare() {
+        crate::for_each_plane_width!(wide_lt_planes_matches_generic);
+    }
+
+    fn wide_lt_boundary_generic<P: BitPlane>() {
         use crate::sc::rng::planes_from_lanes;
-        use crate::util::prng::Pcg;
-        check(24, 64, &UnitF64::unit(), |&p| {
-            let mut rng = Pcg::new(p.to_bits() ^ 0xABCD);
-            let rs: Vec<u16> = (0..64).map(|_| rng.next_u64() as u16).collect();
-            let ts: Vec<u16> = (0..64).map(|_| rng.next_u64() as u16).collect();
-            let mask = wide_lt_planes(&planes_from_lanes(&rs), &planes_from_lanes(&ts));
-            (0..64).all(|l| ((mask >> l) & 1 == 1) == (rs[l] < ts[l]))
-        });
+        let lanes: Vec<u16> = (0..P::LANES).map(|l| (l as u16).wrapping_mul(1031)).collect();
+        let planes: [P; 16] = planes_from_lanes(&lanes);
+        assert!(wide_lt_const(&planes, 0).is_zero(), "t=0 never fires");
+        let all = wide_lt_const(&planes, 0xFFFF);
+        for (l, &v) in lanes.iter().enumerate() {
+            assert_eq!(all.lane(l), v < 0xFFFF);
+        }
     }
 
     #[test]
     fn wide_lt_boundary_thresholds() {
-        use crate::sc::rng::planes_from_lanes;
-        let lanes: Vec<u16> = (0..64).map(|l| (l as u16).wrapping_mul(1031)).collect();
-        let planes = planes_from_lanes(&lanes);
-        assert_eq!(wide_lt_const(&planes, 0), 0, "t=0 never fires");
-        let all = wide_lt_const(&planes, 0xFFFF);
-        for (l, &v) in lanes.iter().enumerate() {
-            assert_eq!((all >> l) & 1 == 1, v < 0xFFFF);
-        }
+        crate::for_each_plane_width!(wide_lt_boundary_generic);
     }
 
     #[test]

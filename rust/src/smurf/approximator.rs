@@ -3,8 +3,8 @@
 
 use super::analytic::AnalyticSmurf;
 use super::config::SmurfConfig;
-use super::sim::{BitLevelSmurf, EntropyMode, WIDE_TRIALS_MIN};
-use super::sim_wide::{with_thread_scratch, WideBitLevelSmurf, LANES};
+use super::sim::{BitLevelSmurf, EntropyMode};
+use super::sim_wide::{with_thread_scratch, MaxPlane, WideBitLevelSmurf, LANES, MAX_LANES};
 use crate::synth::functions::TargetFn;
 use crate::synth::synthesize::{synthesize, SynthOptions, SynthResult};
 use crate::util::json::Json;
@@ -79,26 +79,30 @@ impl SmurfApproximator {
     }
 
     /// Monte-Carlo average of `trials` bit-level runs. From
-    /// [`WIDE_TRIALS_MIN`] trials upward this runs on the cached wide
-    /// companion engine (64 trials per pass), bit-identical to averaging
-    /// [`Self::eval_bitstream`] over the same seeds.
+    /// [`WIDE_TRIALS_MIN`](super::sim::WIDE_TRIALS_MIN) trials upward
+    /// this runs on a cached wide companion engine — the 64-lane plane
+    /// up to one `u64` word of
+    /// trials, the widest compiled plane ([`MAX_LANES`] trials per pass)
+    /// beyond it — bit-identical to averaging [`Self::eval_bitstream`]
+    /// over the same seeds. (Same routing as `BitLevelSmurf::eval_avg`,
+    /// to which this delegates.)
     pub fn eval_bitstream_avg(&self, p: &[f64], len: usize, trials: usize, seed: u64) -> f64 {
-        if trials >= WIDE_TRIALS_MIN {
-            let wide = self.sim.wide();
-            with_thread_scratch(|st| wide.eval_avg(p, len, trials, seed, st))
-        } else {
-            self.sim.eval_avg_scalar(p, len, trials, seed)
-        }
+        self.sim.eval_avg(p, len, trials, seed)
     }
 
     /// Batch of distinct points, one seeded bitstream trial each, through
-    /// the wide engine at 64 points per pass. Allocation-free: evaluates
-    /// into `out` (`out.len() == points.len()`) on the thread-local
-    /// scratch. `out[i]` is bit-exact equal to
+    /// the wide engine at [`MAX_LANES`] points per pass (the widest plane
+    /// compiled into the build — 256 lanes, or 512 with the `wide512`
+    /// feature); a batch that fits in one `u64` word of lanes routes to
+    /// the 64-lane companion instead, where the wide plane's extra words
+    /// would idle. Allocation-free: evaluates into `out`
+    /// (`out.len() == points.len()`) on the thread-local scratch.
+    /// `out[i]` is bit-exact equal to
     /// `eval_bitstream(points[i], len, seeds[i])`, so callers get
-    /// identical streams regardless of how a batch is chunked. This is
-    /// the single owner of the 64-lane chunking logic — the coordinator's
-    /// `BitLevel` engine and the NN activation layers route through it.
+    /// identical streams regardless of how a batch is chunked (or which
+    /// plane width chunks it). This is the single owner of the lane
+    /// chunking logic — the coordinator's `BitLevel` engine and the NN
+    /// activation layers route through it.
     pub fn eval_bitstream_points_into(
         &self,
         points: &[&[f64]],
@@ -108,11 +112,25 @@ impl SmurfApproximator {
     ) {
         assert_eq!(points.len(), seeds.len());
         assert_eq!(points.len(), out.len());
+        if points.is_empty() {
+            return;
+        }
+        let mut lane_out = [0.0f64; MAX_LANES];
+        // ≤ one u64 word of points: the 64-lane companion runs the single
+        // pass without the widest plane's idle words (bit-identical
+        // streams, so routing never changes what a caller observes).
+        if points.len() <= LANES {
+            let wide = self.sim.wide64();
+            with_thread_scratch(|st| {
+                wide.eval_points(points, len, seeds, st, &mut lane_out);
+            });
+            out.copy_from_slice(&lane_out[..points.len()]);
+            return;
+        }
         let wide = self.sim.wide();
-        let mut lane_out = [0.0f64; LANES];
         with_thread_scratch(|st| {
-            for (chunk_idx, chunk) in points.chunks(LANES).enumerate() {
-                let base = chunk_idx * LANES;
+            for (chunk_idx, chunk) in points.chunks(MAX_LANES).enumerate() {
+                let base = chunk_idx * MAX_LANES;
                 wide.eval_points(chunk, len, &seeds[base..base + chunk.len()], st, &mut lane_out);
                 out[base..base + chunk.len()].copy_from_slice(&lane_out[..chunk.len()]);
             }
@@ -142,11 +160,11 @@ impl SmurfApproximator {
         &self.sim
     }
 
-    /// Underlying wide (bit-sliced, 64-lane) simulator — the simulator's
-    /// lazily-built cached companion. Callers that want allocation-free
-    /// steady state own the scratch:
+    /// Underlying wide (bit-sliced) simulator at the auto-selected widest
+    /// plane — the simulator's lazily-built cached companion. Callers
+    /// that want allocation-free steady state own the scratch:
     /// `let mut st = approx.wide_simulator().make_run_state();`.
-    pub fn wide_simulator(&self) -> &WideBitLevelSmurf {
+    pub fn wide_simulator(&self) -> &WideBitLevelSmurf<MaxPlane> {
         self.sim.wide()
     }
 
@@ -217,9 +235,10 @@ mod tests {
 
     #[test]
     fn bitstream_avg_matches_scalar_average() {
+        // 2 = scalar route, 8/40 = 64-lane companion, 300 = widest plane.
         let cfg = SmurfConfig::uniform(2, 4);
         let a = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
-        for trials in [2usize, 8, 40] {
+        for trials in [2usize, 8, 40, 300] {
             let fast = a.eval_bitstream_avg(&[0.3, 0.4], 64, trials, 5);
             let slow = a.simulator().eval_avg_scalar(&[0.3, 0.4], 64, trials, 5);
             assert_eq!(fast, slow, "trials={trials}");
@@ -228,17 +247,22 @@ mod tests {
 
     #[test]
     fn bitstream_points_matches_per_point_eval() {
-        // 70 points exercises the 64-lane chunk boundary and the tail.
+        // Batch sizes covering every route: empty (no-op), 40 (64-lane
+        // companion), 70 (widest plane, single chunk) and MAX_LANES + 44
+        // (auto-width chunk boundary + non-multiple tail).
         let cfg = SmurfConfig::uniform(2, 4);
         let a = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
-        let pts: Vec<Vec<f64>> = (0..70)
-            .map(|i| vec![(i % 9) as f64 / 8.0, (i % 5) as f64 / 4.0])
-            .collect();
-        let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
-        let seeds: Vec<u64> = (0..70).map(|i| 0xFACE ^ i as u64).collect();
-        let batch = a.eval_bitstream_points(&refs, 96, &seeds);
-        for (i, p) in refs.iter().enumerate() {
-            assert_eq!(batch[i], a.eval_bitstream(p, 96, seeds[i]), "point {i}");
+        assert!(a.eval_bitstream_points(&[], 96, &[]).is_empty());
+        for n in [40usize, 70, MAX_LANES + 44] {
+            let pts: Vec<Vec<f64>> = (0..n)
+                .map(|i| vec![(i % 9) as f64 / 8.0, (i % 5) as f64 / 4.0])
+                .collect();
+            let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
+            let seeds: Vec<u64> = (0..n).map(|i| 0xFACE ^ i as u64).collect();
+            let batch = a.eval_bitstream_points(&refs, 96, &seeds);
+            for (i, p) in refs.iter().enumerate() {
+                assert_eq!(batch[i], a.eval_bitstream(p, 96, seeds[i]), "n={n} point {i}");
+            }
         }
     }
 

@@ -11,8 +11,10 @@
 //!   θ-gates, M chained FSMs, CPT-gate, output counter — gate-for-gate the
 //!   paper's RTL, with the single-RNG delayed-branch entropy wiring.
 //! - [`sim_wide`] — the bit-sliced wide engine: the same Fig. 6 pipeline
-//!   run 64 independent trials (or batch points) per clock using bit-plane
-//!   arithmetic; lane-for-lane bit-exact with [`sim`] given matched seeds.
+//!   run 64/256/512 independent trials (or batch points) per clock using
+//!   bit-plane arithmetic over a generic
+//!   [`BitPlane`](crate::sc::plane::BitPlane) word; lane-for-lane
+//!   bit-exact with [`sim`] given matched seeds at every width.
 //! - [`approximator`] — synthesis + evaluation façade.
 
 pub mod analytic;

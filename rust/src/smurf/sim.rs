@@ -13,7 +13,9 @@
 
 use super::analytic::AnalyticSmurf;
 use super::config::SmurfConfig;
-use super::sim_wide::{with_thread_scratch, WideBitLevelSmurf};
+use super::sim_wide::{
+    with_thread_scratch, MaxPlane, ThreadScratch, WideBitLevelSmurf, LANES,
+};
 use crate::fsm::chain::ChainFsm;
 use crate::sc::cpt::CptGate;
 use crate::sc::rng::{Lfsr16, Sobol, StreamRng, XorShift64};
@@ -52,14 +54,45 @@ pub struct BitLevelSmurf {
     /// Lazily-built bit-sliced companion engine, shared by every
     /// multi-trial estimator call on this instance (previously rebuilt
     /// per `eval_avg`/`abs_error` call — the ROADMAP "amortize `eval_avg`
-    /// engine construction" item).
-    wide: OnceLock<WideBitLevelSmurf>,
+    /// engine construction" item). Runs at the widest plane compiled into
+    /// the build ([`MaxPlane`]: 256 lanes, or 512 with `wide512`) — the
+    /// result is bit-identical at every width, only throughput changes.
+    wide: OnceLock<WideBitLevelSmurf<MaxPlane>>,
+    /// 64-lane (`u64`-plane) companion for jobs of ≤ [`LANES`] lanes,
+    /// where the widest plane's extra words would all idle (the
+    /// `WIDE_*_MIN` thresholds were tuned against the 64-lane pass
+    /// cost). Same streams bit-exactly — routing never changes results.
+    wide64: OnceLock<WideBitLevelSmurf<u64>>,
 }
 
 /// Trial count at or above which the batch estimators route through the
 /// bit-sliced wide engine ([`crate::smurf::sim_wide::WideBitLevelSmurf`]).
 /// Below this the fixed 64-lane word cost is not amortized.
 pub const WIDE_TRIALS_MIN: usize = 8;
+
+/// Which estimator a routed wide job runs (see
+/// [`BitLevelSmurf::eval_avg`] / [`BitLevelSmurf::abs_error`]).
+#[derive(Clone, Copy)]
+enum EstimatorOp {
+    Avg,
+    AbsError(f64),
+}
+
+/// Run one estimator op on a wide engine of any plane width, on that
+/// width's thread scratch.
+fn run_estimator<P: ThreadScratch>(
+    wide: &WideBitLevelSmurf<P>,
+    p: &[f64],
+    len: usize,
+    trials: usize,
+    seed: u64,
+    op: EstimatorOp,
+) -> f64 {
+    with_thread_scratch(|st| match op {
+        EstimatorOp::Avg => wide.eval_avg(p, len, trials, seed, st),
+        EstimatorOp::AbsError(target) => wide.abs_error(p, target, len, trials, seed, st),
+    })
+}
 
 /// Devirtualized entropy source (§Perf: the simulator ticks every θ-gate
 /// every cycle, so `Box<dyn StreamRng>` indirect calls were ~20% of the
@@ -97,7 +130,14 @@ impl BitLevelSmurf {
     pub fn new(cfg: SmurfConfig, w: &[f64], mode: EntropyMode) -> Self {
         assert_eq!(w.len(), cfg.num_aggregate_states());
         let strides = cfg.strides();
-        Self { cfg, cpt: CptGate::new(w), mode, strides, wide: OnceLock::new() }
+        Self {
+            cfg,
+            cpt: CptGate::new(w),
+            mode,
+            strides,
+            wide: OnceLock::new(),
+            wide64: OnceLock::new(),
+        }
     }
 
     /// Build from an analytic instance (same coefficients).
@@ -121,10 +161,18 @@ impl BitLevelSmurf {
     }
 
     /// The cached bit-sliced companion engine (identical coefficients and
-    /// entropy wiring), built on first use and reused for the life of
-    /// this instance.
-    pub fn wide(&self) -> &WideBitLevelSmurf {
+    /// entropy wiring) at the auto-selected widest plane, built on first
+    /// use and reused for the life of this instance.
+    pub fn wide(&self) -> &WideBitLevelSmurf<MaxPlane> {
         self.wide.get_or_init(|| WideBitLevelSmurf::from_scalar(self))
+    }
+
+    /// The cached 64-lane (`u64`-plane) companion — the right engine when
+    /// a job fills at most one `u64` word of lanes, where [`Self::wide`]'s
+    /// extra plane words would idle. Bit-identical streams to every other
+    /// width.
+    pub fn wide64(&self) -> &WideBitLevelSmurf<u64> {
+        self.wide64.get_or_init(|| WideBitLevelSmurf::from_scalar(self))
     }
 
     fn make_state(&self, seed: u64) -> RunState {
@@ -228,14 +276,16 @@ impl BitLevelSmurf {
     /// estimator the accuracy figures (7–10) report.
     ///
     /// At [`WIDE_TRIALS_MIN`] trials or more this routes through the
-    /// bit-sliced wide engine (64 trials per pass); the result is
-    /// bit-identical to the scalar loop — same per-trial seeds, same
-    /// summation order — just ~an order of magnitude faster.
+    /// bit-sliced wide engine — the 64-lane companion up to one `u64`
+    /// word of trials, the widest compiled plane
+    /// ([`crate::smurf::sim_wide::MAX_LANES`] trials per pass) beyond —
+    /// and the result is bit-identical to the scalar loop — same
+    /// per-trial seeds, same summation order — just ~an order of
+    /// magnitude faster.
     pub fn eval_avg(&self, p: &[f64], len: usize, trials: usize, seed: u64) -> f64 {
         assert!(trials > 0);
         if trials >= WIDE_TRIALS_MIN {
-            let wide = self.wide();
-            return with_thread_scratch(|st| wide.eval_avg(p, len, trials, seed, st));
+            return self.estimate_routed(p, len, trials, seed, EstimatorOp::Avg);
         }
         self.eval_avg_scalar(p, len, trials, seed)
     }
@@ -264,10 +314,30 @@ impl BitLevelSmurf {
     pub fn abs_error(&self, p: &[f64], target: f64, len: usize, trials: usize, seed: u64) -> f64 {
         assert!(trials > 0);
         if trials >= WIDE_TRIALS_MIN {
-            let wide = self.wide();
-            return with_thread_scratch(|st| wide.abs_error(p, target, len, trials, seed, st));
+            return self.estimate_routed(p, len, trials, seed, EstimatorOp::AbsError(target));
         }
         self.abs_error_scalar(p, target, len, trials, seed)
+    }
+
+    /// The single wide-routing policy for both estimators: jobs of at
+    /// most one `u64` word of trials run on the 64-lane companion (the
+    /// widest plane's extra words would idle — [`WIDE_TRIALS_MIN`] was
+    /// tuned against the 64-lane pass cost), larger jobs on the widest
+    /// compiled plane. Both engines produce bit-identical streams, so
+    /// the route never changes the result.
+    fn estimate_routed(
+        &self,
+        p: &[f64],
+        len: usize,
+        trials: usize,
+        seed: u64,
+        op: EstimatorOp,
+    ) -> f64 {
+        if trials <= LANES {
+            run_estimator(self.wide64(), p, len, trials, seed, op)
+        } else {
+            run_estimator(self.wide(), p, len, trials, seed, op)
+        }
     }
 
     /// Scalar reference for [`Self::abs_error`] (see `eval_avg_scalar`).
@@ -404,15 +474,23 @@ mod tests {
         let a: *const _ = s.wide();
         let b: *const _ = s.wide();
         assert_eq!(a, b, "OnceLock must build the wide companion once");
-        // The routed estimator stays bit-identical to the scalar loop.
-        assert_eq!(
-            s.eval_avg(&[0.3, 0.4], 64, 16, 5),
-            s.eval_avg_scalar(&[0.3, 0.4], 64, 16, 5)
-        );
-        assert_eq!(
-            s.abs_error(&[0.3, 0.4], 0.5, 64, 16, 5),
-            s.abs_error_scalar(&[0.3, 0.4], 0.5, 64, 16, 5)
-        );
+        let a64: *const _ = s.wide64();
+        let b64: *const _ = s.wide64();
+        assert_eq!(a64, b64, "OnceLock must build the 64-lane companion once");
+        // The routed estimator stays bit-identical to the scalar loop on
+        // both routes: T=16 (64-lane companion) and T=100 (widest plane).
+        for trials in [16usize, 100] {
+            assert_eq!(
+                s.eval_avg(&[0.3, 0.4], 64, trials, 5),
+                s.eval_avg_scalar(&[0.3, 0.4], 64, trials, 5),
+                "trials={trials}"
+            );
+            assert_eq!(
+                s.abs_error(&[0.3, 0.4], 0.5, 64, trials, 5),
+                s.abs_error_scalar(&[0.3, 0.4], 0.5, 64, trials, 5),
+                "trials={trials}"
+            );
+        }
     }
 
     #[test]

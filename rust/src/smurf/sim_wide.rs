@@ -1,5 +1,6 @@
-//! Wide (bit-sliced) SMURF simulator: 64 independent bitstream trials per
-//! clock cycle.
+//! Wide (bit-sliced) SMURF simulator: `P::LANES` independent bitstream
+//! trials per clock cycle (64, 256 or 512 — see *The plane abstraction*
+//! below).
 //!
 //! # The bit-slicing scheme
 //!
@@ -9,24 +10,24 @@
 //! bits make the FSM branches ~50% mispredicted. SC bitstreams are the
 //! canonical bit-parallel workload, so this engine transposes the problem:
 //! every 16-bit datapath word is stored as 16 *bit planes*, where plane
-//! `b` is a `u64` whose bit `l` belongs to lane (= trial or batch point)
-//! `l`. All 64 lanes then move through one clock of the whole
-//! comparator → FSM → CPT pipeline in a few dozen branch-free word ops.
+//! `b` is a word whose lane `l` belongs to lane (= trial or batch point)
+//! `l`. All lanes then move through one clock of the whole
+//! comparator → FSM → CPT pipeline in a few dozen branch-free plane ops.
 //!
 //! Mapping back to the Fig. 6 blocks:
 //!
 //! - **RNG + delayed branches (§III-A)** — [`crate::sc::rng::WideLfsr16`]
 //!   keeps the 16 LFSR register bits as planes in a ring buffer; one clock
-//!   of all 64 lanes is "compute the feedback plane, rotate the head".
+//!   of all lanes is "compute the feedback plane, rotate the head".
 //!   Per-lane branch delays are applied at seed time with the GF(2) jump
 //!   basis ([`crate::sc::rng::Lfsr16::jump_basis`]). Sobol output sampling
 //!   is a plane ripple-carry counter read in bit-reversed plane order;
 //!   xorshift64* lanes step scalarly (the 64-bit multiply does not slice)
 //!   but still feed the packed pipeline.
 //! - **Input θ-gates** — a 16-bit `rand < threshold` compare is folded
-//!   MSB-first over the planes ([`crate::sc::sng::wide_lt_const`]): ~2 word
-//!   ops per plane yield all 64 verdicts, i.e. the M comparator columns of
-//!   Fig. 6 run 64 trials at a time.
+//!   MSB-first over the planes ([`crate::sc::sng::wide_lt_const`]): ~2
+//!   plane ops per bit yield every lane's verdict, i.e. the M comparator
+//!   columns of Fig. 6 run `P::LANES` trials at a time.
 //! - **Chained N-state FSMs** — [`crate::fsm::chain_wide::WideChainFsm`]
 //!   holds each chain's state index as `ceil(log2 N)` planes; a clock edge
 //!   is a masked ripple-carry **saturating add** (lanes whose input bit is
@@ -37,20 +38,53 @@
 //!   lanes whose codeword selects coefficient `w_t`. The CPT-gate ORs each
 //!   coefficient's threshold bits into shared planes under its `eq[t]`
 //!   mask ([`crate::sc::cpt::CptGate::threshold_planes`]) — the AND-OR MUX
-//!   tree of Fig. 6 in word form — and one plane-vs-plane compare
-//!   ([`crate::sc::sng::wide_lt_planes`]) samples all 64 output bits.
+//!   tree of Fig. 6 in plane form — and one plane-vs-plane compare
+//!   ([`crate::sc::sng::wide_lt_planes`]) samples every lane's output bit.
 //! - **Output counter** — output masks accumulate into a *vertical
 //!   counter* (one plane per count bit, ripple carry), so per-cycle cost
 //!   is O(1) amortized; per-lane totals are read out once at the end.
 //!
 //! Lanes are fully independent, so the engine serves two shapes through
-//! the same core: `eval_trials` (one input point, up to 64 Monte-Carlo
-//! trials — the [`eval_avg`](WideBitLevelSmurf::eval_avg) estimator) and
-//! `eval_points` (up to 64 distinct batch points, one trial each — the
-//! coordinator's `Engine::BitLevel` path). Both are bit-exact matches of
-//! the scalar simulator lane-for-lane given the same per-lane seeds: same
-//! LFSR branch delays, same xorshift seeding formula, same Sobol counter
-//! phase, same θ-gate quantization, same within-cycle ordering.
+//! the same core: `eval_trials` (one input point, up to `P::LANES`
+//! Monte-Carlo trials — the [`eval_avg`](WideBitLevelSmurf::eval_avg)
+//! estimator) and `eval_points` (up to `P::LANES` distinct batch points,
+//! one trial each — the coordinator's `Engine::BitLevel` path). Both are
+//! bit-exact matches of the scalar simulator lane-for-lane given the same
+//! per-lane seeds: same LFSR branch delays, same xorshift seeding formula,
+//! same Sobol counter phase, same θ-gate quantization, same within-cycle
+//! ordering.
+//!
+//! # The plane abstraction
+//!
+//! Every operation above is lane-wise boolean algebra, so the plane type
+//! is a trait — [`crate::sc::plane::BitPlane`] — and the entire pipeline
+//! (entropy lanes, comparators, chain FSMs, CPT MUX, vertical counters,
+//! this simulator) is generic over it. `P` defaults to `u64` (64 lanes,
+//! the PR 1 engine, public behavior unchanged); `[u64; 4]` carries 256
+//! lanes as straight-line array ops that LLVM autovectorizes to AVX2 /
+//! NEON, and `[u64; 8]` (cargo feature `wide512`) carries 512 for
+//! AVX-512 targets. [`MaxPlane`] names the widest plane compiled into
+//! the build; the batch entry points
+//! ([`crate::smurf::approximator::SmurfApproximator::eval_bitstream_points_into`],
+//! `SmurfActivation::eval_bitlevel_batch`, the coordinator's `BitLevel`
+//! chunking) pick it automatically and chunk work by
+//! [`MAX_LANES`]` = MaxPlane::LANES`.
+//!
+//! **Adding a width** is four one-line steps: implement `BitPlane` for
+//! the new word (see `impl_bitplane_words!` in [`crate::sc::plane`]),
+//! give it a thread scratch with the `impl_thread_scratch!` line below,
+//! register it in `for_each_plane_width!` (which fans every
+//! width-parametric test suite out over it), and add per-width `#[test]`
+//! wrappers to the lane-equivalence suite in this module. Nothing else
+//! changes — no engine code mentions a concrete plane type.
+//!
+//! **Tail masking.** A run of `k < P::LANES` lanes never masks planes:
+//! idle lanes are seeded to the LFSR all-zeros fixpoint (or simply have
+//! no xorshift generator), their FSM/counter bits compute garbage
+//! harmlessly, and the readout loop only decodes the first `k` lanes —
+//! exactly the convention the 64-lane engine has used since PR 1, now at
+//! every width. Callers chunk a batch by `P::LANES` and pass the
+//! partially-filled tail as a short `seeds`/`points` slice.
 //!
 //! All scratch state lives in a caller-owned [`WideRunState`], so repeated
 //! evaluations are allocation-free end-to-end.
@@ -59,32 +93,50 @@ use super::config::SmurfConfig;
 use super::sim::{BitLevelSmurf, EntropyMode};
 use crate::fsm::chain_wide::WideChainFsm;
 use crate::sc::cpt::CptGate;
-use crate::sc::rng::{Lfsr16, WideLfsr16, WideSobol16, WideXorShift64};
+use crate::sc::plane::BitPlane;
+use crate::sc::rng::{planes_from_lanes, Lfsr16, WideLfsr16, WideSobol16, WideXorShift64};
 use crate::sc::sng::{wide_lt_planes, ThetaGate};
 
 /// Max count-bit planes in the output counter: supports `len < 2^40`.
 const COUNT_PLANES: usize = 41;
 
-/// Hardware lane width: one trial per bit of a `u64` word.
+/// Lane count of the default (`u64`) plane. Kept for callers that reason
+/// about the base word width; batch chunking should use [`MAX_LANES`].
 pub const LANES: usize = 64;
 
+/// The widest [`BitPlane`] compiled into this build: `[u64; 8]`
+/// (512 lanes) with the `wide512` cargo feature, `[u64; 4]` (256 lanes)
+/// otherwise. The batch entry points pick this plane automatically; the
+/// default `u64` engine remains available for callers that name it.
+#[cfg(feature = "wide512")]
+pub type MaxPlane = [u64; 8];
+/// The widest [`BitPlane`] compiled into this build: `[u64; 8]`
+/// (512 lanes) with the `wide512` cargo feature, `[u64; 4]` (256 lanes)
+/// otherwise. The batch entry points pick this plane automatically; the
+/// default `u64` engine remains available for callers that name it.
+#[cfg(not(feature = "wide512"))]
+pub type MaxPlane = [u64; 4];
+
+/// Lane count of [`MaxPlane`] — the chunk size of every auto-width batch
+/// entry point.
+pub const MAX_LANES: usize = <MaxPlane as BitPlane>::LANES;
+
 /// Devirtualized wide entropy source (mirrors the scalar `RngKind`).
-// The xorshift variant inlines its 64 scalar lanes (~0.5 KiB) so reseeding
-// allocates nothing; boxing it to shrink the enum would put a heap
-// allocation back on the per-eval reset path.
-#[allow(clippy::large_enum_variant)]
+// The xorshift lanes are heap-backed inside `WideXorShift64` (reseeded in
+// place), so the three variants are of comparable size — the PR 2
+// `allow(large_enum_variant)` is gone with the inline 64-lane array.
 #[derive(Clone, Debug)]
-enum WideRng {
-    Lfsr(WideLfsr16),
-    Xor(WideXorShift64),
-    Sobol(WideSobol16),
+enum WideRng<P: BitPlane> {
+    Lfsr(WideLfsr16<P>),
+    Xor(WideXorShift64<P>),
+    Sobol(WideSobol16<P>),
 }
 
-impl WideRng {
+impl<P: BitPlane> WideRng<P> {
     /// One clock for all lanes, then the comparator mask against a
     /// threshold shared by every lane.
     #[inline(always)]
-    fn next_lt_const(&mut self, threshold: u16) -> u64 {
+    fn next_lt_const(&mut self, threshold: u16) -> P {
         match self {
             WideRng::Lfsr(r) => r.next_lt_const(threshold),
             WideRng::Xor(r) => r.next_lt_const(threshold),
@@ -94,7 +146,7 @@ impl WideRng {
 
     /// One clock for all lanes, materializing this cycle's rand planes.
     #[inline(always)]
-    fn next_planes_into(&mut self, out: &mut [u64; 16]) {
+    fn next_planes_into(&mut self, out: &mut [P; 16]) {
         match self {
             WideRng::Lfsr(r) => r.next_planes_into(out),
             WideRng::Xor(r) => r.next_planes_into(out),
@@ -103,12 +155,41 @@ impl WideRng {
     }
 }
 
+/// Reseed a scratch slot as an LFSR bank in place; the slot is only
+/// reconstructed when the scratch last served a different entropy mode.
+fn set_lfsr<P: BitPlane>(slot: &mut WideRng<P>, states: &[u16]) {
+    if let WideRng::Lfsr(r) = slot {
+        r.reseed(states);
+    } else {
+        *slot = WideRng::Lfsr(WideLfsr16::from_lane_states(states));
+    }
+}
+
+/// Reseed a scratch slot as a xorshift bank in place (reuses the heap
+/// lane buffer — the allocation-free steady-state path).
+fn set_xor<P: BitPlane>(slot: &mut WideRng<P>, seeds: &[u64]) {
+    if let WideRng::Xor(r) = slot {
+        r.reseed(seeds);
+    } else {
+        *slot = WideRng::Xor(WideXorShift64::from_seeds(seeds));
+    }
+}
+
+/// Reseed a scratch slot as a Sobol counter bank in place.
+fn set_sobol<P: BitPlane>(slot: &mut WideRng<P>, counters: &[u16]) {
+    if let WideRng::Sobol(r) = slot {
+        r.reseed(counters);
+    } else {
+        *slot = WideRng::Sobol(WideSobol16::from_lane_counters(counters));
+    }
+}
+
 /// Per-input-gate threshold: one shared value (`eval_trials` — every lane
 /// evaluates the same point) or per-lane planes (`eval_points`).
 #[derive(Clone, Debug)]
-enum GateThreshold {
+enum GateThreshold<P: BitPlane> {
     Shared(u16),
-    PerLane([u64; 16]),
+    PerLane([P; 16]),
 }
 
 /// Caller-owned scratch for wide evaluations. Construct with
@@ -118,21 +199,29 @@ enum GateThreshold {
 /// configurations: each eval entry point resizes the per-configuration
 /// buffers to fit before running (allocation-free once warmed to the
 /// largest configuration seen).
-pub struct WideRunState {
-    fsms: Vec<WideChainFsm>,
-    input_rngs: Vec<WideRng>,
-    cpt_rng: WideRng,
-    gate_thresholds: Vec<GateThreshold>,
+pub struct WideRunState<P: BitPlane = u64> {
+    fsms: Vec<WideChainFsm<P>>,
+    input_rngs: Vec<WideRng<P>>,
+    cpt_rng: WideRng<P>,
+    gate_thresholds: Vec<GateThreshold<P>>,
     /// Per-variable one-hot digit masks, flattened (`digit_offsets`).
-    digit_masks: Vec<u64>,
+    digit_masks: Vec<P>,
     /// Per-coefficient select masks (`eq[t]` = lanes selecting `w_t`).
-    eq: Vec<u64>,
-    rand_planes: [u64; 16],
-    thresh_planes: [u64; 16],
-    count_planes: [u64; COUNT_PLANES],
+    eq: Vec<P>,
+    rand_planes: [P; 16],
+    thresh_planes: [P; 16],
+    count_planes: [P; COUNT_PLANES],
+    /// Reseed staging: per-lane 16-bit LFSR states / Sobol counters.
+    lane_u16: Vec<u16>,
+    /// Reseed staging: per-lane xorshift seeds.
+    lane_u64: Vec<u64>,
+    /// Estimator staging: per-chunk trial seeds (`eval_avg`/`abs_error`).
+    seed_stage: Vec<u64>,
+    /// Estimator staging: per-chunk lane outputs.
+    out_stage: Vec<f64>,
 }
 
-impl WideRunState {
+impl<P: BitPlane> WideRunState<P> {
     /// Empty scratch; buffers grow (and shrink) to fit whichever engine
     /// uses it next, so one instance can be shared across functions of
     /// different arities/radices.
@@ -144,39 +233,70 @@ impl WideRunState {
             gate_thresholds: Vec::new(),
             digit_masks: Vec::new(),
             eq: Vec::new(),
-            rand_planes: [0; 16],
-            thresh_planes: [0; 16],
-            count_planes: [0; COUNT_PLANES],
+            rand_planes: [P::zero(); 16],
+            thresh_planes: [P::zero(); 16],
+            count_planes: [P::zero(); COUNT_PLANES],
+            lane_u16: Vec::new(),
+            lane_u64: Vec::new(),
+            seed_stage: Vec::new(),
+            out_stage: Vec::new(),
         }
     }
 }
 
-impl Default for WideRunState {
+impl<P: BitPlane> Default for WideRunState<P> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-thread_local! {
-    static THREAD_SCRATCH: std::cell::RefCell<WideRunState> =
-        std::cell::RefCell::new(WideRunState::new());
+/// Plane widths that own a per-thread [`WideRunState`] scratch. One
+/// thread-local static exists per width (they cannot share one: the
+/// scratch type is width-parametric), created on first use.
+pub trait ThreadScratch: BitPlane {
+    /// Run `f` with this thread's shared scratch for this plane width.
+    /// Do not call reentrantly from inside `f` — the scratch is a
+    /// `RefCell` and a nested borrow panics.
+    fn with_scratch<R>(f: impl FnOnce(&mut WideRunState<Self>) -> R) -> R;
 }
 
-/// Run `f` with this thread's shared [`WideRunState`] scratch. The
-/// buffers persist for the life of the thread, so repeated evaluations
-/// (the coordinator's per-worker batches, the estimator routing in
-/// `BitLevelSmurf::eval_avg`, the NN activation layers) are
-/// allocation-free after the first call without every caller owning its
-/// own state. Do not call it reentrantly from inside `f` — the scratch is
-/// a `RefCell` and a nested borrow panics.
-pub fn with_thread_scratch<R>(f: impl FnOnce(&mut WideRunState) -> R) -> R {
-    THREAD_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+macro_rules! impl_thread_scratch {
+    ($ty:ty) => {
+        impl ThreadScratch for $ty {
+            fn with_scratch<R>(f: impl FnOnce(&mut WideRunState<Self>) -> R) -> R {
+                thread_local! {
+                    static SCRATCH: std::cell::RefCell<WideRunState<$ty>> =
+                        std::cell::RefCell::new(WideRunState::new());
+                }
+                SCRATCH.with(|s| f(&mut s.borrow_mut()))
+            }
+        }
+    };
 }
 
-/// Wide bit-sliced SMURF instance. Shares coefficients/entropy semantics
-/// with a scalar [`BitLevelSmurf`]; see the module docs for the scheme.
+impl_thread_scratch!(u64);
+impl_thread_scratch!([u64; 4]);
+#[cfg(feature = "wide512")]
+impl_thread_scratch!([u64; 8]);
+
+/// Run `f` with this thread's shared [`WideRunState`] scratch for the
+/// inferred plane width. The buffers persist for the life of the thread,
+/// so repeated evaluations (the coordinator's per-worker batches, the
+/// estimator routing in `BitLevelSmurf::eval_avg`, the NN activation
+/// layers) are allocation-free after the first call without every caller
+/// owning its own state. Do not call it reentrantly from inside `f` — the
+/// scratch is a `RefCell` and a nested borrow panics.
+pub fn with_thread_scratch<P: ThreadScratch, R>(
+    f: impl FnOnce(&mut WideRunState<P>) -> R,
+) -> R {
+    P::with_scratch(f)
+}
+
+/// Wide bit-sliced SMURF instance over plane type `P` (default: `u64`,
+/// 64 lanes). Shares coefficients/entropy semantics with a scalar
+/// [`BitLevelSmurf`]; see the module docs for the scheme.
 #[derive(Clone, Debug)]
-pub struct WideBitLevelSmurf {
+pub struct WideBitLevelSmurf<P: BitPlane = u64> {
     cfg: SmurfConfig,
     cpt: CptGate,
     mode: EntropyMode,
@@ -186,9 +306,10 @@ pub struct WideBitLevelSmurf {
     digit_offsets: Vec<usize>,
     /// LFSR fast-forward bases for branch delays `17*k`, `k in 0..=M`.
     lfsr_jumps: Vec<[u16; 16]>,
+    _plane: std::marker::PhantomData<P>,
 }
 
-impl WideBitLevelSmurf {
+impl<P: BitPlane> WideBitLevelSmurf<P> {
     pub fn new(cfg: SmurfConfig, w: &[f64], mode: EntropyMode) -> Self {
         assert_eq!(w.len(), cfg.num_aggregate_states());
         Self::from_parts(cfg, CptGate::new(w), mode)
@@ -224,7 +345,15 @@ impl WideBitLevelSmurf {
         // the CPT-gate. Precomputed as GF(2) jumps for O(16) lane seeding.
         const DELAY: usize = 17;
         let lfsr_jumps = (0..=m).map(|k| Lfsr16::jump_basis(DELAY * k)).collect();
-        Self { cfg, cpt, mode, digits, digit_offsets, lfsr_jumps }
+        Self {
+            cfg,
+            cpt,
+            mode,
+            digits,
+            digit_offsets,
+            lfsr_jumps,
+            _plane: std::marker::PhantomData,
+        }
     }
 
     pub fn config(&self) -> &SmurfConfig {
@@ -236,7 +365,7 @@ impl WideBitLevelSmurf {
     }
 
     /// Allocate the reusable scratch buffers for this configuration.
-    pub fn make_run_state(&self) -> WideRunState {
+    pub fn make_run_state(&self) -> WideRunState<P> {
         let mut st = WideRunState::new();
         self.prepare(&mut st);
         st
@@ -245,85 +374,81 @@ impl WideBitLevelSmurf {
     /// Size the per-configuration buffers (idempotent). Every eval entry
     /// point calls this, so any [`WideRunState`] — including one last
     /// used by an engine of a different shape — is valid scratch.
-    fn prepare(&self, st: &mut WideRunState) {
-        st.digit_masks.resize(self.cfg.radices().iter().sum::<usize>(), 0);
-        st.eq.resize(self.cfg.num_aggregate_states(), 0);
+    fn prepare(&self, st: &mut WideRunState<P>) {
+        st.digit_masks.resize(self.cfg.radices().iter().sum::<usize>(), P::zero());
+        st.eq.resize(self.cfg.num_aggregate_states(), P::zero());
     }
 
     /// Seed the entropy lanes exactly like `BitLevelSmurf::make_state`
     /// does per trial: lane `l` reproduces the scalar run with `seeds[l]`.
-    fn reset_entropy(&self, seeds: &[u64], st: &mut WideRunState) {
+    /// Slots are reseeded in place (no allocation in steady state).
+    fn reset_entropy(&self, seeds: &[u64], st: &mut WideRunState<P>) {
         let m = self.cfg.num_vars();
         let lanes = seeds.len();
-        st.input_rngs.clear();
-        let mut lane_states = [0u16; LANES];
+        let WideRunState {
+            fsms,
+            input_rngs,
+            cpt_rng,
+            lane_u16,
+            lane_u64,
+            count_planes,
+            ..
+        } = st;
+        // One persistent slot per input gate; kinds only change when the
+        // scratch moves between engines of different entropy modes.
+        input_rngs.resize_with(m, || WideRng::Sobol(WideSobol16::from_lane_counters(&[])));
+        lane_u16.resize(lanes, 0);
         match self.mode {
             EntropyMode::SharedLfsr => {
                 for k in 0..=m {
                     let basis = &self.lfsr_jumps[k];
                     for (l, &s) in seeds.iter().enumerate() {
                         let base = (s as u16) | 1;
-                        lane_states[l] = Lfsr16::jump(base, basis);
+                        lane_u16[l] = Lfsr16::jump(base, basis);
                     }
-                    let rng = WideRng::Lfsr(WideLfsr16::from_lane_states(
-                        &lane_states[..lanes],
-                    ));
-                    if k < m {
-                        st.input_rngs.push(rng);
-                    } else {
-                        st.cpt_rng = rng;
-                    }
+                    let slot = if k < m { &mut input_rngs[k] } else { &mut *cpt_rng };
+                    set_lfsr(slot, lane_u16);
                 }
             }
             EntropyMode::IndependentXorshift => {
-                let mut lane_seeds = [0u64; LANES];
+                lane_u64.resize(lanes, 0);
                 for k in 0..=m {
                     for (l, &s) in seeds.iter().enumerate() {
-                        lane_seeds[l] = s
+                        lane_u64[l] = s
                             .wrapping_mul(0x9E3779B97F4A7C15)
                             .wrapping_add(k as u64 + 1);
                     }
-                    let rng = WideRng::Xor(WideXorShift64::from_seeds(
-                        &lane_seeds[..lanes],
-                    ));
-                    if k < m {
-                        st.input_rngs.push(rng);
-                    } else {
-                        st.cpt_rng = rng;
-                    }
+                    let slot = if k < m { &mut input_rngs[k] } else { &mut *cpt_rng };
+                    set_xor(slot, lane_u64);
                 }
             }
             EntropyMode::SobolCpt => {
-                for k in 0..m {
+                for (k, slot) in input_rngs.iter_mut().enumerate() {
                     let basis = &self.lfsr_jumps[k];
                     for (l, &s) in seeds.iter().enumerate() {
                         let base = (s as u16) | 1;
-                        lane_states[l] = Lfsr16::jump(base, basis);
+                        lane_u16[l] = Lfsr16::jump(base, basis);
                     }
-                    st.input_rngs.push(WideRng::Lfsr(WideLfsr16::from_lane_states(
-                        &lane_states[..lanes],
-                    )));
+                    set_lfsr(slot, lane_u16);
                 }
                 // Scalar: Sobol::new(seed as u32); only the low 16 counter
                 // bits ever reach the bit-reversed 16-bit output.
                 for (l, &s) in seeds.iter().enumerate() {
-                    lane_states[l] = s as u16;
+                    lane_u16[l] = s as u16;
                 }
-                st.cpt_rng = WideRng::Sobol(WideSobol16::from_lane_counters(
-                    &lane_states[..lanes],
-                ));
+                set_sobol(cpt_rng, lane_u16);
             }
         }
-        st.fsms.clear();
+        fsms.clear();
         for j in 0..m {
-            st.fsms.push(WideChainFsm::centered(self.cfg.radix(j)));
+            fsms.push(WideChainFsm::centered(self.cfg.radix(j)));
         }
-        st.count_planes = [0; COUNT_PLANES];
+        *count_planes = [P::zero(); COUNT_PLANES];
     }
 
-    /// The shared 64-lane core: `len` clocks of the Fig. 6 pipeline, then
+    /// The shared lane core: `len` clocks of the Fig. 6 pipeline, then
     /// per-lane bitstream means for the first `lanes` lanes into `out`.
-    fn run(&self, len: usize, lanes: usize, st: &mut WideRunState, out: &mut [f64]) {
+    fn run(&self, len: usize, lanes: usize, st: &mut WideRunState<P>, out: &mut [f64]) {
         assert!(len > 0, "need at least one clock cycle");
         assert!((len as u64) < (1u64 << (COUNT_PLANES - 1)), "stream too long for counter");
         let m = self.cfg.num_vars();
@@ -338,6 +463,7 @@ impl WideBitLevelSmurf {
             rand_planes,
             thresh_planes,
             count_planes,
+            ..
         } = st;
         for _ in 0..len {
             // 1. Input θ-gates sample this cycle's entropy; 2. FSMs
@@ -361,10 +487,10 @@ impl WideBitLevelSmurf {
             }
             for t in 0..bank {
                 let row = &self.digits[t * m..t * m + m];
-                let mut mask = !0u64;
+                let mut mask = P::ones();
                 for (j, &d) in row.iter().enumerate() {
-                    mask &= digit_masks[self.digit_offsets[j] + d as usize];
-                    if mask == 0 {
+                    mask = mask.and(digit_masks[self.digit_offsets[j] + d as usize]);
+                    if mask.is_zero() {
                         break;
                     }
                 }
@@ -378,10 +504,10 @@ impl WideBitLevelSmurf {
             // 5. Output counter (vertical: one plane per count bit).
             let mut carry = ones;
             let mut b = 0;
-            while carry != 0 {
-                let t = count_planes[b];
-                count_planes[b] = t ^ carry;
-                carry &= t;
+            while !carry.is_zero() {
+                let (sum, c) = count_planes[b].half_add(carry);
+                count_planes[b] = sum;
+                carry = c;
                 b += 1;
             }
         }
@@ -389,24 +515,27 @@ impl WideBitLevelSmurf {
         for (l, o) in out.iter_mut().enumerate().take(lanes) {
             let mut count = 0u64;
             for (b, &p) in count_planes.iter().enumerate() {
-                count |= ((p >> l) & 1) << b;
+                count |= (p.lane(l) as u64) << b;
             }
             *o = count as f64 / len as f64;
         }
     }
 
-    /// Up to 64 Monte-Carlo trials of one input point in a single pass:
-    /// `out[i]` is bit-exact equal to scalar `eval(p, len, seeds[i])`.
+    /// Up to `P::LANES` Monte-Carlo trials of one input point in a single
+    /// pass: `out[i]` is bit-exact equal to scalar `eval(p, len, seeds[i])`.
     pub fn eval_trials(
         &self,
         p: &[f64],
         len: usize,
         seeds: &[u64],
-        st: &mut WideRunState,
+        st: &mut WideRunState<P>,
         out: &mut [f64],
     ) {
         assert_eq!(p.len(), self.cfg.num_vars());
-        assert!(!seeds.is_empty() && seeds.len() <= LANES, "1..=64 trials per pass");
+        assert!(
+            !seeds.is_empty() && seeds.len() <= P::LANES,
+            "1..=P::LANES trials per pass"
+        );
         assert!(out.len() >= seeds.len());
         self.prepare(st);
         st.gate_thresholds.clear();
@@ -417,32 +546,34 @@ impl WideBitLevelSmurf {
         self.run(len, seeds.len(), st, out);
     }
 
-    /// Up to 64 distinct batch points, one bitstream trial each: `out[i]`
-    /// is bit-exact equal to scalar `eval(points[i], len, seeds[i])`.
+    /// Up to `P::LANES` distinct batch points, one bitstream trial each:
+    /// `out[i]` is bit-exact equal to scalar `eval(points[i], len, seeds[i])`.
     /// This is the coordinator's `Engine::BitLevel` batch shape.
     pub fn eval_points(
         &self,
         points: &[&[f64]],
         len: usize,
         seeds: &[u64],
-        st: &mut WideRunState,
+        st: &mut WideRunState<P>,
         out: &mut [f64],
     ) {
         let m = self.cfg.num_vars();
-        assert!(!points.is_empty() && points.len() <= LANES, "1..=64 points per pass");
+        assert!(
+            !points.is_empty() && points.len() <= P::LANES,
+            "1..=P::LANES points per pass"
+        );
         assert_eq!(points.len(), seeds.len());
         assert!(out.len() >= points.len());
         self.prepare(st);
-        let mut lane_t = [0u16; LANES];
+        st.lane_u16.resize(points.len(), 0);
         st.gate_thresholds.clear();
         for j in 0..m {
             for (l, pt) in points.iter().enumerate() {
                 assert_eq!(pt.len(), m, "point arity mismatch");
-                lane_t[l] = ThetaGate::new(pt[j]).raw();
+                st.lane_u16[l] = ThetaGate::new(pt[j]).raw();
             }
-            st.gate_thresholds.push(GateThreshold::PerLane(
-                crate::sc::rng::planes_from_lanes(&lane_t[..points.len()]),
-            ));
+            st.gate_thresholds
+                .push(GateThreshold::PerLane(planes_from_lanes(&st.lane_u16)));
         }
         self.reset_entropy(seeds, st);
         self.run(len, points.len(), st, out);
@@ -450,33 +581,19 @@ impl WideBitLevelSmurf {
 
     /// Monte-Carlo average over `trials` runs — the same estimator (same
     /// per-trial seed derivation, same summation order, bit-identical
-    /// result) as the scalar `BitLevelSmurf::eval_avg`, at 64 trials per
-    /// pass.
+    /// result) as the scalar `BitLevelSmurf::eval_avg`, at `P::LANES`
+    /// trials per pass. Chunking never changes the result: lane order is
+    /// trial order, so the sum is accumulated in scalar trial order at
+    /// every plane width.
     pub fn eval_avg(
         &self,
         p: &[f64],
         len: usize,
         trials: usize,
         seed: u64,
-        st: &mut WideRunState,
+        st: &mut WideRunState<P>,
     ) -> f64 {
-        assert!(trials > 0);
-        let mut seeds = [0u64; LANES];
-        let mut out = [0.0f64; LANES];
-        let mut sum = 0.0;
-        let mut done = 0;
-        while done < trials {
-            let k = (trials - done).min(LANES);
-            for (i, s) in seeds.iter_mut().enumerate().take(k) {
-                *s = seed.wrapping_add((done + i) as u64).wrapping_mul(0x5DEECE66D);
-            }
-            self.eval_trials(p, len, &seeds[..k], st, &mut out);
-            for &y in &out[..k] {
-                sum += y;
-            }
-            done += k;
-        }
-        sum / trials as f64
+        self.estimate(p, len, trials, seed, 0x5DEECE66D, st, |y, sum| *sum += y)
     }
 
     /// Mean absolute error against a target over `trials` runs —
@@ -488,24 +605,50 @@ impl WideBitLevelSmurf {
         len: usize,
         trials: usize,
         seed: u64,
-        st: &mut WideRunState,
+        st: &mut WideRunState<P>,
+    ) -> f64 {
+        self.estimate(p, len, trials, seed, 0x2545F4914F, st, move |y, sum| {
+            *sum += (y - target).abs()
+        })
+    }
+
+    /// Shared chunking loop of the two estimators: derive per-trial seeds
+    /// (`(seed + t) * mult`, the scalar formula), run `P::LANES` trials
+    /// per pass on staging buffers owned by the scratch, fold outputs in
+    /// trial order.
+    #[allow(clippy::too_many_arguments)]
+    fn estimate(
+        &self,
+        p: &[f64],
+        len: usize,
+        trials: usize,
+        seed: u64,
+        mult: u64,
+        st: &mut WideRunState<P>,
+        mut fold: impl FnMut(f64, &mut f64),
     ) -> f64 {
         assert!(trials > 0);
-        let mut seeds = [0u64; LANES];
-        let mut out = [0.0f64; LANES];
+        // Move the staging buffers out so the scratch can be re-borrowed
+        // by eval_trials (capacity is preserved; no steady-state alloc).
+        let mut seeds = std::mem::take(&mut st.seed_stage);
+        let mut out = std::mem::take(&mut st.out_stage);
+        seeds.resize(P::LANES, 0);
+        out.resize(P::LANES, 0.0);
         let mut sum = 0.0;
         let mut done = 0;
         while done < trials {
-            let k = (trials - done).min(LANES);
+            let k = (trials - done).min(P::LANES);
             for (i, s) in seeds.iter_mut().enumerate().take(k) {
-                *s = seed.wrapping_add((done + i) as u64).wrapping_mul(0x2545F4914F);
+                *s = seed.wrapping_add((done + i) as u64).wrapping_mul(mult);
             }
             self.eval_trials(p, len, &seeds[..k], st, &mut out);
             for &y in &out[..k] {
-                sum += (y - target).abs();
+                fold(y, &mut sum);
             }
             done += k;
         }
+        st.seed_stage = seeds;
+        st.out_stage = out;
         sum / trials as f64
     }
 }
@@ -533,14 +676,71 @@ mod tests {
         ]
     }
 
-    /// The tentpole contract: every wide lane equals the scalar simulator
-    /// run with that lane's seed, bit-exactly.
+    /// Engine pairs the width-parametric suite runs over: the paper's
+    /// uniform M=2/N=4 Euclid table and a mixed-radix [3, 5] table
+    /// (non-power-of-2 digit planes).
+    fn test_engines(mode: EntropyMode) -> Vec<BitLevelSmurf> {
+        let mixed_w: Vec<f64> = (0..15).map(|i| (i as f64 + 0.5) / 15.0).collect();
+        vec![
+            BitLevelSmurf::new(SmurfConfig::uniform(2, 4), &euclid_w(), mode),
+            BitLevelSmurf::new(SmurfConfig::new(vec![3, 5]), &mixed_w, mode),
+        ]
+    }
+
+    /// The tentpole contract at width `P`: every wide lane equals the
+    /// scalar simulator run with that lane's seed, bit-exactly — across
+    /// all 3 entropy modes, mixed radices, and partial (non-multiple-of-
+    /// P::LANES) tails.
+    fn lanes_match_scalar_at_width<P: BitPlane>() {
+        for mode in modes() {
+            for scalar in test_engines(mode) {
+                let wide = WideBitLevelSmurf::<P>::from_scalar(&scalar);
+                let mut st = wide.make_run_state();
+                let m = scalar.config().num_vars();
+                let p: Vec<f64> = (0..m).map(|j| 0.25 + 0.35 * j as f64).collect();
+                // Full word, odd tails, single lane, one-past-a-u64-word.
+                for lanes in [P::LANES, P::LANES - 1, 65.min(P::LANES), 7, 1] {
+                    let seeds: Vec<u64> =
+                        (0..lanes as u64).map(|l| l * 0x9E37 + 5).collect();
+                    let mut out = vec![0.0f64; lanes];
+                    wide.eval_trials(&p, 96, &seeds, &mut st, &mut out);
+                    for (l, &s) in seeds.iter().enumerate() {
+                        assert_eq!(
+                            out[l],
+                            scalar.eval(&p, 96, s),
+                            "{mode:?} {} lanes={lanes} l={l}",
+                            scalar.config()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_match_scalar_u64() {
+        lanes_match_scalar_at_width::<u64>();
+    }
+
+    #[test]
+    fn lanes_match_scalar_u64x4() {
+        lanes_match_scalar_at_width::<[u64; 4]>();
+    }
+
+    #[cfg(feature = "wide512")]
+    #[test]
+    fn lanes_match_scalar_u64x8() {
+        lanes_match_scalar_at_width::<[u64; 8]>();
+    }
+
+    /// Randomized variant of the lane contract on the Euclid table (the
+    /// original PR 1 property test, kept at the default width).
     #[test]
     fn prop_lanes_match_scalar_eval() {
         for mode in modes() {
             let cfg = SmurfConfig::uniform(2, 4);
             let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
-            let wide = WideBitLevelSmurf::from_scalar(&scalar);
+            let wide = WideBitLevelSmurf::<u64>::from_scalar(&scalar);
             check(31, 8, &UnitVec { len: 2 }, |p| {
                 let mut st = wide.make_run_state();
                 let seeds: Vec<u64> =
@@ -555,91 +755,118 @@ mod tests {
         }
     }
 
-    #[test]
-    fn partial_lane_counts_match_scalar() {
-        // 1, 7, 33 lanes — unused lanes must not disturb active ones.
-        let cfg = SmurfConfig::uniform(2, 4);
+    /// `eval_points` at width `P`: distinct inputs per lane, one trial
+    /// each, including a tail chunk shape.
+    fn points_match_scalar_at_width<P: BitPlane>() {
         for mode in modes() {
+            let cfg = SmurfConfig::uniform(2, 4);
             let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
-            let wide = WideBitLevelSmurf::from_scalar(&scalar);
+            let wide = WideBitLevelSmurf::<P>::from_scalar(&scalar);
             let mut st = wide.make_run_state();
-            let p = [0.3, 0.7];
-            for lanes in [1usize, 7, 33] {
-                let seeds: Vec<u64> = (0..lanes as u64).map(|l| l * 31 + 5).collect();
-                let mut out = vec![0.0f64; lanes];
-                wide.eval_trials(&p, 64, &seeds, &mut st, &mut out);
-                for (l, &s) in seeds.iter().enumerate() {
-                    assert_eq!(out[l], scalar.eval(&p, 64, s), "{mode:?} lanes={lanes} l={l}");
+            for n in [P::LANES, P::LANES - 3, 5] {
+                let pts: Vec<Vec<f64>> = (0..n)
+                    .map(|i| vec![(i % 8) as f64 / 7.0, (i % 6) as f64 / 5.0])
+                    .collect();
+                let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
+                let seeds: Vec<u64> = (0..n).map(|i| 0x5EED ^ i as u64).collect();
+                let mut out = vec![0.0f64; n];
+                wide.eval_points(&refs, 64, &seeds, &mut st, &mut out);
+                for (i, p) in refs.iter().enumerate() {
+                    assert_eq!(
+                        out[i],
+                        scalar.eval(p, 64, seeds[i]),
+                        "{mode:?} n={n} point {i}"
+                    );
                 }
             }
         }
     }
 
     #[test]
-    fn eval_points_matches_scalar_per_point() {
-        let cfg = SmurfConfig::uniform(2, 4);
-        for mode in modes() {
-            let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
-            let wide = WideBitLevelSmurf::from_scalar(&scalar);
-            let mut st = wide.make_run_state();
-            let pts: Vec<Vec<f64>> = (0..40)
-                .map(|i| vec![(i % 8) as f64 / 7.0, (i / 8) as f64 / 5.0])
-                .collect();
-            let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
-            let seeds: Vec<u64> = (0..40).map(|i| 0x5EED ^ i as u64).collect();
-            let mut out = vec![0.0f64; 40];
-            wide.eval_points(&refs, 64, &seeds, &mut st, &mut out);
-            for (i, p) in refs.iter().enumerate() {
-                assert_eq!(out[i], scalar.eval(p, 64, seeds[i]), "{mode:?} point {i}");
-            }
-        }
+    fn eval_points_matches_scalar_u64() {
+        points_match_scalar_at_width::<u64>();
     }
 
     #[test]
-    fn mixed_radix_lanes_match_scalar() {
-        // Non-power-of-2 radices exercise the general digit plane logic.
-        let cfg = SmurfConfig::new(vec![3, 5]);
-        let w: Vec<f64> = (0..15).map(|i| (i as f64 + 0.5) / 15.0).collect();
+    fn eval_points_matches_scalar_u64x4() {
+        points_match_scalar_at_width::<[u64; 4]>();
+    }
+
+    #[cfg(feature = "wide512")]
+    #[test]
+    fn eval_points_matches_scalar_u64x8() {
+        points_match_scalar_at_width::<[u64; 8]>();
+    }
+
+    /// The estimators must be bit-identical to the scalar reference at
+    /// every width — including trial counts that straddle the chunk
+    /// boundary of the width under test.
+    fn estimators_match_scalar_at_width<P: BitPlane>() {
+        let cfg = SmurfConfig::uniform(2, 4);
         for mode in modes() {
-            let scalar = BitLevelSmurf::new(cfg.clone(), &w, mode);
-            let wide = WideBitLevelSmurf::from_scalar(&scalar);
+            let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
+            let wide = WideBitLevelSmurf::<P>::from_scalar(&scalar);
             let mut st = wide.make_run_state();
-            let p = [0.45, 0.8];
-            let seeds: Vec<u64> = (0..64).map(|l| l as u64 + 100).collect();
-            let mut out = [0.0f64; 64];
-            wide.eval_trials(&p, 128, &seeds, &mut st, &mut out);
-            for (l, &s) in seeds.iter().enumerate() {
-                assert_eq!(out[l], scalar.eval(&p, 128, s), "{mode:?} lane {l}");
+            for trials in [1usize, 8, P::LANES - 1, P::LANES, P::LANES + 5, 2 * P::LANES] {
+                let a = wide.eval_avg(&[0.3, 0.4], 64, trials, 9, &mut st);
+                let b = scalar.eval_avg_scalar(&[0.3, 0.4], 64, trials, 9);
+                assert_eq!(a, b, "{mode:?} trials={trials}");
             }
+            let a = wide.abs_error(&[0.6, 0.2], 0.63, 64, P::LANES + 7, 7, &mut st);
+            let b = scalar.abs_error_scalar(&[0.6, 0.2], 0.63, 64, P::LANES + 7, 7);
+            assert_eq!(a, b, "{mode:?} abs_error");
         }
     }
 
     #[test]
     fn eval_avg_bit_identical_to_scalar_reference() {
+        estimators_match_scalar_at_width::<u64>();
+    }
+
+    #[test]
+    fn eval_avg_bit_identical_u64x4() {
+        estimators_match_scalar_at_width::<[u64; 4]>();
+    }
+
+    #[cfg(feature = "wide512")]
+    #[test]
+    fn eval_avg_bit_identical_u64x8() {
+        estimators_match_scalar_at_width::<[u64; 8]>();
+    }
+
+    /// All compiled widths agree with each other on identical seed sets
+    /// (implied by the scalar contract, but cheap to pin directly).
+    #[test]
+    fn widths_agree_lane_for_lane() {
         let cfg = SmurfConfig::uniform(2, 4);
-        for mode in modes() {
-            let scalar = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
-            let wide = WideBitLevelSmurf::from_scalar(&scalar);
-            let mut st = wide.make_run_state();
-            for trials in [1usize, 8, 32, 64, 100, 130] {
-                let a = wide.eval_avg(&[0.3, 0.4], 64, trials, 9, &mut st);
-                let b = scalar.eval_avg_scalar(&[0.3, 0.4], 64, trials, 9);
-                assert_eq!(a, b, "{mode:?} trials={trials}");
-            }
-            let a = wide.abs_error(&[0.6, 0.2], 0.63, 64, 48, 7, &mut st);
-            let b = scalar.abs_error_scalar(&[0.6, 0.2], 0.63, 64, 48, 7);
-            assert_eq!(a, b, "{mode:?} abs_error");
+        let scalar = BitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
+        let w64 = WideBitLevelSmurf::<u64>::from_scalar(&scalar);
+        let w256 = WideBitLevelSmurf::<[u64; 4]>::from_scalar(&scalar);
+        let seeds: Vec<u64> = (0..64u64).map(|l| l * 31 + 5).collect();
+        let p = [0.3, 0.7];
+        let mut out64 = vec![0.0f64; 64];
+        let mut out256 = vec![0.0f64; 64];
+        w64.eval_trials(&p, 128, &seeds, &mut w64.make_run_state(), &mut out64);
+        w256.eval_trials(&p, 128, &seeds, &mut w256.make_run_state(), &mut out256);
+        assert_eq!(out64, out256);
+        #[cfg(feature = "wide512")]
+        {
+            let w512 = WideBitLevelSmurf::<[u64; 8]>::from_scalar(&scalar);
+            let mut out512 = vec![0.0f64; 64];
+            w512.eval_trials(&p, 128, &seeds, &mut w512.make_run_state(), &mut out512);
+            assert_eq!(out64, out512);
         }
     }
 
     #[test]
     fn long_stream_converges_to_analytic_wide() {
         // Mirror of the scalar `long_stream_converges_to_analytic`, driven
-        // through the wide engine.
+        // through the wide engine at the auto-selected width.
         let cfg = SmurfConfig::uniform(2, 4);
         let w = euclid_w();
         let analytic = AnalyticSmurf::new(cfg.clone(), w.clone());
-        let wide = WideBitLevelSmurf::new(cfg, &w, EntropyMode::IndependentXorshift);
+        let wide =
+            WideBitLevelSmurf::<MaxPlane>::new(cfg, &w, EntropyMode::IndependentXorshift);
         let mut st = wide.make_run_state();
         for p in [[0.3, 0.4], [0.7, 0.2], [0.5, 0.5]] {
             let y_inf = analytic.eval(&p);
@@ -654,10 +881,10 @@ mod tests {
     #[test]
     fn run_state_reuse_across_shapes() {
         // One RunState must serve trials → points → trials without any
-        // cross-contamination.
+        // cross-contamination, at the widest default plane.
         let cfg = SmurfConfig::uniform(2, 4);
         let scalar = BitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
-        let wide = WideBitLevelSmurf::from_scalar(&scalar);
+        let wide = WideBitLevelSmurf::<MaxPlane>::from_scalar(&scalar);
         let mut st = wide.make_run_state();
         let p = [0.25, 0.65];
         let seeds = [3u64, 99, 1234];
@@ -673,23 +900,29 @@ mod tests {
     }
 
     #[test]
-    fn scratch_adapts_across_configs() {
+    fn scratch_adapts_across_configs_and_modes() {
         // One WideRunState (the thread-local sharing shape) must serve
-        // engines of different arity/radix, bit-identically to a
+        // engines of different arity/radix AND different entropy modes
+        // (the in-place reseed slots change kind), bit-identically to a
         // per-engine make_run_state.
         let big_cfg = SmurfConfig::new(vec![3, 5]);
         let big_w: Vec<f64> = (0..15).map(|i| (i as f64 + 0.5) / 15.0).collect();
-        let big = WideBitLevelSmurf::new(big_cfg, &big_w, EntropyMode::SharedLfsr);
-        let small = WideBitLevelSmurf::new(
+        let big = WideBitLevelSmurf::<u64>::new(big_cfg, &big_w, EntropyMode::SharedLfsr);
+        let small = WideBitLevelSmurf::<u64>::new(
             SmurfConfig::uniform(2, 4),
             &euclid_w(),
-            EntropyMode::SharedLfsr,
+            EntropyMode::IndependentXorshift,
+        );
+        let sobol = WideBitLevelSmurf::<u64>::new(
+            SmurfConfig::uniform(2, 4),
+            &euclid_w(),
+            EntropyMode::SobolCpt,
         );
         let mut shared = WideRunState::new();
         let seeds = [1u64, 2, 3];
         let mut got = [0.0f64; 3];
         let mut want = [0.0f64; 3];
-        for engine in [&big, &small, &big] {
+        for engine in [&big, &small, &sobol, &big, &sobol, &small] {
             let p = vec![0.4; engine.config().num_vars()];
             engine.eval_trials(&p, 48, &seeds, &mut shared, &mut got);
             engine.eval_trials(&p, 48, &seeds, &mut engine.make_run_state(), &mut want);
@@ -700,18 +933,22 @@ mod tests {
     #[test]
     fn thread_scratch_matches_owned_state() {
         let cfg = SmurfConfig::uniform(2, 4);
-        let wide = WideBitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SobolCpt);
+        let wide = WideBitLevelSmurf::<u64>::new(cfg.clone(), &euclid_w(), EntropyMode::SobolCpt);
         let mut owned = wide.make_run_state();
         let a = wide.eval_avg(&[0.3, 0.4], 64, 40, 11, &mut owned);
         let b = with_thread_scratch(|st| wide.eval_avg(&[0.3, 0.4], 64, 40, 11, st));
         assert_eq!(a, b);
+        // And the per-width scratches are independent statics.
+        let wide4 = WideBitLevelSmurf::<[u64; 4]>::new(cfg, &euclid_w(), EntropyMode::SobolCpt);
+        let c = with_thread_scratch(|st| wide4.eval_avg(&[0.3, 0.4], 64, 40, 11, st));
+        assert_eq!(a, c);
     }
 
     #[test]
     #[should_panic]
     fn rejects_too_many_lanes() {
         let cfg = SmurfConfig::uniform(2, 4);
-        let wide = WideBitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
+        let wide = WideBitLevelSmurf::<u64>::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
         let mut st = wide.make_run_state();
         let seeds = vec![0u64; 65];
         let mut out = vec![0.0f64; 65];
