@@ -1,6 +1,45 @@
-//! f32 reference layers (the "vanilla CNN" column of Table V).
+//! f32 reference layers (the "vanilla CNN" column of Table V), plus the
+//! layer-granular SC entry points shared with the SC-PwMM forward passes
+//! (the conv tap geometry in [`for_each_valid_tap`], the batched SMURF
+//! activation in [`smurf_activate_inplace`]).
 
 use super::tensor::Tensor;
+
+/// Visit every in-bounds kernel tap of one output pixel `(oy, ox)` of a
+/// stride-1, symmetrically-zero-padded convolution over an `h × w` input:
+/// calls `f(ky, kx, iy, ix)` with the kernel coordinate and the *unpadded*
+/// input coordinate, in `ky`-major order, skipping taps that fall in the
+/// padding. This is the single definition of the tap geometry — the f32
+/// reference conv accumulates through it and the SC-PwMM conv gathers its
+/// per-pixel operand pairs through it, so the two walk products in
+/// exactly the same order (which the SC `Exact` seed discipline makes
+/// load-bearing).
+#[inline]
+#[allow(clippy::too_many_arguments)] // conv geometry is 7 scalars + the visitor
+pub fn for_each_valid_tap(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    pad: usize,
+    oy: usize,
+    ox: usize,
+    mut f: impl FnMut(usize, usize, usize, usize),
+) {
+    for ky in 0..kh {
+        let iy = oy + ky;
+        if iy < pad || iy - pad >= h {
+            continue;
+        }
+        for kx in 0..kw {
+            let ix = ox + kx;
+            if ix < pad || ix - pad >= w {
+                continue;
+            }
+            f(ky, kx, iy - pad, ix - pad);
+        }
+    }
+}
 
 /// 2-D convolution, NCHW, stride 1, symmetric zero padding.
 /// `weight` is `[out_c, in_c, kh, kw]`, `bias` is `[out_c]`.
@@ -18,20 +57,9 @@ pub fn conv2d(x: &Tensor, weight: &Tensor, bias: &[f32], pad: usize) -> Tensor {
                 for ox in 0..ow {
                     let mut acc = bias[oc];
                     for ic in 0..in_c {
-                        for ky in 0..kh {
-                            let iy = oy + ky;
-                            if iy < pad || iy - pad >= h {
-                                continue;
-                            }
-                            for kx in 0..kw {
-                                let ix = ox + kx;
-                                if ix < pad || ix - pad >= w {
-                                    continue;
-                                }
-                                acc += x.at4(b, ic, iy - pad, ix - pad)
-                                    * weight.at4(oc, ic, ky, kx);
-                            }
-                        }
+                        for_each_valid_tap(h, w, kh, kw, pad, oy, ox, |ky, kx, iy, ix| {
+                            acc += x.at4(b, ic, iy, ix) * weight.at4(oc, ic, ky, kx);
+                        });
                     }
                     *y.at4_mut(b, oc, oy, ox) = acc;
                 }
@@ -149,6 +177,29 @@ mod tests {
         let w = Tensor::from_vec(&[1, 2, 1, 1], vec![10.0, 100.0]);
         let y = conv2d(&x, &w, &[0.0], 0);
         assert_eq!(y.data[0], 320.0);
+    }
+
+    #[test]
+    fn valid_tap_geometry() {
+        // 5×5 kernel, pad 2 over 28×28: a corner output pixel sees only
+        // the 3×3 in-bounds taps, an interior pixel all 25.
+        let mut corner = Vec::new();
+        for_each_valid_tap(28, 28, 5, 5, 2, 0, 0, |ky, kx, iy, ix| {
+            corner.push((ky, kx, iy, ix));
+        });
+        assert_eq!(corner.len(), 9);
+        assert_eq!(corner[0], (2, 2, 0, 0));
+        let mut interior = 0;
+        for_each_valid_tap(28, 28, 5, 5, 2, 14, 14, |_, _, _, _| interior += 1);
+        assert_eq!(interior, 25);
+        // No padding: every tap valid, input coords offset by the output.
+        let mut plain = Vec::new();
+        for_each_valid_tap(8, 8, 3, 3, 0, 2, 5, |ky, kx, iy, ix| {
+            plain.push((ky, kx, iy, ix));
+        });
+        assert_eq!(plain.len(), 9);
+        assert_eq!(plain[0], (0, 0, 2, 5));
+        assert_eq!(plain[8], (2, 2, 4, 7));
     }
 
     #[test]

@@ -270,6 +270,18 @@ fn activate(xs: &mut [f32], ops: OpSet, rt: &mut ScRuntime) {
 /// accumulation is binary (APC). Weights are scaled into [-1,1] per layer
 /// and rescaled after accumulation; activations from tanh are already
 /// bipolar, input pixels are in [0,1] ⊂ [-1,1].
+///
+/// The whole output channel's `(x, w)` pairs are gathered into one flat
+/// batch (pixel-major, `ic`-major within a pixel, in the tap order of
+/// [`layers::for_each_valid_tap`] — exactly the order the per-product
+/// loop always used) and run through [`ScContext::mul_bipolar_batch`], so
+/// in `Exact` mode the plane-form PwMM engine ([`crate::sc::pwmm_wide`])
+/// sees near-full lane occupancy even for small kernels (a single conv1
+/// pixel is only 25 products; a channel is thousands). Decoded products
+/// are then segment-summed per pixel, in product order — bit-identical to
+/// per-product `mul_bipolar` accumulation, because the batch consumes
+/// stream seeds positionally and the f32 adds happen in the same order.
+/// The gather buffers are reused across channels.
 pub fn sc_conv2d(
     x: &Tensor,
     weight: &Tensor,
@@ -283,51 +295,71 @@ pub fn sc_conv2d(
     let ow = w + 2 * pad - kw + 1;
     let wscale = weight.data.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
     let mut y = Tensor::zeros(&[n, out_c, oh, ow]);
+    let cap = in_c * kh * kw * oh * ow;
+    let mut xbuf: Vec<f32> = Vec::with_capacity(cap);
+    let mut wbuf: Vec<f32> = Vec::with_capacity(cap);
+    let mut prods: Vec<f32> = Vec::new();
+    let mut counts: Vec<usize> = Vec::with_capacity(oh * ow);
     for b in 0..n {
         for oc in 0..out_c {
+            xbuf.clear();
+            wbuf.clear();
+            counts.clear();
             for oy in 0..oh {
                 for ox in 0..ow {
-                    let mut acc = 0.0f32;
+                    let before = xbuf.len();
                     for ic in 0..in_c {
-                        for ky in 0..kh {
-                            let iy = oy + ky;
-                            if iy < pad || iy - pad >= h {
-                                continue;
-                            }
-                            for kx in 0..kw {
-                                let ix = ox + kx;
-                                if ix < pad || ix - pad >= w {
-                                    continue;
-                                }
-                                acc += ctx.mul_bipolar(
-                                    x.at4(b, ic, iy - pad, ix - pad),
-                                    weight.at4(oc, ic, ky, kx) / wscale,
-                                );
-                            }
-                        }
+                        layers::for_each_valid_tap(h, w, kh, kw, pad, oy, ox, |ky, kx, iy, ix| {
+                            xbuf.push(x.at4(b, ic, iy, ix));
+                            wbuf.push(weight.at4(oc, ic, ky, kx) / wscale);
+                        });
                     }
-                    *y.at4_mut(b, oc, oy, ox) = acc * wscale + bias[oc];
+                    counts.push(xbuf.len() - before);
                 }
+            }
+            prods.resize(xbuf.len(), 0.0);
+            ctx.mul_bipolar_batch(&xbuf, &wbuf, &mut prods);
+            let mut off = 0;
+            for (pix, &cnt) in counts.iter().enumerate() {
+                let mut acc = 0.0f32;
+                for &v in &prods[off..off + cnt] {
+                    acc += v;
+                }
+                off += cnt;
+                *y.at4_mut(b, oc, pix / ow, pix % ow) = acc * wscale + bias[oc];
             }
         }
     }
     y
 }
 
-/// SC-PwMM dense layer with the same scaling discipline.
+/// SC-PwMM dense layer with the same scaling discipline. Like
+/// [`sc_conv2d`], the whole layer's scaled operand pairs (every row
+/// against the shared scaled input vector) are gathered into one flat
+/// batch for [`ScContext::mul_bipolar_batch`] and segment-summed per
+/// output neuron, in product order — full lane occupancy, bit-identical
+/// to the per-product loop.
 pub fn sc_dense(x: &[f32], w: &Tensor, b: &[f32], ctx: &mut ScContext) -> Vec<f32> {
     let (out, inn) = (w.dims[0], w.dims[1]);
     assert_eq!(x.len(), inn);
     let wscale = w.data.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
     let xscale = x.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1.0);
+    let xscaled: Vec<f32> = x.iter().map(|&xi| xi / xscale).collect();
+    let mut xbuf: Vec<f32> = Vec::with_capacity(out * inn);
+    let mut wbuf: Vec<f32> = Vec::with_capacity(out * inn);
+    for _ in 0..out {
+        xbuf.extend_from_slice(&xscaled);
+    }
+    wbuf.extend(w.data.iter().map(|&wi| wi / wscale));
+    let mut prods = vec![0.0f32; out * inn];
+    ctx.mul_bipolar_batch(&xbuf, &wbuf, &mut prods);
     let mut y = vec![0.0f32; out];
-    for o in 0..out {
-        let row = &w.data[o * inn..(o + 1) * inn];
+    for (o, yo) in y.iter_mut().enumerate() {
         let mut acc = 0.0f32;
-        for (&xi, &wi) in x.iter().zip(row) {
-            acc += ctx.mul_bipolar(xi / xscale, wi / wscale);
+        for &v in &prods[o * inn..(o + 1) * inn] {
+            acc += v;
         }
-        y[o] = acc * wscale * xscale + b[o];
+        *yo = acc * wscale * xscale + b[o];
     }
     y
 }
@@ -392,6 +424,130 @@ mod tests {
         let img = vec![0.3f32; 784];
         let mut rt = ScRuntime::bitlevel_config(5);
         assert_eq!(rt.act_fidelity, ActFidelity::BitLevel);
+        let p = net.forward(&img, OpSet::Smurf, Some(&mut rt));
+        assert_eq!(p.len(), 10);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    /// The pre-gather sc_conv2d, verbatim: one scalar `mul_bipolar` per
+    /// product, padding skipped inline. The gathered plane-pipeline conv
+    /// must be bit-identical to this (same products, same seed order).
+    fn sc_conv2d_per_product_reference(
+        x: &Tensor,
+        weight: &Tensor,
+        bias: &[f32],
+        pad: usize,
+        ctx: &mut ScContext,
+    ) -> Tensor {
+        let (n, in_c, h, w) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+        let (out_c, _, kh, kw) =
+            (weight.dims[0], weight.dims[1], weight.dims[2], weight.dims[3]);
+        let oh = h + 2 * pad - kh + 1;
+        let ow = w + 2 * pad - kw + 1;
+        let wscale = weight.data.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
+        let mut y = Tensor::zeros(&[n, out_c, oh, ow]);
+        for b in 0..n {
+            for oc in 0..out_c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0f32;
+                        for ic in 0..in_c {
+                            for ky in 0..kh {
+                                let iy = oy + ky;
+                                if iy < pad || iy - pad >= h {
+                                    continue;
+                                }
+                                for kx in 0..kw {
+                                    let ix = ox + kx;
+                                    if ix < pad || ix - pad >= w {
+                                        continue;
+                                    }
+                                    acc += ctx.mul_bipolar(
+                                        x.at4(b, ic, iy - pad, ix - pad),
+                                        weight.at4(oc, ic, ky, kx) / wscale,
+                                    );
+                                }
+                            }
+                        }
+                        *y.at4_mut(b, oc, oy, ox) = acc * wscale + bias[oc];
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn exact_sc_conv_layer_bit_identical_on_both_paths() {
+        // Table IV CNN smoke: the LeNet conv1 kernel (6@5×5, pad 2) in
+        // Exact mode — once through the gathered plane-pipeline
+        // sc_conv2d, once through the per-product scalar reference. The
+        // layer outputs ("logits" of the conv layer) must be equal,
+        // element for element. A 12×12 input keeps the smoke fast while
+        // still exercising padded corners, edges and interior pixels.
+        let net = LeNet::random(11);
+        let img: Vec<f32> = (0..144).map(|i| ((i * 7) % 97) as f32 / 96.0).collect();
+        let x = Tensor::from_vec(&[1, 1, 12, 12], img);
+        let len = 32;
+        let mut wide_ctx = ScContext::new(len, ScMode::Exact, 99);
+        let got = sc_conv2d(&x, &net.conv1_w, &net.conv1_b, 2, &mut wide_ctx);
+        let mut ref_ctx = ScContext::new(len, ScMode::Exact, 99);
+        let want =
+            sc_conv2d_per_product_reference(&x, &net.conv1_w, &net.conv1_b, 2, &mut ref_ctx);
+        assert_eq!(got.dims, want.dims);
+        assert_eq!(got.data, want.data);
+        // Both contexts consumed the identical entropy.
+        assert_eq!(wide_ctx.stream_seed(), ref_ctx.stream_seed());
+    }
+
+    #[test]
+    fn exact_sc_dense_bit_identical_on_both_paths() {
+        // Dense rows longer than one plane word (300 > MAX_LANES in the
+        // default build) exercise the chunked dot against the scalar
+        // per-product reference.
+        let w = {
+            let mut rng = Pcg::new(13);
+            Tensor::from_vec(
+                &[5, 300],
+                (0..1500).map(|_| rng.range(-0.8, 0.8) as f32).collect(),
+            )
+        };
+        let b: Vec<f32> = (0..5).map(|o| o as f32 / 10.0).collect();
+        let x: Vec<f32> = (0..300).map(|i| ((i * 13) % 61) as f32 / 30.0 - 1.0).collect();
+        let len = 48;
+        let mut wide_ctx = ScContext::new(len, ScMode::Exact, 7);
+        let got = sc_dense(&x, &w, &b, &mut wide_ctx);
+        // Per-product reference: the pre-gather sc_dense, verbatim.
+        let mut ref_ctx = ScContext::new(len, ScMode::Exact, 7);
+        let wscale = w.data.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
+        let xscale = x.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1.0);
+        let mut want = vec![0.0f32; 5];
+        for (o, yo) in want.iter_mut().enumerate() {
+            let row = &w.data[o * 300..(o + 1) * 300];
+            let mut acc = 0.0f32;
+            for (&xi, &wi) in x.iter().zip(row) {
+                acc += ref_ctx.mul_bipolar(xi / xscale, wi / wscale);
+            }
+            *yo = acc * wscale * xscale + b[o];
+        }
+        assert_eq!(got, want);
+        assert_eq!(wide_ctx.stream_seed(), ref_ctx.stream_seed());
+    }
+
+    #[test]
+    fn exact_mode_forward_runs() {
+        // The Exact (bit-faithful) operator set through the whole forward
+        // pass — every conv/dense product now runs in the plane pipeline.
+        // Short streams keep the smoke cheap; validity, not accuracy, is
+        // the assertion.
+        let net = LeNet::random(3);
+        let img = vec![0.3f32; 784];
+        let mut rt = ScRuntime {
+            ctx: ScContext::new(16, ScMode::Exact, 5),
+            act: SmurfActivation::tanh(64, 4),
+            act_rng: Pcg::new(6),
+            act_fidelity: ActFidelity::Stochastic,
+        };
         let p = net.forward(&img, OpSet::Smurf, Some(&mut rt));
         assert_eq!(p.len(), 10);
         assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);

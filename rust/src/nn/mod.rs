@@ -7,7 +7,12 @@
 //!   activations), CNN/SMURF (SC-PwMM conv + SMURF activations).
 //! - [`sc_ops`] — the stochastic operators: SC-PwMM multiplication
 //!   (128-bit streams, exact bit-level or exact-distribution binomial
-//!   sampling), SMURF activation evaluation.
+//!   sampling), SMURF activation evaluation. Both bit-faithful paths are
+//!   layer-granular through the wide engine: `Exact`-mode conv/dense
+//!   products batch up to `MAX_LANES` per bit-plane pass
+//!   ([`crate::sc::pwmm_wide`], product-for-product bit-identical to the
+//!   scalar path), and SMURF activations batch per layer
+//!   ([`sc_ops::SmurfActivation::eval_bitlevel_batch`]).
 //! - [`hartley`] — the Hartley-transform path: cas-kernel computed by
 //!   SMURF (`sin(x₁)cos(x₂)` per Eq. 14–15) vs LUT (CNN/HSC).
 //! - [`train`] — SGD training of the f32 reference network in rust

@@ -5,12 +5,32 @@
 //! (XNOR multiply), with binary-domain accumulation of the decoded
 //! products (APC-style). Two fidelity modes:
 //!
-//! - `Exact`: materialize the packed bitstreams and run the gates —
-//!   bit-faithful, used in tests and spot checks.
+//! - `Exact`: run the actual gates, bit-faithfully. Batched entry points
+//!   ([`ScContext::mul_bipolar_batch`], [`ScContext::dot_bipolar`])
+//!   route through the plane-form engine ([`crate::sc::pwmm_wide`]):
+//!   up to [`MAX_LANES`](crate::smurf::sim_wide::MAX_LANES) products per
+//!   bit-plane pass (lane = product, plane = cycle), product-for-product
+//!   bit-identical to the scalar fallback ([`ScContext::mul_bipolar`],
+//!   which regenerates an allocation-free scratch stream pair per
+//!   product). The CNN conv/dense layers gather their per-pixel products
+//!   into these batches, so `Exact`-fidelity LeNet inference is a
+//!   per-layer plane pipeline end to end.
 //! - `Binomial`: sample the decoded product from its *exact* output
 //!   distribution (`ones ~ Binomial(L, p_match)`), which is statistically
 //!   identical for independent streams and ~100× faster, making full
 //!   test-set evaluation practical. The equivalence is property-tested.
+//!
+//! **Stream-seed discipline (`Exact` mode).** Every product consumes one
+//! stream seed: `stream_seed += `[`STREAM_SEED_STRIDE`] (wrapping), then
+//! operand A streams from `XorShift64::new(stream_seed)` and operand B
+//! from `XorShift64::new(stream_seed ^ `[`B_STREAM_XOR`]`)`. Results
+//! therefore depend on *call order* — the `i`-th product of a context's
+//! life always draws the same entropy, whether it arrives through the
+//! scalar fallback, one big batch, or arbitrarily-chunked batches (the
+//! determinism tests pin this), but inserting or reordering products
+//! shifts every later stream. The batch entry points advance the seed
+//! exactly as the per-product loop would, so gathering can never
+//! silently reorder entropy.
 //!
 //! **SMURF activation**: the synthesized SMURF for tanh at `L = 64`
 //! (paper §IV-A fixes 64-bit streams). Three fidelities:
@@ -30,6 +50,8 @@
 //!   staying element-for-element bit-identical to the scalar path.
 
 use crate::sc::bitstream::Bitstream;
+use crate::sc::plane::MaxPlane;
+use crate::sc::pwmm_wide::{self, B_STREAM_XOR, STREAM_SEED_STRIDE};
 use crate::sc::rng::XorShift64;
 use crate::smurf::approximator::SmurfApproximator;
 use crate::smurf::config::SmurfConfig;
@@ -49,16 +71,40 @@ pub struct ScContext {
     pub mode: ScMode,
     rng: Pcg,
     stream_seed: u64,
+    /// `Exact`-mode scalar-fallback scratch: the two operand streams are
+    /// regenerated into this pair per product, so single multiplies are
+    /// allocation-free in steady state.
+    scratch_a: Bitstream,
+    scratch_b: Bitstream,
 }
 
 impl ScContext {
     pub fn new(len: usize, mode: ScMode, seed: u64) -> Self {
-        Self { len, mode, rng: Pcg::new(seed), stream_seed: seed ^ 0xD1CE }
+        Self {
+            len,
+            mode,
+            rng: Pcg::new(seed),
+            stream_seed: seed ^ 0xD1CE,
+            scratch_a: Bitstream::zeros(0),
+            scratch_b: Bitstream::zeros(0),
+        }
+    }
+
+    /// Current `Exact`-mode stream seed (see the module docs on the seed
+    /// discipline): advances by [`STREAM_SEED_STRIDE`] per product.
+    /// Exposed so benches and tests can pin the discipline against the
+    /// wide engine without replicating private state.
+    pub fn stream_seed(&self) -> u64 {
+        self.stream_seed
     }
 
     /// Bipolar SC multiply of `a, b ∈ [-1, 1]`: returns the decoded
     /// product estimate from an `len`-bit XNOR of two independent
-    /// bipolar streams.
+    /// bipolar streams. This is the scalar path — the `Exact` arm
+    /// regenerates the context's scratch stream pair (no allocation) and
+    /// decodes the XNOR popcount directly; batches of products should
+    /// prefer [`Self::mul_bipolar_batch`] / [`Self::dot_bipolar`], which
+    /// run the identical computation through the plane-form engine.
     pub fn mul_bipolar(&mut self, a: f32, b: f32) -> f32 {
         let a = a.clamp(-1.0, 1.0) as f64;
         let b = b.clamp(-1.0, 1.0) as f64;
@@ -70,24 +116,75 @@ impl ScContext {
                 (2.0 * ones as f64 / self.len as f64 - 1.0) as f32
             }
             ScMode::Exact => {
-                self.stream_seed = self.stream_seed.wrapping_add(0x9E3779B97F4A7C15);
+                self.stream_seed = self.stream_seed.wrapping_add(STREAM_SEED_STRIDE);
                 let mut r1 = XorShift64::new(self.stream_seed);
-                let mut r2 = XorShift64::new(self.stream_seed ^ 0xABCD_EF01_2345_6789);
-                let sa = Bitstream::generate((a + 1.0) / 2.0, self.len, &mut r1);
-                let sb = Bitstream::generate((b + 1.0) / 2.0, self.len, &mut r2);
-                (2.0 * sa.xnor(&sb).mean() - 1.0) as f32
+                let mut r2 = XorShift64::new(self.stream_seed ^ B_STREAM_XOR);
+                let len = self.len;
+                self.scratch_a.generate_into((a + 1.0) / 2.0, len, &mut r1);
+                self.scratch_b.generate_into((b + 1.0) / 2.0, len, &mut r2);
+                let matches = self.scratch_a.xnor_match_count(&self.scratch_b);
+                let mean = if len == 0 { 0.0 } else { matches as f64 / len as f64 };
+                (2.0 * mean - 1.0) as f32
+            }
+        }
+    }
+
+    /// Batched bipolar SC multiply: `out[i]` is bit-identical to the
+    /// `i`-th of `xs.len()` sequential [`Self::mul_bipolar`] calls
+    /// (`Binomial` mode literally loops them; `Exact` mode packs up to
+    /// [`MAX_LANES`](crate::smurf::sim_wide::MAX_LANES) products per
+    /// bit-plane pass of [`crate::sc::pwmm_wide`] on the per-thread
+    /// scratch, advancing the stream seed exactly as the loop would).
+    pub fn mul_bipolar_batch(&mut self, xs: &[f32], ws: &[f32], out: &mut [f32]) {
+        assert_eq!(xs.len(), ws.len(), "operand count mismatch");
+        assert!(out.len() >= xs.len());
+        match self.mode {
+            ScMode::Binomial => {
+                for (o, (&x, &w)) in out.iter_mut().zip(xs.iter().zip(ws)) {
+                    *o = self.mul_bipolar(x, w);
+                }
+            }
+            ScMode::Exact => {
+                let len = self.len;
+                let seed0 = self.stream_seed;
+                // Small batches route to the 64-lane plane: a `u64` pass
+                // costs a fraction of a `MaxPlane` pass's per-cycle word
+                // ops, and a batch that fits one word gains nothing from
+                // the wider plane (the PR 4 `wide64` routing precedent).
+                // Routing never changes results — the widths are
+                // bit-identical product-for-product (property-tested).
+                self.stream_seed = if xs.len() <= 64 {
+                    pwmm_wide::with_thread_scratch::<u64, _>(|st| {
+                        pwmm_wide::mul_bipolar_exact_batch(xs, ws, len, seed0, st, out)
+                    })
+                } else {
+                    pwmm_wide::with_thread_scratch::<MaxPlane, _>(|st| {
+                        pwmm_wide::mul_bipolar_exact_batch(xs, ws, len, seed0, st, out)
+                    })
+                };
             }
         }
     }
 
     /// SC dot product with binary-domain accumulation: each product is an
-    /// independent SC multiply; the decoded values are summed exactly
-    /// (APC adder tree + accumulator in hardware).
+    /// independent SC multiply; the decoded values are summed exactly, in
+    /// product order (APC adder tree + accumulator in hardware).
+    /// Bit-identical to a per-product `mul_bipolar` loop — in `Exact`
+    /// mode it runs [`Self::mul_bipolar_batch`] over
+    /// [`MAX_LANES`](crate::smurf::sim_wide::MAX_LANES)-sized chunks with
+    /// a stack staging buffer (no heap allocation), so the CNN layers get
+    /// the plane pipeline just by handing their gathered operand pairs
+    /// here.
     pub fn dot_bipolar(&mut self, xs: &[f32], ws: &[f32]) -> f32 {
+        use crate::sc::plane::MAX_LANES;
         debug_assert_eq!(xs.len(), ws.len());
+        let mut buf = [0.0f32; MAX_LANES];
         let mut acc = 0.0f32;
-        for (&x, &w) in xs.iter().zip(ws) {
-            acc += self.mul_bipolar(x, w);
+        for (xc, wc) in xs.chunks(MAX_LANES).zip(ws.chunks(MAX_LANES)) {
+            self.mul_bipolar_batch(xc, wc, &mut buf[..xc.len()]);
+            for &v in &buf[..xc.len()] {
+                acc += v;
+            }
         }
         acc
     }
@@ -300,6 +397,101 @@ mod tests {
                 (0..n).map(|_| ctx.mul_bipolar(a, b) as f64).sum::<f64>() / n as f64;
             (mean - (a * b) as f64).abs() < 0.03
         });
+    }
+
+    /// The legacy `Exact` implementation, verbatim: two fresh
+    /// `Bitstream`s and a materialized XNOR decoded via `mean()`. The
+    /// allocation-free scalar path must reproduce it bit-for-bit.
+    fn legacy_exact_product(x: f32, w: f32, len: usize, sseed: u64) -> f32 {
+        let a = x.clamp(-1.0, 1.0) as f64;
+        let b = w.clamp(-1.0, 1.0) as f64;
+        let mut r1 = XorShift64::new(sseed);
+        let mut r2 = XorShift64::new(sseed ^ B_STREAM_XOR);
+        let sa = Bitstream::generate((a + 1.0) / 2.0, len, &mut r1);
+        let sb = Bitstream::generate((b + 1.0) / 2.0, len, &mut r2);
+        (2.0 * sa.xnor(&sb).mean() - 1.0) as f32
+    }
+
+    #[test]
+    fn prop_exact_mul_bipolar_unchanged_bit_for_bit() {
+        // Random operands spanning the clamp region, random seeds and
+        // stream lengths (incl. non-multiples of 64): the scratch-pair
+        // scalar path equals the legacy allocating path exactly.
+        check(61, 48, &UnitVec { len: 3 }, |v| {
+            let x = (v[0] * 4.0 - 2.0) as f32;
+            let w = (v[1] * 4.0 - 2.0) as f32;
+            let seed = v[2].to_bits();
+            let len = 32 + (seed % 97) as usize;
+            let mut ctx = ScContext::new(len, ScMode::Exact, seed);
+            // Two products in a row: both the first-use and the
+            // scratch-reuse shapes.
+            let mut sseed = seed ^ 0xD1CE;
+            (0..2).all(|_| {
+                sseed = sseed.wrapping_add(STREAM_SEED_STRIDE);
+                let want = legacy_exact_product(x, w, len, sseed);
+                ctx.mul_bipolar(x, w).to_bits() == want.to_bits()
+            })
+        });
+    }
+
+    #[test]
+    fn exact_batching_never_reorders_entropy() {
+        // Satellite: the stream-seed discipline. Same seed + same product
+        // sequence ⇒ same streams, however the products are grouped:
+        // per-product loop, one big batch (wide engine), uneven chunked
+        // batches, or the dot-product gather.
+        use crate::sc::plane::MAX_LANES;
+        let n = MAX_LANES + 9;
+        let xs: Vec<f32> = (0..n).map(|i| ((i * 31) % 199) as f32 / 99.0 - 1.0).collect();
+        let ws: Vec<f32> = (0..n).map(|i| 1.0 - ((i * 17) % 193) as f32 / 96.0).collect();
+        let mut c1 = ScContext::new(64, ScMode::Exact, 7);
+        let mut c2 = ScContext::new(64, ScMode::Exact, 7);
+        let mut c3 = ScContext::new(64, ScMode::Exact, 7);
+        let mut c4 = ScContext::new(64, ScMode::Exact, 7);
+        let v1: Vec<f32> =
+            xs.iter().zip(&ws).map(|(&x, &w)| c1.mul_bipolar(x, w)).collect();
+        let mut v2 = vec![0.0f32; n];
+        c2.mul_bipolar_batch(&xs, &ws, &mut v2);
+        let cut = 13;
+        let mut v3 = vec![0.0f32; n];
+        c3.mul_bipolar_batch(&xs[..cut], &ws[..cut], &mut v3[..cut]);
+        c3.mul_bipolar_batch(&xs[cut..], &ws[cut..], &mut v3[cut..]);
+        assert_eq!(v1, v2, "one batch must equal the per-product loop");
+        assert_eq!(v1, v3, "chunked batches must equal the per-product loop");
+        // Each path consumed exactly one seed per product.
+        let want_seed =
+            (7u64 ^ 0xD1CE).wrapping_add((n as u64).wrapping_mul(STREAM_SEED_STRIDE));
+        assert_eq!(c1.stream_seed(), want_seed);
+        assert_eq!(c2.stream_seed(), want_seed);
+        assert_eq!(c3.stream_seed(), want_seed);
+        // The dot product sums those very products, in order.
+        let dot = c4.dot_bipolar(&xs, &ws);
+        let mut acc = 0.0f32;
+        for &v in &v1 {
+            acc += v;
+        }
+        assert_eq!(dot.to_bits(), acc.to_bits());
+        assert_eq!(c4.stream_seed(), want_seed);
+        // And order is load-bearing: a context that ran one extra product
+        // first sits at a different seed, so later streams shift.
+        let mut c5 = ScContext::new(64, ScMode::Exact, 7);
+        let _ = c5.mul_bipolar(0.5, 0.5);
+        assert_ne!(c5.stream_seed(), ScContext::new(64, ScMode::Exact, 7).stream_seed());
+    }
+
+    #[test]
+    fn binomial_batch_matches_loop() {
+        // Binomial mode draws from the context's Pcg sequentially; the
+        // batch entry must consume it identically.
+        let xs = [0.5f32, -0.25, 0.0, 1.0, -1.0, 0.75];
+        let ws = [0.9f32, 0.9, -0.3, -1.0, 0.2, 0.4];
+        let mut c1 = ScContext::new(128, ScMode::Binomial, 3);
+        let mut c2 = ScContext::new(128, ScMode::Binomial, 3);
+        let v1: Vec<f32> =
+            xs.iter().zip(&ws).map(|(&x, &w)| c1.mul_bipolar(x, w)).collect();
+        let mut v2 = vec![0.0f32; xs.len()];
+        c2.mul_bipolar_batch(&xs, &ws, &mut v2);
+        assert_eq!(v1, v2);
     }
 
     #[test]

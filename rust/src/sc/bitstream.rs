@@ -29,8 +29,20 @@ impl Bitstream {
     /// paths). Bit order matches the per-bit reference exactly (LSB of
     /// word 0 is cycle 0).
     pub fn generate(p: f64, len: usize, rng: &mut impl StreamRng) -> Self {
-        let threshold = (p.clamp(0.0, 1.0) * 65536.0).round().min(65535.0) as u16;
-        let mut words = Vec::with_capacity(len.div_ceil(64));
+        let mut s = Self { words: Vec::with_capacity(len.div_ceil(64)), len: 0 };
+        s.generate_into(p, len, rng);
+        s
+    }
+
+    /// [`Self::generate`] into an existing stream, reusing its word
+    /// buffer: the allocation-free regeneration path of the scalar
+    /// `Exact`-mode SC multiply, which re-fills the same scratch pair
+    /// once per product. Bit-for-bit identical to a fresh `generate`
+    /// (property-tested there).
+    pub fn generate_into(&mut self, p: f64, len: usize, rng: &mut impl StreamRng) {
+        let threshold = crate::sc::sng::quantize_threshold(p);
+        self.words.clear();
+        self.len = len;
         let mut remaining = len;
         while remaining > 0 {
             let take = remaining.min(64);
@@ -38,10 +50,9 @@ impl Bitstream {
             for b in 0..take {
                 w |= ((rng.next_u16() < threshold) as u64) << b;
             }
-            words.push(w);
+            self.words.push(w);
             remaining -= take;
         }
-        Self { words, len }
     }
 
     /// Exact-length bit count.
@@ -136,6 +147,26 @@ impl Bitstream {
         };
         out.mask_tail();
         out
+    }
+
+    /// Number of positions where the two streams agree — the popcount of
+    /// [`Self::xnor`] without materializing the XNOR stream (the bipolar
+    /// multiply only ever decodes that stream's popcount, so the scalar
+    /// `Exact` SC-PwMM path stays allocation-free through here). The tail
+    /// of the last word is masked exactly as `xnor` would.
+    pub fn xnor_match_count(&self, other: &Bitstream) -> u64 {
+        assert_eq!(self.len, other.len, "stream length mismatch");
+        let mut ones = 0u64;
+        let last = self.words.len().wrapping_sub(1);
+        let rem = self.len % 64;
+        for (i, (a, b)) in self.words.iter().zip(&other.words).enumerate() {
+            let mut m = !(a ^ b);
+            if i == last && rem != 0 {
+                m &= (1u64 << rem) - 1;
+            }
+            ones += m.count_ones() as u64;
+        }
+        ones
     }
 
     /// Zero any bits at positions >= len (after whole-word inversions).
@@ -237,6 +268,47 @@ mod tests {
             Bitstream::generate(0.42, 1000, &mut r1),
             per_bit_reference(0.42, 1000, &mut r2)
         );
+    }
+
+    #[test]
+    fn generate_into_reuse_equals_fresh_generate() {
+        // One scratch stream regenerated across lengths/probabilities must
+        // match a fresh construction every time (the Exact-mode multiply
+        // reuses a scratch pair like this once per product).
+        let mut scratch = Bitstream::zeros(0);
+        for (p, len, seed) in
+            [(0.7, 4096, 21u64), (0.3, 63, 22), (0.5, 64, 23), (0.0, 1, 24), (1.0, 130, 25)]
+        {
+            let mut r1 = XorShift64::new(seed);
+            let mut r2 = XorShift64::new(seed);
+            scratch.generate_into(p, len, &mut r1);
+            assert_eq!(scratch, Bitstream::generate(p, len, &mut r2), "p={p} len={len}");
+        }
+        // Shrinking reuse: a long stream followed by a short one must not
+        // leave stale words behind.
+        let mut r = XorShift64::new(9);
+        scratch.generate_into(0.4, 10, &mut r);
+        assert_eq!(scratch.len(), 10);
+        assert_eq!(scratch.words().len(), 1);
+    }
+
+    #[test]
+    fn xnor_match_count_equals_materialized_xnor() {
+        for (pa, pb, len) in
+            [(0.7, 0.2, 1000), (0.5, 0.5, 64), (0.9, 0.1, 63), (0.3, 0.8, 129), (0.0, 1.0, 1)]
+        {
+            let mut r1 = XorShift64::new(31);
+            let mut r2 = XorShift64::new(32);
+            let a = Bitstream::generate(pa, len, &mut r1);
+            let b = Bitstream::generate(pb, len, &mut r2);
+            assert_eq!(
+                a.xnor_match_count(&b),
+                a.xnor(&b).popcount(),
+                "pa={pa} pb={pb} len={len}"
+            );
+        }
+        let empty = Bitstream::zeros(0);
+        assert_eq!(empty.xnor_match_count(&Bitstream::zeros(0)), 0);
     }
 
     #[test]

@@ -14,10 +14,15 @@
 //!   select input is, in SMURF, the universal-radix codeword.
 //! - [`plane`] — the [`BitPlane`](plane::BitPlane) trait behind the
 //!   bit-sliced wide engine: 64 (`u64`), 256 (`[u64; 4]`) or 512
-//!   (`[u64; 8]`, feature `wide512`) SIMD lanes per plane word.
+//!   (`[u64; 8]`, feature `wide512`) SIMD lanes per plane word, plus
+//!   [`MaxPlane`](plane::MaxPlane), the widest plane in the build.
+//! - [`pwmm_wide`] — plane-form SC-PwMM: the bipolar XNOR multiply of the
+//!   CNN column run `MaxPlane::LANES` products per pass (lane = product,
+//!   plane = cycle), bit-identical to the scalar `Exact` path.
 
 pub mod bitstream;
 pub mod cpt;
 pub mod plane;
+pub mod pwmm_wide;
 pub mod rng;
 pub mod sng;

@@ -90,6 +90,12 @@ pub trait BitPlane: Copy + Eq + std::fmt::Debug + Send + Sync + 'static {
     /// xorshift lanes).
     fn set_lane(&mut self, l: usize);
 
+    /// Set lane `l`'s bit iff `bit`, branch-free: the comparator pack
+    /// loops (`WideXorShift64::next_lt_lanes` and friends) fold one
+    /// data-dependent compare per lane, and a conditional store would put
+    /// a ~50% mispredicted branch in the hottest loop of the PwMM engine.
+    fn set_lane_if(&mut self, l: usize, bit: bool);
+
     /// Half-adder: `(sum, carry) = (a ^ b, a & b)`. One step of the
     /// carry-save ripple used by the Sobol counter, the chain-FSM masked
     /// increment and the vertical output counter.
@@ -159,6 +165,12 @@ impl BitPlane for u64 {
     fn set_lane(&mut self, l: usize) {
         debug_assert!(l < 64);
         *self |= 1u64 << l;
+    }
+
+    #[inline(always)]
+    fn set_lane_if(&mut self, l: usize, bit: bool) {
+        debug_assert!(l < 64);
+        *self |= (bit as u64) << l;
     }
 }
 
@@ -246,6 +258,12 @@ macro_rules! impl_bitplane_words {
                 debug_assert!(l < Self::LANES);
                 self[l >> 6] |= 1u64 << (l & 63);
             }
+
+            #[inline(always)]
+            fn set_lane_if(&mut self, l: usize, bit: bool) {
+                debug_assert!(l < Self::LANES);
+                self[l >> 6] |= (bit as u64) << (l & 63);
+            }
         }
     )+};
 }
@@ -253,6 +271,35 @@ macro_rules! impl_bitplane_words {
 impl_bitplane_words!(4);
 #[cfg(feature = "wide512")]
 impl_bitplane_words!(8);
+
+/// The widest [`BitPlane`] compiled into this build: `[u64; 8]`
+/// (512 lanes) with the `wide512` cargo feature, `[u64; 4]` (256 lanes)
+/// otherwise. The auto-width batch entry points across the crate (the
+/// SMURF estimators and activation batches via
+/// [`crate::smurf::sim_wide`], the SC-PwMM multiply batches via
+/// [`crate::sc::pwmm_wide`], the coordinator's `BitLevel` chunking) pick
+/// this plane automatically; narrower planes remain available to callers
+/// that name them. Lives here (not in `smurf::sim_wide`, which re-exports
+/// it) because the plane substrate is below every engine that chunks by
+/// it.
+#[cfg(feature = "wide512")]
+pub type MaxPlane = [u64; 8];
+/// The widest [`BitPlane`] compiled into this build: `[u64; 8]`
+/// (512 lanes) with the `wide512` cargo feature, `[u64; 4]` (256 lanes)
+/// otherwise. The auto-width batch entry points across the crate (the
+/// SMURF estimators and activation batches via
+/// [`crate::smurf::sim_wide`], the SC-PwMM multiply batches via
+/// [`crate::sc::pwmm_wide`], the coordinator's `BitLevel` chunking) pick
+/// this plane automatically; narrower planes remain available to callers
+/// that name them. Lives here (not in `smurf::sim_wide`, which re-exports
+/// it) because the plane substrate is below every engine that chunks by
+/// it.
+#[cfg(not(feature = "wide512"))]
+pub type MaxPlane = [u64; 4];
+
+/// Lane count of [`MaxPlane`] — the chunk size of every auto-width batch
+/// entry point.
+pub const MAX_LANES: usize = <MaxPlane as BitPlane>::LANES;
 
 /// Invoke `$f::<P>()` once per compiled plane width — `u64`, `[u64; 4]`,
 /// and (under the `wide512` feature) `[u64; 8]`. The width-parametric
@@ -323,6 +370,11 @@ mod tests {
             p.set_lane(l);
             assert_eq!(p.count_ones(), 1);
             assert!(p.lane(l));
+            let mut q = P::zero();
+            q.set_lane_if(l, false);
+            assert!(q.is_zero(), "set_lane_if(false) must be a no-op");
+            q.set_lane_if(l, true);
+            assert_eq!(q, p, "set_lane_if(true) must equal set_lane");
         }
     }
 

@@ -1,0 +1,469 @@
+//! Plane-form SC-PwMM: bit-sliced bipolar stream multiplication,
+//! `P::LANES` products per pass (paper §IV-B, ref [19]/[22]).
+//!
+//! # What this batches
+//!
+//! The CNN column runs every convolution/dense multiply as a bipolar SC
+//! product: two independent `L`-bit streams (one per operand, each a
+//! θ-gate over its own xorshift64* branch), XNOR'd and decoded by
+//! popcount. The scalar `Exact` path (`nn::sc_ops::ScContext::mul_bipolar`)
+//! materializes the two streams one product at a time; this module runs
+//! the same computation transposed, like the SMURF wide engine
+//! ([`crate::smurf::sim_wide`]) runs trials:
+//!
+//! - **lane = product.** Up to [`BitPlane::LANES`] products are packed
+//!   into one pass; lane `l` carries product `l`'s streams.
+//! - **plane = cycle.** Per clock cycle, the whole θ-gate bank emits one
+//!   plane word per stream bank
+//!   ([`crate::sc::rng::WideXorShift64::next_lt_lanes`]: every lane's
+//!   16-bit comparator word against its own per-lane threshold — the
+//!   Fig. 1 SNG array in one call). The xorshift64* lanes step scalarly
+//!   (the 64-bit multiply does not bit-slice) but the states sit in one
+//!   flat buffer whose update loop autovectorizes, and nothing is ever
+//!   packed into per-product `Bitstream` buffers.
+//! - **XNOR plane-against-plane.** One `xor`+`not` per cycle multiplies
+//!   all lanes' bits at once (Fig. 2's bipolar XNOR across the bank).
+//! - **vertical popcount.** Match masks accumulate into a ripple-carry
+//!   vertical counter (one plane per count bit, as in the wide SMURF
+//!   output counter); per-lane match totals are decoded once at the end.
+//!
+//! # Bit-exactness contract
+//!
+//! Product `i` of a pass is **bit-identical** to the scalar `Exact` path
+//! run with stream seed `seeds[i]`: bank A is lane-for-lane
+//! `XorShift64::new(seeds[i])`, bank B is
+//! `XorShift64::new(seeds[i] ^ `[`B_STREAM_XOR`]`)`, thresholds use the
+//! one shared quantization ([`crate::sc::sng::quantize_threshold`]), and
+//! the decoded value is the same `2·matches/L − 1` double expression.
+//! [`mul_bipolar_exact_batch`] additionally reproduces the `ScContext`
+//! seed discipline (seed `i` = previous seed + [`STREAM_SEED_STRIDE`],
+//! wrapping) so a gathered batch consumes entropy exactly as the
+//! per-product loop would. Width-parametric property tests pin both
+//! layers against the scalar `Bitstream` reference.
+//!
+//! # Tails and idle lanes
+//!
+//! A pass of `k < P::LANES` products follows the wide-engine convention:
+//! idle lanes have no generator, both their stream bits read 0, their
+//! XNOR is all-ones and the counter happily counts it — harmlessly,
+//! because readout decodes only the first `k` lanes. No plane is ever
+//! masked.
+//!
+//! All scratch lives in a caller-owned [`PwmmScratch`] (or the per-thread
+//! one via [`with_thread_scratch`]), so steady-state batches are
+//! allocation-free.
+
+use super::plane::BitPlane;
+use super::rng::WideXorShift64;
+use super::sng::quantize_threshold;
+
+/// XOR applied to a product's stream seed to derive the second operand's
+/// generator — the scalar `Exact` path's constant, shared so the wide
+/// banks reproduce it exactly.
+pub const B_STREAM_XOR: u64 = 0xABCD_EF01_2345_6789;
+
+/// Per-product stream-seed increment of the `Exact` discipline (the
+/// golden-ratio constant `ScContext` has always used): product `i` of a
+/// batch runs with seed `seed0 + (i+1)·STRIDE` (wrapping), exactly as
+/// `i+1` sequential `mul_bipolar` calls would.
+pub const STREAM_SEED_STRIDE: u64 = 0x9E3779B97F4A7C15;
+
+/// Count-bit planes in the vertical match counter: supports `L < 2^32`.
+const COUNT_PLANES: usize = 33;
+
+/// Caller-owned scratch for wide PwMM passes: the two θ-gate bank RNGs,
+/// the vertical counter, and the staging buffers of the batch driver.
+/// Every buffer is reused across passes (allocation-free steady state);
+/// one scratch serves batches of any size. Construct with
+/// [`PwmmScratch::new`] or borrow the per-thread one via
+/// [`with_thread_scratch`].
+pub struct PwmmScratch<P: BitPlane = u64> {
+    rng_a: WideXorShift64<P>,
+    rng_b: WideXorShift64<P>,
+    counts: [P; COUNT_PLANES],
+    /// Bank-B seed staging (`seeds[i] ^ B_STREAM_XOR`).
+    seeds_b: Vec<u64>,
+    /// Batch-driver staging: per-product thresholds and seeds of the
+    /// current chunk.
+    thr_a: Vec<u16>,
+    thr_b: Vec<u16>,
+    seeds: Vec<u64>,
+    /// Batch-driver staging: per-product match counts of the chunk.
+    counts_out: Vec<u64>,
+}
+
+impl<P: BitPlane> PwmmScratch<P> {
+    pub fn new() -> Self {
+        Self {
+            rng_a: WideXorShift64::from_seeds(&[]),
+            rng_b: WideXorShift64::from_seeds(&[]),
+            counts: [P::zero(); COUNT_PLANES],
+            seeds_b: Vec::new(),
+            thr_a: Vec::new(),
+            thr_b: Vec::new(),
+            seeds: Vec::new(),
+            counts_out: Vec::new(),
+        }
+    }
+}
+
+impl<P: BitPlane> Default for PwmmScratch<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One plane pass: for each product `i` (at most `P::LANES`), the number
+/// of positions where its two `len`-bit bipolar streams agree —
+/// `out[i]` equals the scalar
+/// `Bitstream::generate(·, len, XorShift64::new(seeds[i]))
+///   .xnor_match_count(&Bitstream::generate(·, len,
+///     XorShift64::new(seeds[i] ^ B_STREAM_XOR)))`
+/// with thresholds `thr_a[i]` / `thr_b[i]`, bit-for-bit.
+pub fn xnor_match_counts<P: BitPlane>(
+    thr_a: &[u16],
+    thr_b: &[u16],
+    seeds: &[u64],
+    len: usize,
+    st: &mut PwmmScratch<P>,
+    out: &mut [u64],
+) {
+    let k = seeds.len();
+    assert!(k > 0 && k <= P::LANES, "1..=P::LANES products per pass");
+    assert_eq!(thr_a.len(), k, "one A threshold per product");
+    assert_eq!(thr_b.len(), k, "one B threshold per product");
+    assert!(out.len() >= k);
+    assert!(len > 0, "need at least one stream bit");
+    assert!((len as u64) < (1u64 << (COUNT_PLANES - 1)), "stream too long for counter");
+    let PwmmScratch { rng_a, rng_b, counts, seeds_b, .. } = st;
+    rng_a.reseed(seeds);
+    seeds_b.clear();
+    seeds_b.extend(seeds.iter().map(|&s| s ^ B_STREAM_XOR));
+    rng_b.reseed(seeds_b);
+    *counts = [P::zero(); COUNT_PLANES];
+    for _ in 0..len {
+        // One cycle of both θ-gate banks, then the bipolar multiply:
+        // lane l's bit of `m` is stream-A(l) XNOR stream-B(l).
+        let a = rng_a.next_lt_lanes(thr_a);
+        let b = rng_b.next_lt_lanes(thr_b);
+        let m = a.xor(b).not();
+        // Vertical counter: one ripple-carry step per set count bit.
+        let mut carry = m;
+        let mut bit = 0;
+        while !carry.is_zero() {
+            let (sum, c) = counts[bit].half_add(carry);
+            counts[bit] = sum;
+            carry = c;
+            bit += 1;
+        }
+    }
+    for (l, o) in out.iter_mut().enumerate().take(k) {
+        let mut count = 0u64;
+        for (b, &p) in counts.iter().enumerate() {
+            count |= (p.lane(l) as u64) << b;
+        }
+        *o = count;
+    }
+}
+
+/// Batched bipolar SC multiply with the `Exact`-mode seed discipline:
+/// `out[i]` is bit-identical to the `i`-th of `xs.len()` sequential
+/// `ScContext::mul_bipolar(xs[i], ws[i])` calls in `Exact` mode starting
+/// from stream seed `seed0`; returns the advanced stream seed (`seed0 +
+/// xs.len()·STRIDE`, wrapping) for the caller to store back. Chunks by
+/// `P::LANES`, so any batch size works; `len == 0` decodes every product
+/// to `-1.0` exactly as empty scalar streams do (and still consumes one
+/// seed per product).
+pub fn mul_bipolar_exact_batch<P: BitPlane>(
+    xs: &[f32],
+    ws: &[f32],
+    len: usize,
+    seed0: u64,
+    st: &mut PwmmScratch<P>,
+    out: &mut [f32],
+) -> u64 {
+    assert_eq!(xs.len(), ws.len(), "operand count mismatch");
+    assert!(out.len() >= xs.len());
+    let mut seed = seed0;
+    if len == 0 {
+        for o in out.iter_mut().take(xs.len()) {
+            seed = seed.wrapping_add(STREAM_SEED_STRIDE);
+            *o = -1.0;
+        }
+        return seed;
+    }
+    // Move the staging buffers out so the scratch can be re-borrowed by
+    // the pass kernel (capacity is preserved; no steady-state alloc).
+    let mut thr_a = std::mem::take(&mut st.thr_a);
+    let mut thr_b = std::mem::take(&mut st.thr_b);
+    let mut seeds = std::mem::take(&mut st.seeds);
+    let mut counts = std::mem::take(&mut st.counts_out);
+    counts.resize(P::LANES, 0);
+    let mut start = 0;
+    while start < xs.len() {
+        let k = (xs.len() - start).min(P::LANES);
+        thr_a.clear();
+        thr_b.clear();
+        seeds.clear();
+        for (&x, &w) in xs[start..start + k].iter().zip(&ws[start..start + k]) {
+            seed = seed.wrapping_add(STREAM_SEED_STRIDE);
+            seeds.push(seed);
+            // The scalar encode, operand for operand: clamp in f32, then
+            // the f64 bipolar→unipolar map, then the shared quantizer.
+            let a = x.clamp(-1.0, 1.0) as f64;
+            let b = w.clamp(-1.0, 1.0) as f64;
+            thr_a.push(quantize_threshold((a + 1.0) / 2.0));
+            thr_b.push(quantize_threshold((b + 1.0) / 2.0));
+        }
+        xnor_match_counts(&thr_a, &thr_b, &seeds, len, st, &mut counts);
+        for (o, &c) in out[start..start + k].iter_mut().zip(counts.iter()) {
+            // The scalar decode expression: f64 mean, bipolar map, f32 cast.
+            *o = (2.0 * (c as f64 / len as f64) - 1.0) as f32;
+        }
+        start += k;
+    }
+    st.thr_a = thr_a;
+    st.thr_b = thr_b;
+    st.seeds = seeds;
+    st.counts_out = counts;
+    seed
+}
+
+/// Plane widths that own a per-thread [`PwmmScratch`]. One thread-local
+/// static exists per width (the scratch type is width-parametric), created
+/// on first use — the same sharing scheme as
+/// [`crate::smurf::sim_wide::ThreadScratch`].
+pub trait PwmmThreadScratch: BitPlane {
+    /// Run `f` with this thread's shared PwMM scratch for this plane
+    /// width. Do not call reentrantly from inside `f` — the scratch is a
+    /// `RefCell` and a nested borrow panics.
+    fn with_pwmm_scratch<R>(f: impl FnOnce(&mut PwmmScratch<Self>) -> R) -> R;
+}
+
+macro_rules! impl_pwmm_thread_scratch {
+    ($ty:ty) => {
+        impl PwmmThreadScratch for $ty {
+            fn with_pwmm_scratch<R>(f: impl FnOnce(&mut PwmmScratch<Self>) -> R) -> R {
+                thread_local! {
+                    static SCRATCH: std::cell::RefCell<PwmmScratch<$ty>> =
+                        std::cell::RefCell::new(PwmmScratch::new());
+                }
+                SCRATCH.with(|s| f(&mut s.borrow_mut()))
+            }
+        }
+    };
+}
+
+impl_pwmm_thread_scratch!(u64);
+impl_pwmm_thread_scratch!([u64; 4]);
+#[cfg(feature = "wide512")]
+impl_pwmm_thread_scratch!([u64; 8]);
+
+/// Run `f` with this thread's shared [`PwmmScratch`] for the inferred
+/// plane width (allocation-free after the first call on a thread). Do not
+/// call reentrantly from inside `f`.
+pub fn with_thread_scratch<P: PwmmThreadScratch, R>(
+    f: impl FnOnce(&mut PwmmScratch<P>) -> R,
+) -> R {
+    P::with_pwmm_scratch(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::bitstream::Bitstream;
+    use crate::sc::rng::{planes_from_lanes, XorShift64};
+    use crate::sc::sng::wide_lt_planes;
+
+    /// The scalar `Exact` path, product for product: generate both
+    /// streams with the documented seed derivation and decode the XNOR
+    /// popcount. This is a literal transcription of
+    /// `ScContext::mul_bipolar`'s `Exact` arm.
+    fn scalar_product(x: f32, w: f32, len: usize, seed: u64) -> (u64, f32) {
+        let a = x.clamp(-1.0, 1.0) as f64;
+        let b = w.clamp(-1.0, 1.0) as f64;
+        let mut r1 = XorShift64::new(seed);
+        let mut r2 = XorShift64::new(seed ^ B_STREAM_XOR);
+        let sa = Bitstream::generate((a + 1.0) / 2.0, len, &mut r1);
+        let sb = Bitstream::generate((b + 1.0) / 2.0, len, &mut r2);
+        let matches = sa.xnor_match_count(&sb);
+        let mean = if len == 0 { 0.0 } else { matches as f64 / len as f64 };
+        (matches, (2.0 * mean - 1.0) as f32)
+    }
+
+    /// Mixed-sign operand ramp hitting ±1, the clamp region beyond it,
+    /// zero, and irrational-ish interior points.
+    fn operands(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let xs: Vec<f32> = (0..n)
+            .map(|i| match i % 7 {
+                0 => 0.0,
+                1 => 1.0,
+                2 => -1.0,
+                3 => 1.7,
+                4 => -2.3,
+                _ => ((i * 37) % 101) as f32 / 50.0 - 1.0,
+            })
+            .collect();
+        let ws: Vec<f32> = (0..n)
+            .map(|i| match (i + 3) % 6 {
+                0 => -1.0,
+                1 => 0.5,
+                2 => -3.0,
+                _ => 1.0 - ((i * 53) % 97) as f32 / 48.0,
+            })
+            .collect();
+        (xs, ws)
+    }
+
+    /// The tentpole contract at width `P`: every product of a batch is
+    /// bit-identical to the scalar `Exact` reference — mixed signs,
+    /// clamped operands, non-multiple-of-lane tails, L ∈ {32, 128, 256}.
+    fn batch_matches_scalar_generic<P: BitPlane>() {
+        let mut st = PwmmScratch::<P>::new();
+        for len in [32usize, 128, 256] {
+            for n in [1usize, 3, P::LANES - 1, P::LANES, P::LANES + 7] {
+                let (xs, ws) = operands(n);
+                let seed0 = 0xD1CE ^ (len as u64) ^ ((n as u64) << 8);
+                let mut out = vec![0.0f32; n];
+                let end =
+                    mul_bipolar_exact_batch(&xs, &ws, len, seed0, &mut st, &mut out);
+                assert_eq!(
+                    end,
+                    seed0.wrapping_add((n as u64).wrapping_mul(STREAM_SEED_STRIDE)),
+                    "seed advance"
+                );
+                let mut seed = seed0;
+                for i in 0..n {
+                    seed = seed.wrapping_add(STREAM_SEED_STRIDE);
+                    let (_, want) = scalar_product(xs[i], ws[i], len, seed);
+                    assert_eq!(
+                        out[i].to_bits(),
+                        want.to_bits(),
+                        "L={len} n={n} product {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_batch_matches_scalar_all_widths() {
+        crate::for_each_plane_width!(batch_matches_scalar_generic);
+    }
+
+    /// The raw pass kernel agrees with the scalar match counts (counts,
+    /// not just decoded values) including the single-product shape.
+    fn kernel_counts_match_scalar_generic<P: BitPlane>() {
+        let mut st = PwmmScratch::<P>::new();
+        for k in [1usize, 2, P::LANES] {
+            let (xs, ws) = operands(k);
+            let seeds: Vec<u64> = (0..k).map(|i| 0x5EED + i as u64 * 977).collect();
+            let thr_a: Vec<u16> = xs
+                .iter()
+                .map(|&x| quantize_threshold((x.clamp(-1.0, 1.0) as f64 + 1.0) / 2.0))
+                .collect();
+            let thr_b: Vec<u16> = ws
+                .iter()
+                .map(|&w| quantize_threshold((w.clamp(-1.0, 1.0) as f64 + 1.0) / 2.0))
+                .collect();
+            let mut out = vec![0u64; k];
+            xnor_match_counts(&thr_a, &thr_b, &seeds, 96, &mut st, &mut out);
+            for i in 0..k {
+                let (want, _) = scalar_product(xs[i], ws[i], 96, seeds[i]);
+                assert_eq!(out[i], want, "k={k} product {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_counts_match_scalar_all_widths() {
+        crate::for_each_plane_width!(kernel_counts_match_scalar_generic);
+    }
+
+    /// The direct compare-and-pack generation route equals the
+    /// transpose-then-`wide_lt_planes` route through the existing SNG
+    /// comparator machinery — the two are the same θ-gate bank, one
+    /// optimized for scalar-stepped entropy, one for plane-native
+    /// entropy.
+    fn generation_matches_plane_comparator_generic<P: BitPlane>() {
+        let seeds: Vec<u64> = (0..P::LANES - 1).map(|i| i as u64 * 0xABC + 7).collect();
+        let thr: Vec<u16> = (0..seeds.len())
+            .map(|i| (i as u16).wrapping_mul(4099).wrapping_add(1))
+            .collect();
+        let mut direct = WideXorShift64::<P>::from_seeds(&seeds);
+        let mut via_planes = WideXorShift64::<P>::from_seeds(&seeds);
+        let thr_planes: [P; 16] = planes_from_lanes(&thr);
+        let mut rand = [P::zero(); 16];
+        for cycle in 0..64 {
+            let a = direct.next_lt_lanes(&thr);
+            via_planes.next_planes_into(&mut rand);
+            let b = wide_lt_planes(&rand, &thr_planes);
+            // Active lanes must agree; idle lanes are zero on both routes.
+            assert_eq!(a, b, "cycle {cycle}");
+        }
+    }
+
+    #[test]
+    fn generation_matches_plane_comparator_route() {
+        crate::for_each_plane_width!(generation_matches_plane_comparator_generic);
+    }
+
+    #[test]
+    fn zero_length_streams_decode_to_minus_one_and_consume_seeds() {
+        let mut st = PwmmScratch::<u64>::new();
+        let mut out = [0.0f32; 3];
+        let end = mul_bipolar_exact_batch(&[0.5, -0.5, 1.0], &[1.0, 1.0, 0.0], 0, 9, &mut st, &mut out);
+        assert_eq!(out, [-1.0f32; 3]);
+        assert_eq!(end, 9u64.wrapping_add(3u64.wrapping_mul(STREAM_SEED_STRIDE)));
+        // And matches the scalar convention (empty stream mean is 0).
+        let (_, v) = scalar_product(0.5, 1.0, 0, 9u64.wrapping_add(STREAM_SEED_STRIDE));
+        assert_eq!(v, -1.0);
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let mut st = PwmmScratch::<u64>::new();
+        let end = mul_bipolar_exact_batch(&[], &[], 128, 77, &mut st, &mut []);
+        assert_eq!(end, 77);
+    }
+
+    #[test]
+    fn thread_scratch_matches_owned() {
+        let (xs, ws) = operands(70);
+        let mut owned = PwmmScratch::<u64>::new();
+        let mut a = vec![0.0f32; 70];
+        let mut b = vec![0.0f32; 70];
+        let ea = mul_bipolar_exact_batch(&xs, &ws, 64, 5, &mut owned, &mut a);
+        let eb = with_thread_scratch::<u64, _>(|st| {
+            mul_bipolar_exact_batch(&xs, &ws, 64, 5, st, &mut b)
+        });
+        assert_eq!(a, b);
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn boundary_thresholds_saturate() {
+        // p=0 (threshold 0) never fires; p=1 (threshold 65535) nearly
+        // always fires: (+1)·(+1) products of saturated operands decode
+        // close to +1, (−1)·(+1) close to −1, at any lane position.
+        let mut st = PwmmScratch::<u64>::new();
+        let xs = [1.0f32, -1.0, 1.0];
+        let ws = [1.0f32, 1.0, -1.0];
+        let mut out = [0.0f32; 3];
+        mul_bipolar_exact_batch(&xs, &ws, 256, 3, &mut st, &mut out);
+        // threshold 65535 misses only rand16 == 65535 (~1/65536 per bit).
+        assert!(out[0] > 0.95, "(+1)(+1) decoded {}", out[0]);
+        assert!(out[1] < -0.95, "(-1)(+1) decoded {}", out[1]);
+        assert!(out[2] < -0.95, "(+1)(-1) decoded {}", out[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=P::LANES")]
+    fn kernel_rejects_oversized_pass() {
+        let mut st = PwmmScratch::<u64>::new();
+        let thr = vec![1u16; 65];
+        let seeds = vec![1u64; 65];
+        let mut out = vec![0u64; 65];
+        xnor_match_counts(&thr, &thr, &seeds, 16, &mut st, &mut out);
+    }
+}

@@ -299,25 +299,34 @@ impl<P: BitPlane> WideLfsr16<P> {
 /// Up to `P::LANES` independent [`XorShift64`] lanes.
 ///
 /// The 64-bit multiply in xorshift64* does not bit-slice (carries cross
-/// lanes), so lanes are stepped scalarly; the wide win here is the packed
-/// comparator mask plus the branch-free downstream pipeline. The lane
-/// generators live in a heap buffer (inlining `P::LANES` of them made
-/// this by far the largest `WideRng` variant — the PR 2
+/// lanes), so lanes are stepped scalarly — but the per-lane *states* live
+/// in one flat `Vec<u64>` and a clock is a single straight-line loop of
+/// shift/xor/multiply with no cross-lane data flow, which LLVM
+/// autovectorizes (AVX2: 4 states per ymm; the `wrapping_mul` lowers to
+/// the standard vpmuludq split). Lane `l` is bit-exact
+/// `XorShift64::new(seeds[l])`: the state update here *is* the scalar
+/// `next_u64` state update, and outputs are formed on demand as
+/// `state * M » 48` exactly like `XorShift64::next_u16`. The heap buffer
+/// keeps the `WideRng` variants of comparable size (the PR 2
 /// `large_enum_variant` lint debt); [`Self::reseed`] rewrites it in
 /// place, so steady-state resets stay allocation-free.
 #[derive(Clone, Debug)]
 pub struct WideXorShift64<P: BitPlane = u64> {
-    lanes: Vec<XorShift64>,
+    /// Raw xorshift64* states, one per lane (never zero by seeding).
+    states: Vec<u64>,
     _plane: std::marker::PhantomData<P>,
 }
 
 impl<P: BitPlane> WideXorShift64<P> {
+    /// The xorshift64* output multiplier (`XorShift64::next_u64`).
+    const MULT: u64 = 0x2545F4914F6CDD1D;
+
     /// One lane per seed (at most `P::LANES`), seeded exactly like
     /// `XorShift64::new` so lane `l` reproduces the scalar sequence.
     /// Unused lanes stay idle (their mask/plane bits are zero).
     pub fn from_seeds(seeds: &[u64]) -> Self {
         let mut rng = Self {
-            lanes: Vec::with_capacity(seeds.len()),
+            states: Vec::with_capacity(seeds.len()),
             _plane: std::marker::PhantomData,
         };
         rng.reseed(seeds);
@@ -328,27 +337,69 @@ impl<P: BitPlane> WideXorShift64<P> {
     /// reusing the lane buffer's capacity.
     pub fn reseed(&mut self, seeds: &[u64]) {
         assert!(seeds.len() <= P::LANES, "at most P::LANES lanes per plane word");
-        self.lanes.clear();
-        self.lanes.extend(seeds.iter().map(|&s| XorShift64::new(s)));
+        self.states.clear();
+        self.states.extend(
+            seeds.iter().map(|&s| if s == 0 { 0x9E3779B97F4A7C15 } else { s }),
+        );
+    }
+
+    /// Advance every lane one clock (the scalar `next_u64` state update,
+    /// vectorizable because the loop body is branch-free and lane-local).
+    #[inline]
+    fn step_all(&mut self) {
+        for s in self.states.iter_mut() {
+            let mut x = *s;
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            *s = x;
+        }
+    }
+
+    /// This cycle's 16-bit comparator word of a freshly-stepped state
+    /// (matches `XorShift64::next_u16`).
+    #[inline(always)]
+    fn out16(state: u64) -> u16 {
+        (state.wrapping_mul(Self::MULT) >> 48) as u16
     }
 
     /// One clock for all lanes, then the θ-gate comparator mask.
     #[inline]
     pub fn next_lt_const(&mut self, threshold: u16) -> P {
+        self.step_all();
         let mut mask = P::zero();
-        for (l, r) in self.lanes.iter_mut().enumerate() {
-            if r.next_u16() < threshold {
-                mask.set_lane(l);
-            }
+        for (l, &s) in self.states.iter().enumerate() {
+            mask.set_lane_if(l, Self::out16(s) < threshold);
+        }
+        mask
+    }
+
+    /// One clock for all lanes, then the comparator mask with a *per-lane*
+    /// threshold: lane `l` fires iff its fresh word `< thresholds[l]`.
+    /// This is the SC-PwMM generation primitive — every lane is one
+    /// product's θ-gate, so the whole bank of Fig. 1 SNGs emits one
+    /// plane-word of stream bits per call, branch-free, with no transpose
+    /// of the entropy words (per-lane compare + pack beats building 16
+    /// rand planes just to run `wide_lt_planes` when the entropy is
+    /// scalar-stepped anyway; the equivalence of the two routes is
+    /// pinned in `sc::pwmm_wide::tests`).
+    #[inline]
+    pub fn next_lt_lanes(&mut self, thresholds: &[u16]) -> P {
+        assert_eq!(thresholds.len(), self.states.len(), "one threshold per lane");
+        self.step_all();
+        let mut mask = P::zero();
+        for (l, (&s, &t)) in self.states.iter().zip(thresholds).enumerate() {
+            mask.set_lane_if(l, Self::out16(s) < t);
         }
         mask
     }
 
     /// One clock for all lanes, then write this cycle's 16 rand planes.
     pub fn next_planes_into(&mut self, out: &mut [P; 16]) {
+        self.step_all();
         *out = [P::zero(); 16];
-        for (l, r) in self.lanes.iter_mut().enumerate() {
-            let mut bits = r.next_u16();
+        for (l, &s) in self.states.iter().enumerate() {
+            let mut bits = Self::out16(s);
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
                 out[b].set_lane(l);
@@ -618,6 +669,31 @@ mod tests {
     #[test]
     fn wide_xorshift_matches_scalar() {
         crate::for_each_plane_width!(wide_xorshift_matches_scalar_generic);
+    }
+
+    fn wide_xorshift_lt_lanes_generic<P: BitPlane>() {
+        // Per-lane thresholds (the SC-PwMM bank shape), partial lane
+        // count: every active lane must match its scalar generator's
+        // compare, idle lanes must stay zero.
+        let seeds: Vec<u64> = (0..P::LANES - 2).map(|l| l as u64 * 7919 + 1).collect();
+        let mut wide = WideXorShift64::<P>::from_seeds(&seeds);
+        let mut scalars: Vec<XorShift64> = seeds.iter().map(|&s| XorShift64::new(s)).collect();
+        let thr: Vec<u16> =
+            (0..seeds.len()).map(|l| (l as u16).wrapping_mul(2731).wrapping_add(9)).collect();
+        for cycle in 0..40 {
+            let mask = wide.next_lt_lanes(&thr);
+            for (l, s) in scalars.iter_mut().enumerate() {
+                assert_eq!(mask.lane(l), s.next_u16() < thr[l], "cycle {cycle} lane {l}");
+            }
+            for l in seeds.len()..P::LANES {
+                assert!(!mask.lane(l), "idle lane {l} fired");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_xorshift_lt_lanes_matches_scalar() {
+        crate::for_each_plane_width!(wide_xorshift_lt_lanes_generic);
     }
 
     fn wide_sobol_matches_scalar_generic<P: BitPlane>() {

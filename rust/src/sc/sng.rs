@@ -13,6 +13,17 @@ use super::rng::StreamRng;
 /// negligible", §IV-A).
 pub const THRESHOLD_BITS: u32 = 16;
 
+/// Quantize a probability into the 16-bit threshold register: the one
+/// rounding rule every stream generator in the crate shares
+/// ([`ThetaGate::new`], [`crate::sc::bitstream::Bitstream::generate`],
+/// the wide SC-PwMM banks in [`crate::sc::pwmm_wide`]). The scalar and
+/// wide paths being bit-identical *starts* with them agreeing on this
+/// quantization, so it is defined exactly once.
+#[inline]
+pub fn quantize_threshold(p: f64) -> u16 {
+    (p.clamp(0.0, 1.0) * 65536.0).round().min(65535.0) as u16
+}
+
 /// A θ-gate: comparator + threshold register.
 #[derive(Clone, Debug)]
 pub struct ThetaGate {
@@ -21,10 +32,10 @@ pub struct ThetaGate {
 }
 
 impl ThetaGate {
-    /// Quantize a probability into the 16-bit threshold register.
+    /// Quantize a probability into the 16-bit threshold register (see
+    /// [`quantize_threshold`]).
     pub fn new(p: f64) -> Self {
-        let t = (p.clamp(0.0, 1.0) * 65536.0).round().min(65535.0) as u16;
-        Self { threshold: t }
+        Self { threshold: quantize_threshold(p) }
     }
 
     /// Construct from the raw register value.
@@ -137,6 +148,11 @@ mod tests {
         assert_eq!(ThetaGate::new(0.0).raw(), 0);
         assert_eq!(ThetaGate::new(1.0).raw(), 65535);
         assert_eq!(ThetaGate::new(0.5).raw(), 32768);
+        // The shared rule saturates out-of-range inputs instead of
+        // wrapping (the bipolar encode feeds it raw clamp results).
+        assert_eq!(quantize_threshold(-0.5), 0);
+        assert_eq!(quantize_threshold(2.0), 65535);
+        assert_eq!(quantize_threshold(0.99999), 65535);
     }
 
     #[test]

@@ -104,22 +104,13 @@ const COUNT_PLANES: usize = 41;
 /// about the base word width; batch chunking should use [`MAX_LANES`].
 pub const LANES: usize = 64;
 
-/// The widest [`BitPlane`] compiled into this build: `[u64; 8]`
-/// (512 lanes) with the `wide512` cargo feature, `[u64; 4]` (256 lanes)
-/// otherwise. The batch entry points pick this plane automatically; the
-/// default `u64` engine remains available for callers that name it.
-#[cfg(feature = "wide512")]
-pub type MaxPlane = [u64; 8];
-/// The widest [`BitPlane`] compiled into this build: `[u64; 8]`
-/// (512 lanes) with the `wide512` cargo feature, `[u64; 4]` (256 lanes)
-/// otherwise. The batch entry points pick this plane automatically; the
-/// default `u64` engine remains available for callers that name it.
-#[cfg(not(feature = "wide512"))]
-pub type MaxPlane = [u64; 4];
-
-/// Lane count of [`MaxPlane`] — the chunk size of every auto-width batch
-/// entry point.
-pub const MAX_LANES: usize = <MaxPlane as BitPlane>::LANES;
+/// The widest compiled plane and its lane count now live with the plane
+/// substrate itself ([`crate::sc::plane`]) so that the SC-level engines
+/// (e.g. the wide SC-PwMM multiply, [`crate::sc::pwmm_wide`]) can chunk
+/// by them without depending on this module; re-exported here because
+/// every historical consumer of the wide SMURF engine names them through
+/// this path.
+pub use crate::sc::plane::{MaxPlane, MAX_LANES};
 
 /// Devirtualized wide entropy source (mirrors the scalar `RngKind`).
 // The xorshift lanes are heap-backed inside `WideXorShift64` (reseeded in
