@@ -11,7 +11,7 @@ MANIFEST := rust/Cargo.toml
 FEATURES ?=
 FEATFLAGS := $(if $(FEATURES),--features $(FEATURES),)
 
-.PHONY: build test tier1 clippy bench-json bench bench-build ci
+.PHONY: build test tier1 chaos clippy bench-json bench bench-build ci
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST) $(FEATFLAGS)
@@ -21,6 +21,12 @@ test:
 
 # Tier-1 verification gate (see ROADMAP.md): must stay green per PR.
 tier1: build test
+
+# Chaos suite: fault-injected serving-core tests (worker panics, stalls,
+# overload shedding, deadline expiry, shutdown drains). Run in release —
+# the tests drive real worker pools under timing assertions.
+chaos:
+	$(CARGO) test --test chaos --release --manifest-path $(MANIFEST) $(FEATFLAGS)
 
 # Lint gate (CI `lint` job): warnings are errors across every target, so
 # an uncompilable or warning-ridden state cannot land again.

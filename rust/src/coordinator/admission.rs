@@ -1,0 +1,350 @@
+//! Admission control: bounded per-engine in-flight depth, request
+//! validation at the submit edge, and the load-shedding policy that
+//! degrades `BitLevel` requests to the `Analytic` closed form before
+//! resorting to rejection.
+//!
+//! Depth accounting is token-based: [`Admission::admit`] increments the
+//! target engine's in-flight counter and attaches a [`DepthToken`] to the
+//! request; the token decrements on `Drop`. Every path that consumes a
+//! request — reply sent, batch dropped in a panicking worker, request
+//! discarded at shutdown — releases its slot automatically, so queue
+//! depth can never leak no matter how the request dies.
+//!
+//! Shedding uses hysteresis: it engages when the `BitLevel` in-flight
+//! depth reaches `shed_high` and disengages only once the backlog drains
+//! to `shed_low`, so the policy cannot flap around the watermark.
+//! Degraded requests are accounted under their *new* engine (`Analytic`),
+//! which is exactly what makes the policy stable: diverted traffic stops
+//! feeding the watermark it tripped.
+
+use super::metrics::Metrics;
+use super::request::{Engine, EvalRequest, RejectReason};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Static admission policy. Limits bound *in-flight* requests per engine
+/// (admitted but not yet answered), which covers the intake channel, the
+/// batcher's pending groups, the worker channel, and execution itself.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// In-flight limit for the bit-level simulator (L-cycle expensive).
+    pub bitlevel_limit: usize,
+    /// In-flight limit for the analytic engine (cheap; also absorbs
+    /// degraded BitLevel traffic, so it is the larger pool).
+    pub analytic_limit: usize,
+    /// In-flight limit for the XLA engine (serialized on one owner
+    /// thread).
+    pub xla_limit: usize,
+    /// BitLevel in-flight depth at which shedding engages: new BitLevel
+    /// requests are served from the analytic closed form (Eq. 21) and
+    /// flagged `degraded` instead of queuing behind the backlog.
+    pub shed_high: usize,
+    /// Depth the BitLevel backlog must drain to before shedding
+    /// disengages (hysteresis; must be < `shed_high`).
+    pub shed_low: usize,
+    /// Default deadline for `eval_sync` callers that did not pick one —
+    /// conservative, but finite: a synchronous client never blocks
+    /// forever.
+    pub sync_timeout: Duration,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            bitlevel_limit: 1024,
+            analytic_limit: 8192,
+            xla_limit: 1024,
+            shed_high: 256,
+            shed_low: 64,
+            sync_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Runtime admission state shared between the server front door and the
+/// metrics snapshot.
+#[derive(Debug)]
+pub struct Admission {
+    cfg: AdmissionConfig,
+    /// In-flight depth per [`Engine::index`].
+    depth: [AtomicUsize; Engine::COUNT],
+    /// Latched shedding state (hysteresis).
+    shedding: AtomicBool,
+    /// Test/bench hook: latch shedding on regardless of depth, so the
+    /// degraded path can be driven deterministically.
+    force_shed: AtomicBool,
+    metrics: Arc<Metrics>,
+}
+
+/// RAII in-flight slot: releases the engine's depth counter when the
+/// request it rides on is consumed (answered or dropped).
+pub struct DepthToken {
+    admission: Arc<Admission>,
+    idx: usize,
+}
+
+impl std::fmt::Debug for DepthToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DepthToken").field("idx", &self.idx).finish()
+    }
+}
+
+impl Drop for DepthToken {
+    fn drop(&mut self) {
+        self.admission.depth[self.idx].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig, metrics: Arc<Metrics>) -> Self {
+        assert!(cfg.shed_low < cfg.shed_high, "hysteresis needs shed_low < shed_high");
+        Self {
+            cfg,
+            depth: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
+            shedding: AtomicBool::new(false),
+            force_shed: AtomicBool::new(false),
+            metrics,
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Current in-flight depth for one engine.
+    pub fn depth(&self, engine: Engine) -> usize {
+        self.depth[engine.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total in-flight depth across engines.
+    pub fn total_depth(&self) -> usize {
+        self.depth.iter().map(|d| d.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Whether load shedding is currently engaged.
+    pub fn is_shedding(&self) -> bool {
+        self.force_shed.load(Ordering::Relaxed) || self.shedding.load(Ordering::Relaxed)
+    }
+
+    /// Test/bench hook: force the shedding latch on (or release it).
+    pub fn force_shed(&self, on: bool) {
+        self.force_shed.store(on, Ordering::Relaxed);
+    }
+
+    fn limit(&self, engine: Engine) -> usize {
+        match engine {
+            Engine::BitLevel => self.cfg.bitlevel_limit,
+            Engine::Analytic => self.cfg.analytic_limit,
+            Engine::Xla => self.cfg.xla_limit,
+        }
+    }
+
+    /// Validate and admit a request: malformed traffic is refused at the
+    /// edge, expired deadlines are refused before any queuing, shedding
+    /// may rewrite `BitLevel` → `Analytic` (flagging the request
+    /// `degraded`), and the target engine's depth limit is enforced. On
+    /// success the request carries a [`DepthToken`].
+    ///
+    /// `arity_of` resolves a function name to its input arity (`None` =
+    /// unknown function). Associated fn (not a method): the token must
+    /// hold the `Arc`, and `&Arc<Self>` receivers are not stable Rust.
+    pub fn admit(
+        this: &Arc<Self>,
+        req: &mut EvalRequest,
+        arity_of: impl Fn(&str) -> Option<usize>,
+    ) -> Result<(), RejectReason> {
+        // 1. Validation: refuse malformed traffic before it queues.
+        let arity = arity_of(&req.function)
+            .ok_or_else(|| RejectReason::BadRequest(format!("unknown function {:?}", req.function)))?;
+        for (i, p) in req.points.iter().enumerate() {
+            if p.len() != arity {
+                return Err(RejectReason::BadRequest(format!(
+                    "point {i} has arity {} but {:?} takes {arity} inputs",
+                    p.len(),
+                    req.function
+                )));
+            }
+            if let Some(x) = p.iter().find(|x| !x.is_finite()) {
+                return Err(RejectReason::BadRequest(format!(
+                    "point {i} contains non-finite input {x}"
+                )));
+            }
+        }
+        if req.engine == Engine::BitLevel && req.stream_len == 0 {
+            return Err(RejectReason::BadRequest(
+                "stream_len must be > 0 for the BitLevel engine".into(),
+            ));
+        }
+
+        // 2. Dead on arrival: an already-expired deadline is refused
+        //    without queuing (BitLevel work is L-cycle expensive).
+        if req.expired(Instant::now()) {
+            return Err(RejectReason::Deadline);
+        }
+
+        // 3. Load shedding (BitLevel only): past the high watermark,
+        //    serve from the analytic closed form at reduced fidelity
+        //    instead of queuing; hysteresis keeps the latch stable.
+        if req.engine == Engine::BitLevel && this.update_shed_latch() {
+            req.engine = Engine::Analytic;
+            req.degraded = true;
+            this.metrics.record_degraded();
+        }
+
+        // 4. Depth limit on the (possibly rewritten) target engine.
+        let idx = req.engine.index();
+        let limit = this.limit(req.engine);
+        if this.depth[idx]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                (d < limit).then_some(d + 1)
+            })
+            .is_err()
+        {
+            return Err(RejectReason::QueueFull);
+        }
+        req.admitted = Some(DepthToken { admission: Arc::clone(this), idx });
+        this.metrics.note_queue_depth(this.total_depth() as u64);
+        Ok(())
+    }
+
+    /// Advance the hysteresis latch from the current BitLevel depth and
+    /// return whether shedding is engaged.
+    fn update_shed_latch(&self) -> bool {
+        if self.force_shed.load(Ordering::Relaxed) {
+            return true;
+        }
+        let d = self.depth[Engine::BitLevel.index()].load(Ordering::Relaxed);
+        if self.shedding.load(Ordering::Relaxed) {
+            if d <= self.cfg.shed_low {
+                self.shedding.store(false, Ordering::Relaxed);
+                false
+            } else {
+                true
+            }
+        } else if d >= self.cfg.shed_high {
+            self.shedding.store(true, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn mk_admission(cfg: AdmissionConfig) -> Arc<Admission> {
+        Arc::new(Admission::new(cfg, Arc::new(Metrics::new())))
+    }
+
+    fn mk_req(engine: Engine) -> EvalRequest {
+        let (tx, _rx) = channel();
+        EvalRequest::new("f", vec![vec![0.5, 0.5]], engine, 64, tx)
+    }
+
+    fn arity2(name: &str) -> Option<usize> {
+        (name == "f").then_some(2)
+    }
+
+    #[test]
+    fn validation_rejects_malformed_traffic() {
+        let a = mk_admission(AdmissionConfig::default());
+        let mut r = mk_req(Engine::Analytic);
+        r.function = "nope".into();
+        assert!(matches!(Admission::admit(&a, &mut r, arity2), Err(RejectReason::BadRequest(_))));
+
+        let mut r = mk_req(Engine::Analytic);
+        r.points = vec![vec![0.5]]; // arity 1 != 2
+        assert!(matches!(Admission::admit(&a, &mut r, arity2), Err(RejectReason::BadRequest(_))));
+
+        let mut r = mk_req(Engine::Analytic);
+        r.points = vec![vec![0.5, f64::NAN]];
+        assert!(matches!(Admission::admit(&a, &mut r, arity2), Err(RejectReason::BadRequest(_))));
+
+        let mut r = mk_req(Engine::BitLevel);
+        r.stream_len = 0;
+        assert!(matches!(Admission::admit(&a, &mut r, arity2), Err(RejectReason::BadRequest(_))));
+
+        // Valid traffic passes and is accounted.
+        let mut r = mk_req(Engine::BitLevel);
+        assert!(Admission::admit(&a, &mut r, arity2).is_ok());
+        assert_eq!(a.depth(Engine::BitLevel), 1);
+    }
+
+    #[test]
+    fn expired_deadline_rejected_at_submit() {
+        let a = mk_admission(AdmissionConfig::default());
+        let mut r = mk_req(Engine::Analytic).with_deadline(Instant::now());
+        std::thread::sleep(Duration::from_millis(1));
+        assert_eq!(Admission::admit(&a, &mut r, arity2), Err(RejectReason::Deadline));
+        assert_eq!(a.total_depth(), 0);
+    }
+
+    #[test]
+    fn depth_limit_rejects_and_tokens_release() {
+        let a = mk_admission(AdmissionConfig {
+            analytic_limit: 2,
+            ..AdmissionConfig::default()
+        });
+        let mut r1 = mk_req(Engine::Analytic);
+        let mut r2 = mk_req(Engine::Analytic);
+        let mut r3 = mk_req(Engine::Analytic);
+        assert!(Admission::admit(&a, &mut r1, arity2).is_ok());
+        assert!(Admission::admit(&a, &mut r2, arity2).is_ok());
+        assert_eq!(Admission::admit(&a, &mut r3, arity2), Err(RejectReason::QueueFull));
+        assert_eq!(a.depth(Engine::Analytic), 2);
+        // Dropping an admitted request releases its slot (Drop-based, so
+        // panic unwinds release too).
+        drop(r1);
+        assert_eq!(a.depth(Engine::Analytic), 1);
+        let mut r4 = mk_req(Engine::Analytic);
+        assert!(Admission::admit(&a, &mut r4, arity2).is_ok());
+    }
+
+    #[test]
+    fn shedding_degrades_with_hysteresis() {
+        let a = mk_admission(AdmissionConfig {
+            shed_high: 2,
+            shed_low: 1,
+            ..AdmissionConfig::default()
+        });
+        // Fill BitLevel to the high watermark.
+        let mut r1 = mk_req(Engine::BitLevel);
+        let mut r2 = mk_req(Engine::BitLevel);
+        assert!(Admission::admit(&a, &mut r1, arity2).is_ok());
+        assert!(Admission::admit(&a, &mut r2, arity2).is_ok());
+        assert!(!r1.degraded && !r2.degraded);
+        // Next BitLevel request trips the latch and degrades.
+        let mut r3 = mk_req(Engine::BitLevel);
+        assert!(Admission::admit(&a, &mut r3, arity2).is_ok());
+        assert!(r3.degraded);
+        assert_eq!(r3.engine, Engine::Analytic);
+        assert!(a.is_shedding());
+        // Degraded traffic is accounted under Analytic, so the BitLevel
+        // depth stays at the watermark until the backlog drains.
+        assert_eq!(a.depth(Engine::BitLevel), 2);
+        assert_eq!(a.depth(Engine::Analytic), 1);
+        // Draining to shed_low = 1 releases the latch.
+        drop(r2);
+        let mut r4 = mk_req(Engine::BitLevel);
+        assert!(Admission::admit(&a, &mut r4, arity2).is_ok());
+        assert!(!r4.degraded, "latch must release once depth <= shed_low");
+        assert!(!a.is_shedding());
+    }
+
+    #[test]
+    fn force_shed_hook_latches() {
+        let a = mk_admission(AdmissionConfig::default());
+        a.force_shed(true);
+        let mut r = mk_req(Engine::BitLevel);
+        assert!(Admission::admit(&a, &mut r, arity2).is_ok());
+        assert!(r.degraded);
+        a.force_shed(false);
+        let mut r = mk_req(Engine::BitLevel);
+        assert!(Admission::admit(&a, &mut r, arity2).is_ok());
+        assert!(!r.degraded);
+    }
+}

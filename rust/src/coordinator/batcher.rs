@@ -5,8 +5,24 @@
 //! `max_batch` requests are waiting or the oldest request has waited
 //! `max_wait`. This is the classic serving-router batching policy
 //! (vLLM/Orca): bounded latency, amortized execution.
+//!
+//! Failure semantics (see the failure model in [`crate::coordinator`]):
+//!
+//! - **Per-request deadlines** are enforced at batch formation: an
+//!   expired request is answered with `Rejected(Deadline)` and never
+//!   dispatched (BitLevel work is L-cycle expensive; expired work is
+//!   wasted work).
+//! - **No starvation under continuous traffic**: expired groups are
+//!   flushed on *every* loop iteration, including the arrival path — a
+//!   quiet group's deadline cannot be held hostage by a busy neighbor
+//!   key that keeps the receive loop in its arrival branch.
+//! - **No silent drops**: if the worker channel is closed (shutdown or
+//!   total worker loss), every request in the batch is answered with a
+//!   typed [`EvalError::Shutdown`] and counted in metrics instead of
+//!   being discarded.
 
-use super::request::{Engine, EvalRequest};
+use super::metrics::Metrics;
+use super::request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason};
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
@@ -36,8 +52,15 @@ pub struct Batch {
 }
 
 /// Run the batching loop until the input channel closes. Formed batches
-/// are sent to `out` (consumed by the worker pool).
-pub fn run_batcher(rx: Receiver<EvalRequest>, out: Sender<Batch>, policy: BatchPolicy) {
+/// are sent to `out` (consumed by the worker pool). Borrows its channels
+/// so the supervising wrapper in `server` can restart the loop after a
+/// panic without losing either endpoint.
+pub fn run_batcher(
+    rx: &Receiver<EvalRequest>,
+    out: &Sender<Batch>,
+    policy: BatchPolicy,
+    metrics: &Metrics,
+) {
     let mut pending: HashMap<(String, Engine), Vec<EvalRequest>> = HashMap::new();
     let mut oldest: HashMap<(String, Engine), Instant> = HashMap::new();
     loop {
@@ -57,30 +80,45 @@ pub fn run_batcher(rx: Receiver<EvalRequest>, out: Sender<Batch>, policy: BatchP
                 oldest.entry(key.clone()).or_insert_with(Instant::now);
                 group.push(req);
                 if group.len() >= policy.max_batch {
-                    flush(&mut pending, &mut oldest, &key, &out);
+                    flush(&mut pending, &mut oldest, &key, out, metrics);
                 }
+                // Starvation fix: a continuous arrival stream keeps this
+                // branch hot (recv_timeout returns Ok whenever a message
+                // is already queued), so group deadlines must also be
+                // checked here, not only on the Timeout branch.
+                flush_expired(&mut pending, &mut oldest, &policy, out, metrics);
             }
             Err(RecvTimeoutError::Timeout) => {
-                // Flush every group whose oldest member expired.
-                let now = Instant::now();
-                let expired: Vec<_> = oldest
-                    .iter()
-                    .filter(|(_, &t)| now >= t + policy.max_wait)
-                    .map(|(k, _)| k.clone())
-                    .collect();
-                for key in expired {
-                    flush(&mut pending, &mut oldest, &key, &out);
-                }
+                flush_expired(&mut pending, &mut oldest, &policy, out, metrics);
             }
             Err(RecvTimeoutError::Disconnected) => {
-                // Drain everything and exit.
+                // Intake closed: drain everything and exit.
                 let keys: Vec<_> = pending.keys().cloned().collect();
                 for key in keys {
-                    flush(&mut pending, &mut oldest, &key, &out);
+                    flush(&mut pending, &mut oldest, &key, out, metrics);
                 }
                 return;
             }
         }
+    }
+}
+
+/// Flush every group whose oldest member has waited `max_wait`.
+fn flush_expired(
+    pending: &mut HashMap<(String, Engine), Vec<EvalRequest>>,
+    oldest: &mut HashMap<(String, Engine), Instant>,
+    policy: &BatchPolicy,
+    out: &Sender<Batch>,
+    metrics: &Metrics,
+) {
+    let now = Instant::now();
+    let expired: Vec<_> = oldest
+        .iter()
+        .filter(|(_, &t)| now >= t + policy.max_wait)
+        .map(|(k, _)| k.clone())
+        .collect();
+    for key in expired {
+        flush(pending, oldest, &key, out, metrics);
     }
 }
 
@@ -89,16 +127,33 @@ fn flush(
     oldest: &mut HashMap<(String, Engine), Instant>,
     key: &(String, Engine),
     out: &Sender<Batch>,
+    metrics: &Metrics,
 ) {
-    if let Some(reqs) = pending.remove(key) {
-        oldest.remove(key);
-        if !reqs.is_empty() {
-            // Receiver loss means shutdown; drop silently.
-            let _ = out.send(Batch {
-                key: key.clone(),
-                requests: reqs,
-                formed_at: Instant::now(),
-            });
+    let Some(reqs) = pending.remove(key) else { return };
+    oldest.remove(key);
+    if reqs.is_empty() {
+        return;
+    }
+    // Deadline enforcement at batch formation: expired requests are
+    // answered, not evaluated.
+    let now = Instant::now();
+    let (expired, live): (Vec<_>, Vec<_>) = reqs.into_iter().partition(|r| r.expired(now));
+    for r in expired {
+        metrics.record_rejection(&RejectReason::Deadline);
+        let _ = r
+            .reply
+            .send(EvalResponse::from_error(EvalError::Rejected(RejectReason::Deadline)));
+    }
+    if live.is_empty() {
+        return;
+    }
+    if let Err(unsent) = out.send(Batch { key: key.clone(), requests: live, formed_at: now }) {
+        // Worker channel closed (shutdown or total worker loss): answer
+        // every request with a typed shutdown error instead of silently
+        // discarding the batch.
+        for r in unsent.0.requests {
+            metrics.record_shutdown_answered();
+            let _ = r.reply.send(EvalResponse::from_error(EvalError::Shutdown));
         }
     }
 }
@@ -107,24 +162,32 @@ fn flush(
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+    use std::sync::Arc;
 
-    fn mk_request(function: &str, reply: Sender<super::super::request::EvalResponse>) -> EvalRequest {
-        EvalRequest {
-            function: function.into(),
-            points: vec![vec![0.5, 0.5]],
-            engine: Engine::Analytic,
-            stream_len: 64,
-            enqueued: Instant::now(),
-            reply,
-        }
+    fn mk_request(function: &str, reply: Sender<EvalResponse>) -> EvalRequest {
+        EvalRequest::new(function, vec![vec![0.5, 0.5]], Engine::Analytic, 64, reply)
+    }
+
+    fn spawn_batcher(
+        policy: BatchPolicy,
+    ) -> (
+        Sender<EvalRequest>,
+        Receiver<Batch>,
+        Arc<Metrics>,
+        std::thread::JoinHandle<()>,
+    ) {
+        let (tx, rx) = channel();
+        let (btx, brx) = channel();
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let h = std::thread::spawn(move || run_batcher(&rx, &btx, policy, &m));
+        (tx, brx, metrics, h)
     }
 
     #[test]
     fn size_trigger_forms_full_batch() {
-        let (tx, rx) = channel();
-        let (btx, brx) = channel();
         let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
-        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let (tx, brx, _metrics, h) = spawn_batcher(policy);
         let (rtx, _rrx) = channel();
         for _ in 0..4 {
             tx.send(mk_request("f", rtx.clone())).unwrap();
@@ -137,10 +200,8 @@ mod tests {
 
     #[test]
     fn deadline_trigger_flushes_partial_batch() {
-        let (tx, rx) = channel();
-        let (btx, brx) = channel();
         let policy = BatchPolicy { max_batch: 1000, max_wait: Duration::from_millis(5) };
-        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let (tx, brx, _metrics, h) = spawn_batcher(policy);
         let (rtx, _rrx) = channel();
         tx.send(mk_request("f", rtx.clone())).unwrap();
         tx.send(mk_request("f", rtx.clone())).unwrap();
@@ -152,10 +213,8 @@ mod tests {
 
     #[test]
     fn groups_by_function() {
-        let (tx, rx) = channel();
-        let (btx, brx) = channel();
         let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(200) };
-        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let (tx, brx, _metrics, h) = spawn_batcher(policy);
         let (rtx, _rrx) = channel();
         tx.send(mk_request("f", rtx.clone())).unwrap();
         tx.send(mk_request("g", rtx.clone())).unwrap();
@@ -173,15 +232,126 @@ mod tests {
 
     #[test]
     fn shutdown_drains_pending() {
-        let (tx, rx) = channel();
-        let (btx, brx) = channel();
         let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(100) };
-        let h = std::thread::spawn(move || run_batcher(rx, btx, policy));
+        let (tx, brx, _metrics, h) = spawn_batcher(policy);
         let (rtx, _rrx) = channel();
         tx.send(mk_request("f", rtx.clone())).unwrap();
         drop(tx); // close input
         let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(batch.requests.len(), 1);
+        h.join().unwrap();
+    }
+
+    /// Regression (ISSUE 6): a group whose max_wait expires while another
+    /// key's requests keep arriving must still flush on time. The old
+    /// loop only checked deadlines on the recv *timeout* branch, which a
+    /// continuous arrival stream never reaches.
+    #[test]
+    fn busy_neighbor_key_cannot_starve_a_quiet_group() {
+        let policy = BatchPolicy { max_batch: 10_000, max_wait: Duration::from_millis(10) };
+        let (tx, brx, _metrics, h) = spawn_batcher(policy);
+        let (rtx, _rrx) = channel();
+        // The quiet group: one request for "f".
+        tx.send(mk_request("f", rtx.clone())).unwrap();
+        let t0 = Instant::now();
+        // The busy neighbor: hammer "g" continuously from another thread
+        // so the batcher's arrival branch stays hot.
+        let gtx = tx.clone();
+        let grtx = rtx.clone();
+        let hammer = std::thread::spawn(move || {
+            while t0.elapsed() < Duration::from_millis(300) {
+                if gtx.send(mk_request("g", grtx.clone())).is_err() {
+                    return;
+                }
+                std::thread::yield_now();
+            }
+        });
+        // "f" must flush at ~max_wait despite the traffic; allow generous
+        // slack for CI schedulers, but far below the 300 ms hammer window.
+        let f_batch = loop {
+            let b = brx
+                .recv_timeout(Duration::from_millis(250))
+                .expect("quiet group starved: no flush while neighbor traffic continues");
+            if b.key.0 == "f" {
+                break b;
+            }
+        };
+        assert!(
+            t0.elapsed() < Duration::from_millis(250),
+            "quiet group flushed only after {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(f_batch.requests.len(), 1);
+        hammer.join().unwrap();
+        drop(tx);
+        // Drain remaining "g" batches so the batcher can exit.
+        while brx.recv_timeout(Duration::from_millis(100)).is_ok() {}
+        h.join().unwrap();
+    }
+
+    /// Deadline enforcement at batch formation: an expired request is
+    /// answered with `Rejected(Deadline)` and never dispatched.
+    #[test]
+    fn expired_request_answered_not_dispatched() {
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(20) };
+        let (tx, brx, metrics, h) = spawn_batcher(policy);
+        let (rtx, rrx) = channel();
+        let req = mk_request("f", rtx).with_deadline(Instant::now() + Duration::from_millis(1));
+        tx.send(req).unwrap();
+        // The flush fires at ~max_wait (20 ms) > deadline (1 ms).
+        let resp = rrx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(resp.error, Some(EvalError::Rejected(RejectReason::Deadline)));
+        assert!(
+            brx.recv_timeout(Duration::from_millis(50)).is_err(),
+            "expired request must not be dispatched to workers"
+        );
+        assert_eq!(metrics.snapshot().rejected_deadline, 1);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    /// A mixed group flushes its live members and answers only the
+    /// expired ones.
+    #[test]
+    fn mixed_group_partitions_expired_from_live() {
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(15) };
+        let (tx, brx, _metrics, h) = spawn_batcher(policy);
+        let (dead_tx, dead_rx) = channel();
+        let (live_tx, _live_rx) = channel();
+        tx.send(
+            mk_request("f", dead_tx).with_deadline(Instant::now() + Duration::from_millis(1)),
+        )
+        .unwrap();
+        tx.send(mk_request("f", live_tx)).unwrap();
+        let resp = dead_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(resp.error, Some(EvalError::Rejected(RejectReason::Deadline)));
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests.len(), 1, "only the live request is dispatched");
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    /// Regression (ISSUE 6): a closed worker channel answers every
+    /// request with a typed shutdown error (the old code was
+    /// `let _ = out.send(..)` — a silent drop).
+    #[test]
+    fn closed_worker_channel_answers_with_typed_shutdown() {
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(100) };
+        let (tx, rx) = channel();
+        let (btx, brx) = channel::<Batch>();
+        drop(brx); // workers are gone
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let h = std::thread::spawn(move || run_batcher(&rx, &btx, policy, &m));
+        let (rtx, rrx) = channel();
+        tx.send(mk_request("f", rtx.clone())).unwrap();
+        tx.send(mk_request("f", rtx.clone())).unwrap(); // size trigger
+        for _ in 0..2 {
+            let resp = rrx.recv_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!(resp.error, Some(EvalError::Shutdown));
+        }
+        assert_eq!(metrics.snapshot().shutdown_answered, 2);
+        drop(tx);
         h.join().unwrap();
     }
 }

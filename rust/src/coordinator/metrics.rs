@@ -1,5 +1,9 @@
-//! Service metrics: counters + latency histograms, merged across workers.
+//! Service metrics: counters + latency histograms, merged across workers,
+//! including the fault-tolerance counters (rejections by reason, client
+//! timeouts, degraded evals, worker panics, respawns, shutdown-answered
+//! requests, and the in-flight queue-depth high-water mark).
 
+use super::request::RejectReason;
 use crate::util::stats::LatencyHistogram;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -16,6 +20,15 @@ struct Inner {
     points: u64,
     batches: u64,
     errors: u64,
+    rejected_queue_full: u64,
+    rejected_bad_request: u64,
+    rejected_deadline: u64,
+    client_timeouts: u64,
+    degraded: u64,
+    panics: u64,
+    respawns: u64,
+    shutdown_answered: u64,
+    queue_depth_highwater: u64,
     queue: Option<LatencyHistogram>,
     exec: Option<LatencyHistogram>,
     e2e: Option<LatencyHistogram>,
@@ -29,6 +42,27 @@ pub struct Snapshot {
     pub points: u64,
     pub batches: u64,
     pub errors: u64,
+    /// Admission refusals: target engine at its in-flight limit.
+    pub rejected_queue_full: u64,
+    /// Admission refusals: malformed requests caught at the edge.
+    pub rejected_bad_request: u64,
+    /// Requests whose deadline expired before execution (at submit,
+    /// batch formation, or the worker).
+    pub rejected_deadline: u64,
+    /// `eval_sync` callers whose deadline fired while waiting.
+    pub client_timeouts: u64,
+    /// BitLevel requests served from the analytic closed form by load
+    /// shedding.
+    pub degraded: u64,
+    /// Worker panics caught and isolated.
+    pub panics: u64,
+    /// Worker/batcher threads respawned by supervision.
+    pub respawns: u64,
+    /// Requests answered with a typed shutdown error instead of being
+    /// silently dropped at close.
+    pub shutdown_answered: u64,
+    /// Highest total in-flight depth observed at admission.
+    pub queue_depth_highwater: u64,
     pub mean_batch_size: f64,
     pub queue_p50_us: f64,
     pub queue_p99_us: f64,
@@ -63,6 +97,44 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Count an admission refusal under its typed reason.
+    pub fn record_rejection(&self, reason: &RejectReason) {
+        let mut m = self.inner.lock().unwrap();
+        match reason {
+            RejectReason::QueueFull => m.rejected_queue_full += 1,
+            RejectReason::BadRequest(_) => m.rejected_bad_request += 1,
+            RejectReason::Deadline => m.rejected_deadline += 1,
+        }
+    }
+
+    pub fn record_client_timeout(&self) {
+        self.inner.lock().unwrap().client_timeouts += 1;
+    }
+
+    pub fn record_degraded(&self) {
+        self.inner.lock().unwrap().degraded += 1;
+    }
+
+    pub fn record_panic(&self) {
+        self.inner.lock().unwrap().panics += 1;
+    }
+
+    pub fn record_respawn(&self) {
+        self.inner.lock().unwrap().respawns += 1;
+    }
+
+    pub fn record_shutdown_answered(&self) {
+        self.inner.lock().unwrap().shutdown_answered += 1;
+    }
+
+    /// Track the in-flight high-water mark (called at admission).
+    pub fn note_queue_depth(&self, depth: u64) {
+        let mut m = self.inner.lock().unwrap();
+        if depth > m.queue_depth_highwater {
+            m.queue_depth_highwater = depth;
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let q = m.queue.clone().unwrap_or_default();
@@ -74,6 +146,15 @@ impl Metrics {
             points: m.points,
             batches: m.batches,
             errors: m.errors,
+            rejected_queue_full: m.rejected_queue_full,
+            rejected_bad_request: m.rejected_bad_request,
+            rejected_deadline: m.rejected_deadline,
+            client_timeouts: m.client_timeouts,
+            degraded: m.degraded,
+            panics: m.panics,
+            respawns: m.respawns,
+            shutdown_answered: m.shutdown_answered,
+            queue_depth_highwater: m.queue_depth_highwater,
             mean_batch_size: if m.batches == 0 {
                 0.0
             } else {
@@ -95,6 +176,8 @@ impl Snapshot {
     pub fn report(&self) -> String {
         format!(
             "requests={} points={} batches={} (mean batch {:.1}) errors={}\n\
+             rejected qfull/bad/deadline: {}/{}/{} | timeouts={} | degraded={} | \
+             panics={} respawns={} shutdown-answered={} | queue hw={}\n\
              queue p50/p99: {:.1}/{:.1} us | exec p50/p99: {:.1}/{:.1} us | \
              e2e p50/p99: {:.1}/{:.1} us | throughput {:.0} req/s",
             self.requests,
@@ -102,6 +185,15 @@ impl Snapshot {
             self.batches,
             self.mean_batch_size,
             self.errors,
+            self.rejected_queue_full,
+            self.rejected_bad_request,
+            self.rejected_deadline,
+            self.client_timeouts,
+            self.degraded,
+            self.panics,
+            self.respawns,
+            self.shutdown_answered,
+            self.queue_depth_highwater,
             self.queue_p50_us,
             self.queue_p99_us,
             self.exec_p50_us,
@@ -133,10 +225,40 @@ mod tests {
     }
 
     #[test]
+    fn fault_counters_record_and_report() {
+        let m = Metrics::new();
+        m.record_rejection(&RejectReason::QueueFull);
+        m.record_rejection(&RejectReason::BadRequest("x".into()));
+        m.record_rejection(&RejectReason::BadRequest("y".into()));
+        m.record_rejection(&RejectReason::Deadline);
+        m.record_client_timeout();
+        m.record_degraded();
+        m.record_panic();
+        m.record_respawn();
+        m.record_shutdown_answered();
+        m.note_queue_depth(7);
+        m.note_queue_depth(3); // high-water keeps the max
+        let s = m.snapshot();
+        assert_eq!(s.rejected_queue_full, 1);
+        assert_eq!(s.rejected_bad_request, 2);
+        assert_eq!(s.rejected_deadline, 1);
+        assert_eq!(s.client_timeouts, 1);
+        assert_eq!(s.degraded, 1);
+        assert_eq!(s.panics, 1);
+        assert_eq!(s.respawns, 1);
+        assert_eq!(s.shutdown_answered, 1);
+        assert_eq!(s.queue_depth_highwater, 7);
+        assert!(s.report().contains("rejected qfull/bad/deadline: 1/2/1"));
+        assert!(s.report().contains("queue hw=7"));
+    }
+
+    #[test]
     fn empty_snapshot_is_sane() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.panics, 0);
+        assert_eq!(s.queue_depth_highwater, 0);
     }
 }

@@ -6,18 +6,73 @@
 //! simulator, the analytic evaluator, or an AOT-compiled XLA executable
 //! (the L1 Pallas kernel lowered through L2 and loaded by [`crate::runtime`]).
 //!
-//! - [`request`] — typed requests/responses.
+//! - [`request`] — typed requests/responses and the typed failure model.
+//! - [`admission`] — bounded intake: validation at the submit edge,
+//!   per-engine in-flight depth limits, and hysteresis-latched load
+//!   shedding.
 //! - [`batcher`] — dynamic batching with size + deadline triggers
 //!   (vLLM-router-style): requests accumulate until `max_batch` or
 //!   `max_wait` elapses, then the batch is dispatched to a worker.
-//! - [`server`] — worker pool wiring it together over std threads +
-//!   channels (tokio is not vendored in this offline environment).
-//! - [`metrics`] — latency histograms + throughput counters.
+//! - [`server`] — supervised worker pool wiring it together over std
+//!   threads + channels (tokio is not vendored in this offline
+//!   environment).
+//! - [`metrics`] — latency histograms + throughput and fault counters.
+//! - [`fault`] — injection hooks used by the chaos test suite.
+//!
+//! # Failure model
+//!
+//! The service's contract is that **every admitted request is answered
+//! exactly once**, and every non-admitted request is refused with a typed
+//! reason at the submit edge. The possible outcomes of a submit:
+//!
+//! - **Rejected** (`Err(EvalError::Rejected(_))` from `submit`, before
+//!   anything queues):
+//!   - `BadRequest` — unknown function, arity mismatch, non-finite
+//!     input, or `stream_len == 0` on the bit-level engine;
+//!   - `Deadline` — the request's deadline had already expired;
+//!   - `QueueFull` — the target engine is at its in-flight limit
+//!     (`AdmissionConfig::*_limit`) and, for `BitLevel`, shedding could
+//!     not absorb the request either.
+//! - **Degraded success** — under load shedding a `BitLevel` request is
+//!   rewritten to the `Analytic` closed form (Eq. 21) and served
+//!   immediately; the response carries `degraded: true`. Shedding
+//!   engages at `shed_high` in-flight BitLevel requests and disengages
+//!   at `shed_low` (hysteresis, so the policy cannot flap).
+//! - **Deadline expiry in flight** — a request whose deadline fires
+//!   while queued is answered with `Rejected(Deadline)` at batch
+//!   formation or at the worker, never evaluated, never dropped.
+//! - **Worker panic** — batches execute under `catch_unwind`; a panic
+//!   answers every in-flight request of that batch with
+//!   `WorkerPanic(reason)`, the worker thread exits (per-thread engine
+//!   scratch may be mid-update), and the supervisor respawns a
+//!   replacement, so the pool always returns to full strength. The
+//!   batcher has the same restart guarantee.
+//! - **Shutdown** — requests still queued when `shutdown()` closes
+//!   intake are either evaluated by the draining workers or answered
+//!   with `EvalError::Shutdown`; nothing is silently dropped.
+//! - **Client timeout** — `eval_sync` always carries a deadline (the
+//!   configured `sync_timeout` by default) and returns a typed
+//!   `Timeout` if the reply does not arrive in time; it can never block
+//!   forever.
+//!
+//! Determinism is preserved across all of this: a respawned worker
+//! produces bit-identical BitLevel streams (seeds derive from the
+//! request content, `0x5EED ^` the within-request point index, never
+//! from worker identity or batch composition), and degraded responses
+//! are exactly the analytic evaluation of the same coefficients.
+//!
+//! In-flight depth is accounted with RAII tokens attached at admission
+//! and released on `Drop`, so no failure path — panic unwind, shutdown
+//! drop, reply sent — can leak queue depth.
 
+pub mod admission;
 pub mod batcher;
+pub mod fault;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use request::{EvalRequest, EvalResponse, Engine};
+pub use admission::{Admission, AdmissionConfig};
+pub use fault::FaultInjector;
+pub use request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason};
 pub use server::{EvalServer, ServerConfig};

@@ -1,5 +1,13 @@
-//! Request/response types for the evaluation service.
+//! Request/response types for the evaluation service, including the
+//! typed failure model (see the failure-model section in
+//! [`crate::coordinator`]): a request is either **rejected** at the
+//! admission edge ([`RejectReason`]), **degraded** to a cheaper engine
+//! under load (flagged in [`EvalResponse::degraded`]), or answered with a
+//! typed [`EvalError`] — a client holding a reply channel is always
+//! answered, never silently dropped.
 
+use super::admission::DepthToken;
+use std::fmt;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
@@ -12,6 +20,80 @@ pub enum Engine {
     Analytic,
     /// AOT-compiled XLA executable (L1 Pallas kernel through PJRT).
     Xla,
+}
+
+impl Engine {
+    /// Number of engines (per-engine admission tables are indexed by
+    /// [`Engine::index`]).
+    pub const COUNT: usize = 3;
+
+    /// Dense index for per-engine accounting.
+    pub fn index(self) -> usize {
+        match self {
+            Engine::BitLevel => 0,
+            Engine::Analytic => 1,
+            Engine::Xla => 2,
+        }
+    }
+}
+
+/// Why admission control refused a request (the typed `Rejected{…}`
+/// family: nothing here ever reaches an engine).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The target engine's in-flight depth limit is reached and load
+    /// shedding could not absorb the request either.
+    QueueFull,
+    /// The request is malformed (unknown function, arity mismatch,
+    /// non-finite input, zero stream length) — refused at the edge
+    /// instead of panicking deep inside an engine.
+    BadRequest(String),
+    /// The request's deadline had already passed before execution
+    /// (at submit, at batch formation, or at the worker).
+    Deadline,
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::QueueFull => write!(f, "queue full"),
+            RejectReason::BadRequest(why) => write!(f, "bad request: {why}"),
+            RejectReason::Deadline => write!(f, "deadline expired before execution"),
+        }
+    }
+}
+
+/// Typed failure attached to an [`EvalResponse`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum EvalError {
+    /// Refused by admission control; the request was never evaluated.
+    Rejected(RejectReason),
+    /// The synchronous client gave up waiting (its deadline fired while
+    /// the request was still in flight). The server may still finish the
+    /// evaluation; the reply is discarded.
+    Timeout,
+    /// A worker panicked while executing the batch this request rode in.
+    /// The payload is the panic message; the supervisor respawns the
+    /// worker, so later requests are unaffected.
+    WorkerPanic(String),
+    /// The serving stack closed (or crashed) before the request could be
+    /// evaluated; it was answered rather than silently dropped.
+    Shutdown,
+    /// The engine itself failed (unknown function at execution time,
+    /// unavailable XLA runtime, …).
+    Engine(String),
+}
+
+impl fmt::Display for EvalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EvalError::Rejected(r) => write!(f, "rejected: {r}"),
+            EvalError::Timeout => write!(f, "client deadline fired while waiting for the reply"),
+            EvalError::WorkerPanic(msg) => write!(f, "worker panicked: {msg}"),
+            EvalError::Shutdown => write!(f, "server shut down before the request was evaluated"),
+            EvalError::Engine(msg) => write!(f, "engine error: {msg}"),
+        }
+    }
 }
 
 /// One evaluation request: a point (or batch of points) for a named,
@@ -27,8 +109,55 @@ pub struct EvalRequest {
     pub stream_len: usize,
     /// Enqueue timestamp (set by the server).
     pub enqueued: Instant,
+    /// Optional deadline: once passed, the request is answered with
+    /// `Rejected(Deadline)` instead of being evaluated (checked at
+    /// submit, at batch formation, and again at the worker — BitLevel
+    /// work is L-cycle expensive, so expired work is never started).
+    pub deadline: Option<Instant>,
+    /// Set by load shedding when the request was downgraded from
+    /// `BitLevel` to `Analytic`; echoed on the response.
+    pub degraded: bool,
     /// Completion channel.
     pub reply: Sender<EvalResponse>,
+    /// In-flight depth accounting token, held from admission until the
+    /// request is answered (or dropped — the token releases on `Drop`,
+    /// so panics and drops can never leak queue depth).
+    pub(crate) admitted: Option<DepthToken>,
+}
+
+impl EvalRequest {
+    /// Build a request with no deadline. `submit` stamps `enqueued` and
+    /// attaches the admission token.
+    pub fn new(
+        function: impl Into<String>,
+        points: Vec<Vec<f64>>,
+        engine: Engine,
+        stream_len: usize,
+        reply: Sender<EvalResponse>,
+    ) -> Self {
+        Self {
+            function: function.into(),
+            points,
+            engine,
+            stream_len,
+            enqueued: Instant::now(),
+            deadline: None,
+            degraded: false,
+            reply,
+            admitted: None,
+        }
+    }
+
+    /// Attach an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// True once `deadline` has passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Response with outputs and timing.
@@ -41,17 +170,39 @@ pub struct EvalResponse {
     pub exec_ns: u64,
     /// Batch size this request was served in.
     pub batch_size: usize,
-    /// Error message if evaluation failed.
-    pub error: Option<String>,
+    /// True when load shedding served this `BitLevel` request from the
+    /// `Analytic` closed form instead (reduced fidelity, same function).
+    pub degraded: bool,
+    /// Typed error if the request was not successfully evaluated.
+    pub error: Option<EvalError>,
 }
 
 impl EvalResponse {
+    /// An engine failure with a plain message (shorthand for
+    /// `from_error(EvalError::Engine(..))`).
     pub fn failed(msg: impl Into<String>) -> Self {
-        Self { outputs: Vec::new(), queue_ns: 0, exec_ns: 0, batch_size: 0, error: Some(msg.into()) }
+        Self::from_error(EvalError::Engine(msg.into()))
+    }
+
+    /// An empty response carrying a typed error.
+    pub fn from_error(error: EvalError) -> Self {
+        Self {
+            outputs: Vec::new(),
+            queue_ns: 0,
+            exec_ns: 0,
+            batch_size: 0,
+            degraded: false,
+            error: Some(error),
+        }
     }
 
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
+    }
+
+    /// The error rendered for humans, if any.
+    pub fn error_message(&self) -> Option<String> {
+        self.error.as_ref().map(|e| e.to_string())
     }
 }
 
@@ -63,7 +214,21 @@ mod tests {
     fn failed_response() {
         let r = EvalResponse::failed("nope");
         assert!(!r.is_ok());
-        assert_eq!(r.error.as_deref(), Some("nope"));
+        assert_eq!(r.error, Some(EvalError::Engine("nope".into())));
+        assert_eq!(r.error_message().as_deref(), Some("engine error: nope"));
+    }
+
+    #[test]
+    fn typed_rejections_render() {
+        let r = EvalResponse::from_error(EvalError::Rejected(RejectReason::QueueFull));
+        assert!(!r.is_ok());
+        assert!(r.error_message().unwrap().contains("queue full"));
+        let r = EvalResponse::from_error(EvalError::Rejected(RejectReason::BadRequest(
+            "arity 3 != 2".into(),
+        )));
+        assert!(r.error_message().unwrap().contains("arity 3 != 2"));
+        let r = EvalResponse::from_error(EvalError::WorkerPanic("boom".into()));
+        assert!(matches!(r.error, Some(EvalError::WorkerPanic(ref m)) if m == "boom"));
     }
 
     #[test]
@@ -74,5 +239,19 @@ mod tests {
         s.insert(Engine::Analytic);
         s.insert(Engine::Xla);
         assert_eq!(s.len(), 3);
+        assert_eq!(Engine::COUNT, 3);
+        assert_eq!(Engine::BitLevel.index(), 0);
+    }
+
+    #[test]
+    fn request_constructor_defaults() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let req = EvalRequest::new("f", vec![vec![0.5]], Engine::Analytic, 64, tx);
+        assert!(req.deadline.is_none());
+        assert!(!req.degraded);
+        assert!(!req.expired(Instant::now()));
+        let now = Instant::now();
+        let req = req.with_deadline(now);
+        assert!(req.expired(now + std::time::Duration::from_micros(1)));
     }
 }

@@ -1,25 +1,37 @@
-//! The evaluation server: function registry + batcher + worker pool.
+//! The evaluation server: function registry + admission control +
+//! batcher + supervised worker pool.
 //!
 //! Architecture (std threads + channels; Python never on this path):
 //!
 //! ```text
-//! clients → submit() → [mpsc] → batcher thread → [mpsc] → N workers
-//!                                                     ↘ metrics
+//! clients → submit() → admission → [mpsc] → batcher thread → [mpsc] → N workers
+//!              │  (validate, shed,            │ (deadlines,            │ (catch_unwind,
+//!              │   depth limits)              │  typed drains)         │  typed panics)
+//!              └────────── rejected ──────────┴──────── metrics ───────┴── supervisor
 //! ```
 //!
 //! Workers execute a whole batch on one engine: the bit-level simulator,
 //! the analytic evaluator, or — when `artifacts/smurf_eval.hlo.txt`
 //! exists — the AOT-compiled XLA kernel for supported configurations.
+//! Every batch runs under `catch_unwind`; a panicking worker answers its
+//! in-flight requests with a typed `WorkerPanic` error and exits, and
+//! the supervisor respawns it (fresh thread ⇒ fresh thread-local engine
+//! scratch), so the pool never silently shrinks. The batcher is wrapped
+//! in its own restart loop with the same guarantee.
 
+use super::admission::{Admission, AdmissionConfig};
 use super::batcher::{run_batcher, Batch, BatchPolicy};
+use super::fault::FaultInjector;
 use super::metrics::Metrics;
-use super::request::{Engine, EvalRequest, EvalResponse};
+use super::request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason};
 use crate::runtime::Runtime;
 use crate::smurf::approximator::SmurfApproximator;
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -28,6 +40,10 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
     /// Artifact name of the XLA smurf_eval kernel (batch-N, M=2, N=4).
     pub xla_artifact: String,
+    /// Admission policy: validation, depth limits, shedding watermarks.
+    pub admission: AdmissionConfig,
+    /// Fault-injection hooks (inert by default; shared with chaos tests).
+    pub faults: Arc<FaultInjector>,
 }
 
 impl Default for ServerConfig {
@@ -36,6 +52,8 @@ impl Default for ServerConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
             policy: BatchPolicy::default(),
             xla_artifact: "smurf_eval.hlo.txt".into(),
+            admission: AdmissionConfig::default(),
+            faults: Arc::new(FaultInjector::new()),
         }
     }
 }
@@ -54,7 +72,9 @@ struct XlaJob {
 /// Shared state between workers.
 struct Shared {
     functions: HashMap<String, Arc<SmurfApproximator>>,
-    metrics: Metrics,
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    faults: Arc<FaultInjector>,
     xla_tx: Option<Sender<XlaJob>>,
 }
 
@@ -86,12 +106,20 @@ fn xla_owner_loop(artifacts_dir: std::path::PathBuf, artifact: String, rx: Recei
 /// Batch size the AOT kernel was lowered with (see python/compile/aot.py).
 const KERNEL_BATCH: usize = 1024;
 
+/// How often the supervisor checks the pool for dead workers.
+const SUPERVISE_INTERVAL: Duration = Duration::from_millis(1);
+
 /// The running evaluation service.
 pub struct EvalServer {
     tx: Option<Sender<EvalRequest>>,
     shared: Arc<Shared>,
     batcher: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Worker handles, shared with the supervisor (which swaps respawned
+    /// threads in place).
+    workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+    /// Set before intake closes so the supervisor stops respawning.
+    stop: Arc<AtomicBool>,
 }
 
 impl EvalServer {
@@ -113,48 +141,94 @@ impl EvalServer {
                 .expect("spawn xla owner");
             jtx
         });
+        let metrics = Arc::new(Metrics::new());
+        let admission = Arc::new(Admission::new(cfg.admission.clone(), metrics.clone()));
         let shared = Arc::new(Shared {
             functions: functions
                 .into_iter()
                 .map(|f| (f.name().to_string(), Arc::new(f)))
                 .collect(),
-            metrics: Metrics::new(),
+            metrics: metrics.clone(),
+            admission,
+            faults: cfg.faults.clone(),
             xla_tx,
         });
         let (tx, rx) = channel::<EvalRequest>();
         let (btx, brx) = channel::<Batch>();
         let policy = cfg.policy;
+        // Batcher with a self-restart loop: the wrapper owns both channel
+        // endpoints, so a panicking batcher is restarted with its intake
+        // and worker channels intact (requests still buffered in the
+        // intake channel are re-received by the fresh loop; only the
+        // panicking iteration's pending map is lost, and those clients
+        // see a disconnect rather than a hang).
+        let batcher_metrics = metrics.clone();
         let batcher = std::thread::Builder::new()
             .name("smurf-batcher".into())
-            .spawn(move || run_batcher(rx, btx, policy))
+            .spawn(move || loop {
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    run_batcher(&rx, &btx, policy, &batcher_metrics)
+                }));
+                match r {
+                    Ok(()) => return, // intake closed: normal exit
+                    Err(_) => {
+                        batcher_metrics.record_panic();
+                        batcher_metrics.record_respawn();
+                    }
+                }
+            })
             .expect("spawn batcher");
         // Work-stealing via a shared locked receiver.
         let brx = Arc::new(Mutex::new(brx));
-        let mut workers = Vec::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
         for i in 0..cfg.workers.max(1) {
-            let shared = shared.clone();
-            let brx = brx.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("smurf-worker-{i}"))
-                    .spawn(move || worker_loop(shared, brx))
-                    .expect("spawn worker"),
-            );
+            handles.push(spawn_worker(i, shared.clone(), brx.clone()));
         }
-        Self { tx: Some(tx), shared, batcher: Some(batcher), workers }
+        let workers = Arc::new(Mutex::new(handles));
+        // Supervisor: respawn any worker whose thread has died (panic
+        // isolation answers the in-flight batch, then exits the thread so
+        // the replacement starts with fresh thread-local scratch).
+        let supervisor = {
+            let shared = shared.clone();
+            let workers = workers.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("smurf-supervisor".into())
+                .spawn(move || supervise(shared, brx, workers, stop))
+                .expect("spawn supervisor")
+        };
+        Self {
+            tx: Some(tx),
+            shared,
+            batcher: Some(batcher),
+            workers,
+            supervisor: Some(supervisor),
+            stop,
+        }
     }
 
-    /// Submit a request. Returns an error if the server is stopped.
-    pub fn submit(&self, mut req: EvalRequest) -> Result<(), String> {
+    /// Submit a request. Admission control runs here: malformed traffic,
+    /// expired deadlines, and over-limit queues are refused with a typed
+    /// error before anything is enqueued; under shedding a `BitLevel`
+    /// request may be rewritten to `Analytic` (its response will carry
+    /// `degraded: true`).
+    pub fn submit(&self, mut req: EvalRequest) -> Result<(), EvalError> {
         req.enqueued = Instant::now();
-        self.tx
-            .as_ref()
-            .ok_or("server stopped")?
-            .send(req)
-            .map_err(|_| "server channel closed".to_string())
+        let functions = &self.shared.functions;
+        let arity_of = |name: &str| functions.get(name).map(|f| f.config().num_vars());
+        Admission::admit(&self.shared.admission, &mut req, arity_of).map_err(|reason| {
+            self.shared.metrics.record_rejection(&reason);
+            EvalError::Rejected(reason)
+        })?;
+        let tx = self.tx.as_ref().ok_or(EvalError::Shutdown)?;
+        // On failure the request (and its depth token) is dropped here.
+        tx.send(req).map_err(|_| EvalError::Shutdown)
     }
 
-    /// Convenience: synchronous single-request evaluation.
+    /// Convenience: synchronous single-request evaluation with the
+    /// configured default timeout ([`AdmissionConfig::sync_timeout`]) —
+    /// never blocks forever.
     pub fn eval_sync(
         &self,
         function: &str,
@@ -162,24 +236,60 @@ impl EvalServer {
         engine: Engine,
         stream_len: usize,
     ) -> EvalResponse {
+        let timeout = self.shared.admission.config().sync_timeout;
+        self.eval_sync_with_timeout(function, points, engine, stream_len, timeout)
+    }
+
+    /// Synchronous evaluation with an explicit deadline: the request
+    /// carries it end to end (admission, batch formation, worker), and
+    /// the wait itself gives up with a typed `Timeout` once it fires.
+    pub fn eval_sync_with_timeout(
+        &self,
+        function: &str,
+        points: Vec<Vec<f64>>,
+        engine: Engine,
+        stream_len: usize,
+        timeout: Duration,
+    ) -> EvalResponse {
+        let deadline = Instant::now() + timeout;
         let (rtx, rrx) = channel();
-        let req = EvalRequest {
-            function: function.to_string(),
-            points,
-            engine,
-            stream_len,
-            enqueued: Instant::now(),
-            reply: rtx,
-        };
+        let req = EvalRequest::new(function, points, engine, stream_len, rtx)
+            .with_deadline(deadline);
         if let Err(e) = self.submit(req) {
-            return EvalResponse::failed(e);
+            return EvalResponse::from_error(e);
         }
-        rrx.recv().unwrap_or_else(|_| EvalResponse::failed("worker dropped reply"))
+        match rrx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+            Ok(resp) => resp,
+            Err(RecvTimeoutError::Timeout) => {
+                self.shared.metrics.record_client_timeout();
+                EvalResponse::from_error(EvalError::Timeout)
+            }
+            // The reply sender vanished without an answer (crashed
+            // batcher iteration or shutdown race): typed, not a hang.
+            Err(RecvTimeoutError::Disconnected) => EvalResponse::from_error(EvalError::Shutdown),
+        }
     }
 
     /// Metrics snapshot.
     pub fn metrics(&self) -> super::metrics::Snapshot {
         self.shared.metrics.snapshot()
+    }
+
+    /// Admission state (depths, shedding latch; `force_shed` for tests
+    /// and benches).
+    pub fn admission(&self) -> &Admission {
+        &self.shared.admission
+    }
+
+    /// Number of worker threads currently alive (the supervisor returns
+    /// this to the configured size after crashes).
+    pub fn live_workers(&self) -> usize {
+        self.workers
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .filter(|h| !h.is_finished())
+            .count()
     }
 
     /// Registered function names.
@@ -189,14 +299,57 @@ impl EvalServer {
         v
     }
 
-    /// Graceful shutdown: close intake, join batcher and workers.
+    /// Graceful shutdown: stop supervision, close intake, join batcher
+    /// and workers. Requests still queued at close are either evaluated
+    /// by the draining workers or answered with a typed shutdown error —
+    /// never silently dropped.
     pub fn shutdown(mut self) {
-        self.tx.take(); // closes the channel; batcher drains and exits
+        // Order matters: the supervisor must stop respawning before the
+        // workers see the closed channel and exit.
+        self.stop.store(true, Ordering::SeqCst);
+        self.tx.take(); // closes intake; batcher drains and exits
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
-        for w in self.workers.drain(..) {
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
+        let mut ws = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+        for w in ws.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+fn spawn_worker(
+    i: usize,
+    shared: Arc<Shared>,
+    brx: Arc<Mutex<Receiver<Batch>>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("smurf-worker-{i}"))
+        .spawn(move || worker_loop(shared, brx))
+        .expect("spawn worker")
+}
+
+/// Supervision loop: poll the pool; respawn any dead worker until the
+/// server begins shutdown.
+fn supervise(
+    shared: Arc<Shared>,
+    brx: Arc<Mutex<Receiver<Batch>>>,
+    workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(SUPERVISE_INTERVAL);
+        let mut ws = workers.lock().unwrap_or_else(|p| p.into_inner());
+        for (i, slot) in ws.iter_mut().enumerate() {
+            if slot.is_finished() && !stop.load(Ordering::SeqCst) {
+                let fresh = spawn_worker(i, shared.clone(), brx.clone());
+                let dead = std::mem::replace(slot, fresh);
+                let _ = dead.join();
+                shared.metrics.record_respawn();
+            }
         }
     }
 }
@@ -204,19 +357,63 @@ impl EvalServer {
 fn worker_loop(shared: Arc<Shared>, brx: Arc<Mutex<Receiver<Batch>>>) {
     loop {
         let batch = {
-            let guard = brx.lock().unwrap();
+            let guard = brx.lock().unwrap_or_else(|p| p.into_inner());
             guard.recv()
         };
         let Ok(batch) = batch else { return };
-        execute_batch(&shared, batch);
+        // Panic isolation: clone the reply channels first so a panicking
+        // engine (or injected fault) can never strand its clients.
+        let replies: Vec<Sender<EvalResponse>> =
+            batch.requests.iter().map(|r| r.reply.clone()).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| execute_batch(&shared, batch)));
+        if let Err(payload) = result {
+            let msg = panic_text(payload.as_ref());
+            shared.metrics.record_panic();
+            for tx in replies {
+                shared.metrics.record_error();
+                let _ = tx.send(EvalResponse::from_error(EvalError::WorkerPanic(msg.clone())));
+            }
+            // Exit the thread: the engines keep per-thread scratch, and a
+            // panicking evaluation may have left it mid-update. The
+            // supervisor respawns a replacement with clean thread-locals.
+            return;
+        }
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
     }
 }
 
 fn execute_batch(shared: &Shared, batch: Batch) {
     let (ref fname, engine) = batch.key;
-    let batch_size = batch.requests.len();
+    // Fault-injection hook (inert in production): may panic or stall.
+    shared.faults.before_batch();
+    // Final deadline check: the batch may have waited in the worker
+    // channel; expired requests are answered, not evaluated.
+    let now = Instant::now();
+    let (expired, requests): (Vec<_>, Vec<_>) =
+        batch.requests.into_iter().partition(|r| r.expired(now));
+    for req in expired {
+        shared.metrics.record_rejection(&RejectReason::Deadline);
+        let _ = req
+            .reply
+            .send(EvalResponse::from_error(EvalError::Rejected(RejectReason::Deadline)));
+    }
+    if requests.is_empty() {
+        return;
+    }
+    let batch_size = requests.len();
     let Some(func) = shared.functions.get(fname).cloned() else {
-        for req in batch.requests {
+        // Unreachable through submit() (admission validates the name);
+        // kept as defense for directly-injected batches.
+        for req in requests {
             shared.metrics.record_error();
             let _ = req.reply.send(EvalResponse::failed(format!("unknown function {fname}")));
         }
@@ -227,19 +424,17 @@ fn execute_batch(shared: &Shared, batch: Batch) {
     // (The BitLevel engine works on the request structure directly —
     // stream lengths and seeds are per-request — so only the engines
     // that are length-agnostic flatten the points.)
-    let spans: Vec<usize> = batch.requests.iter().map(|r| r.points.len()).collect();
+    let spans: Vec<usize> = requests.iter().map(|r| r.points.len()).collect();
     let exec_start = Instant::now();
     let result: Result<Vec<f64>, String> = match engine {
-        Engine::Analytic => Ok(batch
-            .requests
+        Engine::Analytic => Ok(requests
             .iter()
             .flat_map(|r| r.points.iter())
             .map(|p| func.eval_analytic(p))
             .collect()),
-        Engine::BitLevel => Ok(eval_bitlevel_batch(&func, &batch.requests)),
+        Engine::BitLevel => Ok(eval_bitlevel_batch(&func, &requests)),
         Engine::Xla => {
-            let all_points: Vec<&[f64]> = batch
-                .requests
+            let all_points: Vec<&[f64]> = requests
                 .iter()
                 .flat_map(|r| r.points.iter().map(|p| p.as_slice()))
                 .collect();
@@ -251,7 +446,7 @@ fn execute_batch(shared: &Shared, batch: Batch) {
     match result {
         Ok(outputs) => {
             let mut off = 0;
-            for (req, span) in batch.requests.into_iter().zip(spans) {
+            for (req, span) in requests.into_iter().zip(spans) {
                 let queue_ns = batch
                     .formed_at
                     .saturating_duration_since(req.enqueued)
@@ -263,13 +458,14 @@ fn execute_batch(shared: &Shared, batch: Batch) {
                     queue_ns,
                     exec_ns,
                     batch_size,
+                    degraded: req.degraded,
                     error: None,
                 });
                 off += span;
             }
         }
         Err(e) => {
-            for req in batch.requests {
+            for req in requests {
                 shared.metrics.record_error();
                 let _ = req.reply.send(EvalResponse::failed(e.clone()));
             }
@@ -451,7 +647,7 @@ mod tests {
                     max_batch: 8,
                     max_wait: std::time::Duration::from_millis(1),
                 },
-                xla_artifact: "smurf_eval.hlo.txt".into(),
+                ..ServerConfig::default()
             },
         )
     }
@@ -461,6 +657,7 @@ mod tests {
         let server = test_server(2);
         let resp = server.eval_sync("euclidean2", vec![vec![0.3, 0.4]], Engine::Analytic, 64);
         assert!(resp.is_ok(), "{:?}", resp.error);
+        assert!(!resp.degraded);
         assert!((resp.outputs[0] - 0.5).abs() < 0.05, "y={}", resp.outputs[0]);
         server.shutdown();
     }
@@ -512,16 +709,15 @@ mod tests {
         let func = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
         let mk = |n: usize, len: usize, salt: usize| -> EvalRequest {
             let (rtx, _rrx) = channel();
-            EvalRequest {
-                function: "euclidean2".into(),
-                points: (0..n)
+            EvalRequest::new(
+                "euclidean2",
+                (0..n)
                     .map(|i| vec![((i + salt) % 10) as f64 / 9.0, (i % 7) as f64 / 6.0])
                     .collect(),
-                engine: Engine::BitLevel,
-                stream_len: len,
-                enqueued: Instant::now(),
-                reply: rtx,
-            }
+                Engine::BitLevel,
+                len,
+                rtx,
+            )
         };
         let reqs = vec![mk(10, 32, 1), mk(3, 128, 2), mk(WIDE_LANES + 20, 32, 3)];
         let out = eval_bitlevel_batch(&func, &reqs);
@@ -546,16 +742,15 @@ mod tests {
         let func = SmurfApproximator::synthesize(&cfg, &functions::product2(), 64);
         let mk = |n: usize, salt: usize| -> EvalRequest {
             let (rtx, _rrx) = channel();
-            EvalRequest {
-                function: "product2".into(),
-                points: (0..n)
+            EvalRequest::new(
+                "product2",
+                (0..n)
                     .map(|i| vec![((i + salt) % 8) as f64 / 7.0, (i % 5) as f64 / 4.0])
                     .collect(),
-                engine: Engine::BitLevel,
-                stream_len: 64,
-                enqueued: Instant::now(),
-                reply: rtx,
-            }
+                Engine::BitLevel,
+                64,
+                rtx,
+            )
         };
         let reqs = vec![mk(50, 0), mk(WIDE_LANES - 30, 5), mk(1, 9)];
         let out = eval_bitlevel_batch(&func, &reqs);
@@ -571,11 +766,52 @@ mod tests {
     }
 
     #[test]
-    fn unknown_function_errors() {
+    fn unknown_function_rejected_at_the_edge() {
         let server = test_server(1);
         let resp = server.eval_sync("nope", vec![vec![0.1, 0.1]], Engine::Analytic, 64);
         assert!(!resp.is_ok());
-        assert_eq!(server.metrics().errors, 1);
+        assert!(
+            matches!(resp.error, Some(EvalError::Rejected(RejectReason::BadRequest(_)))),
+            "{:?}",
+            resp.error
+        );
+        assert_eq!(server.metrics().rejected_bad_request, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_points_rejected_at_the_edge() {
+        let server = test_server(1);
+        // Wrong arity.
+        let r = server.eval_sync("euclidean2", vec![vec![0.1]], Engine::Analytic, 64);
+        assert!(matches!(r.error, Some(EvalError::Rejected(RejectReason::BadRequest(_)))));
+        // Non-finite input.
+        let r = server.eval_sync("euclidean2", vec![vec![0.1, f64::INFINITY]], Engine::Analytic, 64);
+        assert!(matches!(r.error, Some(EvalError::Rejected(RejectReason::BadRequest(_)))));
+        // Zero stream length on the bit-level engine.
+        let r = server.eval_sync("euclidean2", vec![vec![0.1, 0.2]], Engine::BitLevel, 0);
+        assert!(matches!(r.error, Some(EvalError::Rejected(RejectReason::BadRequest(_)))));
+        assert_eq!(server.metrics().rejected_bad_request, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn degraded_request_served_from_analytic_and_flagged() {
+        let server = test_server(1);
+        server.admission().force_shed(true);
+        let points = vec![vec![0.3, 0.4], vec![0.6, 0.2]];
+        let resp = server.eval_sync("euclidean2", points.clone(), Engine::BitLevel, 256);
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert!(resp.degraded, "shedding must flag the response");
+        let cfg = SmurfConfig::uniform(2, 4);
+        let reference = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+        for (got, p) in resp.outputs.iter().zip(&points) {
+            assert_eq!(*got, reference.eval_analytic(p), "degraded == analytic closed form");
+        }
+        assert!(server.metrics().degraded >= 1);
+        server.admission().force_shed(false);
+        let resp = server.eval_sync("euclidean2", points, Engine::BitLevel, 256);
+        assert!(resp.is_ok() && !resp.degraded);
         server.shutdown();
     }
 
@@ -584,6 +820,7 @@ mod tests {
         let server = test_server(1);
         let resp = server.eval_sync("euclidean2", vec![vec![0.1, 0.1]], Engine::Xla, 64);
         assert!(!resp.is_ok());
+        assert!(matches!(resp.error, Some(EvalError::Engine(_))));
         server.shutdown();
     }
 
@@ -608,6 +845,7 @@ mod tests {
         assert_eq!(snap.requests, 200);
         assert!(snap.mean_batch_size >= 1.0);
         assert_eq!(snap.errors, 0);
+        assert!(snap.queue_depth_highwater >= 1);
         if let Ok(s) = Arc::try_unwrap(server) {
             s.shutdown();
         }
@@ -617,6 +855,13 @@ mod tests {
     fn functions_listing() {
         let server = test_server(1);
         assert_eq!(server.functions(), vec!["euclidean2", "product2"]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn live_workers_reports_pool_size() {
+        let server = test_server(3);
+        assert_eq!(server.live_workers(), 3);
         server.shutdown();
     }
 }

@@ -1,0 +1,347 @@
+//! Chaos suite: the fault-tolerance contract of the serving core under
+//! injected failures (see the failure model in `smurf::coordinator`).
+//!
+//! The invariant every test enforces: **no client ever hangs**. Every
+//! submit resolves to a success, a degraded success, or a typed
+//! rejection/failure within its deadline — under worker panics, stalls,
+//! queue overload, dropped clients, and shutdown — and the worker pool
+//! returns to full strength afterwards.
+
+use smurf::coordinator::batcher::BatchPolicy;
+use smurf::coordinator::{
+    AdmissionConfig, Engine, EvalError, EvalRequest, EvalServer, FaultInjector, RejectReason,
+    ServerConfig,
+};
+use smurf::prelude::*;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn chaos_server(
+    workers: usize,
+    policy: BatchPolicy,
+    admission: AdmissionConfig,
+) -> (EvalServer, Arc<FaultInjector>) {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let funcs = vec![
+        SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64),
+        SmurfApproximator::synthesize(&cfg, &functions::product2(), 64),
+    ];
+    let faults = Arc::new(FaultInjector::new());
+    let server = EvalServer::start(
+        funcs,
+        None,
+        ServerConfig { workers, policy, admission, faults: faults.clone(), ..ServerConfig::default() },
+    );
+    (server, faults)
+}
+
+fn default_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) }
+}
+
+/// Wait (bounded) until the supervisor has the pool back at `n` workers.
+fn await_pool(server: &EvalServer, n: usize) {
+    for _ in 0..2000 {
+        if server.live_workers() == n {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("pool did not recover to {n} workers (live={})", server.live_workers());
+}
+
+/// A worker panicking mid-batch must answer every in-flight client with a
+/// typed `WorkerPanic`, the supervisor must respawn the thread, and the
+/// server must keep serving.
+#[test]
+fn worker_panic_answers_clients_and_pool_recovers() {
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) };
+    let (server, faults) = chaos_server(2, policy, AdmissionConfig::default());
+    faults.arm_panic_on_batch(1); // the very next batch dies mid-execution
+
+    let mut receivers = Vec::new();
+    for i in 0..4 {
+        let (rtx, rrx) = channel();
+        let req = EvalRequest::new(
+            "euclidean2",
+            vec![vec![i as f64 / 4.0, 0.5]],
+            Engine::Analytic,
+            64,
+            rtx,
+        );
+        server.submit(req).expect("healthy traffic admits");
+        receivers.push(rrx);
+    }
+    // Every client is answered — none hang, and the panicking batch's
+    // members carry the typed error.
+    let mut panics = 0;
+    for rrx in receivers {
+        let resp = rrx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("client must be answered despite the panic");
+        if let Some(EvalError::WorkerPanic(msg)) = &resp.error {
+            assert!(msg.contains("fault injection"), "panic payload preserved: {msg}");
+            panics += 1;
+        }
+    }
+    assert!(panics >= 1, "at least the injected batch must report WorkerPanic");
+
+    let snap = server.metrics();
+    assert!(snap.panics >= 1, "panic must be counted");
+    await_pool(&server, 2);
+    for _ in 0..200 {
+        if server.metrics().respawns >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(server.metrics().respawns >= 1, "supervisor must record the respawn");
+
+    // The recovered pool serves correctly (deterministically, even).
+    let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::Analytic, 64);
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    assert!((resp.outputs[0] - 0.25).abs() < 0.01);
+    server.shutdown();
+}
+
+/// A stalled worker must not wedge synchronous clients: the deadline
+/// fires, the client gets a typed `Timeout`, and once the stall clears
+/// the server recovers.
+#[test]
+fn slow_worker_times_out_typed_then_recovers() {
+    let (server, faults) = chaos_server(1, default_policy(), AdmissionConfig::default());
+    faults.set_slow_batch(Duration::from_millis(300));
+
+    let t0 = Instant::now();
+    let resp = server.eval_sync_with_timeout(
+        "euclidean2",
+        vec![vec![0.3, 0.4]],
+        Engine::Analytic,
+        64,
+        Duration::from_millis(40),
+    );
+    assert_eq!(resp.error, Some(EvalError::Timeout), "typed timeout, not a hang");
+    assert!(
+        t0.elapsed() < Duration::from_millis(250),
+        "timeout must fire at the client deadline, got {:?}",
+        t0.elapsed()
+    );
+    assert!(server.metrics().client_timeouts >= 1);
+
+    faults.set_slow_batch(Duration::ZERO);
+    // The worker finishes the stalled batch, then serves normally.
+    let resp = server.eval_sync("euclidean2", vec![vec![0.3, 0.4]], Engine::Analytic, 64);
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    server.shutdown();
+}
+
+/// A queued request whose deadline expires behind a stalled worker is
+/// answered with `Rejected(Deadline)` — expired work is never executed.
+#[test]
+fn queued_deadline_expires_behind_stalled_worker() {
+    let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    let (server, faults) = chaos_server(1, policy, AdmissionConfig::default());
+    faults.set_slow_batch(Duration::from_millis(100));
+
+    // Occupy the single worker.
+    let (busy_tx, busy_rx) = channel();
+    server
+        .submit(EvalRequest::new(
+            "euclidean2",
+            vec![vec![0.5, 0.5]],
+            Engine::Analytic,
+            64,
+            busy_tx,
+        ))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(20)); // let the worker pick it up
+
+    // This request's 5 ms deadline will expire while it waits in line.
+    let (rtx, rrx) = channel();
+    let req = EvalRequest::new("euclidean2", vec![vec![0.2, 0.8]], Engine::BitLevel, 256, rtx)
+        .with_deadline(Instant::now() + Duration::from_millis(5));
+    server.submit(req).expect("deadline still live at submit");
+
+    let resp = rrx.recv_timeout(Duration::from_secs(5)).expect("expired request is answered");
+    assert_eq!(resp.error, Some(EvalError::Rejected(RejectReason::Deadline)));
+    assert!(server.metrics().rejected_deadline >= 1);
+
+    // The stalled request itself still completes.
+    let busy = busy_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert!(busy.is_ok());
+    faults.set_slow_batch(Duration::ZERO);
+    server.shutdown();
+}
+
+/// Overload: past the shed watermark BitLevel traffic degrades to the
+/// analytic closed form (flagged), past the hard limits it is rejected
+/// with `QueueFull`, every admitted request still resolves, and once the
+/// backlog drains the hysteresis latch releases (no more degradation).
+#[test]
+fn overload_sheds_then_rejects_then_recovers() {
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let admission = AdmissionConfig {
+        bitlevel_limit: 4,
+        analytic_limit: 4,
+        shed_high: 2,
+        shed_low: 1,
+        ..AdmissionConfig::default()
+    };
+    let (server, faults) = chaos_server(1, policy, admission);
+    faults.set_slow_batch(Duration::from_millis(50));
+
+    let mut receivers = Vec::new();
+    let mut queue_full = 0;
+    for i in 0..12 {
+        let (rtx, rrx) = channel();
+        let req = EvalRequest::new(
+            "euclidean2",
+            vec![vec![i as f64 / 12.0, 0.5]],
+            Engine::BitLevel,
+            64,
+            rtx,
+        );
+        match server.submit(req) {
+            Ok(()) => receivers.push(rrx),
+            Err(EvalError::Rejected(RejectReason::QueueFull)) => queue_full += 1,
+            Err(e) => panic!("unexpected rejection: {e}"),
+        }
+    }
+    assert!(queue_full >= 1, "hard limits must eventually reject");
+    assert!(server.metrics().rejected_queue_full >= 1);
+
+    // Every admitted request resolves — none hang behind the slow worker.
+    let mut degraded = 0;
+    for rrx in receivers {
+        let resp = rrx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("admitted requests must resolve under overload");
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        if resp.degraded {
+            degraded += 1;
+        }
+    }
+    assert!(degraded >= 1, "shedding must have served BitLevel traffic analytically");
+    assert!(server.metrics().degraded >= 1);
+
+    // Backlog drained (tokens released on reply) → latch disengages →
+    // fresh BitLevel traffic is served at full fidelity again.
+    faults.set_slow_batch(Duration::ZERO);
+    for _ in 0..500 {
+        if server.admission().total_depth() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let resp = server.eval_sync("euclidean2", vec![vec![0.4, 0.6]], Engine::BitLevel, 64);
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    assert!(!resp.degraded, "hysteresis latch must release once the backlog drains");
+    assert!(!server.admission().is_shedding());
+    server.shutdown();
+}
+
+/// Malformed traffic is refused at the submit edge with typed reasons and
+/// never reaches an engine.
+#[test]
+fn bad_requests_rejected_at_the_edge() {
+    let (server, _faults) = chaos_server(1, default_policy(), AdmissionConfig::default());
+    let reject = |req: EvalRequest| -> RejectReason {
+        match server.submit(req) {
+            Err(EvalError::Rejected(r)) => r,
+            other => panic!("expected rejection, got {other:?}"),
+        }
+    };
+    let (rtx, _rrx) = channel();
+    // Unknown function.
+    let r = reject(EvalRequest::new("nope", vec![vec![0.1, 0.2]], Engine::Analytic, 64, rtx.clone()));
+    assert!(matches!(r, RejectReason::BadRequest(_)));
+    // Arity mismatch.
+    let r = reject(EvalRequest::new("euclidean2", vec![vec![0.1]], Engine::Analytic, 64, rtx.clone()));
+    assert!(matches!(r, RejectReason::BadRequest(_)));
+    // Non-finite input.
+    let r = reject(EvalRequest::new(
+        "euclidean2",
+        vec![vec![0.1, f64::NAN]],
+        Engine::Analytic,
+        64,
+        rtx.clone(),
+    ));
+    assert!(matches!(r, RejectReason::BadRequest(_)));
+    // Zero-length stream on the bit-level engine.
+    let r = reject(EvalRequest::new("euclidean2", vec![vec![0.1, 0.2]], Engine::BitLevel, 0, rtx.clone()));
+    assert!(matches!(r, RejectReason::BadRequest(_)));
+    // Dead on arrival.
+    let expired = EvalRequest::new("euclidean2", vec![vec![0.1, 0.2]], Engine::Analytic, 64, rtx)
+        .with_deadline(Instant::now() - Duration::from_millis(1));
+    assert_eq!(reject(expired), RejectReason::Deadline);
+
+    let snap = server.metrics();
+    assert_eq!(snap.rejected_bad_request, 4);
+    assert_eq!(snap.rejected_deadline, 1);
+    assert_eq!(snap.requests, 0, "nothing malformed may reach an engine");
+    server.shutdown();
+}
+
+/// Shutdown answers queued requests instead of dropping them: every
+/// receiver held across `shutdown()` resolves.
+#[test]
+fn shutdown_answers_queued_requests() {
+    let (server, faults) = chaos_server(1, default_policy(), AdmissionConfig::default());
+    faults.set_slow_batch(Duration::from_millis(50));
+    let mut receivers = Vec::new();
+    for i in 0..6 {
+        let (rtx, rrx) = channel();
+        server
+            .submit(EvalRequest::new(
+                "product2",
+                vec![vec![i as f64 / 6.0, 0.5]],
+                Engine::Analytic,
+                64,
+                rtx,
+            ))
+            .unwrap();
+        receivers.push(rrx);
+    }
+    server.shutdown();
+    for rrx in receivers {
+        let resp = rrx
+            .recv_timeout(Duration::from_secs(1))
+            .expect("queued request must be answered at shutdown, not dropped");
+        // Either evaluated by the draining workers or typed-failed —
+        // never silently discarded.
+        assert!(resp.is_ok() || resp.error == Some(EvalError::Shutdown), "{:?}", resp.error);
+    }
+}
+
+/// Clients that drop their reply receivers — even while panics are being
+/// injected — must not wedge the server or leak queue depth.
+#[test]
+fn dropped_clients_under_panics_leak_nothing() {
+    let (server, faults) = chaos_server(2, default_policy(), AdmissionConfig::default());
+    faults.arm_panic_on_batch(2);
+    for i in 0..30 {
+        let (rtx, rrx) = channel();
+        drop(rrx); // client walks away immediately
+        let _ = server.submit(EvalRequest::new(
+            "euclidean2",
+            vec![vec![i as f64 / 30.0, 0.5]],
+            Engine::Analytic,
+            64,
+            rtx,
+        ));
+    }
+    // Depth drains fully: tokens release whether the reply was sent,
+    // unsendable, or the batch died in a panic.
+    for _ in 0..2000 {
+        if server.admission().total_depth() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(server.admission().total_depth(), 0, "in-flight accounting must drain to zero");
+    await_pool(&server, 2);
+    let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::Analytic, 64);
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    server.shutdown();
+}

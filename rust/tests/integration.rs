@@ -58,7 +58,7 @@ fn server_matches_direct_evaluation() {
         ServerConfig {
             workers: 2,
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
-            xla_artifact: "smurf_eval.hlo.txt".into(),
+            ..ServerConfig::default()
         },
     );
     let points: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64 / 9.0, 0.4]).collect();
@@ -185,14 +185,13 @@ fn server_survives_dropped_clients() {
     for i in 0..50 {
         let (rtx, rrx) = std::sync::mpsc::channel();
         drop(rrx);
-        let _ = server.submit(smurf::coordinator::EvalRequest {
-            function: "product2".into(),
-            points: vec![vec![i as f64 / 50.0, 0.5]],
-            engine: Engine::Analytic,
-            stream_len: 64,
-            enqueued: std::time::Instant::now(),
-            reply: rtx,
-        });
+        let _ = server.submit(smurf::coordinator::EvalRequest::new(
+            "product2",
+            vec![vec![i as f64 / 50.0, 0.5]],
+            Engine::Analytic,
+            64,
+            rtx,
+        ));
     }
     // A healthy request afterwards still completes.
     let r = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::Analytic, 64);
@@ -201,18 +200,27 @@ fn server_survives_dropped_clients() {
     server.shutdown();
 }
 
-/// Unknown engines/functions degrade to clean errors, and metrics
-/// reflect them.
+/// Unknown engines/functions degrade to clean typed errors, and metrics
+/// reflect them: unknown functions are rejected at the admission edge
+/// (never queued), while engine failures surface as `Engine` errors.
 #[test]
 fn error_paths_are_observable() {
+    use smurf::coordinator::{EvalError, RejectReason};
     let cfg = SmurfConfig::uniform(2, 4);
     let approx = SmurfApproximator::synthesize(&cfg, &functions::product2(), 64);
     let server = EvalServer::start(vec![approx], None, ServerConfig::default());
     let r = server.eval_sync("missing_fn", vec![vec![0.1, 0.2]], Engine::Analytic, 64);
     assert!(!r.is_ok());
+    assert!(
+        matches!(r.error, Some(EvalError::Rejected(RejectReason::BadRequest(_)))),
+        "{:?}",
+        r.error
+    );
     let r = server.eval_sync("product2", vec![vec![0.1, 0.2]], Engine::Xla, 64);
     assert!(!r.is_ok(), "XLA without runtime must fail cleanly");
+    assert!(matches!(r.error, Some(EvalError::Engine(_))), "{:?}", r.error);
     let snap = server.metrics();
-    assert!(snap.errors >= 2);
+    assert_eq!(snap.rejected_bad_request, 1);
+    assert!(snap.errors >= 1);
     server.shutdown();
 }
