@@ -11,7 +11,7 @@ MANIFEST := rust/Cargo.toml
 FEATURES ?=
 FEATFLAGS := $(if $(FEATURES),--features $(FEATURES),)
 
-.PHONY: build test tier1 chaos clippy bench-json bench bench-build ci
+.PHONY: build test tier1 chaos clippy bench-json bench bench-build fault-sweep ci
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST) $(FEATFLAGS)
@@ -49,5 +49,16 @@ bench-json:
 	$(CARGO) bench --bench perf_serve --manifest-path $(MANIFEST) $(FEATFLAGS)
 
 bench: bench-json
+
+# Fault-injection sweep (ISSUE 7): zero-rate equality gates (armed
+# all-zero fault plans and rate-0 TMR must be bit-identical to the clean
+# engine at every compiled plane width — a divergence aborts with a
+# non-zero exit before anything is recorded), then per-site MAE-vs-flip-
+# rate curves raw vs TMR and hook-overhead timings, written to
+# BENCH_fault_sweep.json (override with BENCH_FAULT_OUT). The TMR-gain
+# and overhead floors are deferred and skippable with BENCH_NO_ENFORCE=1;
+# the equality gates never are.
+fault-sweep:
+	$(CARGO) bench --bench fault_sweep --manifest-path $(MANIFEST) $(FEATFLAGS)
 
 ci: tier1 clippy

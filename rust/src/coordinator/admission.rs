@@ -16,6 +16,11 @@
 //! Degraded requests are accounted under their *new* engine (`Analytic`),
 //! which is exactly what makes the policy stable: diverted traffic stops
 //! feeding the watermark it tripped.
+//!
+//! Shedding is one of two sources of `degraded: true` responses: the
+//! drift sentinel ([`super::sentinel`]) reroutes a *quarantined*
+//! function's `BitLevel` traffic the same way, before admission runs, so
+//! both paths depth-account the request under its final engine.
 
 use super::metrics::Metrics;
 use super::request::{Engine, EvalRequest, RejectReason};

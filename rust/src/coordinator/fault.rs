@@ -10,6 +10,13 @@
 //! - **artificial slowness** — every batch stalls for a configured
 //!   duration (exercises deadline expiry, client timeouts, queue
 //!   buildup, and load shedding);
+//! - **output drift** — a constant bias added to every `BitLevel` batch
+//!   output (exercises the drift sentinel's canary cross-checks and the
+//!   quarantine lifecycle: the bias is healable, so clearing it lets
+//!   recovery probes succeed);
+//! - **NaN poisoning** — every `BitLevel` output becomes NaN (exercises
+//!   the worker's non-finite output guard: clients must see a typed
+//!   engine error, never a poisoned float);
 //! - reply-receiver drops are driven from the client side (drop the
 //!   receiver before the reply arrives) — no hook needed here.
 //!
@@ -17,7 +24,7 @@
 //! (not per cycle), so production builds keep it compiled in and the
 //! chaos suite runs against the exact shipping code path.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Shared, thread-safe fault plan. All hooks are disabled by default.
@@ -30,6 +37,11 @@ pub struct FaultInjector {
     batches_seen: AtomicU64,
     /// Artificial stall before each batch, in nanoseconds (0 = none).
     slow_batch_ns: AtomicU64,
+    /// Constant bias added to every BitLevel batch output, stored as
+    /// `f64::to_bits` (0 = the bit pattern of +0.0 = disabled).
+    output_bias: AtomicU64,
+    /// Replace every BitLevel output with NaN.
+    poison_nan: AtomicBool,
 }
 
 impl FaultInjector {
@@ -48,6 +60,39 @@ impl FaultInjector {
     /// Stall every subsequent batch by `d` (Duration::ZERO disables).
     pub fn set_slow_batch(&self, d: Duration) {
         self.slow_batch_ns.store(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Bias every subsequent BitLevel batch output by `bias` (0.0
+    /// disables). Models a drifting engine — stuck counter bits,
+    /// mis-calibrated decode — in a *healable* way: clearing the bias
+    /// lets the sentinel's recovery probes succeed.
+    pub fn set_output_bias(&self, bias: f64) {
+        self.output_bias.store(bias.to_bits(), Ordering::SeqCst);
+    }
+
+    /// Replace every subsequent BitLevel output with NaN (off by
+    /// default). Drives the worker's non-finite output guard.
+    pub fn set_poison_nan(&self, on: bool) {
+        self.poison_nan.store(on, Ordering::SeqCst);
+    }
+
+    /// Worker-side hook applied to a BitLevel batch's outputs after the
+    /// engine runs and before results scatter to clients. Inert by
+    /// default: one relaxed bool + one relaxed u64 load per batch.
+    pub fn corrupt_outputs(&self, outputs: &mut [f64]) {
+        if self.poison_nan.load(Ordering::Relaxed) {
+            for y in outputs.iter_mut() {
+                *y = f64::NAN;
+            }
+            return;
+        }
+        let bits = self.output_bias.load(Ordering::Relaxed);
+        if bits != 0 {
+            let bias = f64::from_bits(bits);
+            for y in outputs.iter_mut() {
+                *y += bias;
+            }
+        }
     }
 
     /// Worker-side hook, called once per batch before execution. May
@@ -89,6 +134,32 @@ mod tests {
         // Trigger cleared: later batches run clean.
         f.before_batch();
         f.before_batch();
+    }
+
+    #[test]
+    fn output_corruption_hooks() {
+        let f = FaultInjector::new();
+        let mut out = [0.25, 0.5];
+        // Inert by default: outputs pass through untouched.
+        f.corrupt_outputs(&mut out);
+        assert_eq!(out, [0.25, 0.5]);
+        // Bias shifts every output; clearing it restores pass-through.
+        f.set_output_bias(0.5);
+        f.corrupt_outputs(&mut out);
+        assert_eq!(out, [0.75, 1.0]);
+        f.set_output_bias(0.0);
+        f.corrupt_outputs(&mut out);
+        assert_eq!(out, [0.75, 1.0]);
+        // NaN poisoning wins over bias and is reversible.
+        f.set_output_bias(0.5);
+        f.set_poison_nan(true);
+        f.corrupt_outputs(&mut out);
+        assert!(out.iter().all(|y| y.is_nan()));
+        f.set_poison_nan(false);
+        f.set_output_bias(0.0);
+        let mut out = [0.1];
+        f.corrupt_outputs(&mut out);
+        assert_eq!(out, [0.1]);
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Service metrics: counters + latency histograms, merged across workers,
 //! including the fault-tolerance counters (rejections by reason, client
 //! timeouts, degraded evals, worker panics, respawns, shutdown-answered
-//! requests, and the in-flight queue-depth high-water mark).
+//! requests, and the in-flight queue-depth high-water mark) and the
+//! drift-sentinel counters (canary cross-checks, drift alarms, recovery
+//! probes, drift-degraded requests, recoveries, and non-finite engine
+//! outputs caught by the worker guard).
 
 use super::request::RejectReason;
 use crate::util::stats::LatencyHistogram;
@@ -29,6 +32,12 @@ struct Inner {
     respawns: u64,
     shutdown_answered: u64,
     queue_depth_highwater: u64,
+    canary_checks: u64,
+    drift_alarms: u64,
+    drift_probes: u64,
+    drift_degraded: u64,
+    drift_recoveries: u64,
+    nonfinite_outputs: u64,
     queue: Option<LatencyHistogram>,
     exec: Option<LatencyHistogram>,
     e2e: Option<LatencyHistogram>,
@@ -63,6 +72,23 @@ pub struct Snapshot {
     pub shutdown_answered: u64,
     /// Highest total in-flight depth observed at admission.
     pub queue_depth_highwater: u64,
+    /// BitLevel responses cross-checked against the analytic closed form
+    /// by the drift sentinel (paced canaries + recovery probes).
+    pub canary_checks: u64,
+    /// Drift alarms raised (a function's canary-error EWMA crossed the
+    /// quarantine threshold).
+    pub drift_alarms: u64,
+    /// Recovery probes routed through the real engine while quarantined.
+    pub drift_probes: u64,
+    /// BitLevel requests degraded to the analytic closed form because
+    /// their function's engine was quarantined (also counted under
+    /// `degraded`).
+    pub drift_degraded: u64,
+    /// Quarantined functions restored to healthy by successful probes.
+    pub drift_recoveries: u64,
+    /// Engine outputs caught non-finite by the worker guard and answered
+    /// with a typed error instead of a poisoned float.
+    pub nonfinite_outputs: u64,
     pub mean_batch_size: f64,
     pub queue_p50_us: f64,
     pub queue_p99_us: f64,
@@ -127,6 +153,30 @@ impl Metrics {
         self.inner.lock().unwrap().shutdown_answered += 1;
     }
 
+    pub fn record_canary(&self) {
+        self.inner.lock().unwrap().canary_checks += 1;
+    }
+
+    pub fn record_drift_alarm(&self) {
+        self.inner.lock().unwrap().drift_alarms += 1;
+    }
+
+    pub fn record_drift_probe(&self) {
+        self.inner.lock().unwrap().drift_probes += 1;
+    }
+
+    pub fn record_drift_degraded(&self) {
+        self.inner.lock().unwrap().drift_degraded += 1;
+    }
+
+    pub fn record_drift_recovery(&self) {
+        self.inner.lock().unwrap().drift_recoveries += 1;
+    }
+
+    pub fn record_nonfinite(&self) {
+        self.inner.lock().unwrap().nonfinite_outputs += 1;
+    }
+
     /// Track the in-flight high-water mark (called at admission).
     pub fn note_queue_depth(&self, depth: u64) {
         let mut m = self.inner.lock().unwrap();
@@ -155,6 +205,12 @@ impl Metrics {
             respawns: m.respawns,
             shutdown_answered: m.shutdown_answered,
             queue_depth_highwater: m.queue_depth_highwater,
+            canary_checks: m.canary_checks,
+            drift_alarms: m.drift_alarms,
+            drift_probes: m.drift_probes,
+            drift_degraded: m.drift_degraded,
+            drift_recoveries: m.drift_recoveries,
+            nonfinite_outputs: m.nonfinite_outputs,
             mean_batch_size: if m.batches == 0 {
                 0.0
             } else {
@@ -178,6 +234,8 @@ impl Snapshot {
             "requests={} points={} batches={} (mean batch {:.1}) errors={}\n\
              rejected qfull/bad/deadline: {}/{}/{} | timeouts={} | degraded={} | \
              panics={} respawns={} shutdown-answered={} | queue hw={}\n\
+             drift canary/alarm/probe/degraded/recovered: {}/{}/{}/{}/{} | \
+             nonfinite={}\n\
              queue p50/p99: {:.1}/{:.1} us | exec p50/p99: {:.1}/{:.1} us | \
              e2e p50/p99: {:.1}/{:.1} us | throughput {:.0} req/s",
             self.requests,
@@ -194,6 +252,12 @@ impl Snapshot {
             self.respawns,
             self.shutdown_answered,
             self.queue_depth_highwater,
+            self.canary_checks,
+            self.drift_alarms,
+            self.drift_probes,
+            self.drift_degraded,
+            self.drift_recoveries,
+            self.nonfinite_outputs,
             self.queue_p50_us,
             self.queue_p99_us,
             self.exec_p50_us,
@@ -238,6 +302,13 @@ mod tests {
         m.record_shutdown_answered();
         m.note_queue_depth(7);
         m.note_queue_depth(3); // high-water keeps the max
+        m.record_canary();
+        m.record_canary();
+        m.record_drift_alarm();
+        m.record_drift_probe();
+        m.record_drift_degraded();
+        m.record_drift_recovery();
+        m.record_nonfinite();
         let s = m.snapshot();
         assert_eq!(s.rejected_queue_full, 1);
         assert_eq!(s.rejected_bad_request, 2);
@@ -248,8 +319,16 @@ mod tests {
         assert_eq!(s.respawns, 1);
         assert_eq!(s.shutdown_answered, 1);
         assert_eq!(s.queue_depth_highwater, 7);
+        assert_eq!(s.canary_checks, 2);
+        assert_eq!(s.drift_alarms, 1);
+        assert_eq!(s.drift_probes, 1);
+        assert_eq!(s.drift_degraded, 1);
+        assert_eq!(s.drift_recoveries, 1);
+        assert_eq!(s.nonfinite_outputs, 1);
         assert!(s.report().contains("rejected qfull/bad/deadline: 1/2/1"));
         assert!(s.report().contains("queue hw=7"));
+        assert!(s.report().contains("drift canary/alarm/probe/degraded/recovered: 2/1/1/1/1"));
+        assert!(s.report().contains("nonfinite=1"));
     }
 
     #[test]
@@ -260,5 +339,8 @@ mod tests {
         assert_eq!(s.throughput_rps, 0.0);
         assert_eq!(s.panics, 0);
         assert_eq!(s.queue_depth_highwater, 0);
+        assert_eq!(s.canary_checks, 0);
+        assert_eq!(s.drift_alarms, 0);
+        assert_eq!(s.nonfinite_outputs, 0);
     }
 }

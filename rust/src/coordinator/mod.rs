@@ -18,8 +18,26 @@
 //!   environment).
 //! - [`metrics`] — latency histograms + throughput and fault counters.
 //! - [`fault`] — injection hooks used by the chaos test suite.
+//! - [`sentinel`] — drift detection: canary cross-checks of bit-level
+//!   responses against the analytic closed form, per-function error
+//!   EWMAs, and the quarantine state machine.
 //!
 //! # Failure model
+//!
+//! Two fault classes are handled, at different layers:
+//!
+//! - **Process-level faults** (panics, stalls, overload, shutdown
+//!   races) — threads die loudly and the items below guarantee every
+//!   client still gets a typed answer.
+//! - **Bit-level faults** (stuck-at/transient upsets inside the
+//!   stochastic engine — see [`crate::sc::fault`]) — these do *not*
+//!   crash anything; they silently skew outputs. The serving layer
+//!   detects them semantically: the analytic evaluator never touches the
+//!   stochastic pipeline, so it is a fault-free reference, and the drift
+//!   sentinel cross-checks a paced fraction of `BitLevel` responses
+//!   against it ([`sentinel`]). Non-finite engine outputs are caught by
+//!   a worker-side guard and answered as typed `EvalError::Engine`
+//!   errors, never returned as poisoned floats.
 //!
 //! The service's contract is that **every admitted request is answered
 //! exactly once**, and every non-admitted request is refused with a typed
@@ -54,6 +72,15 @@
 //!   configured `sync_timeout` by default) and returns a typed
 //!   `Timeout` if the reply does not arrive in time; it can never block
 //!   forever.
+//! - **Engine drift / quarantine** — per function, the sentinel runs
+//!   `Healthy → Quarantined → Probing → Healthy`: a canary-error EWMA
+//!   crossing its threshold raises a typed
+//!   [`DriftAlarm`](sentinel::DriftAlarm) and quarantines the function
+//!   (its `BitLevel` traffic degrades to the analytic closed form, same
+//!   response shape as load shedding); every `probe_interval`-th request
+//!   probes the real engine, and enough successful probes restore full
+//!   service. A non-finite engine output is answered as a typed
+//!   `EvalError::Engine` error.
 //!
 //! Determinism is preserved across all of this: a respawned worker
 //! produces bit-identical BitLevel streams (seeds derive from the
@@ -70,9 +97,11 @@ pub mod batcher;
 pub mod fault;
 pub mod metrics;
 pub mod request;
+pub mod sentinel;
 pub mod server;
 
 pub use admission::{Admission, AdmissionConfig};
 pub use fault::FaultInjector;
 pub use request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason};
+pub use sentinel::{DriftAlarm, DriftSentinel, EngineHealth, SentinelConfig};
 pub use server::{EvalServer, ServerConfig};

@@ -117,6 +117,11 @@ pub struct EvalRequest {
     /// Set by load shedding when the request was downgraded from
     /// `BitLevel` to `Analytic`; echoed on the response.
     pub degraded: bool,
+    /// Set by the drift sentinel at submit: this `BitLevel` request's
+    /// outputs are cross-checked against the analytic closed form after
+    /// execution (either a paced canary or a quarantine-recovery probe).
+    /// Does not change the outputs the client receives.
+    pub canary: bool,
     /// Completion channel.
     pub reply: Sender<EvalResponse>,
     /// In-flight depth accounting token, held from admission until the
@@ -143,6 +148,7 @@ impl EvalRequest {
             enqueued: Instant::now(),
             deadline: None,
             degraded: false,
+            canary: false,
             reply,
             admitted: None,
         }
@@ -249,6 +255,7 @@ mod tests {
         let req = EvalRequest::new("f", vec![vec![0.5]], Engine::Analytic, 64, tx);
         assert!(req.deadline.is_none());
         assert!(!req.degraded);
+        assert!(!req.canary);
         assert!(!req.expired(Instant::now()));
         let now = Instant::now();
         let req = req.with_deadline(now);

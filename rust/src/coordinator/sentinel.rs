@@ -1,0 +1,511 @@
+//! Drift sentinel: canary cross-checks and engine quarantine.
+//!
+//! The bit-level engine is a stochastic simulator of real hardware; the
+//! analytic evaluator (Eq. 21) is its infinite-stream limit and — unlike
+//! the engine — cannot suffer bit-level faults (it never touches the
+//! stochastic pipeline, see [`crate::sc::fault`]). That asymmetry makes
+//! the analytic path a *fault-free reference*: by re-evaluating a small
+//! fraction of `BitLevel` responses analytically and tracking the error
+//! per function, the service can detect a drifting engine (stuck RNG
+//! bits, corrupted FSM state, radiation-style upsets in silicon) while it
+//! is still serving, and reroute traffic before clients see garbage.
+//!
+//! Per function the sentinel runs a three-state quarantine machine:
+//!
+//! ```text
+//!            EWMA > threshold                probe failed
+//!  Healthy ───────────────────► Quarantined ◄──────────── Probing
+//!     ▲       (DriftAlarm)        │      ▲                  │
+//!     │                           │      └── probe ok but ──┘
+//!     │                           │          more needed
+//!     │              every probe_interval-th request
+//!     │                           ▼
+//!     └──── probe_successes ── Probing
+//!           consecutive good
+//! ```
+//!
+//! - **Healthy** — requests serve on the real engine; a deterministic
+//!   [Bresenham accumulator](DriftSentinel::route) canaries
+//!   `canary_fraction` of them (no RNG: the k-th request of a function is
+//!   canaried or not identically across runs). Canary errors feed an
+//!   EWMA; once it exceeds `quarantine_threshold` (after `min_samples`
+//!   observations) the function trips to Quarantined and a typed
+//!   [`DriftAlarm`] is raised.
+//! - **Quarantined** — `BitLevel` traffic degrades to the analytic
+//!   closed form (`degraded: true`, exactly the load-shedding response
+//!   shape), except that every `probe_interval`-th request is sent
+//!   through the *real* engine as a forced-canary probe.
+//! - **Probing** — one probe in flight; further traffic keeps degrading.
+//!   A probe error at or below `recovery_threshold` counts toward
+//!   recovery; `probe_successes` consecutive good probes re-enter
+//!   Healthy with a reset EWMA. A bad probe clears the progress.
+//!
+//! With `canary_fraction == 0.0` the sentinel is fully disarmed: every
+//! route is a plain serve, no canary is ever taken, no state machine can
+//! trip — the serving path is behaviorally identical to a build without
+//! the sentinel.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Sentinel policy knobs. The defaults are conservative: one request in
+/// sixteen pays one extra analytic evaluation, and quarantine requires a
+/// sustained EWMA excursion, not one noisy short stream.
+#[derive(Clone, Debug)]
+pub struct SentinelConfig {
+    /// Fraction of healthy `BitLevel` requests cross-checked against the
+    /// analytic closed form (deterministically paced). `0.0` disarms the
+    /// sentinel entirely.
+    pub canary_fraction: f64,
+    /// EWMA smoothing factor for the per-function canary error
+    /// (`ewma ← α·err + (1-α)·ewma`).
+    pub ewma_alpha: f64,
+    /// EWMA of mean |bitlevel − analytic| that trips quarantine.
+    pub quarantine_threshold: f64,
+    /// Canary observations required before the EWMA may trip (guards
+    /// against a single noisy short stream quarantining a healthy
+    /// engine).
+    pub min_samples: u64,
+    /// While quarantined, every `probe_interval`-th arriving request is
+    /// served on the real engine as a probe; the rest degrade.
+    pub probe_interval: u64,
+    /// Consecutive successful probes required to re-enter Healthy.
+    pub probe_successes: u64,
+    /// Probe error at or below this counts as a success. Kept stricter
+    /// than `quarantine_threshold` so recovery cannot flap around the
+    /// trip point.
+    pub recovery_threshold: f64,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> Self {
+        Self {
+            canary_fraction: 1.0 / 16.0,
+            ewma_alpha: 0.2,
+            quarantine_threshold: 0.15,
+            min_samples: 4,
+            probe_interval: 4,
+            probe_successes: 2,
+            recovery_threshold: 0.075,
+        }
+    }
+}
+
+impl SentinelConfig {
+    /// A fully disarmed sentinel: never canaries, never quarantines.
+    pub fn disabled() -> Self {
+        Self { canary_fraction: 0.0, ..Self::default() }
+    }
+}
+
+/// Per-function engine health as seen by the sentinel.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineHealth {
+    /// Serving on the real engine; canaried at the configured pace.
+    #[default]
+    Healthy,
+    /// Drift detected; traffic degrades, periodic probes test recovery.
+    Quarantined,
+    /// A probe is in flight on the real engine.
+    Probing,
+}
+
+/// Typed drift notification, raised when a function's canary-error EWMA
+/// crosses the quarantine threshold.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftAlarm {
+    /// The drifting function.
+    pub function: String,
+    /// EWMA of mean |bitlevel − analytic| at trip time.
+    pub ewma: f64,
+    /// The configured threshold it crossed.
+    pub threshold: f64,
+    /// Canary observations folded into the EWMA so far.
+    pub samples: u64,
+}
+
+/// Routing verdict for one arriving `BitLevel` request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Serve on the real engine; `canary` marks it for cross-checking.
+    Serve { canary: bool },
+    /// Serve on the real engine as a forced-canary recovery probe.
+    Probe,
+    /// Reroute to the analytic closed form, flagged `degraded`.
+    Degrade,
+}
+
+/// What one canary observation did to the state machine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Observation {
+    /// Folded into the EWMA (or ignored); no transition.
+    Noted,
+    /// The EWMA crossed the threshold: the function is now quarantined.
+    Alarm(DriftAlarm),
+    /// Enough good probes: the function returned to Healthy.
+    Recovered,
+}
+
+/// Canary pacing resolution: `canary_fraction` is quantized to units of
+/// 1/65536 (the same grid as the θ-gate thresholds), so any nonzero
+/// fraction ≥ 2⁻¹⁶ actually canaries.
+const PACE_SCALE: u64 = 1 << 16;
+
+#[derive(Debug, Default)]
+struct FnState {
+    health: EngineHealth,
+    /// EWMA of the canary error while Healthy.
+    ewma: f64,
+    /// Canary observations folded into `ewma`.
+    samples: u64,
+    /// Bresenham accumulator for canary pacing.
+    pace: u64,
+    /// Requests seen while Quarantined (probe cadence counter).
+    quarantined_seen: u64,
+    /// Consecutive successful probes.
+    probe_good: u64,
+}
+
+/// Per-function drift tracking shared between the submit edge (routing)
+/// and the workers (canary observations). One mutex, touched once per
+/// `BitLevel` request — negligible next to an L-cycle evaluation.
+#[derive(Debug)]
+pub struct DriftSentinel {
+    cfg: SentinelConfig,
+    /// `canary_fraction` quantized to `PACE_SCALE` units.
+    pace_step: u64,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    functions: HashMap<String, FnState>,
+    /// Alarms raised and not yet drained by [`DriftSentinel::take_alarms`].
+    alarms: Vec<DriftAlarm>,
+}
+
+impl DriftSentinel {
+    pub fn new(cfg: SentinelConfig) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&cfg.canary_fraction),
+            "canary_fraction must be in [0, 1]"
+        );
+        assert!((0.0..=1.0).contains(&cfg.ewma_alpha) && cfg.ewma_alpha > 0.0);
+        assert!(cfg.quarantine_threshold > 0.0);
+        assert!(cfg.recovery_threshold > 0.0);
+        assert!(cfg.probe_interval > 0, "probe cadence must be positive");
+        assert!(cfg.probe_successes > 0);
+        let pace_step = (cfg.canary_fraction * PACE_SCALE as f64).round() as u64;
+        Self { cfg, pace_step, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn config(&self) -> &SentinelConfig {
+        &self.cfg
+    }
+
+    /// Route one arriving `BitLevel` request for `function`. Mutates the
+    /// pacing/probe counters, so call exactly once per request.
+    pub fn route(&self, function: &str) -> Route {
+        if self.pace_step == 0 {
+            // Disarmed: nothing here can ever have left Healthy.
+            return Route::Serve { canary: false };
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let st = inner.functions.entry(function.to_string()).or_default();
+        match st.health {
+            EngineHealth::Healthy => {
+                // Bresenham pacing: deterministic, evenly spread, exact
+                // long-run fraction.
+                st.pace += self.pace_step;
+                let canary = st.pace >= PACE_SCALE;
+                if canary {
+                    st.pace -= PACE_SCALE;
+                }
+                Route::Serve { canary }
+            }
+            EngineHealth::Quarantined => {
+                st.quarantined_seen += 1;
+                if st.quarantined_seen % self.cfg.probe_interval == 0 {
+                    st.health = EngineHealth::Probing;
+                    Route::Probe
+                } else {
+                    Route::Degrade
+                }
+            }
+            // One probe in flight at a time; the rest keep degrading.
+            EngineHealth::Probing => Route::Degrade,
+        }
+    }
+
+    /// Fold one canary observation (`err` = mean |bitlevel − analytic|
+    /// over the request's points) into `function`'s state machine.
+    pub fn observe(&self, function: &str, err: f64) -> Observation {
+        // A non-finite error would poison the EWMA forever; clamp it to
+        // a huge finite value so it trips (or fails a probe) instead.
+        let err = if err.is_finite() { err.abs() } else { f64::MAX / 4.0 };
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let st = inner.functions.entry(function.to_string()).or_default();
+        match st.health {
+            EngineHealth::Healthy => {
+                st.ewma = if st.samples == 0 {
+                    err
+                } else {
+                    self.cfg.ewma_alpha * err + (1.0 - self.cfg.ewma_alpha) * st.ewma
+                };
+                st.samples += 1;
+                if st.samples >= self.cfg.min_samples && st.ewma > self.cfg.quarantine_threshold
+                {
+                    st.health = EngineHealth::Quarantined;
+                    st.quarantined_seen = 0;
+                    st.probe_good = 0;
+                    let alarm = DriftAlarm {
+                        function: function.to_string(),
+                        ewma: st.ewma,
+                        threshold: self.cfg.quarantine_threshold,
+                        samples: st.samples,
+                    };
+                    inner.alarms.push(alarm.clone());
+                    Observation::Alarm(alarm)
+                } else {
+                    Observation::Noted
+                }
+            }
+            EngineHealth::Probing => {
+                if err <= self.cfg.recovery_threshold {
+                    st.probe_good += 1;
+                    if st.probe_good >= self.cfg.probe_successes {
+                        *st = FnState::default(); // Healthy, EWMA reset
+                        Observation::Recovered
+                    } else {
+                        // Good, but recovery needs more evidence: back to
+                        // Quarantined so the cadence schedules the next
+                        // probe; the success streak is kept.
+                        st.health = EngineHealth::Quarantined;
+                        Observation::Noted
+                    }
+                } else {
+                    st.probe_good = 0;
+                    st.health = EngineHealth::Quarantined;
+                    Observation::Noted
+                }
+            }
+            // Degraded traffic is analytic-served and never canaried;
+            // a stray observation here has nothing to update.
+            EngineHealth::Quarantined => Observation::Noted,
+        }
+    }
+
+    /// Current health of a function (`Healthy` if never seen).
+    pub fn health(&self, function: &str) -> EngineHealth {
+        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.functions.get(function).map(|s| s.health).unwrap_or_default()
+    }
+
+    /// The canary-error EWMA and sample count for a function, if any
+    /// observation has been folded in (introspection/test hook).
+    pub fn ewma(&self, function: &str) -> Option<(f64, u64)> {
+        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner
+            .functions
+            .get(function)
+            .filter(|s| s.samples > 0)
+            .map(|s| (s.ewma, s.samples))
+    }
+
+    /// Drain the alarms raised since the last call.
+    pub fn take_alarms(&self) -> Vec<DriftAlarm> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        std::mem::take(&mut inner.alarms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trippy() -> SentinelConfig {
+        SentinelConfig {
+            canary_fraction: 1.0,
+            min_samples: 3,
+            probe_interval: 4,
+            probe_successes: 2,
+            ..SentinelConfig::default()
+        }
+    }
+
+    /// Drive routes until one comes back as a probe (bounded).
+    fn route_until_probe(s: &DriftSentinel, f: &str, max: usize) -> usize {
+        for i in 0..max {
+            match s.route(f) {
+                Route::Probe => return i + 1,
+                Route::Degrade => continue,
+                r => panic!("unexpected route while quarantined: {r:?}"),
+            }
+        }
+        panic!("no probe within {max} requests");
+    }
+
+    /// Feed healthy-state errors until the alarm trips (bounded).
+    fn observe_until_alarm(s: &DriftSentinel, f: &str, err: f64, max: usize) -> DriftAlarm {
+        for _ in 0..max {
+            if let Observation::Alarm(a) = s.observe(f, err) {
+                return a;
+            }
+        }
+        panic!("no alarm within {max} observations at err={err}");
+    }
+
+    #[test]
+    fn unknown_function_is_healthy_and_serves() {
+        let s = DriftSentinel::new(SentinelConfig::default());
+        assert_eq!(s.health("f"), EngineHealth::Healthy);
+        assert!(matches!(s.route("f"), Route::Serve { .. }));
+        assert!(s.ewma("f").is_none());
+    }
+
+    #[test]
+    fn disarmed_sentinel_never_canaries_or_trips() {
+        let s = DriftSentinel::new(SentinelConfig::disabled());
+        for _ in 0..100 {
+            assert_eq!(s.route("f"), Route::Serve { canary: false });
+        }
+        // Even direct huge observations cannot quarantine a function the
+        // router will consult, because routing short-circuits first.
+        assert_eq!(s.route("f"), Route::Serve { canary: false });
+    }
+
+    #[test]
+    fn bresenham_pacing_is_exact_and_deterministic() {
+        let cfg = SentinelConfig { canary_fraction: 0.25, ..SentinelConfig::default() };
+        let pattern = |s: &DriftSentinel| -> Vec<bool> {
+            (0..100)
+                .map(|_| matches!(s.route("f"), Route::Serve { canary: true }))
+                .collect()
+        };
+        let a = pattern(&DriftSentinel::new(cfg.clone()));
+        let b = pattern(&DriftSentinel::new(cfg));
+        assert_eq!(a, b, "pacing must be deterministic");
+        assert_eq!(a.iter().filter(|&&c| c).count(), 25, "exactly 1 in 4");
+        // Evenly spread, not front-loaded: every window of 4 has one.
+        for w in a.chunks(4) {
+            assert_eq!(w.iter().filter(|&&c| c).count(), 1);
+        }
+    }
+
+    #[test]
+    fn full_fraction_canaries_every_request() {
+        let s = DriftSentinel::new(trippy());
+        for _ in 0..10 {
+            assert_eq!(s.route("f"), Route::Serve { canary: true });
+        }
+    }
+
+    #[test]
+    fn drift_trips_after_min_samples_and_raises_alarm() {
+        let s = DriftSentinel::new(trippy());
+        assert_eq!(s.observe("f", 0.5), Observation::Noted);
+        assert_eq!(s.observe("f", 0.5), Observation::Noted);
+        let a = match s.observe("f", 0.5) {
+            Observation::Alarm(a) => a,
+            other => panic!("expected alarm on the 3rd sample, got {other:?}"),
+        };
+        assert_eq!(a.function, "f");
+        assert_eq!(a.samples, 3);
+        assert!(a.ewma > a.threshold, "ewma {} vs {}", a.ewma, a.threshold);
+        assert_eq!(s.health("f"), EngineHealth::Quarantined);
+        // The alarm is also queued for draining, exactly once.
+        assert_eq!(s.take_alarms().len(), 1);
+        assert!(s.take_alarms().is_empty());
+    }
+
+    #[test]
+    fn small_errors_never_trip() {
+        let s = DriftSentinel::new(trippy());
+        for _ in 0..200 {
+            assert_eq!(s.observe("f", 0.01), Observation::Noted);
+        }
+        assert_eq!(s.health("f"), EngineHealth::Healthy);
+        let (ewma, n) = s.ewma("f").unwrap();
+        assert!(ewma < 0.02);
+        assert_eq!(n, 200);
+    }
+
+    #[test]
+    fn quarantine_degrades_and_probes_on_cadence() {
+        let s = DriftSentinel::new(trippy());
+        observe_until_alarm(&s, "f", 0.5, 10);
+        // probe_interval = 4: three degrades, then a probe.
+        assert_eq!(s.route("f"), Route::Degrade);
+        assert_eq!(s.route("f"), Route::Degrade);
+        assert_eq!(s.route("f"), Route::Degrade);
+        assert_eq!(s.route("f"), Route::Probe);
+        assert_eq!(s.health("f"), EngineHealth::Probing);
+        // While the probe is in flight, traffic keeps degrading.
+        assert_eq!(s.route("f"), Route::Degrade);
+        assert_eq!(s.route("f"), Route::Degrade);
+    }
+
+    #[test]
+    fn probe_recovery_lifecycle() {
+        let s = DriftSentinel::new(trippy());
+        observe_until_alarm(&s, "f", 0.5, 10);
+        // First good probe: progress, but still quarantined.
+        route_until_probe(&s, "f", 8);
+        assert_eq!(s.observe("f", 0.0), Observation::Noted);
+        assert_eq!(s.health("f"), EngineHealth::Quarantined);
+        // Second good probe completes recovery (probe_successes = 2).
+        route_until_probe(&s, "f", 8);
+        assert_eq!(s.observe("f", 0.0), Observation::Recovered);
+        assert_eq!(s.health("f"), EngineHealth::Healthy);
+        // EWMA reset: recovery starts from a clean slate and serves.
+        assert!(s.ewma("f").is_none());
+        assert!(matches!(s.route("f"), Route::Serve { .. }));
+    }
+
+    #[test]
+    fn failed_probe_clears_the_success_streak() {
+        let s = DriftSentinel::new(trippy());
+        observe_until_alarm(&s, "f", 0.5, 10);
+        route_until_probe(&s, "f", 8);
+        assert_eq!(s.observe("f", 0.0), Observation::Noted); // good: streak 1
+        route_until_probe(&s, "f", 8);
+        assert_eq!(s.observe("f", 0.9), Observation::Noted); // bad: streak 0
+        assert_eq!(s.health("f"), EngineHealth::Quarantined);
+        // Recovery now needs two fresh successes again.
+        route_until_probe(&s, "f", 8);
+        assert_eq!(s.observe("f", 0.0), Observation::Noted);
+        route_until_probe(&s, "f", 8);
+        assert_eq!(s.observe("f", 0.0), Observation::Recovered);
+    }
+
+    #[test]
+    fn nonfinite_observation_is_clamped_not_poisonous() {
+        let s = DriftSentinel::new(trippy());
+        observe_until_alarm(&s, "f", f64::NAN, 10);
+        assert_eq!(s.health("f"), EngineHealth::Quarantined);
+        // Recovery still works: the EWMA was never set to NaN/Inf.
+        route_until_probe(&s, "f", 8);
+        assert_eq!(s.observe("f", 0.0), Observation::Noted);
+        route_until_probe(&s, "f", 8);
+        assert_eq!(s.observe("f", 0.0), Observation::Recovered);
+    }
+
+    #[test]
+    fn functions_are_tracked_independently() {
+        let s = DriftSentinel::new(trippy());
+        observe_until_alarm(&s, "bad", 0.5, 10);
+        for _ in 0..50 {
+            s.observe("good", 0.01);
+        }
+        assert_eq!(s.health("bad"), EngineHealth::Quarantined);
+        assert_eq!(s.health("good"), EngineHealth::Healthy);
+        assert!(matches!(s.route("good"), Route::Serve { .. }));
+        assert_eq!(s.route("bad"), Route::Degrade);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_fraction() {
+        DriftSentinel::new(SentinelConfig { canary_fraction: 1.5, ..SentinelConfig::default() });
+    }
+}

@@ -24,6 +24,7 @@ use super::batcher::{run_batcher, Batch, BatchPolicy};
 use super::fault::FaultInjector;
 use super::metrics::Metrics;
 use super::request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason};
+use super::sentinel::{DriftSentinel, Observation, Route, SentinelConfig};
 use crate::runtime::Runtime;
 use crate::smurf::approximator::SmurfApproximator;
 use std::collections::HashMap;
@@ -44,6 +45,9 @@ pub struct ServerConfig {
     pub admission: AdmissionConfig,
     /// Fault-injection hooks (inert by default; shared with chaos tests).
     pub faults: Arc<FaultInjector>,
+    /// Drift-sentinel policy: canary pacing + quarantine thresholds
+    /// (see [`SentinelConfig`]; `SentinelConfig::disabled()` disarms).
+    pub sentinel: SentinelConfig,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +58,7 @@ impl Default for ServerConfig {
             xla_artifact: "smurf_eval.hlo.txt".into(),
             admission: AdmissionConfig::default(),
             faults: Arc::new(FaultInjector::new()),
+            sentinel: SentinelConfig::default(),
         }
     }
 }
@@ -75,6 +80,11 @@ struct Shared {
     metrics: Arc<Metrics>,
     admission: Arc<Admission>,
     faults: Arc<FaultInjector>,
+    sentinel: Arc<DriftSentinel>,
+    /// The supervisor's thread handle, set once it is spawned, so the
+    /// worker panic path and `shutdown()` can `unpark()` it instead of
+    /// waiting out its backoff timeout.
+    supervisor_thread: std::sync::OnceLock<std::thread::Thread>,
     xla_tx: Option<Sender<XlaJob>>,
 }
 
@@ -106,8 +116,14 @@ fn xla_owner_loop(artifacts_dir: std::path::PathBuf, artifact: String, rx: Recei
 /// Batch size the AOT kernel was lowered with (see python/compile/aot.py).
 const KERNEL_BATCH: usize = 1024;
 
-/// How often the supervisor checks the pool for dead workers.
-const SUPERVISE_INTERVAL: Duration = Duration::from_millis(1);
+/// Supervisor wait right after a respawn (a crash storm wants fast
+/// replacement); doubles while the pool stays healthy.
+const SUPERVISE_MIN: Duration = Duration::from_millis(1);
+
+/// Backoff cap for the supervisor's parked wait. Reaction latency is not
+/// bounded by this: worker panic paths unpark the supervisor directly,
+/// so the timeout only covers silent thread exits.
+const SUPERVISE_MAX: Duration = Duration::from_millis(50);
 
 /// The running evaluation service.
 pub struct EvalServer {
@@ -151,6 +167,8 @@ impl EvalServer {
             metrics: metrics.clone(),
             admission,
             faults: cfg.faults.clone(),
+            sentinel: Arc::new(DriftSentinel::new(cfg.sentinel.clone())),
+            supervisor_thread: std::sync::OnceLock::new(),
             xla_tx,
         });
         let (tx, rx) = channel::<EvalRequest>();
@@ -198,6 +216,7 @@ impl EvalServer {
                 .spawn(move || supervise(shared, brx, workers, stop))
                 .expect("spawn supervisor")
         };
+        let _ = shared.supervisor_thread.set(supervisor.thread().clone());
         Self {
             tx: Some(tx),
             shared,
@@ -208,14 +227,36 @@ impl EvalServer {
         }
     }
 
-    /// Submit a request. Admission control runs here: malformed traffic,
-    /// expired deadlines, and over-limit queues are refused with a typed
-    /// error before anything is enqueued; under shedding a `BitLevel`
-    /// request may be rewritten to `Analytic` (its response will carry
-    /// `degraded: true`).
+    /// Submit a request. The drift sentinel routes first (a quarantined
+    /// function's `BitLevel` traffic is rewritten to `Analytic` with
+    /// `degraded: true`, exactly like load shedding; healthy traffic may
+    /// be marked for a canary cross-check), then admission control:
+    /// malformed traffic, expired deadlines, and over-limit queues are
+    /// refused with a typed error before anything is enqueued; under
+    /// shedding a `BitLevel` request may be rewritten to `Analytic`.
     pub fn submit(&self, mut req: EvalRequest) -> Result<(), EvalError> {
         req.enqueued = Instant::now();
         let functions = &self.shared.functions;
+        // Sentinel routing runs before admission so rerouted traffic is
+        // validated and depth-accounted under its *final* engine (the
+        // same invariant the shedding path keeps). Gated on a known
+        // function name so junk traffic cannot grow the sentinel's
+        // per-function table.
+        if req.engine == Engine::BitLevel && functions.contains_key(&req.function) {
+            match self.shared.sentinel.route(&req.function) {
+                Route::Serve { canary } => req.canary = canary,
+                Route::Probe => {
+                    req.canary = true;
+                    self.shared.metrics.record_drift_probe();
+                }
+                Route::Degrade => {
+                    req.engine = Engine::Analytic;
+                    req.degraded = true;
+                    self.shared.metrics.record_degraded();
+                    self.shared.metrics.record_drift_degraded();
+                }
+            }
+        }
         let arity_of = |name: &str| functions.get(name).map(|f| f.config().num_vars());
         Admission::admit(&self.shared.admission, &mut req, arity_of).map_err(|reason| {
             self.shared.metrics.record_rejection(&reason);
@@ -281,6 +322,11 @@ impl EvalServer {
         &self.shared.admission
     }
 
+    /// Drift-sentinel state (per-function health, EWMAs, alarm drain).
+    pub fn sentinel(&self) -> &DriftSentinel {
+        &self.shared.sentinel
+    }
+
     /// Number of worker threads currently alive (the supervisor returns
     /// this to the configured size after crashes).
     pub fn live_workers(&self) -> usize {
@@ -307,6 +353,11 @@ impl EvalServer {
         // Order matters: the supervisor must stop respawning before the
         // workers see the closed channel and exit.
         self.stop.store(true, Ordering::SeqCst);
+        // Wake the supervisor out of its parked wait so shutdown does
+        // not serialize behind the backoff timeout.
+        if let Some(t) = self.shared.supervisor_thread.get() {
+            t.unpark();
+        }
         self.tx.take(); // closes intake; batcher drains and exits
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
@@ -332,25 +383,42 @@ fn spawn_worker(
         .expect("spawn worker")
 }
 
-/// Supervision loop: poll the pool; respawn any dead worker until the
-/// server begins shutdown.
+/// Supervision loop: respawn any dead worker until the server begins
+/// shutdown.
+///
+/// Waits parked rather than busy-polling: the worker panic path and
+/// `shutdown()` unpark this thread, so the common cases react in
+/// microseconds while a healthy pool costs one wakeup per
+/// [`SUPERVISE_MAX`]. The timeout (doubling from [`SUPERVISE_MIN`] after
+/// a respawn up to the cap) is the fallback for worker threads that die
+/// without reaching their panic handler.
 fn supervise(
     shared: Arc<Shared>,
     brx: Arc<Mutex<Receiver<Batch>>>,
     workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     stop: Arc<AtomicBool>,
 ) {
+    let mut wait = SUPERVISE_MIN;
     while !stop.load(Ordering::SeqCst) {
-        std::thread::sleep(SUPERVISE_INTERVAL);
-        let mut ws = workers.lock().unwrap_or_else(|p| p.into_inner());
-        for (i, slot) in ws.iter_mut().enumerate() {
-            if slot.is_finished() && !stop.load(Ordering::SeqCst) {
-                let fresh = spawn_worker(i, shared.clone(), brx.clone());
-                let dead = std::mem::replace(slot, fresh);
-                let _ = dead.join();
-                shared.metrics.record_respawn();
+        std::thread::park_timeout(wait);
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut respawned = false;
+        {
+            let mut ws = workers.lock().unwrap_or_else(|p| p.into_inner());
+            for (i, slot) in ws.iter_mut().enumerate() {
+                if slot.is_finished() && !stop.load(Ordering::SeqCst) {
+                    let fresh = spawn_worker(i, shared.clone(), brx.clone());
+                    let dead = std::mem::replace(slot, fresh);
+                    let _ = dead.join();
+                    shared.metrics.record_respawn();
+                    respawned = true;
+                }
             }
         }
+        // Stay hot through a crash storm; back off while healthy.
+        wait = if respawned { SUPERVISE_MIN } else { (wait * 2).min(SUPERVISE_MAX) };
     }
 }
 
@@ -374,8 +442,13 @@ fn worker_loop(shared: Arc<Shared>, brx: Arc<Mutex<Receiver<Batch>>>) {
                 let _ = tx.send(EvalResponse::from_error(EvalError::WorkerPanic(msg.clone())));
             }
             // Exit the thread: the engines keep per-thread scratch, and a
-            // panicking evaluation may have left it mid-update. The
-            // supervisor respawns a replacement with clean thread-locals.
+            // panicking evaluation may have left it mid-update. Unpark
+            // the supervisor so the replacement (with clean
+            // thread-locals) spawns immediately instead of after the
+            // backoff timeout.
+            if let Some(t) = shared.supervisor_thread.get() {
+                t.unpark();
+            }
             return;
         }
     }
@@ -444,24 +517,61 @@ fn execute_batch(shared: &Shared, batch: Batch) {
     let exec_ns = exec_start.elapsed().as_nanos() as u64;
 
     match result {
-        Ok(outputs) => {
+        Ok(mut outputs) => {
+            if engine == Engine::BitLevel {
+                // Chaos hook (inert in production): simulated engine
+                // drift / NaN poisoning, applied to the raw engine
+                // outputs so the sentinel and the non-finite guard see
+                // exactly what a faulty engine would produce.
+                shared.faults.corrupt_outputs(&mut outputs);
+            }
             let mut off = 0;
+            let mut batch_counted = false;
             for (req, span) in requests.into_iter().zip(spans) {
+                let span_out = &outputs[off..off + span];
+                off += span;
+                // Non-finite guard: a NaN/Inf engine result becomes a
+                // typed error, never a poisoned float in `outputs`.
+                if let Some(bad) = span_out.iter().find(|y| !y.is_finite()) {
+                    shared.metrics.record_nonfinite();
+                    shared.metrics.record_error();
+                    let _ = req.reply.send(EvalResponse::failed(format!(
+                        "engine produced non-finite output {bad}"
+                    )));
+                    continue;
+                }
+                // Canary/probe cross-check: feed the mean error vs the
+                // analytic closed form (the fault-free reference) into
+                // the drift sentinel. Outputs are unchanged.
+                if req.canary && engine == Engine::BitLevel {
+                    shared.metrics.record_canary();
+                    let err = span_out
+                        .iter()
+                        .zip(&req.points)
+                        .map(|(y, p)| (y - func.eval_analytic(p)).abs())
+                        .sum::<f64>()
+                        / span.max(1) as f64;
+                    match shared.sentinel.observe(fname, err) {
+                        Observation::Alarm(_) => shared.metrics.record_drift_alarm(),
+                        Observation::Recovered => shared.metrics.record_drift_recovery(),
+                        Observation::Noted => {}
+                    }
+                }
                 let queue_ns = batch
                     .formed_at
                     .saturating_duration_since(req.enqueued)
                     .as_nanos() as u64;
                 let e2e_ns = req.enqueued.elapsed().as_nanos() as u64;
-                shared.metrics.record(queue_ns, exec_ns, e2e_ns, span as u64, off == 0);
+                shared.metrics.record(queue_ns, exec_ns, e2e_ns, span as u64, !batch_counted);
+                batch_counted = true;
                 let _ = req.reply.send(EvalResponse {
-                    outputs: outputs[off..off + span].to_vec(),
+                    outputs: span_out.to_vec(),
                     queue_ns,
                     exec_ns,
                     batch_size,
                     degraded: req.degraded,
                     error: None,
                 });
-                off += span;
             }
         }
         Err(e) => {
@@ -812,6 +922,73 @@ mod tests {
         server.admission().force_shed(false);
         let resp = server.eval_sync("euclidean2", points, Engine::BitLevel, 256);
         assert!(resp.is_ok() && !resp.degraded);
+        server.shutdown();
+    }
+
+    #[test]
+    fn nonfinite_outputs_are_typed_errors() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let funcs = vec![SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64)];
+        let faults = Arc::new(FaultInjector::new());
+        let server = EvalServer::start(
+            funcs,
+            None,
+            ServerConfig {
+                workers: 1,
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                faults: faults.clone(),
+                ..ServerConfig::default()
+            },
+        );
+        faults.set_poison_nan(true);
+        let resp = server.eval_sync("euclidean2", vec![vec![0.3, 0.4]], Engine::BitLevel, 64);
+        assert!(!resp.is_ok());
+        assert!(
+            matches!(resp.error, Some(EvalError::Engine(ref m)) if m.contains("non-finite")),
+            "{:?}",
+            resp.error
+        );
+        assert!(resp.outputs.is_empty(), "no poisoned float may reach a client");
+        assert!(server.metrics().nonfinite_outputs >= 1);
+        // Clearing the fault restores normal service.
+        faults.set_poison_nan(false);
+        let resp = server.eval_sync("euclidean2", vec![vec![0.3, 0.4]], Engine::BitLevel, 64);
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert!(resp.outputs[0].is_finite());
+        server.shutdown();
+    }
+
+    #[test]
+    fn canaries_cross_check_without_disturbing_healthy_service() {
+        use crate::coordinator::sentinel::EngineHealth;
+        let cfg = SmurfConfig::uniform(2, 4);
+        let funcs = vec![SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64)];
+        let server = EvalServer::start(
+            funcs,
+            None,
+            ServerConfig {
+                workers: 1,
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                sentinel: SentinelConfig { canary_fraction: 1.0, ..SentinelConfig::default() },
+                ..ServerConfig::default()
+            },
+        );
+        // A healthy engine under full canary coverage: every response is
+        // cross-checked, none degrade, no alarm trips.
+        for i in 0..6 {
+            let x = (i + 1) as f64 / 8.0;
+            let resp = server.eval_sync("euclidean2", vec![vec![x, 0.5]], Engine::BitLevel, 2048);
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            assert!(!resp.degraded);
+        }
+        let snap = server.metrics();
+        assert!(snap.canary_checks >= 6, "canary_checks={}", snap.canary_checks);
+        assert_eq!(snap.drift_alarms, 0);
+        assert_eq!(snap.drift_degraded, 0);
+        assert_eq!(server.sentinel().health("euclidean2"), EngineHealth::Healthy);
+        let (ewma, n) = server.sentinel().ewma("euclidean2").expect("canaries observed");
+        assert!(n >= 6);
+        assert!(ewma < server.sentinel().config().quarantine_threshold, "ewma={ewma}");
         server.shutdown();
     }
 

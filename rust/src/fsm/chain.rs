@@ -51,6 +51,22 @@ impl ChainFsm {
         assert!(state < self.n);
         self.state = state;
     }
+
+    /// Fault-injection hook: let `f` rewrite the state register's raw
+    /// bits (`f` receives the current state and the register width
+    /// `ceil(log2(n))`), then clamp back into `0..n`. Hardware chains
+    /// store the state one-hot or binary in `ceil(log2(n))` flip-flops;
+    /// a bit fault can therefore produce a pattern `>= n` when `n` is
+    /// not a power of two — real decoders saturate such patterns at the
+    /// end of the chain, which is what the `min(n-1)` models. Returns
+    /// the post-clamp state.
+    #[inline]
+    pub fn inject(&mut self, f: impl FnOnce(usize, u32) -> usize) -> usize {
+        let nbits = usize::BITS - (self.n - 1).leading_zeros();
+        let raw = f(self.state, nbits) & ((1usize << nbits) - 1);
+        self.state = raw.min(self.n - 1);
+        self.state
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +130,32 @@ mod tests {
                 pi[i]
             );
         }
+    }
+
+    #[test]
+    fn inject_identity_keeps_state_and_clamps_out_of_range() {
+        let mut f = ChainFsm::new(5, 3);
+        // Identity injection must not move the state.
+        assert_eq!(f.inject(|s, _| s), 3);
+        assert_eq!(f.state(), 3);
+        // nbits for n=5 is 3; an all-ones pattern (7) exceeds n-1 and
+        // must saturate at the end of the chain.
+        assert_eq!(f.inject(|_, nbits| (1usize << nbits) - 1), 4);
+        // Bits above the register width are masked off before the clamp.
+        assert_eq!(f.inject(|_, _| 0b1000), 0);
+    }
+
+    #[test]
+    fn prop_inject_always_lands_in_range() {
+        check(11, 128, &RangeUsize { lo: 2, hi: 9 }, |&n| {
+            let mut f = ChainFsm::centered(n);
+            let mut rng = Pcg::new(n as u64 ^ 0xFA17);
+            (0..500).all(|_| {
+                f.step(rng.uniform() < 0.5);
+                let flip = (rng.uniform() * 256.0) as usize;
+                f.inject(|s, _| s ^ flip) < n
+            })
+        });
     }
 
     #[test]

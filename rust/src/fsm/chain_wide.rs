@@ -98,6 +98,37 @@ impl<P: BitPlane> WideChainFsm<P> {
         }
     }
 
+    /// Fault-injection hook: let `f` rewrite the live state planes in
+    /// place, then clamp every lane back into `0..n` — the wide analogue
+    /// of `ChainFsm::inject`. When `n` is not a power of two a bit fault
+    /// can leave a lane's pattern `>= n`; such lanes saturate at `n-1`
+    /// (the hardware decoder convention), computed branch-free with an
+    /// MSB-first `pattern > n-1` comparison over the planes.
+    #[inline]
+    pub fn inject(&mut self, f: impl FnOnce(&mut [P])) {
+        f(&mut self.planes[..self.nbits]);
+        if self.n.is_power_of_two() {
+            return; // every nbits-wide pattern is a valid state
+        }
+        // gt = lanes whose pattern exceeds n-1, MSB-first compare.
+        let max = self.n - 1;
+        let mut gt = P::zero();
+        let mut eq = P::ones();
+        for b in (0..self.nbits).rev() {
+            let p = self.planes[b];
+            if (max >> b) & 1 == 1 {
+                eq = eq.and(p);
+            } else {
+                gt = gt.or(eq.and(p));
+                eq = eq.and_not(p);
+            }
+        }
+        // Force the out-of-range lanes to n-1.
+        for (b, p) in self.planes.iter_mut().enumerate().take(self.nbits) {
+            *p = if (max >> b) & 1 == 1 { p.or(gt) } else { p.and_not(gt) };
+        }
+    }
+
     /// Lane `l`'s state index (test/debug path; the hot loop never needs it).
     pub fn state_of_lane(&self, l: usize) -> usize {
         let mut s = 0usize;
@@ -193,6 +224,80 @@ mod tests {
     #[test]
     fn digit_masks_partition_lanes() {
         crate::for_each_plane_width!(digit_masks_partition_generic);
+    }
+
+    fn inject_identity_and_clamp_generic<P: BitPlane>() {
+        for n in [2usize, 3, 4, 5, 7, 8] {
+            // Identity injection must leave every lane untouched.
+            let mut w = WideChainFsm::<P>::centered(n);
+            let before: Vec<usize> =
+                (0..P::LANES).map(|l| w.state_of_lane(l)).collect();
+            w.inject(|_| {});
+            for l in 0..P::LANES {
+                assert_eq!(w.state_of_lane(l), before[l], "n={n} lane={l}");
+            }
+            // All-ones planes = pattern 2^nbits - 1; lanes must clamp
+            // to n-1 exactly when that pattern is out of range.
+            w.inject(|planes| {
+                for p in planes.iter_mut() {
+                    *p = P::ones();
+                }
+            });
+            for l in [0, P::LANES - 1] {
+                assert_eq!(w.state_of_lane(l), n - 1, "n={n} lane={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn inject_identity_and_clamp() {
+        crate::for_each_plane_width!(inject_identity_and_clamp_generic);
+    }
+
+    /// Wide inject with a per-lane XOR pattern must agree with the
+    /// scalar `ChainFsm::inject` applying the same per-lane flips.
+    fn inject_matches_scalar_generic<P: BitPlane>() {
+        for n in [3usize, 5, 6, 7] {
+            let nbits = (usize::BITS - (n - 1).leading_zeros()) as usize;
+            let mut wide = WideChainFsm::<P>::centered(n);
+            let mut scalars: Vec<ChainFsm> =
+                (0..P::LANES).map(|_| ChainFsm::centered(n)).collect();
+            let mut rng = Pcg::new(0xFA17 + n as u64);
+            for _ in 0..50 {
+                // Random step, then a random per-lane bit-flip pattern.
+                let mut up = P::zero();
+                let mut flips = vec![0usize; P::LANES];
+                for (l, fl) in flips.iter_mut().enumerate() {
+                    let r = rng.next_u64();
+                    if r & 1 == 1 {
+                        up.set_lane(l);
+                    }
+                    *fl = ((r >> 1) as usize) & ((1 << nbits) - 1);
+                }
+                wide.step(up);
+                wide.inject(|planes| {
+                    for (b, p) in planes.iter_mut().enumerate() {
+                        let mut m = P::zero();
+                        for (l, fl) in flips.iter().enumerate() {
+                            if (fl >> b) & 1 == 1 {
+                                m.set_lane(l);
+                            }
+                        }
+                        *p = p.xor(m);
+                    }
+                });
+                for (l, f) in scalars.iter_mut().enumerate() {
+                    f.step(up.lane(l));
+                    let expect = f.inject(|s, _| s ^ flips[l]);
+                    assert_eq!(wide.state_of_lane(l), expect, "n={n} lane={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inject_matches_scalar() {
+        crate::for_each_plane_width!(inject_matches_scalar_generic);
     }
 
     #[test]

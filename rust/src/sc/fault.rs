@@ -1,0 +1,700 @@
+//! Bit-level fault injection for the SC engines: deterministic stuck-at
+//! and transient-flip faults, plus the TMR majority vote that mitigates
+//! them.
+//!
+//! SMURF's hardware story (and the SC literature it cites — e.g. the
+//! SC-DCNN line of work) leans on stochastic computing's inherent
+//! soft-error tolerance: a flipped bit in a 2^10-cycle bitstream perturbs
+//! the decoded value by 2^-10, not 2^-1. This module makes that claim
+//! *measurable* in the simulators instead of folklore. It models the
+//! three classic gate-level fault kinds at four datapath sites of the
+//! Fig. 6 pipeline:
+//!
+//! | [`FaultSite`]      | hardware signal                                  |
+//! |--------------------|--------------------------------------------------|
+//! | `EntropyWord`      | the 16-bit RNG branch words feeding every θ-gate |
+//! | `ThetaOutput`      | the input θ-gate comparator output bits          |
+//! | `FsmState`         | the chain-FSM state register bits                |
+//! | `OutputBit`        | the CPT-gate output bit entering the counter     |
+//!
+//! and the three kinds per site, each with an independent per-bit,
+//! per-cycle probability ([`FaultRates`]): stuck-at-0 (AND with the
+//! complement of a Bernoulli mask), stuck-at-1 (OR), transient flip
+//! (XOR). Applying an armed site therefore costs **one AND/OR/XOR per
+//! plane word per armed kind** in the wide engine — the masks are
+//! ordinary [`BitPlane`] words — and nothing at all when the engine has
+//! no plan: the simulators are generic over a hook trait
+//! ([`ScalarFaultHook`] / [`WideFaultHook`]) whose inert implementation
+//! ([`NoFaults`]) is a zero-sized type with identity methods, so the
+//! clean instantiation monomorphizes to exactly the pre-fault code with
+//! zero added branches.
+//!
+//! # Determinism
+//!
+//! A [`BitFaultPlan`] is pure configuration: a seed plus per-site rates.
+//! Fault mask entropy comes from dedicated xorshift64* streams — one per
+//! site, seeded by splitmix from `(plan seed, site, lane)` — that are
+//! (re)seeded at the start of every simulator run, so a given
+//! `(plan, input, stream length, run seeds)` always reproduces the same
+//! faulted bitstream, at every plane width. Two deliberate consequences:
+//! wide lanes draw *independent* fault streams (lane `l`'s faults differ
+//! from lane `m`'s, and from the scalar simulator's — fault injection is
+//! a statistical experiment, not part of the lane-equivalence contract),
+//! and repeated runs on one engine see the same fault pattern per run
+//! seed (reproducibility beats pattern diversity here; sweep the plan
+//! seed for diversity).
+//!
+//! Rates are quantized to the same 16-bit θ-gate grid as every other
+//! probability in the engine ([`quantize_threshold`]); a rate that
+//! quantizes to 0 (anything below ~2^-17) never fires and never draws
+//! entropy, which is what makes the **zero-rate identity** hold exactly:
+//! an armed plan whose rates are all zero is bit-identical to the clean
+//! path (property-tested in `smurf::sim`/`sim_wide` across widths and
+//! entropy modes).
+//!
+//! # Mitigation: lane-level TMR
+//!
+//! The classic SC hardening is triple modular redundancy on the stream:
+//! run three copies, majority-vote each output bit. The wide engine gets
+//! this almost for free — lanes are already independent replicas — so
+//! `WideBitLevelSmurf::eval_trials_tmr` seeds three lane *groups* with
+//! the same trial seeds, lets faults hit each group independently, and
+//! votes the output plane per cycle with [`vote3`] after aligning the
+//! groups with [`BitPlane::shift_lanes_down`]. A corrupted bit must
+//! appear in two of three groups in the same cycle to survive.
+
+use crate::sc::plane::BitPlane;
+use crate::sc::rng::{StreamRng, WideXorShift64, XorShift64};
+use crate::sc::sng::quantize_threshold;
+
+/// Datapath sites a [`BitFaultPlan`] can target (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The 16-bit entropy words of every RNG branch (M input θ-gate
+    /// branches and the CPT branch), per bit.
+    EntropyWord,
+    /// The input θ-gate comparator output bits (the FSM `up` inputs).
+    ThetaOutput,
+    /// The chain-FSM state register bits (after the clock edge; injected
+    /// patterns outside `0..N` saturate to `N-1` — see
+    /// `ChainFsm::inject` / `WideChainFsm::inject`).
+    FsmState,
+    /// The CPT-gate output bit entering the output counter.
+    OutputBit,
+}
+
+impl FaultSite {
+    /// Number of distinct sites.
+    pub const COUNT: usize = 4;
+
+    /// All sites, in pipeline order.
+    pub const ALL: [FaultSite; FaultSite::COUNT] = [
+        FaultSite::EntropyWord,
+        FaultSite::ThetaOutput,
+        FaultSite::FsmState,
+        FaultSite::OutputBit,
+    ];
+
+    /// Dense index (array key into per-site tables).
+    #[inline(always)]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Per-bit, per-cycle fault probabilities of one site. All three kinds
+/// are independent; within a cycle they apply in the fixed order
+/// stuck-at-0 → stuck-at-1 → flip.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultRates {
+    /// P(bit forced to 0) per bit per cycle.
+    pub stuck_at_zero: f64,
+    /// P(bit forced to 1) per bit per cycle.
+    pub stuck_at_one: f64,
+    /// P(bit inverted) per bit per cycle.
+    pub flip: f64,
+}
+
+impl FaultRates {
+    /// No faults.
+    pub const NONE: FaultRates =
+        FaultRates { stuck_at_zero: 0.0, stuck_at_one: 0.0, flip: 0.0 };
+
+    /// Transient flips only.
+    pub fn flips(rate: f64) -> Self {
+        Self { flip: rate, ..Self::NONE }
+    }
+
+    /// Stuck-at-0 only.
+    pub fn stuck0(rate: f64) -> Self {
+        Self { stuck_at_zero: rate, ..Self::NONE }
+    }
+
+    /// Stuck-at-1 only.
+    pub fn stuck1(rate: f64) -> Self {
+        Self { stuck_at_one: rate, ..Self::NONE }
+    }
+
+    /// 16-bit θ-grid thresholds (the runtime form).
+    fn quantized(&self) -> SiteThresholds {
+        let s0 = quantize_threshold(self.stuck_at_zero);
+        let s1 = quantize_threshold(self.stuck_at_one);
+        let flip = quantize_threshold(self.flip);
+        SiteThresholds { s0, s1, flip, armed: s0 | s1 | flip != 0 }
+    }
+}
+
+/// Quantized per-site thresholds; `armed` is false iff every kind
+/// quantized to zero (such a site never draws fault entropy).
+#[derive(Clone, Copy, Debug, Default)]
+struct SiteThresholds {
+    s0: u16,
+    s1: u16,
+    flip: u16,
+    armed: bool,
+}
+
+/// A deterministic, seed-driven bit-fault configuration: per-site
+/// [`FaultRates`] plus the seed of the fault-entropy streams. Inert by
+/// default ([`BitFaultPlan::new`] sets every rate to zero); arm sites
+/// with [`BitFaultPlan::with_site`] or all at once with
+/// [`BitFaultPlan::uniform`]. Attach to an engine with
+/// `BitLevelSmurf::with_fault_plan` / `WideBitLevelSmurf::with_fault_plan`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitFaultPlan {
+    seed: u64,
+    rates: [FaultRates; FaultSite::COUNT],
+}
+
+impl BitFaultPlan {
+    /// An inert plan (all rates zero) with the given fault-entropy seed.
+    pub fn new(seed: u64) -> Self {
+        Self { seed, rates: [FaultRates::NONE; FaultSite::COUNT] }
+    }
+
+    /// The same rates at every site.
+    pub fn uniform(seed: u64, rates: FaultRates) -> Self {
+        Self { seed, rates: [rates; FaultSite::COUNT] }
+    }
+
+    /// Builder: set one site's rates.
+    pub fn with_site(mut self, site: FaultSite, rates: FaultRates) -> Self {
+        self.rates[site.index()] = rates;
+        self
+    }
+
+    /// The fault-entropy seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// One site's configured rates.
+    pub fn rates(&self, site: FaultSite) -> FaultRates {
+        self.rates[site.index()]
+    }
+
+    /// True iff no site can ever fire (every rate quantizes to zero on
+    /// the 16-bit θ grid). An inert plan attached to an engine is
+    /// bit-identical to no plan at all.
+    pub fn is_inert(&self) -> bool {
+        self.rates.iter().all(|r| !r.quantized().armed)
+    }
+
+    /// Fresh scalar fault streams for one simulator run.
+    pub fn scalar_state(&self) -> ScalarFaultState {
+        ScalarFaultState {
+            sites: std::array::from_fn(|i| ScalarSite {
+                t: self.rates[i].quantized(),
+                rng: XorShift64::new(lane_seed(self.seed, i, 0)),
+            }),
+        }
+    }
+}
+
+/// splitmix64 finalizer — decorrelates the per-(site, lane) fault
+/// streams from the plan seed and from each other.
+fn splitmix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Seed of site `site`, lane `l`'s fault stream. The scalar simulator
+/// uses lane 0's streams.
+fn lane_seed(seed: u64, site: usize, lane: usize) -> u64 {
+    splitmix(
+        seed ^ (site as u64).wrapping_mul(0xA24BAED4963EE407)
+            ^ (lane as u64).wrapping_mul(0xD1B54A32D192ED03),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Hook traits: the simulators' run loops are generic over these, so the
+// clean path ([`NoFaults`], a ZST with inline identity methods)
+// monomorphizes to exactly the pre-fault code.
+// ---------------------------------------------------------------------
+
+/// Fault hook of the scalar simulator (`BitLevelSmurf::run`). Every
+/// method defaults to identity; [`ScalarFaultState`] overrides.
+pub trait ScalarFaultHook {
+    /// Corrupt one 16-bit entropy word ([`FaultSite::EntropyWord`]).
+    #[inline(always)]
+    fn entropy(&mut self, w: u16) -> u16 {
+        w
+    }
+
+    /// Corrupt one θ-gate output bit ([`FaultSite::ThetaOutput`]).
+    #[inline(always)]
+    fn theta(&mut self, b: bool) -> bool {
+        b
+    }
+
+    /// Whether [`FaultSite::FsmState`] is armed (gates the per-step
+    /// `ChainFsm::inject` call; const-folds to `false` for [`NoFaults`]).
+    #[inline(always)]
+    fn state_armed(&self) -> bool {
+        false
+    }
+
+    /// Corrupt an FSM state's low `nbits` bits ([`FaultSite::FsmState`]);
+    /// the FSM clamps the result back into range.
+    #[inline(always)]
+    fn state(&mut self, s: usize, _nbits: u32) -> usize {
+        s
+    }
+
+    /// Corrupt the CPT output bit ([`FaultSite::OutputBit`]).
+    #[inline(always)]
+    fn output(&mut self, b: bool) -> bool {
+        b
+    }
+}
+
+/// Fault hook of the wide simulator (`WideBitLevelSmurf`), operating on
+/// whole planes. Every method defaults to identity; [`WideFaultState`]
+/// overrides.
+pub trait WideFaultHook<P: BitPlane> {
+    /// Whether [`FaultSite::EntropyWord`] is armed. When true the Shared-
+    /// threshold θ-gate path materializes its rand planes (so there is a
+    /// word to corrupt) instead of folding the comparator in the RNG.
+    #[inline(always)]
+    fn entropy_armed(&self) -> bool {
+        false
+    }
+
+    /// Whether [`FaultSite::FsmState`] is armed (gates the per-step
+    /// `WideChainFsm::inject` call).
+    #[inline(always)]
+    fn state_armed(&self) -> bool {
+        false
+    }
+
+    /// Corrupt one cycle's 16 rand planes ([`FaultSite::EntropyWord`]).
+    #[inline(always)]
+    fn entropy(&mut self, _planes: &mut [P; 16]) {}
+
+    /// Corrupt a θ-gate comparator mask ([`FaultSite::ThetaOutput`]).
+    #[inline(always)]
+    fn theta(&mut self, p: P) -> P {
+        p
+    }
+
+    /// Corrupt the live FSM state planes ([`FaultSite::FsmState`]); the
+    /// FSM clamps out-of-range lanes afterwards.
+    #[inline(always)]
+    fn state(&mut self, _planes: &mut [P]) {}
+
+    /// Corrupt the CPT output mask ([`FaultSite::OutputBit`]).
+    #[inline(always)]
+    fn output(&mut self, p: P) -> P {
+        p
+    }
+}
+
+/// The inert hook: a zero-sized type whose identity methods inline away,
+/// so a simulator run with `NoFaults` compiles to the clean pipeline with
+/// zero added branches.
+pub struct NoFaults;
+
+impl ScalarFaultHook for NoFaults {}
+impl<P: BitPlane> WideFaultHook<P> for NoFaults {}
+
+// ---------------------------------------------------------------------
+// Armed implementations.
+// ---------------------------------------------------------------------
+
+/// Bernoulli mask over the low `bits` bits: bit `b` fires iff an
+/// independent 16-bit draw lands under `t`.
+fn mask_bits(rng: &mut XorShift64, bits: u32, t: u16) -> u32 {
+    let mut m = 0u32;
+    for b in 0..bits {
+        m |= ((rng.next_u16() < t) as u32) << b;
+    }
+    m
+}
+
+struct ScalarSite {
+    t: SiteThresholds,
+    rng: XorShift64,
+}
+
+impl ScalarSite {
+    /// Corrupt a single bit (θ-gate / CPT output sites).
+    #[inline]
+    fn bit(&mut self, mut b: bool) -> bool {
+        let SiteThresholds { s0, s1, flip, .. } = self.t;
+        if s0 != 0 && self.rng.next_u16() < s0 {
+            b = false;
+        }
+        if s1 != 0 && self.rng.next_u16() < s1 {
+            b = true;
+        }
+        if flip != 0 && self.rng.next_u16() < flip {
+            b = !b;
+        }
+        b
+    }
+
+    /// Corrupt the low `bits` bits of a word (entropy / FSM-state sites).
+    #[inline]
+    fn word(&mut self, bits: u32, mut w: u32) -> u32 {
+        let SiteThresholds { s0, s1, flip, .. } = self.t;
+        if s0 != 0 {
+            w &= !mask_bits(&mut self.rng, bits, s0);
+        }
+        if s1 != 0 {
+            w |= mask_bits(&mut self.rng, bits, s1);
+        }
+        if flip != 0 {
+            w ^= mask_bits(&mut self.rng, bits, flip);
+        }
+        w
+    }
+}
+
+/// Armed scalar fault streams for one run (see
+/// [`BitFaultPlan::scalar_state`]). At zero rates every method is an
+/// exact identity that draws no entropy.
+pub struct ScalarFaultState {
+    sites: [ScalarSite; FaultSite::COUNT],
+}
+
+impl ScalarFaultHook for ScalarFaultState {
+    #[inline]
+    fn entropy(&mut self, w: u16) -> u16 {
+        let s = &mut self.sites[FaultSite::EntropyWord.index()];
+        if s.t.armed {
+            s.word(16, w as u32) as u16
+        } else {
+            w
+        }
+    }
+
+    #[inline]
+    fn theta(&mut self, b: bool) -> bool {
+        let s = &mut self.sites[FaultSite::ThetaOutput.index()];
+        if s.t.armed {
+            s.bit(b)
+        } else {
+            b
+        }
+    }
+
+    #[inline(always)]
+    fn state_armed(&self) -> bool {
+        self.sites[FaultSite::FsmState.index()].t.armed
+    }
+
+    #[inline]
+    fn state(&mut self, s: usize, nbits: u32) -> usize {
+        self.sites[FaultSite::FsmState.index()].word(nbits, s as u32) as usize
+    }
+
+    #[inline]
+    fn output(&mut self, b: bool) -> bool {
+        let s = &mut self.sites[FaultSite::OutputBit.index()];
+        if s.t.armed {
+            s.bit(b)
+        } else {
+            b
+        }
+    }
+}
+
+struct WideSite<P: BitPlane> {
+    t: SiteThresholds,
+    rng: WideXorShift64<P>,
+}
+
+impl<P: BitPlane> WideSite<P> {
+    /// Corrupt one plane: at most one AND-NOT/OR/XOR per armed kind, each
+    /// against a fresh per-lane Bernoulli mask.
+    #[inline]
+    fn corrupt(&mut self, mut p: P) -> P {
+        let SiteThresholds { s0, s1, flip, .. } = self.t;
+        if s0 != 0 {
+            p = p.and_not(self.rng.next_lt_const(s0));
+        }
+        if s1 != 0 {
+            p = p.or(self.rng.next_lt_const(s1));
+        }
+        if flip != 0 {
+            p = p.xor(self.rng.next_lt_const(flip));
+        }
+        p
+    }
+}
+
+/// Armed wide fault streams: one [`WideXorShift64`] bank per site (every
+/// lane draws independently, so TMR replicas see independent faults).
+/// Lives in the `WideRunState` scratch and is re-seeded from the plan at
+/// the start of each run ([`WideFaultState::reset`]), so buffers are
+/// reused allocation-free. At zero rates every method is an exact
+/// identity that draws no entropy.
+pub struct WideFaultState<P: BitPlane> {
+    sites: [WideSite<P>; FaultSite::COUNT],
+    /// Reseed staging for the per-lane stream seeds.
+    seed_stage: Vec<u64>,
+}
+
+impl<P: BitPlane> Default for WideFaultState<P> {
+    /// Fully disarmed, no lanes; [`Self::reset`] arms it.
+    fn default() -> Self {
+        Self {
+            sites: std::array::from_fn(|_| WideSite {
+                t: SiteThresholds::default(),
+                rng: WideXorShift64::from_seeds(&[]),
+            }),
+            seed_stage: Vec::new(),
+        }
+    }
+}
+
+impl<P: BitPlane> WideFaultState<P> {
+    /// Armed streams for `plan` (all `P::LANES` lanes).
+    pub fn new(plan: &BitFaultPlan) -> Self {
+        let mut st = Self::default();
+        st.reset(plan);
+        st
+    }
+
+    /// Re-arm in place for a fresh run: reload the quantized thresholds
+    /// and rewind every armed site's lane streams to the plan seed.
+    pub fn reset(&mut self, plan: &BitFaultPlan) {
+        let Self { sites, seed_stage } = self;
+        for (i, site) in sites.iter_mut().enumerate() {
+            site.t = plan.rates[i].quantized();
+            if site.t.armed {
+                seed_stage.resize(P::LANES, 0);
+                for (l, s) in seed_stage.iter_mut().enumerate() {
+                    *s = lane_seed(plan.seed, i, l);
+                }
+                site.rng.reseed(seed_stage);
+            } else {
+                site.rng.reseed(&[]);
+            }
+        }
+    }
+}
+
+impl<P: BitPlane> WideFaultHook<P> for WideFaultState<P> {
+    #[inline(always)]
+    fn entropy_armed(&self) -> bool {
+        self.sites[FaultSite::EntropyWord.index()].t.armed
+    }
+
+    #[inline(always)]
+    fn state_armed(&self) -> bool {
+        self.sites[FaultSite::FsmState.index()].t.armed
+    }
+
+    #[inline]
+    fn entropy(&mut self, planes: &mut [P; 16]) {
+        let s = &mut self.sites[FaultSite::EntropyWord.index()];
+        if s.t.armed {
+            for p in planes.iter_mut() {
+                *p = s.corrupt(*p);
+            }
+        }
+    }
+
+    #[inline]
+    fn theta(&mut self, p: P) -> P {
+        let s = &mut self.sites[FaultSite::ThetaOutput.index()];
+        if s.t.armed {
+            s.corrupt(p)
+        } else {
+            p
+        }
+    }
+
+    #[inline]
+    fn state(&mut self, planes: &mut [P]) {
+        let s = &mut self.sites[FaultSite::FsmState.index()];
+        for p in planes.iter_mut() {
+            *p = s.corrupt(*p);
+        }
+    }
+
+    #[inline]
+    fn output(&mut self, p: P) -> P {
+        let s = &mut self.sites[FaultSite::OutputBit.index()];
+        if s.t.armed {
+            s.corrupt(p)
+        } else {
+            p
+        }
+    }
+}
+
+/// Per-lane 2-of-3 majority vote — the TMR reduction. One AND per pair
+/// plus two ORs, all plane ops.
+#[inline(always)]
+pub fn vote3<P: BitPlane>(a: P, b: P, c: P) -> P {
+    a.and(b).or(a.and(c)).or(b.and(c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_inert_by_default_and_below_quantization() {
+        assert!(BitFaultPlan::new(7).is_inert());
+        // Rates below the 16-bit θ grid quantize to zero → inert.
+        assert!(BitFaultPlan::uniform(7, FaultRates::flips(1e-7)).is_inert());
+        assert!(!BitFaultPlan::uniform(7, FaultRates::flips(1e-3)).is_inert());
+        let plan = BitFaultPlan::new(7)
+            .with_site(FaultSite::OutputBit, FaultRates::stuck1(0.25));
+        assert!(!plan.is_inert());
+        assert_eq!(plan.rates(FaultSite::OutputBit).stuck_at_one, 0.25);
+        assert_eq!(plan.rates(FaultSite::ThetaOutput), FaultRates::NONE);
+    }
+
+    #[test]
+    fn zero_rate_scalar_state_is_identity_and_draws_nothing() {
+        let mut f = BitFaultPlan::new(3).scalar_state();
+        for i in 0..200u32 {
+            let w = (i.wrapping_mul(2654435761) >> 16) as u16;
+            assert_eq!(f.entropy(w), w);
+            assert_eq!(f.theta(i % 2 == 0), i % 2 == 0);
+            assert_eq!(f.state(i as usize % 8, 3), i as usize % 8);
+            assert_eq!(f.output(i % 3 == 0), i % 3 == 0);
+        }
+        assert!(!f.state_armed());
+    }
+
+    fn zero_rate_wide_state_is_identity_generic<P: BitPlane>() {
+        let plan = BitFaultPlan::new(11);
+        let mut f = WideFaultState::<P>::new(&plan);
+        assert!(!WideFaultHook::<P>::entropy_armed(&f));
+        assert!(!WideFaultHook::<P>::state_armed(&f));
+        let mut p = P::zero();
+        p.set_lane(P::LANES / 2);
+        assert_eq!(f.theta(p), p);
+        assert_eq!(f.output(p), p);
+        let mut planes = [p; 16];
+        f.entropy(&mut planes);
+        assert!(planes.iter().all(|&q| q == p));
+    }
+
+    #[test]
+    fn zero_rate_wide_state_is_identity() {
+        crate::for_each_plane_width!(zero_rate_wide_state_is_identity_generic);
+    }
+
+    fn wide_masks_are_deterministic_generic<P: BitPlane>() {
+        let plan = BitFaultPlan::uniform(
+            42,
+            FaultRates { stuck_at_zero: 0.1, stuck_at_one: 0.05, flip: 0.2 },
+        );
+        let mut a = WideFaultState::<P>::new(&plan);
+        let mut b = WideFaultState::<P>::new(&plan);
+        for _ in 0..50 {
+            let p = P::ones();
+            assert_eq!(a.theta(p), b.theta(p));
+            assert_eq!(a.output(p), b.output(p));
+        }
+        // reset() rewinds the streams to the plan seed.
+        let first = WideFaultState::<P>::new(&plan).output(P::ones());
+        a.reset(&plan);
+        assert_eq!(a.output(P::ones()), first);
+    }
+
+    #[test]
+    fn wide_masks_are_deterministic() {
+        crate::for_each_plane_width!(wide_masks_are_deterministic_generic);
+    }
+
+    fn wide_mask_density_tracks_rate_generic<P: BitPlane>() {
+        // Flip faults on an all-zeros plane expose the raw Bernoulli
+        // masks; their empirical density must track the configured rate.
+        let rate = 0.25;
+        let plan = BitFaultPlan::uniform(9, FaultRates::flips(rate));
+        let mut f = WideFaultState::<P>::new(&plan);
+        let draws = 4000usize;
+        let mut ones = 0u64;
+        for _ in 0..draws {
+            ones += f.output(P::zero()).count_ones() as u64;
+        }
+        let density = ones as f64 / (draws * P::LANES) as f64;
+        assert!(
+            (density - rate).abs() < 0.02,
+            "lanes={} density={density} rate={rate}",
+            P::LANES
+        );
+    }
+
+    #[test]
+    fn wide_mask_density_tracks_rate() {
+        crate::for_each_plane_width!(wide_mask_density_tracks_rate_generic);
+    }
+
+    #[test]
+    fn stuck_at_semantics() {
+        // Rate 1.0 quantizes to 65535/65536 — force ~every bit and check
+        // the direction of each kind.
+        let s0 = BitFaultPlan::uniform(5, FaultRates::stuck0(1.0));
+        let mut f = WideFaultState::<u64>::new(&s0);
+        let mut zeroed = 0u32;
+        for _ in 0..100 {
+            zeroed += f.output(u64::ones()).not().count_ones();
+        }
+        assert!(zeroed > 99 * 64, "stuck-at-0 must clear almost every bit");
+        let s1 = BitFaultPlan::uniform(5, FaultRates::stuck1(1.0));
+        let mut f = WideFaultState::<u64>::new(&s1);
+        let mut set = 0u32;
+        for _ in 0..100 {
+            set += f.output(u64::zero()).count_ones();
+        }
+        assert!(set > 99 * 64, "stuck-at-1 must set almost every bit");
+    }
+
+    #[test]
+    fn scalar_word_corruption_confined_to_low_bits() {
+        let plan = BitFaultPlan::uniform(13, FaultRates::stuck1(1.0));
+        let mut f = plan.scalar_state();
+        for _ in 0..50 {
+            let s = f.state(0, 3);
+            assert!(s < 8, "FSM-state corruption must stay within nbits");
+        }
+    }
+
+    #[test]
+    fn vote3_truth_table() {
+        let t = u64::ones();
+        let z = u64::zero();
+        for a in [z, t] {
+            for b in [z, t] {
+                for c in [z, t] {
+                    let want = if (a & 1) + (b & 1) + (c & 1) >= 2 { t } else { z };
+                    assert_eq!(vote3(a, b, c), want);
+                }
+            }
+        }
+        // Mixed lanes: the vote is per-lane.
+        assert_eq!(vote3(0b110u64, 0b011, 0b101), 0b111);
+        assert_eq!(vote3(0b100u64, 0b010, 0b001), 0b000);
+    }
+}

@@ -19,9 +19,14 @@
 //! - [`pwmm_wide`] — plane-form SC-PwMM: the bipolar XNOR multiply of the
 //!   CNN column run `MaxPlane::LANES` products per pass (lane = product,
 //!   plane = cycle), bit-identical to the scalar `Exact` path.
+//! - [`fault`] — deterministic bit-level fault injection (stuck-at-0/1,
+//!   transient flips at four datapath sites) and the lane-level TMR
+//!   majority vote ([`vote3`](fault::vote3)) that mitigates them; inert
+//!   by default and zero-cost when disarmed.
 
 pub mod bitstream;
 pub mod cpt;
+pub mod fault;
 pub mod plane;
 pub mod pwmm_wide;
 pub mod rng;

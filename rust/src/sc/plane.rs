@@ -110,6 +110,15 @@ pub trait BitPlane: Copy + Eq + std::fmt::Debug + Send + Sync + 'static {
     fn half_sub(self, borrow: Self) -> (Self, Self) {
         (self.xor(borrow), self.not().and(borrow))
     }
+
+    /// Shift every lane's bit down by `lanes` positions: output lane `l`
+    /// is input lane `l + lanes` (vacated high lanes read 0). This is the
+    /// lane-group alignment step of the TMR majority vote
+    /// ([`crate::sc::fault::vote3`]): with three redundant groups of `k`
+    /// lanes, `vote3(p, p.shift_lanes_down(k), p.shift_lanes_down(2*k))`
+    /// puts each logical lane's majority verdict back in group 0.
+    /// Requires `lanes < LANES`.
+    fn shift_lanes_down(self, lanes: usize) -> Self;
 }
 
 impl BitPlane for u64 {
@@ -171,6 +180,12 @@ impl BitPlane for u64 {
     fn set_lane_if(&mut self, l: usize, bit: bool) {
         debug_assert!(l < 64);
         *self |= (bit as u64) << l;
+    }
+
+    #[inline(always)]
+    fn shift_lanes_down(self, lanes: usize) -> Self {
+        debug_assert!(lanes < 64);
+        self >> lanes
     }
 }
 
@@ -263,6 +278,26 @@ macro_rules! impl_bitplane_words {
             fn set_lane_if(&mut self, l: usize, bit: bool) {
                 debug_assert!(l < Self::LANES);
                 self[l >> 6] |= (bit as u64) << (l & 63);
+            }
+
+            #[inline(always)]
+            fn shift_lanes_down(self, lanes: usize) -> Self {
+                debug_assert!(lanes < Self::LANES);
+                // Multi-word funnel shift: word i takes the high bits of
+                // word i+q shifted down by r, topped up from word i+q+1.
+                let q = lanes >> 6;
+                let r = lanes & 63;
+                let mut out = [0u64; $w];
+                for i in 0..($w - q) {
+                    let lo = self[i + q] >> r;
+                    let hi = if r != 0 && i + q + 1 < $w {
+                        self[i + q + 1] << (64 - r)
+                    } else {
+                        0
+                    };
+                    out[i] = lo | hi;
+                }
+                out
             }
         }
     )+};
@@ -381,6 +416,26 @@ mod tests {
     #[test]
     fn plane_lanewise_ops_all_widths() {
         crate::for_each_plane_width!(check_lanewise_ops);
+    }
+
+    fn check_shift_lanes_down<P: BitPlane>() {
+        let mut rng = Pcg::new(0x5417 ^ P::LANES as u64);
+        let shifts = [0usize, 1, 7, 21, 63, 64, 85, 170, P::LANES - 1];
+        for _ in 0..10 {
+            let (p, bits) = random_plane::<P>(&mut rng);
+            for &k in shifts.iter().filter(|&&k| k < P::LANES) {
+                let s = p.shift_lanes_down(k);
+                for l in 0..P::LANES {
+                    let want = l + k < P::LANES && bits[l + k];
+                    assert_eq!(s.lane(l), want, "shift={k} lane={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shift_lanes_down_matches_lane_model() {
+        crate::for_each_plane_width!(check_shift_lanes_down);
     }
 
     #[test]

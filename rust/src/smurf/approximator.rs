@@ -150,6 +150,14 @@ impl SmurfApproximator {
         self.sim.eval(p, self.default_len, seed)
     }
 
+    /// Attach or remove a bit-level fault plan on the underlying
+    /// simulator (and, via lazy rebuild, its wide companions) — see
+    /// [`crate::sc::fault`]. The analytic path is unaffected: it is the
+    /// fault-free reference the drift sentinels compare against.
+    pub fn set_fault_plan(&mut self, plan: Option<crate::sc::fault::BitFaultPlan>) {
+        self.sim.set_fault_plan(plan);
+    }
+
     /// Underlying analytic instance.
     pub fn analytic(&self) -> &AnalyticSmurf {
         &self.analytic

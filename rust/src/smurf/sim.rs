@@ -18,6 +18,7 @@ use super::sim_wide::{
 };
 use crate::fsm::chain::ChainFsm;
 use crate::sc::cpt::CptGate;
+use crate::sc::fault::{BitFaultPlan, NoFaults, ScalarFaultHook};
 use crate::sc::rng::{Lfsr16, Sobol, StreamRng, XorShift64};
 use crate::sc::sng::ThetaGate;
 use std::sync::OnceLock;
@@ -63,6 +64,12 @@ pub struct BitLevelSmurf {
     /// `WIDE_*_MIN` thresholds were tuned against the 64-lane pass
     /// cost). Same streams bit-exactly — routing never changes results.
     wide64: OnceLock<WideBitLevelSmurf<u64>>,
+    /// Optional bit-level fault plan ([`crate::sc::fault`]). `None` (the
+    /// default) runs the clean monomorphized pipeline with zero fault
+    /// branches; `Some` runs the hooked pipeline — which at all-zero
+    /// rates is still bit-identical to clean (property-tested), because
+    /// a zero-rate site never draws fault entropy.
+    faults: Option<BitFaultPlan>,
 }
 
 /// Trial count at or above which the batch estimators route through the
@@ -137,6 +144,7 @@ impl BitLevelSmurf {
             strides,
             wide: OnceLock::new(),
             wide64: OnceLock::new(),
+            faults: None,
         }
     }
 
@@ -152,6 +160,26 @@ impl BitLevelSmurf {
     /// Entropy wiring of this instance.
     pub fn mode(&self) -> EntropyMode {
         self.mode
+    }
+
+    /// Builder: attach a bit-level fault plan (see [`Self::set_fault_plan`]).
+    pub fn with_fault_plan(mut self, plan: BitFaultPlan) -> Self {
+        self.set_fault_plan(Some(plan));
+        self
+    }
+
+    /// Attach or remove a bit-level fault plan. The wide companions are
+    /// rebuilt lazily so they inherit the plan — faults follow the value,
+    /// not the route (the estimators keep their wide/scalar routing).
+    pub fn set_fault_plan(&mut self, plan: Option<BitFaultPlan>) {
+        self.faults = plan;
+        self.wide = OnceLock::new();
+        self.wide64 = OnceLock::new();
+    }
+
+    /// The attached fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&BitFaultPlan> {
+        self.faults.as_ref()
     }
 
     /// CPT-gate (shared with the wide engine so both sample identical
@@ -242,8 +270,30 @@ impl BitLevelSmurf {
     }
 
     /// One seeded bitstream run on pre-built θ-gates and scratch state —
-    /// the shared core of `eval`/`eval_avg`/`abs_error`.
+    /// the shared core of `eval`/`eval_avg`/`abs_error`. Dispatches to
+    /// the clean ([`NoFaults`], zero-cost) or fault-hooked instantiation
+    /// of [`Self::run_with`]; the fault streams are re-seeded from the
+    /// plan here, so every run reproduces the same fault pattern.
     fn run(&self, gates: &[ThetaGate], len: usize, st: &mut RunState) -> f64 {
+        match &self.faults {
+            None => self.run_with(gates, len, st, &mut NoFaults),
+            Some(plan) => {
+                let mut faults = plan.scalar_state();
+                self.run_with(gates, len, st, &mut faults)
+            }
+        }
+    }
+
+    /// The run loop, generic over the fault hook (see [`crate::sc::fault`]
+    /// for the site taxonomy and why `NoFaults` monomorphizes to the
+    /// pre-fault code).
+    fn run_with<F: ScalarFaultHook>(
+        &self,
+        gates: &[ThetaGate],
+        len: usize,
+        st: &mut RunState,
+        faults: &mut F,
+    ) -> f64 {
         assert!(len > 0);
         let mut ones = 0u64;
         for _ in 0..len {
@@ -252,10 +302,16 @@ impl BitLevelSmurf {
             // 3. The (updated) codeword selects the CPT θ-gate.
             let mut sel = 0;
             for j in 0..st.fsms.len() {
-                let bit = gates[j].sample(st.input_rngs[j].next_u16());
-                sel += st.fsms[j].step(bit) * self.strides[j];
+                let word = faults.entropy(st.input_rngs[j].next_u16());
+                let bit = faults.theta(gates[j].sample(word));
+                let mut s = st.fsms[j].step(bit);
+                if faults.state_armed() {
+                    s = st.fsms[j].inject(|cur, nbits| faults.state(cur, nbits));
+                }
+                sel += s * self.strides[j];
             }
-            ones += self.cpt.sample(sel, st.cpt_rng.next_u16()) as u64;
+            let word = faults.entropy(st.cpt_rng.next_u16());
+            ones += faults.output(self.cpt.sample(sel, word)) as u64;
         }
         ones as f64 / len as f64
     }
@@ -499,5 +555,74 @@ mod tests {
         let cfg = SmurfConfig::uniform(2, 4);
         let s = BitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
         s.eval(&[0.5], 64, 0);
+    }
+
+    /// A zero-rate fault plan must be bit-identical to the clean path —
+    /// through the public API, so the *armed* hooked loop runs (an inert
+    /// plan still dispatches to `run_with::<ScalarFaultState>`; it is
+    /// identical because zero-rate sites never draw fault entropy).
+    #[test]
+    fn zero_rate_fault_plan_is_bit_identical_all_modes() {
+        use crate::sc::fault::BitFaultPlan;
+        for mode in [
+            EntropyMode::SharedLfsr,
+            EntropyMode::IndependentXorshift,
+            EntropyMode::SobolCpt,
+        ] {
+            let cfg = SmurfConfig::uniform(2, 4);
+            let clean = BitLevelSmurf::new(cfg.clone(), &euclid_w(), mode);
+            let armed = BitLevelSmurf::new(cfg, &euclid_w(), mode)
+                .with_fault_plan(BitFaultPlan::new(99));
+            assert!(armed.fault_plan().unwrap().is_inert());
+            for seed in [0u64, 7, 81] {
+                assert_eq!(
+                    clean.eval(&[0.3, 0.4], 128, seed),
+                    armed.eval(&[0.3, 0.4], 128, seed),
+                    "mode={mode:?} seed={seed}"
+                );
+            }
+            // Estimators too (scalar route: trials < WIDE_TRIALS_MIN).
+            assert_eq!(
+                clean.eval_avg(&[0.6, 0.2], 64, 4, 3),
+                armed.eval_avg(&[0.6, 0.2], 64, 4, 3),
+                "mode={mode:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn armed_faults_are_deterministic_and_perturb_the_stream() {
+        use crate::sc::fault::{BitFaultPlan, FaultRates, FaultSite};
+        let cfg = SmurfConfig::uniform(2, 4);
+        let plan = BitFaultPlan::new(21)
+            .with_site(FaultSite::OutputBit, FaultRates::flips(0.05));
+        let clean = BitLevelSmurf::new(cfg.clone(), &euclid_w(), EntropyMode::SharedLfsr);
+        let faulty = BitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr)
+            .with_fault_plan(plan);
+        let a = faulty.eval(&[0.3, 0.4], 512, 9);
+        let b = faulty.eval(&[0.3, 0.4], 512, 9);
+        assert_eq!(a, b, "same (plan, input, seed) must reproduce");
+        let c = clean.eval(&[0.3, 0.4], 512, 9);
+        assert_ne!(a, c, "a 5% output-flip rate must perturb a 512-cycle stream");
+        // Flips of a Bernoulli(p) stream at rate r move the mean toward
+        // 1/2 by ~r; the perturbation must stay in that ballpark.
+        assert!((a - c).abs() < 0.2, "faulty={a} clean={c}");
+    }
+
+    #[test]
+    fn fsm_state_faults_stay_in_range() {
+        use crate::sc::fault::{BitFaultPlan, FaultRates, FaultSite};
+        // Radix 5 is not a power of two: state faults can hit the
+        // out-of-range patterns 5..8, which must clamp, not panic the
+        // CPT bank index.
+        let cfg = SmurfConfig::new(vec![5, 5]);
+        let n = cfg.num_aggregate_states();
+        let w: Vec<f64> = (0..n).map(|i| i as f64 / n as f64).collect();
+        let plan = BitFaultPlan::new(4)
+            .with_site(FaultSite::FsmState, FaultRates::flips(0.1));
+        let s = BitLevelSmurf::new(cfg, &w, EntropyMode::SharedLfsr)
+            .with_fault_plan(plan);
+        let y = s.eval(&[0.4, 0.7], 1024, 2);
+        assert!((0.0..=1.0).contains(&y));
     }
 }

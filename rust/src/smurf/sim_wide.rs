@@ -93,9 +93,10 @@ use super::config::SmurfConfig;
 use super::sim::{BitLevelSmurf, EntropyMode};
 use crate::fsm::chain_wide::WideChainFsm;
 use crate::sc::cpt::CptGate;
+use crate::sc::fault::{vote3, BitFaultPlan, NoFaults, WideFaultHook, WideFaultState};
 use crate::sc::plane::BitPlane;
 use crate::sc::rng::{planes_from_lanes, Lfsr16, WideLfsr16, WideSobol16, WideXorShift64};
-use crate::sc::sng::{wide_lt_planes, ThetaGate};
+use crate::sc::sng::{wide_lt_const, wide_lt_planes, ThetaGate};
 
 /// Max count-bit planes in the output counter: supports `len < 2^40`.
 const COUNT_PLANES: usize = 41;
@@ -210,6 +211,13 @@ pub struct WideRunState<P: BitPlane = u64> {
     seed_stage: Vec<u64>,
     /// Estimator staging: per-chunk lane outputs.
     out_stage: Vec<f64>,
+    /// TMR staging: the tripled seed set of `eval_trials_tmr` (cannot
+    /// reuse `lane_u64` — `reset_entropy` consumes it while the tripled
+    /// seeds must stay live).
+    tmr_stage: Vec<u64>,
+    /// Fault-stream scratch, re-armed from the engine's plan per run;
+    /// disarmed (and never touched) when the engine has no plan.
+    fault: WideFaultState<P>,
 }
 
 impl<P: BitPlane> WideRunState<P> {
@@ -231,6 +239,8 @@ impl<P: BitPlane> WideRunState<P> {
             lane_u64: Vec::new(),
             seed_stage: Vec::new(),
             out_stage: Vec::new(),
+            tmr_stage: Vec::new(),
+            fault: WideFaultState::default(),
         }
     }
 }
@@ -297,6 +307,12 @@ pub struct WideBitLevelSmurf<P: BitPlane = u64> {
     digit_offsets: Vec<usize>,
     /// LFSR fast-forward bases for branch delays `17*k`, `k in 0..=M`.
     lfsr_jumps: Vec<[u16; 16]>,
+    /// Optional bit-level fault plan (see [`crate::sc::fault`] and the
+    /// scalar twin field on [`BitLevelSmurf`]). Wide lanes draw
+    /// *independent* fault streams per lane, so an armed engine is a
+    /// statistical experiment, not lane-equivalent to the scalar run —
+    /// but a zero-rate plan stays bit-identical to clean at every width.
+    faults: Option<BitFaultPlan>,
     _plane: std::marker::PhantomData<P>,
 }
 
@@ -307,9 +323,13 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
     }
 
     /// Build from a scalar simulator (identical coefficients, config and
-    /// entropy wiring — the lane-equivalence contract).
+    /// entropy wiring — the lane-equivalence contract). The fault plan is
+    /// inherited too, so the scalar estimators' wide routing keeps the
+    /// faults armed.
     pub fn from_scalar(sim: &BitLevelSmurf) -> Self {
-        Self::from_parts(sim.config().clone(), sim.cpt().clone(), sim.mode())
+        let mut wide = Self::from_parts(sim.config().clone(), sim.cpt().clone(), sim.mode());
+        wide.faults = sim.fault_plan().cloned();
+        wide
     }
 
     fn from_parts(cfg: SmurfConfig, cpt: CptGate, mode: EntropyMode) -> Self {
@@ -343,6 +363,7 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
             digits,
             digit_offsets,
             lfsr_jumps,
+            faults: None,
             _plane: std::marker::PhantomData,
         }
     }
@@ -353,6 +374,22 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
 
     pub fn mode(&self) -> EntropyMode {
         self.mode
+    }
+
+    /// Builder: attach a bit-level fault plan (see [`Self::set_fault_plan`]).
+    pub fn with_fault_plan(mut self, plan: BitFaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Attach or remove a bit-level fault plan ([`crate::sc::fault`]).
+    pub fn set_fault_plan(&mut self, plan: Option<BitFaultPlan>) {
+        self.faults = plan;
+    }
+
+    /// The attached fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&BitFaultPlan> {
+        self.faults.as_ref()
     }
 
     /// Allocate the reusable scratch buffers for this configuration.
@@ -437,9 +474,48 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
         *count_planes = [P::zero(); COUNT_PLANES];
     }
 
-    /// The shared lane core: `len` clocks of the Fig. 6 pipeline, then
-    /// per-lane bitstream means for the first `lanes` lanes into `out`.
-    fn run(&self, len: usize, lanes: usize, st: &mut WideRunState<P>, out: &mut [f64]) {
+    /// The shared lane core: dispatch to the clean ([`NoFaults`],
+    /// zero-cost — `run_core` monomorphizes to the pre-fault pipeline) or
+    /// fault-hooked instantiation, re-arming the scratch fault streams
+    /// from the plan so every run reproduces the same fault pattern.
+    fn run(
+        &self,
+        len: usize,
+        lanes: usize,
+        vote: Option<usize>,
+        st: &mut WideRunState<P>,
+        out: &mut [f64],
+    ) {
+        match &self.faults {
+            None => self.run_core(len, lanes, vote, st, out, &mut NoFaults),
+            Some(plan) => {
+                // The fault streams live in the scratch (reused buffers)
+                // but are borrowed out for the run so `run_core` can
+                // destructure the rest of the scratch.
+                let mut faults = std::mem::take(&mut st.fault);
+                faults.reset(plan);
+                self.run_core(len, lanes, vote, st, out, &mut faults);
+                st.fault = faults;
+            }
+        }
+    }
+
+    /// `len` clocks of the Fig. 6 pipeline, then per-lane bitstream means
+    /// for the first `lanes` lanes into `out`. Generic over the fault
+    /// hook ([`crate::sc::fault`]). `vote: Some(k)` enables the TMR
+    /// reduction: lanes `l`, `l+k`, `l+2k` are redundant replicas and the
+    /// output plane is majority-voted group-wise before it reaches the
+    /// counter — faults upstream of the vote must corrupt two replicas in
+    /// the same cycle to survive.
+    fn run_core<F: WideFaultHook<P>>(
+        &self,
+        len: usize,
+        lanes: usize,
+        vote: Option<usize>,
+        st: &mut WideRunState<P>,
+        out: &mut [f64],
+        faults: &mut F,
+    ) {
         assert!(len > 0, "need at least one clock cycle");
         assert!((len as u64) < (1u64 << (COUNT_PLANES - 1)), "stream too long for counter");
         let m = self.cfg.num_vars();
@@ -462,13 +538,29 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
             // as the scalar simulator).
             for j in 0..m {
                 let up = match &gate_thresholds[j] {
+                    // Entropy faults need the rand planes materialized;
+                    // the folded compare (`next_lt_const`) and the
+                    // materialize-then-compare route produce identical
+                    // masks (both are step-then-compare — the route is
+                    // pinned by the eval_points suite), so the detour
+                    // exists only while the site is armed.
+                    GateThreshold::Shared(t) if faults.entropy_armed() => {
+                        input_rngs[j].next_planes_into(rand_planes);
+                        faults.entropy(rand_planes);
+                        wide_lt_const(rand_planes, *t)
+                    }
                     GateThreshold::Shared(t) => input_rngs[j].next_lt_const(*t),
                     GateThreshold::PerLane(tp) => {
                         input_rngs[j].next_planes_into(rand_planes);
+                        faults.entropy(rand_planes);
                         wide_lt_planes(rand_planes, tp)
                     }
                 };
+                let up = faults.theta(up);
                 fsms[j].step(up);
+                if faults.state_armed() {
+                    fsms[j].inject(|planes| faults.state(planes));
+                }
             }
             // 3. Updated codeword digits → one-hot lane masks → per-
             // coefficient select masks.
@@ -491,7 +583,14 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
             // plane form, sample against the CPT entropy branch.
             self.cpt.threshold_planes(eq.as_slice(), thresh_planes);
             cpt_rng.next_planes_into(rand_planes);
-            let ones = wide_lt_planes(rand_planes, thresh_planes);
+            faults.entropy(rand_planes);
+            let mut ones = faults.output(wide_lt_planes(rand_planes, thresh_planes));
+            // 4b. Optional TMR majority vote over the three lane groups
+            // (post-fault, pre-counter — exactly where a hardware voter
+            // sits). Only group 0's lanes are decoded.
+            if let Some(k) = vote {
+                ones = vote3(ones, ones.shift_lanes_down(k), ones.shift_lanes_down(2 * k));
+            }
             // 5. Output counter (vertical: one plane per count bit).
             let mut carry = ones;
             let mut b = 0;
@@ -534,7 +633,76 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
             st.gate_thresholds.push(GateThreshold::Shared(ThetaGate::new(pj).raw()));
         }
         self.reset_entropy(seeds, st);
-        self.run(len, seeds.len(), st, out);
+        self.run(len, seeds.len(), None, st, out);
+    }
+
+    /// TMR (triple-modular-redundancy) variant of [`Self::eval_trials`]:
+    /// up to `P::LANES / 3` trials per pass, each run as three redundant
+    /// lane replicas (same trial seed, lanes `l`, `l + k`, `l + 2k`) whose
+    /// output bits are majority-voted per cycle before the counter —
+    /// the SC fault-hardening this module's fault model exists to
+    /// measure. Fault streams are per-lane-independent, so the replicas
+    /// fail independently; with no plan (or a zero-rate plan) the
+    /// replicas are identical and the vote is the identity, making the
+    /// result bit-equal to `eval_trials` (property-tested).
+    pub fn eval_trials_tmr(
+        &self,
+        p: &[f64],
+        len: usize,
+        seeds: &[u64],
+        st: &mut WideRunState<P>,
+        out: &mut [f64],
+    ) {
+        let k = self.setup_tmr(p, seeds, st, out);
+        self.run(len, k, Some(k), st, out);
+    }
+
+    /// Shared setup of the TMR entry points: gate thresholds, tripled
+    /// seed set, entropy reset. Returns the lane-group size `k`.
+    fn setup_tmr(
+        &self,
+        p: &[f64],
+        seeds: &[u64],
+        st: &mut WideRunState<P>,
+        out: &mut [f64],
+    ) -> usize {
+        assert_eq!(p.len(), self.cfg.num_vars());
+        let k = seeds.len();
+        assert!(
+            k > 0 && 3 * k <= P::LANES,
+            "1..=P::LANES/3 TMR trials per pass"
+        );
+        assert!(out.len() >= k);
+        self.prepare(st);
+        st.gate_thresholds.clear();
+        for &pj in p {
+            st.gate_thresholds.push(GateThreshold::Shared(ThetaGate::new(pj).raw()));
+        }
+        let mut tripled = std::mem::take(&mut st.tmr_stage);
+        tripled.clear();
+        for _ in 0..3 {
+            tripled.extend_from_slice(seeds);
+        }
+        self.reset_entropy(&tripled, st);
+        st.tmr_stage = tripled;
+        k
+    }
+
+    /// Test seam: a TMR run with a caller-supplied fault hook, for
+    /// adversarial vote tests (e.g. corrupt exactly one lane group and
+    /// prove the vote removes it bit-exactly).
+    #[cfg(test)]
+    fn eval_trials_tmr_hooked<F: WideFaultHook<P>>(
+        &self,
+        p: &[f64],
+        len: usize,
+        seeds: &[u64],
+        st: &mut WideRunState<P>,
+        out: &mut [f64],
+        faults: &mut F,
+    ) {
+        let k = self.setup_tmr(p, seeds, st, out);
+        self.run_core(len, k, Some(k), st, out, faults);
     }
 
     /// Up to `P::LANES` distinct batch points, one bitstream trial each:
@@ -567,7 +735,7 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
                 .push(GateThreshold::PerLane(planes_from_lanes(&st.lane_u16)));
         }
         self.reset_entropy(seeds, st);
-        self.run(len, points.len(), st, out);
+        self.run(len, points.len(), None, st, out);
     }
 
     /// Monte-Carlo average over `trials` runs — the same estimator (same
@@ -601,6 +769,44 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
         self.estimate(p, len, trials, seed, 0x2545F4914F, st, move |y, sum| {
             *sum += (y - target).abs()
         })
+    }
+
+    /// TMR variant of [`Self::eval_avg`]: same per-trial seeds, same
+    /// fold order — so with no (or a zero-rate) fault plan the result is
+    /// bit-identical to `eval_avg` — but every trial runs as three voted
+    /// replicas ([`Self::eval_trials_tmr`]), at one third the lanes per
+    /// pass. This is the mitigation curve of the `fault_sweep` bench.
+    pub fn eval_avg_tmr(
+        &self,
+        p: &[f64],
+        len: usize,
+        trials: usize,
+        seed: u64,
+        st: &mut WideRunState<P>,
+    ) -> f64 {
+        assert!(trials > 0);
+        let cap = P::LANES / 3;
+        let mut seeds = std::mem::take(&mut st.seed_stage);
+        let mut out = std::mem::take(&mut st.out_stage);
+        seeds.resize(cap, 0);
+        out.resize(cap, 0.0);
+        let mut sum = 0.0;
+        let mut done = 0;
+        while done < trials {
+            let k = (trials - done).min(cap);
+            for (i, s) in seeds.iter_mut().enumerate().take(k) {
+                // The eval_avg per-trial seed formula, verbatim.
+                *s = seed.wrapping_add((done + i) as u64).wrapping_mul(0x5DEECE66D);
+            }
+            self.eval_trials_tmr(p, len, &seeds[..k], st, &mut out);
+            for &y in &out[..k] {
+                sum += y;
+            }
+            done += k;
+        }
+        st.seed_stage = seeds;
+        st.out_stage = out;
+        sum / trials as f64
     }
 
     /// Shared chunking loop of the two estimators: derive per-trial seeds
@@ -944,5 +1150,188 @@ mod tests {
         let seeds = vec![0u64; 65];
         let mut out = vec![0.0f64; 65];
         wide.eval_trials(&[0.5, 0.5], 16, &seeds, &mut st, &mut out);
+    }
+
+    use crate::sc::fault::{BitFaultPlan, FaultRates, FaultSite, WideFaultHook};
+
+    /// A zero-rate plan runs the *armed* hooked loop (the engine
+    /// dispatches on `Some(plan)`, not on `is_inert`) and must stay
+    /// bit-identical to the clean path — all shapes, all entropy modes,
+    /// mixed radices, at width `P`.
+    fn zero_rate_plan_identity_at_width<P: BitPlane>() {
+        for mode in modes() {
+            for scalar in test_engines(mode) {
+                let clean = WideBitLevelSmurf::<P>::from_scalar(&scalar);
+                let armed = clean.clone().with_fault_plan(BitFaultPlan::new(123));
+                let m = scalar.config().num_vars();
+                let p: Vec<f64> = (0..m).map(|j| 0.3 + 0.3 * j as f64).collect();
+                let mut st_c = clean.make_run_state();
+                let mut st_a = armed.make_run_state();
+                let lanes = P::LANES - 1;
+                let seeds: Vec<u64> = (0..lanes as u64).map(|l| l * 0x9E37 + 5).collect();
+                let mut out_c = vec![0.0f64; lanes];
+                let mut out_a = vec![0.0f64; lanes];
+                clean.eval_trials(&p, 96, &seeds, &mut st_c, &mut out_c);
+                armed.eval_trials(&p, 96, &seeds, &mut st_a, &mut out_a);
+                assert_eq!(out_c, out_a, "{mode:?} eval_trials");
+                let pts: Vec<Vec<f64>> = (0..7)
+                    .map(|i| (0..m).map(|j| ((i + j) % 5) as f64 / 4.0).collect())
+                    .collect();
+                let refs: Vec<&[f64]> = pts.iter().map(|v| v.as_slice()).collect();
+                clean.eval_points(&refs, 64, &seeds[..7], &mut st_c, &mut out_c);
+                armed.eval_points(&refs, 64, &seeds[..7], &mut st_a, &mut out_a);
+                assert_eq!(out_c[..7], out_a[..7], "{mode:?} eval_points");
+                assert_eq!(
+                    clean.eval_avg(&p, 64, P::LANES + 3, 9, &mut st_c),
+                    armed.eval_avg(&p, 64, P::LANES + 3, 9, &mut st_a),
+                    "{mode:?} eval_avg"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rate_plan_identity() {
+        crate::for_each_plane_width!(zero_rate_plan_identity_at_width);
+    }
+
+    /// With no faults the three TMR replicas are identical, the vote is
+    /// the identity, and both TMR entry points are bit-equal to their
+    /// plain counterparts — at width `P`, all entropy modes.
+    fn tmr_zero_rate_matches_clean_at_width<P: BitPlane>() {
+        for mode in modes() {
+            for scalar in test_engines(mode) {
+                let clean = WideBitLevelSmurf::<P>::from_scalar(&scalar);
+                let armed = clean.clone().with_fault_plan(BitFaultPlan::new(5));
+                let m = scalar.config().num_vars();
+                let p: Vec<f64> = (0..m).map(|j| 0.45 + 0.2 * j as f64).collect();
+                let mut st = clean.make_run_state();
+                let k = P::LANES / 3;
+                let seeds: Vec<u64> = (0..k as u64).map(|l| l * 77 + 3).collect();
+                let mut plain = vec![0.0f64; k];
+                let mut tmr = vec![0.0f64; k];
+                clean.eval_trials(&p, 96, &seeds, &mut st, &mut plain);
+                clean.eval_trials_tmr(&p, 96, &seeds, &mut st, &mut tmr);
+                assert_eq!(plain, tmr, "{mode:?} no-plan TMR");
+                let mut st_a = armed.make_run_state();
+                armed.eval_trials_tmr(&p, 96, &seeds, &mut st_a, &mut tmr);
+                assert_eq!(plain, tmr, "{mode:?} zero-rate-plan TMR");
+                // Estimator: spans multiple TMR chunks.
+                assert_eq!(
+                    clean.eval_avg(&p, 64, P::LANES / 3 + 5, 7, &mut st),
+                    clean.eval_avg_tmr(&p, 64, P::LANES / 3 + 5, 7, &mut st),
+                    "{mode:?} eval_avg_tmr"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tmr_zero_rate_matches_clean() {
+        crate::for_each_plane_width!(tmr_zero_rate_matches_clean_at_width);
+    }
+
+    /// Corrupt exactly one of the three redundant lane groups (an
+    /// adversarial hook flipping every output bit of lanes `k..2k`): the
+    /// majority vote must remove the corruption *bit-exactly*.
+    fn tmr_outvotes_single_group_corruption_at_width<P: BitPlane>() {
+        struct GroupFlip<P> {
+            mask: P,
+        }
+        impl<P: BitPlane> WideFaultHook<P> for GroupFlip<P> {
+            fn output(&mut self, p: P) -> P {
+                p.xor(self.mask)
+            }
+        }
+        for mode in modes() {
+            let cfg = SmurfConfig::uniform(2, 4);
+            let scalar = BitLevelSmurf::new(cfg, &euclid_w(), mode);
+            let wide = WideBitLevelSmurf::<P>::from_scalar(&scalar);
+            let mut st = wide.make_run_state();
+            let k = P::LANES / 3;
+            let seeds: Vec<u64> = (0..k as u64).map(|l| l * 131 + 17).collect();
+            let p = [0.35, 0.55];
+            let mut clean = vec![0.0f64; k];
+            let mut voted = vec![0.0f64; k];
+            wide.eval_trials(&p, 128, &seeds, &mut st, &mut clean);
+            let mut mask = P::zero();
+            for l in k..2 * k {
+                mask.set_lane(l);
+            }
+            wide.eval_trials_tmr_hooked(
+                &p,
+                128,
+                &seeds,
+                &mut st,
+                &mut voted,
+                &mut GroupFlip { mask },
+            );
+            assert_eq!(clean, voted, "{mode:?}: 2-of-3 must outvote one dead group");
+        }
+    }
+
+    #[test]
+    fn tmr_outvotes_single_group_corruption() {
+        crate::for_each_plane_width!(tmr_outvotes_single_group_corruption_at_width);
+    }
+
+    /// Armed output-bit flips: deterministic per plan, and the TMR
+    /// estimator must sit closer to the clean value than the unprotected
+    /// one (the accuracy-vs-fault-rate claim the fault_sweep bench
+    /// curves). Deterministic seeds — no statistical flake.
+    #[test]
+    fn tmr_reduces_output_fault_error() {
+        let cfg = SmurfConfig::uniform(2, 4);
+        let scalar = BitLevelSmurf::new(cfg, &euclid_w(), EntropyMode::SharedLfsr);
+        let clean_engine = WideBitLevelSmurf::<MaxPlane>::from_scalar(&scalar);
+        let plan = BitFaultPlan::new(77)
+            .with_site(FaultSite::OutputBit, FaultRates::flips(0.05));
+        let faulty = clean_engine.clone().with_fault_plan(plan);
+        let mut st = clean_engine.make_run_state();
+        // Euclid at [0.9, 0.8] sits near 1.0, far from the 0.5 flips pull
+        // toward, so the unprotected bias is large and unambiguous.
+        let p = [0.9, 0.8];
+        let trials = 64;
+        let clean = clean_engine.eval_avg(&p, 2048, trials, 11, &mut st);
+        let unprotected = faulty.eval_avg(&p, 2048, trials, 11, &mut st);
+        let protected = faulty.eval_avg_tmr(&p, 2048, trials, 11, &mut st);
+        let e_raw = (unprotected - clean).abs();
+        let e_tmr = (protected - clean).abs();
+        assert!(
+            e_tmr < e_raw,
+            "TMR must shrink the fault bias: raw={e_raw} tmr={e_tmr}"
+        );
+        // ~5% flips toward 0.5 bias the mean by ~r(1-2y); TMR's residual
+        // is O(r^2). Sanity-bound both so the test fails loudly if the
+        // fault model silently stops firing.
+        assert!(e_raw > 0.01, "5% output flips must visibly bias the mean");
+        assert!(e_tmr < e_raw / 2.0, "vote must remove most of the bias");
+        // Determinism of the armed engine.
+        assert_eq!(
+            faulty.eval_avg(&p, 256, 16, 3, &mut st),
+            faulty.eval_avg(&p, 256, 16, 3, &mut st)
+        );
+    }
+
+    /// FSM-state faults on a non-power-of-two radix exercise the wide
+    /// clamp; outputs must stay means of valid bits.
+    #[test]
+    fn wide_fsm_faults_stay_in_range() {
+        let mixed_w: Vec<f64> = (0..15).map(|i| (i as f64 + 0.5) / 15.0).collect();
+        let wide = WideBitLevelSmurf::<u64>::new(
+            SmurfConfig::new(vec![3, 5]),
+            &mixed_w,
+            EntropyMode::SharedLfsr,
+        )
+        .with_fault_plan(
+            BitFaultPlan::new(31).with_site(FaultSite::FsmState, FaultRates::flips(0.1)),
+        );
+        let mut st = wide.make_run_state();
+        let seeds: Vec<u64> = (0..64u64).collect();
+        let mut out = vec![0.0f64; 64];
+        wide.eval_trials(&[0.4, 0.7], 512, &seeds, &mut st, &mut out);
+        for (l, &y) in out.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&y), "lane {l}: {y}");
+        }
     }
 }

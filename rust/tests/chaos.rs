@@ -9,8 +9,8 @@
 
 use smurf::coordinator::batcher::BatchPolicy;
 use smurf::coordinator::{
-    AdmissionConfig, Engine, EvalError, EvalRequest, EvalServer, FaultInjector, RejectReason,
-    ServerConfig,
+    AdmissionConfig, Engine, EngineHealth, EvalError, EvalRequest, EvalServer, FaultInjector,
+    RejectReason, SentinelConfig, ServerConfig,
 };
 use smurf::prelude::*;
 use std::sync::mpsc::channel;
@@ -312,6 +312,139 @@ fn shutdown_answers_queued_requests() {
         // never silently discarded.
         assert!(resp.is_ok() || resp.error == Some(EvalError::Shutdown), "{:?}", resp.error);
     }
+}
+
+/// The full drift-quarantine lifecycle: a biased engine trips the canary
+/// EWMA (typed `DriftAlarm`), quarantine degrades traffic to
+/// analytic-exact responses, recovery probes notice the heal, and full
+/// bit-level fidelity returns — with every request answered exactly once
+/// and depth draining to zero.
+#[test]
+fn drift_quarantine_lifecycle_detects_degrades_and_recovers() {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let funcs = vec![SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64)];
+    let reference = SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64);
+    let faults = Arc::new(FaultInjector::new());
+    let server = EvalServer::start(
+        funcs,
+        None,
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            faults: faults.clone(),
+            sentinel: SentinelConfig {
+                canary_fraction: 1.0, // cross-check every BitLevel response
+                min_samples: 2,
+                probe_interval: 2,
+                probe_successes: 2,
+                ..SentinelConfig::default()
+            },
+            ..ServerConfig::default()
+        },
+    );
+    let point = vec![vec![0.3, 0.4]];
+
+    // Phase 1 — healthy full-fidelity service.
+    let resp = server.eval_sync("euclidean2", point.clone(), Engine::BitLevel, 256);
+    assert!(resp.is_ok() && !resp.degraded, "{:?}", resp.error);
+    assert_eq!(server.sentinel().health("euclidean2"), EngineHealth::Healthy);
+
+    // Phase 2 — the engine drifts (constant output bias, far past the
+    // quarantine threshold). Canaries notice within a few requests.
+    faults.set_output_bias(0.75);
+    for _ in 0..20 {
+        let resp = server.eval_sync("euclidean2", point.clone(), Engine::BitLevel, 256);
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        if server.sentinel().health("euclidean2") != EngineHealth::Healthy {
+            break;
+        }
+    }
+    assert_ne!(
+        server.sentinel().health("euclidean2"),
+        EngineHealth::Healthy,
+        "sustained drift must quarantine the function"
+    );
+    let alarms = server.sentinel().take_alarms();
+    assert_eq!(alarms.len(), 1, "exactly one typed alarm for one trip");
+    assert_eq!(alarms[0].function, "euclidean2");
+    assert!(alarms[0].ewma > alarms[0].threshold);
+    assert!(server.metrics().drift_alarms >= 1);
+
+    // Phase 3 — quarantined traffic degrades to the analytic closed
+    // form: flagged, and exactly the unbiased reference value (the bias
+    // only corrupts the BitLevel engine).
+    let mut degraded_seen = 0;
+    for _ in 0..4 {
+        let resp = server.eval_sync("euclidean2", point.clone(), Engine::BitLevel, 256);
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        if resp.degraded {
+            degraded_seen += 1;
+            assert_eq!(
+                resp.outputs[0],
+                reference.eval_analytic(&point[0]),
+                "degraded response must be the analytic closed form, not biased"
+            );
+        }
+    }
+    assert!(degraded_seen >= 1, "quarantine must degrade traffic");
+    assert!(server.metrics().drift_degraded >= 1);
+
+    // Phase 4 — the fault heals; recovery probes (served on the real
+    // engine) succeed and restore the function to Healthy.
+    faults.set_output_bias(0.0);
+    let mut recovered = false;
+    for _ in 0..40 {
+        let resp = server.eval_sync("euclidean2", point.clone(), Engine::BitLevel, 256);
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        if server.sentinel().health("euclidean2") == EngineHealth::Healthy {
+            recovered = true;
+            break;
+        }
+    }
+    assert!(recovered, "successful probes must end the quarantine");
+    assert!(server.metrics().drift_probes >= 2, "recovery takes probe_successes probes");
+    assert!(server.metrics().drift_recoveries >= 1);
+
+    // Phase 5 — full fidelity again: non-degraded and bit-identical to
+    // the clean engine (seeds derive from request content only).
+    let resp = server.eval_sync("euclidean2", point.clone(), Engine::BitLevel, 256);
+    assert!(resp.is_ok() && !resp.degraded, "{:?}", resp.error);
+    assert_eq!(resp.outputs[0], reference.eval_bitstream(&point[0], 256, 0x5EED));
+
+    // Every eval_sync above was answered exactly once (each call consumes
+    // its own reply channel); depth fully drains.
+    for _ in 0..2000 {
+        if server.admission().total_depth() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(server.admission().total_depth(), 0, "in-flight accounting must drain");
+    server.shutdown();
+}
+
+/// NaN-poisoned engine outputs must reach clients as typed engine errors
+/// (never as poisoned floats), be counted, and clear when the fault does.
+#[test]
+fn nan_poisoning_yields_typed_errors_not_poisoned_floats() {
+    let (server, faults) = chaos_server(1, default_policy(), AdmissionConfig::default());
+    faults.set_poison_nan(true);
+    for _ in 0..3 {
+        let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::BitLevel, 64);
+        assert!(!resp.is_ok());
+        assert!(
+            matches!(resp.error, Some(EvalError::Engine(ref m)) if m.contains("non-finite")),
+            "{:?}",
+            resp.error
+        );
+        assert!(resp.outputs.is_empty());
+    }
+    assert!(server.metrics().nonfinite_outputs >= 3);
+    faults.set_poison_nan(false);
+    let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::BitLevel, 64);
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    assert!(resp.outputs[0].is_finite());
+    server.shutdown();
 }
 
 /// Clients that drop their reply receivers — even while panics are being
