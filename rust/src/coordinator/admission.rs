@@ -24,8 +24,7 @@
 
 use super::metrics::Metrics;
 use super::request::{Engine, EvalRequest, RejectReason};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use crate::util::sync::{Arc, AtomicBool, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 /// Static admission policy. Limits bound *in-flight* requests per engine
@@ -102,6 +101,8 @@ impl Drop for DepthToken {
 }
 
 impl Admission {
+    /// Build the admission state for one server. Panics if the hysteresis
+    /// watermarks are inverted (a config bug, not a runtime condition).
     pub fn new(cfg: AdmissionConfig, metrics: Arc<Metrics>) -> Self {
         assert!(cfg.shed_low < cfg.shed_high, "hysteresis needs shed_low < shed_high");
         Self {
@@ -113,6 +114,7 @@ impl Admission {
         }
     }
 
+    /// The static policy this instance enforces.
     pub fn config(&self) -> &AdmissionConfig {
         &self.cfg
     }
@@ -149,7 +151,9 @@ impl Admission {
     /// edge, expired deadlines are refused before any queuing, shedding
     /// may rewrite `BitLevel` → `Analytic` (flagging the request
     /// `degraded`), and the target engine's depth limit is enforced. On
-    /// success the request carries a [`DepthToken`].
+    /// success the request carries a [`DepthToken`]; on failure the typed
+    /// [`RejectReason`] says why (`BadRequest`, `Deadline`, or
+    /// `QueueFull`) and nothing was queued or accounted.
     ///
     /// `arity_of` resolves a function name to its input arity (`None` =
     /// unknown function). Associated fn (not a method): the token must
@@ -197,16 +201,28 @@ impl Admission {
             this.metrics.record_degraded();
         }
 
-        // 4. Depth limit on the (possibly rewritten) target engine.
+        // 4. Depth limit on the (possibly rewritten) target engine:
+        //    claim a slot with an explicit CAS loop (the open-coded form
+        //    of `fetch_update`, which the loom models also compile — see
+        //    rust/tests/loom_models.rs): the increment happens only if
+        //    the observed depth is still below the limit, so concurrent
+        //    admits can never overshoot it.
         let idx = req.engine.index();
         let limit = this.limit(req.engine);
-        if this.depth[idx]
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
-                (d < limit).then_some(d + 1)
-            })
-            .is_err()
-        {
-            return Err(RejectReason::QueueFull);
+        let mut depth = this.depth[idx].load(Ordering::Relaxed);
+        loop {
+            if depth >= limit {
+                return Err(RejectReason::QueueFull);
+            }
+            match this.depth[idx].compare_exchange_weak(
+                depth,
+                depth + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(observed) => depth = observed,
+            }
         }
         req.admitted = Some(DepthToken { admission: Arc::clone(this), idx });
         this.metrics.note_queue_depth(this.total_depth() as u64);

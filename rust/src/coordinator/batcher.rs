@@ -75,6 +75,11 @@ pub fn run_batcher(
 
         match rx.recv_timeout(timeout) {
             Ok(req) => {
+                // xtask: hot-loop — steady-state arrival path: runs once per
+                // request under continuous traffic. No fresh buffer
+                // allocations here: group Vecs are reused through entry(),
+                // and the String key clones are the only per-request heap
+                // work (HashMap keying needs owned keys).
                 let key = (req.function.clone(), req.engine);
                 let group = pending.entry(key.clone()).or_default();
                 oldest.entry(key.clone()).or_insert_with(Instant::now);
@@ -87,6 +92,7 @@ pub fn run_batcher(
                 // is already queued), so group deadlines must also be
                 // checked here, not only on the Timeout branch.
                 flush_expired(&mut pending, &mut oldest, &policy, out, metrics);
+                // xtask: hot-loop-end
             }
             Err(RecvTimeoutError::Timeout) => {
                 flush_expired(&mut pending, &mut oldest, &policy, out, metrics);

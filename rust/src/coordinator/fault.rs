@@ -24,11 +24,11 @@
 //! (not per cycle), so production builds keep it compiled in and the
 //! chaos suite runs against the exact shipping code path.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Shared, thread-safe fault plan. All hooks are disabled by default.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct FaultInjector {
     /// 1-based batch ordinal to panic on (0 = disabled). One-shot: the
     /// trigger clears itself so the respawned worker recovers.
@@ -44,7 +44,22 @@ pub struct FaultInjector {
     poison_nan: AtomicBool,
 }
 
+impl Default for FaultInjector {
+    // Manual (not derived): the loom facade's atomics do not promise
+    // `Default` impls, and construction must work under both cfgs.
+    fn default() -> Self {
+        Self {
+            panic_on_batch: AtomicU64::new(0),
+            batches_seen: AtomicU64::new(0),
+            slow_batch_ns: AtomicU64::new(0),
+            output_bias: AtomicU64::new(0),
+            poison_nan: AtomicBool::new(false),
+        }
+    }
+}
+
 impl FaultInjector {
+    /// A fully inert injector (every hook disabled).
     pub fn new() -> Self {
         Self::default()
     }
@@ -102,6 +117,8 @@ impl FaultInjector {
         let target = self.panic_on_batch.load(Ordering::SeqCst);
         if target != 0 && seen == target {
             self.panic_on_batch.store(0, Ordering::SeqCst);
+            // xtask: allow(no-panic) justification: panicking is this hook's entire
+            // purpose — it injects the worker-panic fault the chaos suite isolates.
             panic!("fault injection: worker panic on batch {seen}");
         }
         let ns = self.slow_batch_ns.load(Ordering::Relaxed);

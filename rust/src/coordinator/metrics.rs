@@ -8,13 +8,26 @@
 
 use super::request::RejectReason;
 use crate::util::stats::LatencyHistogram;
-use std::sync::Mutex;
+use crate::util::sync::{lock_unpoisoned, Mutex};
 use std::time::Instant;
 
 /// Shared metrics sink.
-#[derive(Debug, Default)]
+///
+/// Every lock is taken through [`lock_unpoisoned`]: a worker panic
+/// (isolated elsewhere) between two metric calls must not poison-cascade
+/// into every later `record_*`. The counters are independent u64s, so
+/// recovering the guard is always sound.
+#[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    // Manual (not derived): the loom facade's `Mutex` does not promise a
+    // `Default` impl, and construction must work under both cfgs.
+    fn default() -> Self {
+        Self { inner: Mutex::new(Inner::default()) }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -100,12 +113,15 @@ pub struct Snapshot {
 }
 
 impl Metrics {
+    /// A fresh, all-zero sink.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one answered request's timings and point count; `batch`
+    /// marks the first request of its batch (for mean-batch-size).
     pub fn record(&self, queue_ns: u64, exec_ns: u64, e2e_ns: u64, points: u64, batch: bool) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         if m.started.is_none() {
             m.started = Some(Instant::now());
         }
@@ -119,13 +135,14 @@ impl Metrics {
         m.e2e.get_or_insert_with(LatencyHistogram::new).record(e2e_ns);
     }
 
+    /// Count a request answered with a typed error.
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        lock_unpoisoned(&self.inner).errors += 1;
     }
 
     /// Count an admission refusal under its typed reason.
     pub fn record_rejection(&self, reason: &RejectReason) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         match reason {
             RejectReason::QueueFull => m.rejected_queue_full += 1,
             RejectReason::BadRequest(_) => m.rejected_bad_request += 1,
@@ -133,60 +150,72 @@ impl Metrics {
         }
     }
 
+    /// Count an `eval_sync` caller whose deadline fired while waiting.
     pub fn record_client_timeout(&self) {
-        self.inner.lock().unwrap().client_timeouts += 1;
+        lock_unpoisoned(&self.inner).client_timeouts += 1;
     }
 
+    /// Count a request served at reduced fidelity (shed or quarantined).
     pub fn record_degraded(&self) {
-        self.inner.lock().unwrap().degraded += 1;
+        lock_unpoisoned(&self.inner).degraded += 1;
     }
 
+    /// Count a caught worker/batcher panic.
     pub fn record_panic(&self) {
-        self.inner.lock().unwrap().panics += 1;
+        lock_unpoisoned(&self.inner).panics += 1;
     }
 
+    /// Count a supervised thread respawn.
     pub fn record_respawn(&self) {
-        self.inner.lock().unwrap().respawns += 1;
+        lock_unpoisoned(&self.inner).respawns += 1;
     }
 
+    /// Count a request answered with a typed shutdown error at close.
     pub fn record_shutdown_answered(&self) {
-        self.inner.lock().unwrap().shutdown_answered += 1;
+        lock_unpoisoned(&self.inner).shutdown_answered += 1;
     }
 
+    /// Count a canary cross-check against the analytic reference.
     pub fn record_canary(&self) {
-        self.inner.lock().unwrap().canary_checks += 1;
+        lock_unpoisoned(&self.inner).canary_checks += 1;
     }
 
+    /// Count a drift alarm (EWMA crossed the quarantine threshold).
     pub fn record_drift_alarm(&self) {
-        self.inner.lock().unwrap().drift_alarms += 1;
+        lock_unpoisoned(&self.inner).drift_alarms += 1;
     }
 
+    /// Count a recovery probe routed through the real engine.
     pub fn record_drift_probe(&self) {
-        self.inner.lock().unwrap().drift_probes += 1;
+        lock_unpoisoned(&self.inner).drift_probes += 1;
     }
 
+    /// Count a request degraded because its function was quarantined.
     pub fn record_drift_degraded(&self) {
-        self.inner.lock().unwrap().drift_degraded += 1;
+        lock_unpoisoned(&self.inner).drift_degraded += 1;
     }
 
+    /// Count a quarantined function restored to healthy.
     pub fn record_drift_recovery(&self) {
-        self.inner.lock().unwrap().drift_recoveries += 1;
+        lock_unpoisoned(&self.inner).drift_recoveries += 1;
     }
 
+    /// Count a non-finite engine output caught by the worker guard.
     pub fn record_nonfinite(&self) {
-        self.inner.lock().unwrap().nonfinite_outputs += 1;
+        lock_unpoisoned(&self.inner).nonfinite_outputs += 1;
     }
 
     /// Track the in-flight high-water mark (called at admission).
     pub fn note_queue_depth(&self, depth: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         if depth > m.queue_depth_highwater {
             m.queue_depth_highwater = depth;
         }
     }
 
+    /// A point-in-time copy of every counter and quantile.
     pub fn snapshot(&self) -> Snapshot {
-        let m = self.inner.lock().unwrap();
+        let m = lock_unpoisoned(&self.inner);
         let q = m.queue.clone().unwrap_or_default();
         let x = m.exec.clone().unwrap_or_default();
         let e = m.e2e.clone().unwrap_or_default();

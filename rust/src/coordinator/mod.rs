@@ -84,13 +84,25 @@
 //!
 //! Determinism is preserved across all of this: a respawned worker
 //! produces bit-identical BitLevel streams (seeds derive from the
-//! request content, `0x5EED ^` the within-request point index, never
-//! from worker identity or batch composition), and degraded responses
-//! are exactly the analytic evaluation of the same coefficients.
+//! request content, [`request::DEFAULT_STREAM_SEED`] `^` the
+//! within-request point index, never from worker identity or batch
+//! composition), and degraded responses are exactly the analytic
+//! evaluation of the same coefficients.
 //!
 //! In-flight depth is accounted with RAII tokens attached at admission
 //! and released on `Drop`, so no failure path — panic unwind, shutdown
 //! drop, reply sent — can leak queue depth.
+//!
+//! # Mechanically-enforced invariants
+//!
+//! The contracts above are not prose-only: `docs/INVARIANTS.md` (repo
+//! root) catalogues every invariant of this module that a tool checks —
+//! loom model checking of the concurrency kernels
+//! (`rust/tests/loom_models.rs`, via the [`crate::util::sync`] facade),
+//! the `xtask verify` static-analysis pass (no panicking calls in this
+//! module's non-test code, seed-literal discipline, failure-mode docs),
+//! clippy, the property suites, and the chaos suite — with pointers to
+//! the checking layer for each.
 
 pub mod admission;
 pub mod batcher;
@@ -102,6 +114,6 @@ pub mod server;
 
 pub use admission::{Admission, AdmissionConfig};
 pub use fault::FaultInjector;
-pub use request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason};
+pub use request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason, DEFAULT_STREAM_SEED};
 pub use sentinel::{DriftAlarm, DriftSentinel, EngineHealth, SentinelConfig};
 pub use server::{EvalServer, ServerConfig};

@@ -11,6 +11,16 @@ use std::fmt;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+/// Base seed for serving-side bitstreams: point `i` of a request runs at
+/// seed `DEFAULT_STREAM_SEED ^ i` (the *within-request* index, never the
+/// batch slot), which is what makes served results deterministic per
+/// request and independent of batch composition — see
+/// `server::eval_bitlevel_batch`. The literal value is part of the
+/// served-output contract (pinned by tests/chaos fixtures), so every
+/// non-test reference goes through this named constant (enforced by
+/// `xtask verify`'s seed-discipline rule).
+pub const DEFAULT_STREAM_SEED: u64 = 0x5EED;
+
 /// Which evaluation engine executes a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Engine {
@@ -202,6 +212,7 @@ impl EvalResponse {
         }
     }
 
+    /// True when the request was evaluated (no typed error attached).
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
     }

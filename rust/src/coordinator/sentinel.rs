@@ -45,8 +45,8 @@
 //! trip — the serving path is behaviorally identical to a build without
 //! the sentinel.
 
+use crate::util::sync::{lock_unpoisoned, Mutex};
 use std::collections::HashMap;
-use std::sync::Mutex;
 
 /// Sentinel policy knobs. The defaults are conservative: one request in
 /// sixteen pays one extra analytic evaluation, and quarantine requires a
@@ -185,6 +185,9 @@ struct Inner {
 }
 
 impl DriftSentinel {
+    /// Build a sentinel from a policy. Panics on malformed knobs
+    /// (fractions outside [0, 1], zero cadences) — config bugs, not
+    /// runtime conditions.
     pub fn new(cfg: SentinelConfig) -> Self {
         assert!(
             (0.0..=1.0).contains(&cfg.canary_fraction),
@@ -199,6 +202,7 @@ impl DriftSentinel {
         Self { cfg, pace_step, inner: Mutex::new(Inner::default()) }
     }
 
+    /// The policy this sentinel runs.
     pub fn config(&self) -> &SentinelConfig {
         &self.cfg
     }
@@ -210,7 +214,7 @@ impl DriftSentinel {
             // Disarmed: nothing here can ever have left Healthy.
             return Route::Serve { canary: false };
         }
-        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut inner = lock_unpoisoned(&self.inner);
         let st = inner.functions.entry(function.to_string()).or_default();
         match st.health {
             EngineHealth::Healthy => {
@@ -243,7 +247,7 @@ impl DriftSentinel {
         // A non-finite error would poison the EWMA forever; clamp it to
         // a huge finite value so it trips (or fails a probe) instead.
         let err = if err.is_finite() { err.abs() } else { f64::MAX / 4.0 };
-        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut inner = lock_unpoisoned(&self.inner);
         let st = inner.functions.entry(function.to_string()).or_default();
         match st.health {
             EngineHealth::Healthy => {
@@ -297,14 +301,14 @@ impl DriftSentinel {
 
     /// Current health of a function (`Healthy` if never seen).
     pub fn health(&self, function: &str) -> EngineHealth {
-        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let inner = lock_unpoisoned(&self.inner);
         inner.functions.get(function).map(|s| s.health).unwrap_or_default()
     }
 
     /// The canary-error EWMA and sample count for a function, if any
     /// observation has been folded in (introspection/test hook).
     pub fn ewma(&self, function: &str) -> Option<(f64, u64)> {
-        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let inner = lock_unpoisoned(&self.inner);
         inner
             .functions
             .get(function)
@@ -314,7 +318,7 @@ impl DriftSentinel {
 
     /// Drain the alarms raised since the last call.
     pub fn take_alarms(&self) -> Vec<DriftAlarm> {
-        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut inner = lock_unpoisoned(&self.inner);
         std::mem::take(&mut inner.alarms)
     }
 }

@@ -24,14 +24,14 @@ use super::batcher::{run_batcher, Batch, BatchPolicy};
 use super::fault::FaultInjector;
 use super::metrics::Metrics;
 use super::request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason};
+use super::request::DEFAULT_STREAM_SEED;
 use super::sentinel::{DriftSentinel, Observation, Route, SentinelConfig};
 use crate::runtime::Runtime;
 use crate::smurf::approximator::SmurfApproximator;
+use crate::util::sync::{lock_unpoisoned, Arc, AtomicBool, Mutex, Ordering, WakeSignal};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Server configuration.
@@ -81,10 +81,15 @@ struct Shared {
     admission: Arc<Admission>,
     faults: Arc<FaultInjector>,
     sentinel: Arc<DriftSentinel>,
-    /// The supervisor's thread handle, set once it is spawned, so the
-    /// worker panic path and `shutdown()` can `unpark()` it instead of
-    /// waiting out its backoff timeout.
-    supervisor_thread: std::sync::OnceLock<std::thread::Thread>,
+    /// Level-triggered supervisor wakeup: the worker panic path and
+    /// `shutdown()` notify it instead of waiting out the backoff
+    /// timeout. A [`WakeSignal`] rather than a raw thread handle —
+    /// regression for a loom-found lost wakeup: workers spawn *before*
+    /// the supervisor thread exists, so a worker that panicked in that
+    /// window used to find no handle registered and skip the unpark
+    /// entirely (the supervisor then slept out its full backoff). The
+    /// signal's pending flag persists across the registration window.
+    supervisor_wake: WakeSignal,
     xla_tx: Option<Sender<XlaJob>>,
 }
 
@@ -154,6 +159,8 @@ impl EvalServer {
             std::thread::Builder::new()
                 .name("smurf-xla".into())
                 .spawn(move || xla_owner_loop(dir, artifact, jrx))
+                // xtask: allow(no-panic) justification: thread spawn fails only on
+                // resource exhaustion at startup; there is no service to degrade yet.
                 .expect("spawn xla owner");
             jtx
         });
@@ -168,7 +175,7 @@ impl EvalServer {
             admission,
             faults: cfg.faults.clone(),
             sentinel: Arc::new(DriftSentinel::new(cfg.sentinel.clone())),
-            supervisor_thread: std::sync::OnceLock::new(),
+            supervisor_wake: WakeSignal::new(),
             xla_tx,
         });
         let (tx, rx) = channel::<EvalRequest>();
@@ -195,6 +202,8 @@ impl EvalServer {
                     }
                 }
             })
+            // xtask: allow(no-panic) justification: thread spawn fails only on
+            // resource exhaustion at startup; there is no service to degrade yet.
             .expect("spawn batcher");
         // Work-stealing via a shared locked receiver.
         let brx = Arc::new(Mutex::new(brx));
@@ -214,9 +223,14 @@ impl EvalServer {
             std::thread::Builder::new()
                 .name("smurf-supervisor".into())
                 .spawn(move || supervise(shared, brx, workers, stop))
+                // xtask: allow(no-panic) justification: thread spawn fails only on
+                // resource exhaustion at startup; there is no service to degrade yet.
                 .expect("spawn supervisor")
         };
-        let _ = shared.supervisor_thread.set(supervisor.thread().clone());
+        // No registration step here: the supervisor registers itself with
+        // `shared.supervisor_wake` at loop entry, and any notify that
+        // lands earlier (a worker panicking during startup) is preserved
+        // by the signal's pending flag — see [`WakeSignal`].
         Self {
             tx: Some(tx),
             shared,
@@ -232,8 +246,10 @@ impl EvalServer {
     /// `degraded: true`, exactly like load shedding; healthy traffic may
     /// be marked for a canary cross-check), then admission control:
     /// malformed traffic, expired deadlines, and over-limit queues are
-    /// refused with a typed error before anything is enqueued; under
-    /// shedding a `BitLevel` request may be rewritten to `Analytic`.
+    /// refused with a typed [`EvalError::Rejected`] (carrying the
+    /// [`RejectReason`]) before anything is enqueued, and a closed intake
+    /// returns [`EvalError::Shutdown`]; under shedding a `BitLevel`
+    /// request may be rewritten to `Analytic`.
     pub fn submit(&self, mut req: EvalRequest) -> Result<(), EvalError> {
         req.enqueued = Instant::now();
         let functions = &self.shared.functions;
@@ -330,12 +346,7 @@ impl EvalServer {
     /// Number of worker threads currently alive (the supervisor returns
     /// this to the configured size after crashes).
     pub fn live_workers(&self) -> usize {
-        self.workers
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .iter()
-            .filter(|h| !h.is_finished())
-            .count()
+        lock_unpoisoned(&self.workers).iter().filter(|h| !h.is_finished()).count()
     }
 
     /// Registered function names.
@@ -349,15 +360,24 @@ impl EvalServer {
     /// and workers. Requests still queued at close are either evaluated
     /// by the draining workers or answered with a typed shutdown error —
     /// never silently dropped.
+    ///
+    /// Join-order audit (ISSUE 8, cross-checked against the loom wakeup
+    /// model): `stop` must be set and the supervisor notified *before*
+    /// intake closes, else a worker dying in the drain window could be
+    /// respawned into a closing pool; the batcher joins before the
+    /// supervisor (it feeds the worker channel, and joining it first
+    /// bounds how much drain work the workers can still receive); workers
+    /// join last, after the supervisor is guaranteed to never swap fresh
+    /// handles into `self.workers` again. The one ordering bug the model
+    /// did find was upstream of this function — the supervisor
+    /// registration window, fixed by [`WakeSignal`].
     pub fn shutdown(mut self) {
         // Order matters: the supervisor must stop respawning before the
         // workers see the closed channel and exit.
         self.stop.store(true, Ordering::SeqCst);
         // Wake the supervisor out of its parked wait so shutdown does
         // not serialize behind the backoff timeout.
-        if let Some(t) = self.shared.supervisor_thread.get() {
-            t.unpark();
-        }
+        self.shared.supervisor_wake.notify();
         self.tx.take(); // closes intake; batcher drains and exits
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
@@ -365,7 +385,7 @@ impl EvalServer {
         if let Some(s) = self.supervisor.take() {
             let _ = s.join();
         }
-        let mut ws = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+        let mut ws = lock_unpoisoned(&self.workers);
         for w in ws.drain(..) {
             let _ = w.join();
         }
@@ -380,33 +400,38 @@ fn spawn_worker(
     std::thread::Builder::new()
         .name(format!("smurf-worker-{i}"))
         .spawn(move || worker_loop(shared, brx))
+        // xtask: allow(no-panic) justification: respawn-path spawn failure means
+        // the process is out of threads; the supervisor retrying is the recovery.
         .expect("spawn worker")
 }
 
 /// Supervision loop: respawn any dead worker until the server begins
 /// shutdown.
 ///
-/// Waits parked rather than busy-polling: the worker panic path and
-/// `shutdown()` unpark this thread, so the common cases react in
-/// microseconds while a healthy pool costs one wakeup per
+/// Waits on the shared [`WakeSignal`] rather than busy-polling: the
+/// worker panic path and `shutdown()` notify it, so the common cases
+/// react in microseconds while a healthy pool costs one wakeup per
 /// [`SUPERVISE_MAX`]. The timeout (doubling from [`SUPERVISE_MIN`] after
 /// a respawn up to the cap) is the fallback for worker threads that die
-/// without reaching their panic handler.
+/// without reaching their panic handler. Notifies that fired before this
+/// loop starts (a worker panicking during server startup) are preserved
+/// by the signal's level-triggered flag and consumed by the first wait.
 fn supervise(
     shared: Arc<Shared>,
     brx: Arc<Mutex<Receiver<Batch>>>,
     workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     stop: Arc<AtomicBool>,
 ) {
+    shared.supervisor_wake.register_current();
     let mut wait = SUPERVISE_MIN;
     while !stop.load(Ordering::SeqCst) {
-        std::thread::park_timeout(wait);
+        shared.supervisor_wake.wait_timeout(wait);
         if stop.load(Ordering::SeqCst) {
             return;
         }
         let mut respawned = false;
         {
-            let mut ws = workers.lock().unwrap_or_else(|p| p.into_inner());
+            let mut ws = lock_unpoisoned(&workers);
             for (i, slot) in ws.iter_mut().enumerate() {
                 if slot.is_finished() && !stop.load(Ordering::SeqCst) {
                     let fresh = spawn_worker(i, shared.clone(), brx.clone());
@@ -425,7 +450,7 @@ fn supervise(
 fn worker_loop(shared: Arc<Shared>, brx: Arc<Mutex<Receiver<Batch>>>) {
     loop {
         let batch = {
-            let guard = brx.lock().unwrap_or_else(|p| p.into_inner());
+            let guard = lock_unpoisoned(&brx);
             guard.recv()
         };
         let Ok(batch) = batch else { return };
@@ -442,13 +467,13 @@ fn worker_loop(shared: Arc<Shared>, brx: Arc<Mutex<Receiver<Batch>>>) {
                 let _ = tx.send(EvalResponse::from_error(EvalError::WorkerPanic(msg.clone())));
             }
             // Exit the thread: the engines keep per-thread scratch, and a
-            // panicking evaluation may have left it mid-update. Unpark
+            // panicking evaluation may have left it mid-update. Notify
             // the supervisor so the replacement (with clean
             // thread-locals) spawns immediately instead of after the
-            // backoff timeout.
-            if let Some(t) = shared.supervisor_thread.get() {
-                t.unpark();
-            }
+            // backoff timeout. Level-triggered: this is never lost, even
+            // if the supervisor has not started waiting (or registering)
+            // yet.
+            shared.supervisor_wake.notify();
             return;
         }
     }
@@ -602,9 +627,9 @@ const WIDE_BATCH_MIN: usize = crate::smurf::sim::WIDE_TRIALS_MIN;
 ///   own* L instead of the first request's (and the groups run
 ///   independently — no serialization on the first request's length).
 /// - **Batch-independent streams.** Seeds derive from the point's index
-///   *within its request* (`0x5EED ^ i`), not its slot in the flattened
-///   batch, so a client observes the same bitstream for the same request
-///   regardless of what it was batched with.
+///   *within its request* ([`DEFAULT_STREAM_SEED`]` ^ i`), not its slot
+///   in the flattened batch, so a client observes the same bitstream for
+///   the same request regardless of what it was batched with.
 ///
 /// Points run through [`SmurfApproximator::eval_bitstream_points_into`]
 /// — [`WIDE_LANES`] lanes per wide pass (the widest plane in the build),
@@ -615,7 +640,8 @@ const WIDE_BATCH_MIN: usize = crate::smurf::sim::WIDE_TRIALS_MIN;
 /// the output vector; a mixed-L batch additionally builds small
 /// per-length index lists so each group chunks independently. Per-point
 /// outputs stay bit-exact equal to the scalar
-/// `eval_bitstream(p, len, 0x5EED ^ i)` at every plane width.
+/// `eval_bitstream(p, len, DEFAULT_STREAM_SEED ^ i)` at every plane
+/// width.
 fn eval_bitlevel_batch(func: &SmurfApproximator, requests: &[EvalRequest]) -> Vec<f64> {
     let total: usize = requests.iter().map(|r| r.points.len()).sum();
     let mut outputs = vec![0.0f64; total];
@@ -638,7 +664,7 @@ fn eval_bitlevel_batch(func: &SmurfApproximator, requests: &[EvalRequest]) -> Ve
             let mut slot = 0usize;
             for r in requests {
                 for (i, p) in r.points.iter().enumerate() {
-                    outputs[slot] = func.eval_bitstream(p, len, 0x5EED ^ i as u64);
+                    outputs[slot] = func.eval_bitstream(p, len, DEFAULT_STREAM_SEED ^ i as u64);
                     slot += 1;
                 }
             }
@@ -652,7 +678,7 @@ fn eval_bitlevel_batch(func: &SmurfApproximator, requests: &[EvalRequest]) -> Ve
         for r in requests {
             for (i, p) in r.points.iter().enumerate() {
                 pts[fill] = p.as_slice();
-                seeds[fill] = 0x5EED ^ i as u64;
+                seeds[fill] = DEFAULT_STREAM_SEED ^ i as u64;
                 fill += 1;
                 if fill == WIDE_LANES {
                     func.eval_bitstream_points_into(&pts, len, &seeds, &mut lane_out);
@@ -683,7 +709,7 @@ fn eval_bitlevel_batch(func: &SmurfApproximator, requests: &[EvalRequest]) -> Ve
         let len = r.stream_len.max(1);
         let group = groups.entry(len).or_default();
         for (i, p) in r.points.iter().enumerate() {
-            group.push((off + i, 0x5EED ^ i as u64, p.as_slice()));
+            group.push((off + i, DEFAULT_STREAM_SEED ^ i as u64, p.as_slice()));
         }
         off += r.points.len();
     }

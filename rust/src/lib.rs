@@ -54,6 +54,29 @@
 //! let y_hw = approx.eval_bitstream(&[0.3, 0.4], 256, 7);
 //! assert!((y_hw - 0.5).abs() < 0.2);
 //! ```
+//!
+//! ## Lint policy
+//!
+//! The crate carries **no crate-level `#![allow(...)]`s** — warnings are
+//! suppressed only at the item that needs it, and every file-local
+//! `#[allow(...)]` in non-test code must carry a `// justification:`
+//! comment (same line or the line above). That rule is mechanically
+//! enforced by `cargo run -p xtask -- verify` (see `docs/INVARIANTS.md`),
+//! so an allow can't be pasted in during review without an argument for
+//! it. Current inventory (all three are API-shape suppressions, not
+//! correctness ones):
+//!
+//! - `sc::bitstream` — `clippy::should_implement_trait` on
+//!   `Bitstream::not` (SC complement, deliberately not `std::ops::Not`);
+//! - `nn::layers` — `clippy::too_many_arguments` on
+//!   `for_each_valid_tap` (the conv tap geometry is 7 scalars);
+//! - `smurf::sim_wide` — `clippy::too_many_arguments` on the shared
+//!   trial-chunking estimator.
+//!
+//! The serving layer ([`coordinator`]) additionally bans panicking calls
+//! (`unwrap`/`expect`/`panic!`…) in non-test code outright; the few
+//! spawn-time exceptions carry inline `xtask: allow(no-panic)` waivers
+//! with justifications.
 
 pub mod util;
 pub mod testing;

@@ -15,7 +15,9 @@ use super::tensor::Tensor;
 /// exactly the same order (which the SC `Exact` seed discipline makes
 /// load-bearing).
 #[inline]
-#[allow(clippy::too_many_arguments)] // conv geometry is 7 scalars + the visitor
+// justification: conv geometry is 7 scalars + the visitor; a geometry
+// struct would be built and destructured at every call site for no gain.
+#[allow(clippy::too_many_arguments)]
 pub fn for_each_valid_tap(
     h: usize,
     w: usize,

@@ -126,8 +126,8 @@ impl Bitstream {
     }
 
     /// Bitwise NOT: encodes `1 - p` (unipolar complement).
-    // Named for the SC operation, not the `std::ops::Not` trait (which
-    // would consume or re-borrow awkwardly at the call sites).
+    // justification: named for the SC operation, not the `std::ops::Not`
+    // trait (which would consume or re-borrow awkwardly at call sites).
     #[allow(clippy::should_implement_trait)]
     pub fn not(&self) -> Bitstream {
         let mut out = Bitstream {

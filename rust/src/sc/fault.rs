@@ -214,7 +214,7 @@ impl BitFaultPlan {
 /// splitmix64 finalizer — decorrelates the per-(site, lane) fault
 /// streams from the plan seed and from each other.
 fn splitmix(x: u64) -> u64 {
-    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = x.wrapping_add(crate::util::prng::GOLDEN_GAMMA);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)

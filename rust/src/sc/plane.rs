@@ -345,6 +345,9 @@ pub const MAX_LANES: usize = <MaxPlane as BitPlane>::LANES;
 #[macro_export]
 macro_rules! for_each_plane_width {
     ($f:ident) => {{
+        // xtask: allow(plane-default) justification: for_each_plane_width
+        // is the single width-registration fan-out — the one place a
+        // concrete u64 turbofish belongs in a generic module.
         $f::<u64>();
         $f::<[u64; 4]>();
         #[cfg(feature = "wide512")]

@@ -66,7 +66,7 @@ pub const B_STREAM_XOR: u64 = 0xABCD_EF01_2345_6789;
 /// golden-ratio constant `ScContext` has always used): product `i` of a
 /// batch runs with seed `seed0 + (i+1)·STRIDE` (wrapping), exactly as
 /// `i+1` sequential `mul_bipolar` calls would.
-pub const STREAM_SEED_STRIDE: u64 = 0x9E3779B97F4A7C15;
+pub const STREAM_SEED_STRIDE: u64 = crate::util::prng::GOLDEN_GAMMA;
 
 /// Count-bit planes in the vertical match counter: supports `L < 2^32`.
 const COUNT_PLANES: usize = 33;
@@ -141,6 +141,8 @@ pub fn xnor_match_counts<P: BitPlane>(
     seeds_b.extend(seeds.iter().map(|&s| s ^ B_STREAM_XOR));
     rng_b.reseed(seeds_b);
     *counts = [P::zero(); COUNT_PLANES];
+    // xtask: hot-loop — per-clock multiply kernel (runs L times per
+    // batch pass); all buffers are borrowed from the scratch above.
     for _ in 0..len {
         // One cycle of both θ-gate banks, then the bipolar multiply:
         // lane l's bit of `m` is stream-A(l) XNOR stream-B(l).
@@ -164,6 +166,7 @@ pub fn xnor_match_counts<P: BitPlane>(
         }
         *o = count;
     }
+    // xtask: hot-loop-end
 }
 
 /// Batched bipolar SC multiply with the `Exact`-mode seed discipline:
@@ -199,6 +202,8 @@ pub fn mul_bipolar_exact_batch<P: BitPlane>(
     let mut seeds = std::mem::take(&mut st.seeds);
     let mut counts = std::mem::take(&mut st.counts_out);
     counts.resize(P::LANES, 0);
+    // xtask: hot-loop — batch chunking path: clear/push reuse the staged
+    // capacity; no fresh buffers per chunk.
     let mut start = 0;
     while start < xs.len() {
         let k = (xs.len() - start).min(P::LANES);
@@ -222,6 +227,7 @@ pub fn mul_bipolar_exact_batch<P: BitPlane>(
         }
         start += k;
     }
+    // xtask: hot-loop-end
     st.thr_a = thr_a;
     st.thr_b = thr_b;
     st.seeds = seeds;

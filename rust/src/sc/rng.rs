@@ -103,7 +103,7 @@ pub struct XorShift64 {
 
 impl XorShift64 {
     pub fn new(seed: u64) -> Self {
-        Self { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+        Self { state: if seed == 0 { crate::util::prng::GOLDEN_GAMMA } else { seed } }
     }
 
     #[inline]
@@ -339,7 +339,7 @@ impl<P: BitPlane> WideXorShift64<P> {
         assert!(seeds.len() <= P::LANES, "at most P::LANES lanes per plane word");
         self.states.clear();
         self.states.extend(
-            seeds.iter().map(|&s| if s == 0 { 0x9E3779B97F4A7C15 } else { s }),
+            seeds.iter().map(|&s| if s == 0 { crate::util::prng::GOLDEN_GAMMA } else { s }),
         );
     }
 

@@ -245,11 +245,13 @@ impl BitLevelSmurf {
             EntropyMode::IndependentXorshift => {
                 for k in 0..m {
                     input_rngs.push(RngKind::Xor(XorShift64::new(
-                        seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(k as u64 + 1),
+                        seed.wrapping_mul(crate::util::prng::GOLDEN_GAMMA)
+                            .wrapping_add(k as u64 + 1),
                     )));
                 }
                 RngKind::Xor(XorShift64::new(
-                    seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(m as u64 + 1),
+                    seed.wrapping_mul(crate::util::prng::GOLDEN_GAMMA)
+                        .wrapping_add(m as u64 + 1),
                 ))
             }
             EntropyMode::SobolCpt => {

@@ -443,7 +443,7 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
                 for k in 0..=m {
                     for (l, &s) in seeds.iter().enumerate() {
                         lane_u64[l] = s
-                            .wrapping_mul(0x9E3779B97F4A7C15)
+                            .wrapping_mul(crate::util::prng::GOLDEN_GAMMA)
                             .wrapping_add(k as u64 + 1);
                     }
                     let slot = if k < m { &mut input_rngs[k] } else { &mut *cpt_rng };
@@ -532,6 +532,9 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
             count_planes,
             ..
         } = st;
+        // xtask: hot-loop — per-clock kernel: every allocation here costs
+        // L× per evaluation. All plane buffers live in WideRunState and
+        // are reused across cycles; nothing below may heap-allocate.
         for _ in 0..len {
             // 1. Input θ-gates sample this cycle's entropy; 2. FSMs
             // transition on the comparator masks (same within-cycle order
@@ -609,6 +612,7 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
             }
             *o = count as f64 / len as f64;
         }
+        // xtask: hot-loop-end
     }
 
     /// Up to `P::LANES` Monte-Carlo trials of one input point in a single
@@ -813,6 +817,9 @@ impl<P: BitPlane> WideBitLevelSmurf<P> {
     /// (`(seed + t) * mult`, the scalar formula), run `P::LANES` trials
     /// per pass on staging buffers owned by the scratch, fold outputs in
     /// trial order.
+    // justification: the argument list is the full estimator contract
+    // (point, stream length, trial budget, seed schedule, scratch, fold) —
+    // bundling them into a struct would add a type used exactly twice.
     #[allow(clippy::too_many_arguments)]
     fn estimate(
         &self,

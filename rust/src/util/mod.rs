@@ -9,6 +9,7 @@ pub mod json;
 pub mod linalg;
 pub mod prng;
 pub mod stats;
+pub mod sync;
 
 /// Relative-or-absolute closeness check used across tests.
 ///

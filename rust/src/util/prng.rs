@@ -5,6 +5,16 @@
 //! The generator is splitmix64 feeding xoshiro256**, the standard
 //! recommendation for fast, high-quality, reproducible simulation streams.
 
+/// The splitmix64 increment: `⌊2⁶⁴/φ⌋` rounded to odd (the 64-bit
+/// "golden gamma" from Steele et al., *Fast Splittable Pseudorandom
+/// Number Generators*). Every seed-expansion and seed-derivation site in
+/// the crate references this single named constant — per-lane entropy
+/// splits (`sc::rng`), fault-plan keying (`sc::fault`), wide-engine lane
+/// seeding (`smurf::sim`/`sim_wide`), and PwMM stream striding
+/// (`sc::pwmm_wide`) — so the seed-discipline lint (`xtask verify`) can
+/// reject stray copies of the magic literal.
+pub const GOLDEN_GAMMA: u64 = 0x9E3779B97F4A7C15;
+
 /// xoshiro256** seeded via splitmix64.
 #[derive(Clone, Debug)]
 pub struct Pcg {
@@ -15,9 +25,9 @@ impl Pcg {
     /// Create a generator from a 64-bit seed (any value, including 0).
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion of the seed into 256 bits of state.
-        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut x = seed.wrapping_add(GOLDEN_GAMMA);
         let mut next = || {
-            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            x = x.wrapping_add(GOLDEN_GAMMA);
             let mut z = x;
             z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
             z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);

@@ -1,0 +1,228 @@
+//! Synchronization facade: std primitives by default, [loom] mock
+//! primitives under `RUSTFLAGS="--cfg loom"` (`make loom`).
+//!
+//! Every concurrency kernel in the serving core ([`crate::coordinator`])
+//! imports `Arc`, `Mutex` and the atomics from here instead of
+//! `std::sync`, so the exact shipping protocols — admission CAS depth
+//! tokens, the hysteresis shed latch, the supervisor wakeup flag, the
+//! sentinel quarantine machine — can be compiled against loom's
+//! model-checked types and exhaustively explored in
+//! `rust/tests/loom_models.rs`. Default builds re-export std and stay
+//! zero-dep; the `loom` crate is only resolved when its (commented-out)
+//! dependency line in `rust/Cargo.toml` is enabled, which `make loom`
+//! checks for.
+//!
+//! [loom]: https://docs.rs/loom
+//!
+//! Besides the re-exports, two shared helpers live here:
+//!
+//! - [`lock_unpoisoned`] — the repo-wide poison-tolerant lock idiom. The
+//!   serving core's mutexes guard plain counters and state tables whose
+//!   invariants hold between lock operations, so a panic while holding
+//!   one (itself isolated by `catch_unwind` in the worker) must not
+//!   cascade `PoisonError` panics through every later metrics call.
+//! - [`WakeSignal`] — the supervisor wakeup primitive; see its docs for
+//!   the lost-wakeup proof obligations it discharges.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex, MutexGuard};
+
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// Used for every serving-core mutex: the guarded data are counters,
+/// histograms and per-function state tables that are consistent between
+/// lock operations, so continuing past a poisoned flag is sound — and
+/// required, because worker panics are an *expected*, injected-and-tested
+/// event (`coordinator::fault`), and one of them must not convert every
+/// subsequent `Metrics::record` into a second panic. Loom's `Mutex`
+/// reuses std's `LockResult`, so this compiles identically under both
+/// cfgs.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// A level-triggered wakeup flag for the supervisor thread.
+///
+/// Protocol: the supervisor calls [`register_current`](Self::register_current)
+/// once at loop entry, then blocks in [`wait_timeout`](Self::wait_timeout);
+/// any thread (worker panic path, `shutdown()`) calls
+/// [`notify`](Self::notify) to wake it. Three properties make this
+/// lose-proof where the previous `OnceLock<Thread>` + raw `unpark` wiring
+/// was not:
+///
+/// 1. **The wakeup is level-triggered, not edge-triggered.** `notify`
+///    sets `pending` (Release) *before* unparking; `wait_timeout` checks
+///    `pending` (Acquire swap) both before parking and after the park
+///    returns. A notify that lands between the check and the park still
+///    wakes the parked thread via the park token; a notify that lands
+///    before the wait starts is observed by the pre-park check.
+/// 2. **A notify before registration is never lost.** The flag persists:
+///    a worker that dies before the supervisor thread handle is
+///    registered (the PR-7 startup race — `OnceLock::get()` returned
+///    `None` and the unpark was silently skipped) now leaves `pending`
+///    set, and the supervisor's first `wait_timeout` returns
+///    immediately.
+/// 3. **Release/Acquire on `pending` publishes the event.** Whatever the
+///    notifier wrote before `notify()` (a finished worker handle, the
+///    `stop` flag) is visible to the waiter after `wait_timeout` returns
+///    `true` — model-checked in `loom_models::wake_signal_publishes_event`.
+///
+/// Under `cfg(loom)` the park/unpark half is replaced by a yield-spin on
+/// the flag (loom has no `park_timeout`): the models verify the flag
+/// protocol and its memory ordering, while the std-only park pairing is
+/// covered by the unit tests below plus the chaos suite.
+#[derive(Debug)]
+pub struct WakeSignal {
+    /// Level-triggered "a wakeup happened" flag; survives the window
+    /// before the waiter registers or parks.
+    pending: AtomicBool,
+    /// The registered waiter thread, if any (std builds only — loom
+    /// models the flag protocol without parking).
+    #[cfg(not(loom))]
+    waiter: Mutex<Option<std::thread::Thread>>,
+}
+
+impl WakeSignal {
+    pub fn new() -> Self {
+        Self {
+            pending: AtomicBool::new(false),
+            #[cfg(not(loom))]
+            waiter: Mutex::new(None),
+        }
+    }
+
+    /// Record the calling thread as the waiter [`notify`](Self::notify)
+    /// unparks. Idempotent; call before the first
+    /// [`wait_timeout`](Self::wait_timeout).
+    #[cfg(not(loom))]
+    pub fn register_current(&self) {
+        *lock_unpoisoned(&self.waiter) = Some(std::thread::current());
+    }
+
+    /// Loom builds model the flag protocol only; there is no thread
+    /// handle to register.
+    #[cfg(loom)]
+    pub fn register_current(&self) {}
+
+    /// Wake the waiter: set the level-triggered flag, then unpark the
+    /// registered thread (if registration already happened — if not, the
+    /// flag alone guarantees delivery).
+    pub fn notify(&self) {
+        self.pending.store(true, Ordering::Release);
+        #[cfg(not(loom))]
+        if let Some(t) = lock_unpoisoned(&self.waiter).as_ref() {
+            t.unpark();
+        }
+    }
+
+    /// Block until notified or `timeout` elapses; returns `true` if a
+    /// notify was consumed. Spurious `park_timeout` returns are absorbed
+    /// by re-checking the flag; the flag is consumed (swapped to false)
+    /// exactly when `true` is returned.
+    #[cfg(not(loom))]
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        if self.pending.swap(false, Ordering::Acquire) {
+            return true;
+        }
+        std::thread::park_timeout(timeout);
+        self.pending.swap(false, Ordering::Acquire)
+    }
+
+    /// Loom variant: bounded waits cannot be modeled (no `park_timeout`),
+    /// so this blocks until notified. Only reachable inside
+    /// `loom::model`.
+    #[cfg(loom)]
+    pub fn wait_timeout(&self, _timeout: Duration) -> bool {
+        self.wait()
+    }
+
+    /// Loom-only blocking wait: yield-spin until the flag is observed.
+    #[cfg(loom)]
+    pub fn wait(&self) -> bool {
+        while !self.pending.swap(false, Ordering::Acquire) {
+            loom::thread::yield_now();
+        }
+        true
+    }
+}
+
+impl Default for WakeSignal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn lock_unpoisoned_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*lock_unpoisoned(&m), 7, "guard must be recoverable after a panic");
+    }
+
+    /// Regression for the PR-7 startup race: a notify that fires before
+    /// the waiter thread registers (worker panics while the server is
+    /// still spawning) must not be lost.
+    #[test]
+    fn notify_before_register_is_not_lost() {
+        let s = WakeSignal::new();
+        s.notify();
+        s.register_current();
+        let t0 = Instant::now();
+        assert!(
+            s.wait_timeout(Duration::from_secs(5)),
+            "pre-registration notify must be observed"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(1), "must return immediately, not park");
+    }
+
+    #[test]
+    fn notify_consumed_exactly_once() {
+        let s = WakeSignal::new();
+        s.register_current();
+        s.notify();
+        assert!(s.wait_timeout(Duration::from_millis(1)));
+        // Flag consumed: the next wait times out.
+        assert!(!s.wait_timeout(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn cross_thread_notify_wakes_a_parked_waiter() {
+        let s = Arc::new(WakeSignal::new());
+        s.register_current();
+        let s2 = s.clone();
+        let notifier = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.notify();
+        });
+        let t0 = Instant::now();
+        assert!(s.wait_timeout(Duration::from_secs(10)), "notify must wake the park");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        notifier.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_elapses_without_notify() {
+        let s = WakeSignal::new();
+        s.register_current();
+        assert!(!s.wait_timeout(Duration::from_millis(5)));
+    }
+}

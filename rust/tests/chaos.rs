@@ -478,3 +478,53 @@ fn dropped_clients_under_panics_leak_nothing() {
     assert!(resp.is_ok(), "{:?}", resp.error);
     server.shutdown();
 }
+
+/// Regression for the supervisor registration window (found by the loom
+/// wakeup model, fixed by `util::sync::WakeSignal`): a worker that
+/// panics on the *very first* batch — potentially before the supervisor
+/// thread has ever parked or been registered — must still wake the
+/// supervisor. Under the old `OnceLock<Thread>` + raw `unpark` wiring,
+/// a death in that window was a silent no-op and the respawn waited for
+/// the next supervisor poll tick; the level-triggered signal makes the
+/// wakeup unlosable. The client still gets its typed `WorkerPanic`, and
+/// the pool returns to full strength promptly.
+#[test]
+fn first_batch_panic_at_startup_cannot_lose_the_respawn_wakeup() {
+    let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    let (server, faults) = chaos_server(1, policy, AdmissionConfig::default());
+    faults.arm_panic_on_batch(1);
+
+    // Submit immediately — no settling sleep — so the panic races server
+    // startup as closely as this test can arrange.
+    let (rtx, rrx) = channel();
+    server
+        .submit(EvalRequest::new(
+            "euclidean2",
+            vec![vec![0.25, 0.75]],
+            Engine::Analytic,
+            64,
+            rtx,
+        ))
+        .expect("startup traffic admits");
+    let resp = rrx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("the startup-window panic must still answer the client");
+    assert!(
+        matches!(resp.error, Some(EvalError::WorkerPanic(_))),
+        "typed WorkerPanic expected, got {:?}",
+        resp.error
+    );
+
+    // The respawn wakeup must not be lost: the pool recovers and serves.
+    await_pool(&server, 1);
+    for _ in 0..200 {
+        if server.metrics().respawns >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(server.metrics().respawns >= 1, "supervisor must record the respawn");
+    let resp = server.eval_sync("euclidean2", vec![vec![0.3, 0.4]], Engine::Analytic, 64);
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    server.shutdown();
+}

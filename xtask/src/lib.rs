@@ -1,0 +1,427 @@
+//! Repo-invariant lint engine behind `cargo run -p xtask -- verify`.
+//!
+//! Six rules, each enforcing an invariant the compiler and clippy cannot
+//! see (the full catalogue, with rationale and cross-references to the
+//! dynamic checks, lives in `docs/INVARIANTS.md`):
+//!
+//! - **no-panic** — non-test code in `rust/src/coordinator/` must not
+//!   call `.unwrap()`, `.expect(…)`, `panic!`, `unreachable!`, `todo!`
+//!   or `unimplemented!`: the serving core's contract is that every
+//!   failure is a *typed* answer (`EvalError`/`RejectReason`), and a
+//!   stray panic in the supervisor or submit path would take down
+//!   threads the chaos suite proves must survive.
+//! - **hot-alloc** — inside `// xtask: hot-loop` … `// xtask:
+//!   hot-loop-end` marker regions (the per-clock kernels and the
+//!   batcher's steady-state arrival path), no fresh heap allocation:
+//!   `Vec::new`, `vec![`, `.to_vec(`, `Box::new`, `.collect`,
+//!   `with_capacity`, `String::new`, `format!`. Buffers must come from
+//!   caller-owned scratch; amortized reuse (`clear`/`push` on retained
+//!   capacity, `clone` of existing values) is allowed by design.
+//! - **seed-literal** — the contract seed constants (`0x5EED`,
+//!   `0x9E3779B97F4A7C15`) appear in non-test code only on their `pub
+//!   const` definition lines (`DEFAULT_STREAM_SEED`, `GOLDEN_GAMMA`,
+//!   `STREAM_SEED_STRIDE`); everything else must reference the named
+//!   constant. Tests/benches keep raw literals deliberately — they pin
+//!   the contract from the outside.
+//! - **plane-default** — the width-generic modules (bit-plane substrate,
+//!   wide engines) must not hardcode `::<u64>` outside test code: every
+//!   width-parametric suite fans out through `for_each_plane_width!`,
+//!   whose single registration line carries the one sanctioned waiver.
+//! - **doc-failure** — every non-test `pub fn` in `rust/src/coordinator/`
+//!   carries a `///` doc, and any whose *return type* names `EvalError`
+//!   or `RejectReason` must name that type in the doc: the typed failure
+//!   model is API surface, not an implementation detail.
+//! - **allow-attr** — a `#[allow(…)]` in non-test code needs a
+//!   `// justification: …` comment on the same line or in the comment
+//!   block directly above (the lint policy in `rust/src/lib.rs`).
+//!
+//! Any rule can be waived at a specific line with
+//! `// xtask: allow(<rule>) justification: <why>` on the flagged line or
+//! in the contiguous comment block directly above it — a waiver without
+//! a reason does not parse.
+//!
+//! # Scope and simplifications (deliberate)
+//!
+//! The engine is plain line analysis — no parser, zero dependencies —
+//! which is exactly enough because the repo follows two conventions the
+//! engine leans on:
+//!
+//! - **Test code is trailing.** A file's tests live in one `mod tests`
+//!   under an *unindented* `#[cfg(test)]` (or `#[cfg(all(test, …))]`)
+//!   attribute at the end of the file; everything from that line down is
+//!   exempt from every rule. Indented `#[cfg(test)]` items (test-only
+//!   helper methods inside an impl) do *not* end the checked region.
+//! - **Comments are line comments.** `//` comments are stripped (string
+//!   literals are respected); block comments `/* … */` are not used in
+//!   this repo and are not handled.
+
+use std::fmt;
+use std::path::Path;
+
+/// One rule violation at a specific line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule identifier (`no-panic`, `hot-alloc`, `seed-literal`,
+    /// `plane-default`, `doc-failure`, `allow-attr`).
+    pub rule: &'static str,
+    /// Path relative to the repo root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// The generic bit-plane modules covered by the `plane-default` rule:
+/// hardcoding `::<u64>` in one of these silently drops the wider planes
+/// from whatever it parameterizes.
+const PLANE_GENERIC_MODULES: &[&str] = &[
+    "rust/src/sc/plane.rs",
+    "rust/src/sc/rng.rs",
+    "rust/src/sc/sng.rs",
+    "rust/src/sc/cpt.rs",
+    "rust/src/sc/pwmm_wide.rs",
+    "rust/src/sc/fault.rs",
+    "rust/src/fsm/chain_wide.rs",
+    "rust/src/smurf/sim_wide.rs",
+];
+
+/// Panicking calls banned from the serving core's non-test code.
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// Fresh-allocation calls banned inside `xtask: hot-loop` regions.
+/// Amortized reuse (`clear`, `push`, `resize` on retained capacity,
+/// `clone`) is deliberately absent from this list.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec![",
+    ".to_vec(",
+    "Box::new",
+    ".collect(",
+    ".collect::",
+    "with_capacity",
+    "String::new",
+    "format!(",
+];
+
+/// Strip a trailing `//` line comment, respecting double-quoted string
+/// literals (a `//` inside a string is code, not a comment).
+fn strip_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' if in_str => i += 1, // skip the escaped byte
+            b'"' => in_str = !in_str,
+            b'/' if !in_str && i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
+                return &line[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// Index of the first *unindented* `#[cfg(test)]`-family line (the
+/// repo's trailing-test-mod convention); lines at or after it are exempt
+/// from every rule. `len` when the file has no trailing test section.
+fn test_section_start(lines: &[&str]) -> usize {
+    lines
+        .iter()
+        .position(|l| l.starts_with("#[cfg(test)]") || l.starts_with("#[cfg(all(test"))
+        .unwrap_or(lines.len())
+}
+
+/// True if `lines[idx]` carries an `xtask: allow(<rule>)` waiver — on
+/// the line itself or in the contiguous `//` comment block directly
+/// above. The waiver must carry a `justification:` to parse at all.
+fn has_waiver(lines: &[&str], idx: usize, rule: &str) -> bool {
+    let tag = format!("xtask: allow({rule})");
+    // The justification may trail on the tag line or on a continuation
+    // comment line: the tag is matched here, the justification anywhere
+    // in the same block (`block_has_justification`).
+    let is_waiver = |l: &str| l.contains(tag.as_str());
+    if is_waiver(lines[idx]) && block_has_justification(lines, idx) {
+        return true;
+    }
+    // Scan the contiguous comment block directly above.
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].trim_start();
+        if !t.starts_with("//") {
+            break;
+        }
+        if is_waiver(t) {
+            return block_has_justification(lines, idx);
+        }
+    }
+    false
+}
+
+/// True if the flagged line or the contiguous comment block directly
+/// above it contains a `justification:` marker.
+fn block_has_justification(lines: &[&str], idx: usize) -> bool {
+    if lines[idx].contains("justification:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].trim_start();
+        if !t.starts_with("//") && !t.starts_with("#[") {
+            break;
+        }
+        if t.contains("justification:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// True if the character after byte `end` (exclusive) extends a longer
+/// identifier/literal — used to keep `0x5EED_7E57` from matching the
+/// `0x5EED` contract seed.
+fn extends_literal(line: &str, end: usize) -> bool {
+    line.as_bytes()
+        .get(end)
+        .is_some_and(|b| b.is_ascii_alphanumeric() || *b == b'_')
+}
+
+/// Run every applicable rule over one file. `rel_path` is the repo-root
+/// relative, `/`-separated path (it selects which rules apply);
+/// `content` is the file text.
+pub fn check_file(rel_path: &str, content: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = content.lines().collect();
+    let stripped: Vec<&str> = lines.iter().map(|l| strip_comment(l)).collect();
+    let test_start = test_section_start(&lines);
+    let in_coordinator = rel_path.starts_with("rust/src/coordinator/");
+    let plane_generic = PLANE_GENERIC_MODULES.contains(&rel_path);
+
+    let mut findings = Vec::new();
+    let mut push = |rule: &'static str, line: usize, message: String| {
+        findings.push(Finding { rule, path: rel_path.to_string(), line: line + 1, message });
+    };
+
+    // ---- line-local rules -------------------------------------------
+    let mut hot_region_open: Option<usize> = None;
+    for idx in 0..lines.len().min(test_start) {
+        let raw = lines[idx];
+        let code = stripped[idx];
+
+        // hot-alloc region tracking runs on raw lines (the markers are
+        // comments). Check the end marker first: "hot-loop-end" contains
+        // "hot-loop".
+        if raw.contains("xtask: hot-loop-end") {
+            if hot_region_open.is_none() {
+                push("hot-alloc", idx, "hot-loop-end marker with no open region".to_string());
+            }
+            hot_region_open = None;
+        } else if raw.contains("xtask: hot-loop") {
+            if let Some(open) = hot_region_open {
+                push(
+                    "hot-alloc",
+                    idx,
+                    format!("nested hot-loop marker (region opened at line {})", open + 1),
+                );
+            }
+            hot_region_open = Some(idx);
+        }
+
+        if in_coordinator {
+            for tok in PANIC_TOKENS {
+                if code.contains(tok) && !has_waiver(&lines, idx, "no-panic") {
+                    push(
+                        "no-panic",
+                        idx,
+                        format!(
+                            "`{tok}` in serving-core non-test code: every failure here \
+                             must be a typed EvalError/RejectReason answer"
+                        ),
+                    );
+                }
+            }
+        }
+
+        if hot_region_open.is_some() {
+            for tok in ALLOC_TOKENS {
+                if code.contains(tok) && !has_waiver(&lines, idx, "hot-alloc") {
+                    push(
+                        "hot-alloc",
+                        idx,
+                        format!("`{tok}` allocates inside a hot-loop region; reuse scratch buffers"),
+                    );
+                }
+            }
+        }
+
+        // seed-literal: contract seeds only via their named pub consts.
+        if !code.contains("pub const") {
+            let mut from = 0;
+            while let Some(pos) = code[from..].find("0x5EED") {
+                let at = from + pos;
+                let end = at + "0x5EED".len();
+                if !extends_literal(code, end) && !has_waiver(&lines, idx, "seed-literal") {
+                    push(
+                        "seed-literal",
+                        idx,
+                        "raw 0x5EED: use coordinator::request::DEFAULT_STREAM_SEED".to_string(),
+                    );
+                }
+                from = end;
+            }
+            let no_underscores: String = code.chars().filter(|c| *c != '_').collect();
+            if no_underscores.contains("0x9E3779B97F4A7C15")
+                && !has_waiver(&lines, idx, "seed-literal")
+            {
+                push(
+                    "seed-literal",
+                    idx,
+                    "raw golden-gamma literal: use util::prng::GOLDEN_GAMMA".to_string(),
+                );
+            }
+        }
+
+        if plane_generic && code.contains("::<u64>") && !has_waiver(&lines, idx, "plane-default")
+        {
+            push(
+                "plane-default",
+                idx,
+                "hardcoded `::<u64>` in a width-generic module: stay generic over \
+                 BitPlane or fan out via for_each_plane_width!"
+                    .to_string(),
+            );
+        }
+
+        if (code.contains("#[allow(") || code.contains("#![allow("))
+            && !block_has_justification(&lines, idx)
+            && !has_waiver(&lines, idx, "allow-attr")
+        {
+            push(
+                "allow-attr",
+                idx,
+                "#[allow(…)] without a `// justification:` comment (lint policy in \
+                 rust/src/lib.rs)"
+                    .to_string(),
+            );
+        }
+    }
+    if let Some(open) = hot_region_open {
+        push("hot-alloc", open, "hot-loop region never closed (missing hot-loop-end)".to_string());
+    }
+
+    // ---- doc-failure: pub fn docs in the serving core ---------------
+    if in_coordinator {
+        for idx in 0..lines.len().min(test_start) {
+            if !stripped[idx].trim_start().starts_with("pub fn ") {
+                continue;
+            }
+            if has_waiver(&lines, idx, "doc-failure") {
+                continue;
+            }
+            // Doc block: contiguous `///` / `//` / `#[…]` lines above.
+            let mut doc = String::new();
+            let mut has_doc = false;
+            let mut j = idx;
+            while j > 0 {
+                j -= 1;
+                let t = lines[j].trim_start();
+                if t.starts_with("///") {
+                    has_doc = true;
+                    doc.push_str(t);
+                    doc.push('\n');
+                } else if t.starts_with("//") || t.starts_with("#[") {
+                    continue;
+                } else {
+                    break;
+                }
+            }
+            if !has_doc {
+                push(
+                    "doc-failure",
+                    idx,
+                    "undocumented pub fn in the serving core".to_string(),
+                );
+                continue;
+            }
+            // Signature: this line up to the body brace (or `;`).
+            let mut sig = String::new();
+            for k in idx..lines.len().min(idx + 16) {
+                sig.push_str(stripped[k]);
+                sig.push(' ');
+                if stripped[k].contains('{') || stripped[k].trim_end().ends_with(';') {
+                    break;
+                }
+            }
+            // Only the *return type* binds the doc: text after the last
+            // `->` (closure params in arguments precede it).
+            if let Some(arrow) = sig.rfind("->") {
+                let ret = &sig[arrow..];
+                for ty in ["EvalError", "RejectReason"] {
+                    if ret.contains(ty) && !doc.contains(ty) {
+                        push(
+                            "doc-failure",
+                            idx,
+                            format!(
+                                "pub fn returns {ty} but its doc never names the failure mode"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    findings
+}
+
+/// Walk `<root>/rust/src` and run [`check_file`] over every `.rs` file.
+/// Returns findings sorted by path then line; an empty vector means the
+/// repo satisfies every mechanically-enforced invariant in this layer.
+pub fn verify_repo(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(&root.join("rust").join("src"), &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let content = std::fs::read_to_string(&path)?;
+        findings.extend(check_file(&rel, &content));
+    }
+    findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! `cargo run -p xtask -- verify` — run the repo-invariant lint pass.
+//!
+//! Exit status: 0 when the tree is clean, 1 with a finding listing
+//! otherwise, 2 on usage errors. CI runs this in the `static-analysis`
+//! job; locally it is `make lint-invariants` (and part of
+//! `make verify-all`).
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("verify") => verify(),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- verify");
+            eprintln!();
+            eprintln!("Runs the repo-invariant static-analysis pass over rust/src");
+            eprintln!("(rules and rationale: docs/INVARIANTS.md).");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn verify() -> ExitCode {
+    // The xtask crate lives at <repo>/xtask, so the repo root is its
+    // parent; compile-time resolution keeps this independent of cwd.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits one level below the repo root");
+    match xtask::verify_repo(root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("xtask verify: OK — no invariant violations in rust/src");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!();
+            println!(
+                "xtask verify: {} violation(s); see docs/INVARIANTS.md for each rule's \
+                 rationale and the `xtask: allow(<rule>) justification: …` waiver syntax",
+                findings.len()
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("xtask verify: cannot walk rust/src: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Negative fixture: an undocumented lint suppression.
+
+// A nearby comment that never says why.
+#[allow(dead_code)]
+fn quietly_suppressed() {}

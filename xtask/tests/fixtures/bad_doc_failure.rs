@@ -1,0 +1,18 @@
+//! Negative fixture: serving-core pub fns with missing/incomplete docs.
+
+/// A typed failure for the fixture's API.
+pub enum EvalError {
+    /// The engine failed.
+    Engine(String),
+}
+
+pub fn undocumented(x: f64) -> f64 {
+    x * 2.0
+}
+
+/// Documented, but never names the typed failure mode it returns.
+pub fn vague(
+    x: f64,
+) -> Result<f64, EvalError> {
+    Ok(x)
+}

@@ -1,0 +1,20 @@
+//! Negative fixture: fresh heap allocation inside a hot-loop region.
+
+/// Allocates per iteration where the marker bans it.
+pub fn hot(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    // xtask: hot-loop — fixture region
+    for &x in xs {
+        let v: Vec<f64> = vec![x; 4];
+        let doubled: Vec<f64> = v.iter().map(|y| y * 2.0).collect();
+        acc += doubled.iter().sum::<f64>();
+    }
+    // xtask: hot-loop-end
+    acc
+}
+
+/// Opens a region and never closes it.
+pub fn unterminated(xs: &[f64]) -> f64 {
+    // xtask: hot-loop — fixture region with a missing end marker
+    xs.iter().sum()
+}

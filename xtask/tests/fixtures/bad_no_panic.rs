@@ -1,0 +1,16 @@
+//! Negative fixture: panicking calls in serving-core non-test code.
+
+/// Looks documented, still panics.
+pub fn shaky(v: Option<u32>) -> u32 {
+    let x = v.unwrap();
+    if x > 10 {
+        panic!("too big");
+    }
+    x
+}
+
+/// A waiver without a justification must NOT parse as a waiver.
+pub fn half_waived(v: Option<u32>) -> u32 {
+    // xtask: allow(no-panic)
+    v.expect("missing")
+}

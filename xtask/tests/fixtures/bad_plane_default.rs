@@ -1,0 +1,10 @@
+//! Negative fixture: hardcoded u64 plane width in a generic module.
+
+/// Pins the 64-lane plane instead of staying generic.
+pub fn word_count(n: usize) -> usize {
+    helper::<u64>(n)
+}
+
+fn helper<P>(n: usize) -> usize {
+    n
+}

@@ -1,0 +1,16 @@
+//! Negative fixture: raw contract-seed literals outside `pub const`.
+
+/// Uses the raw stream seed instead of DEFAULT_STREAM_SEED.
+pub fn stream_seed(i: u64) -> u64 {
+    0x5EED ^ i
+}
+
+/// Uses the raw (underscored) golden gamma instead of GOLDEN_GAMMA.
+pub fn mix(seed: u64) -> u64 {
+    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// A *different* literal sharing the prefix is not the contract seed.
+pub fn unrelated(seed: u64) -> u64 {
+    seed.wrapping_add(0x5EED_7E57)
+}

@@ -1,0 +1,63 @@
+//! Positive fixture: exercises every rule's *allowed* form. Checked as
+//! `rust/src/coordinator/clean.rs`, so the coordinator-only rules apply.
+
+/// Contract seed; a raw literal is legal on its `pub const` definition.
+pub const DEFAULT_STREAM_SEED: u64 = 0x5EED;
+
+/// A typed failure for the fixture's API.
+pub enum EvalError {
+    /// The engine failed.
+    Engine(String),
+}
+
+/// Double a value, counting in scratch. Returns [`EvalError`] if the
+/// input is non-finite (the typed failure mode, named as required).
+pub fn eval(x: f64, scratch: &mut Vec<f64>) -> Result<f64, EvalError> {
+    if !x.is_finite() {
+        return Err(EvalError::Engine("non-finite".into()));
+    }
+    // xtask: hot-loop — fixture region: reuse-only operations are fine.
+    scratch.clear();
+    for i in 0..4 {
+        scratch.push(x * i as f64);
+    }
+    let total: f64 = scratch.iter().sum();
+    // xtask: hot-loop-end
+    Ok(total)
+}
+
+/// Seed helper referencing the named constant, never the raw literal.
+pub fn stream_seed(i: u64) -> u64 {
+    DEFAULT_STREAM_SEED ^ i
+}
+
+/// Waived panicking call: the waiver carries its justification.
+pub fn must_start(ok: bool) {
+    // xtask: allow(no-panic) justification: fixture models a startup-only
+    // invariant where dying loudly is the contract.
+    assert!(ok);
+    if !ok {
+        // xtask: allow(no-panic) justification: unreachable by the assert
+        // above; fixture exercises the waiver grammar on panic!.
+        panic!("cannot happen");
+    }
+}
+
+// justification: fixture demonstrates a documented allow.
+#[allow(dead_code)]
+fn helper() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_literals_and_panics_are_test_legal() {
+        // Test code pins the contract from the outside: raw seeds and
+        // unwraps are exempt here.
+        assert_eq!(stream_seed(0), 0x5EED);
+        assert_eq!(0x9E3779B97F4A7C15u64.count_ones(), 38);
+        let v: Result<u64, ()> = Ok(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

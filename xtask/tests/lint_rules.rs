@@ -1,0 +1,188 @@
+//! Unit tests for the lint engine itself: each rule has a fixture that
+//! must fail it (with the exact expected findings) and the `clean.rs`
+//! fixture must pass everything — so a regression in the engine cannot
+//! silently stop enforcing an invariant.
+
+use xtask::check_file;
+
+fn rule_names(findings: &[xtask::Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn clean_fixture_passes_every_rule() {
+    let findings = check_file(
+        "rust/src/coordinator/clean.rs",
+        include_str!("fixtures/clean.rs"),
+    );
+    assert!(findings.is_empty(), "clean fixture must pass, got: {findings:?}");
+}
+
+#[test]
+fn no_panic_flags_unwrap_expect_and_panic() {
+    let findings = check_file(
+        "rust/src/coordinator/bad.rs",
+        include_str!("fixtures/bad_no_panic.rs"),
+    );
+    assert_eq!(
+        rule_names(&findings),
+        vec!["no-panic", "no-panic", "no-panic"],
+        "{findings:?}"
+    );
+    // The third hit is the `.expect(` behind a justification-less waiver:
+    // a waiver without a reason must not parse.
+    assert!(findings[2].message.contains(".expect("), "{findings:?}");
+}
+
+#[test]
+fn hot_alloc_flags_allocations_and_unterminated_regions() {
+    let findings = check_file(
+        "rust/src/sc/hot.rs",
+        include_str!("fixtures/bad_hot_alloc.rs"),
+    );
+    assert_eq!(
+        rule_names(&findings),
+        vec!["hot-alloc", "hot-alloc", "hot-alloc"],
+        "{findings:?}"
+    );
+    assert!(findings[0].message.contains("vec!["), "{findings:?}");
+    assert!(findings[1].message.contains(".collect("), "{findings:?}");
+    assert!(findings[2].message.contains("never closed"), "{findings:?}");
+}
+
+#[test]
+fn seed_literal_flags_raw_seeds_but_not_lookalikes() {
+    let findings = check_file(
+        "rust/src/smurf/sim.rs",
+        include_str!("fixtures/bad_seed.rs"),
+    );
+    assert_eq!(
+        rule_names(&findings),
+        vec!["seed-literal", "seed-literal"],
+        "0x5EED_7E57 must not match the 0x5EED contract seed: {findings:?}"
+    );
+    assert!(findings[0].message.contains("DEFAULT_STREAM_SEED"));
+    assert!(findings[1].message.contains("GOLDEN_GAMMA"));
+}
+
+#[test]
+fn plane_default_flags_hardcoded_u64_turbofish() {
+    let findings = check_file(
+        "rust/src/sc/rng.rs",
+        include_str!("fixtures/bad_plane_default.rs"),
+    );
+    assert_eq!(rule_names(&findings), vec!["plane-default"], "{findings:?}");
+    // The same content outside the width-generic module list is legal.
+    let elsewhere = check_file(
+        "rust/src/hw/cost.rs",
+        include_str!("fixtures/bad_plane_default.rs"),
+    );
+    assert!(elsewhere.is_empty(), "{elsewhere:?}");
+}
+
+#[test]
+fn doc_failure_flags_missing_docs_and_unnamed_failure_modes() {
+    let findings = check_file(
+        "rust/src/coordinator/bad.rs",
+        include_str!("fixtures/bad_doc_failure.rs"),
+    );
+    assert_eq!(
+        rule_names(&findings),
+        vec!["doc-failure", "doc-failure"],
+        "{findings:?}"
+    );
+    assert!(findings[0].message.contains("undocumented"), "{findings:?}");
+    assert!(findings[1].message.contains("EvalError"), "{findings:?}");
+    // The doc rules are coordinator-scoped.
+    let elsewhere = check_file("rust/src/hw/cost.rs", include_str!("fixtures/bad_doc_failure.rs"));
+    assert!(elsewhere.is_empty(), "{elsewhere:?}");
+}
+
+#[test]
+fn allow_attr_requires_justification() {
+    let findings = check_file(
+        "rust/src/nn/layers.rs",
+        include_str!("fixtures/bad_allow_attr.rs"),
+    );
+    assert_eq!(rule_names(&findings), vec!["allow-attr"], "{findings:?}");
+}
+
+// ---- grammar/edge cases on inline snippets --------------------------
+
+#[test]
+fn trailing_test_section_is_exempt() {
+    let src = "\
+/// Doc'd.
+pub fn fine() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap() ^ 0x5EED, 0x5EEC);
+    }
+}
+";
+    assert!(check_file("rust/src/coordinator/x.rs", src).is_empty());
+}
+
+#[test]
+fn indented_cfg_test_does_not_end_the_checked_region() {
+    // A test-only helper mid-file (indented #[cfg(test)]) must not
+    // exempt the code *after* it.
+    let src = "\
+/// Doc'd.
+pub struct S;
+
+impl S {
+    #[cfg(test)]
+    fn helper(&self) {}
+}
+
+/// Doc'd but panicking.
+pub fn still_checked(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+";
+    let findings = check_file("rust/src/coordinator/x.rs", src);
+    assert_eq!(rule_names(&findings), vec!["no-panic"], "{findings:?}");
+}
+
+#[test]
+fn comments_do_not_trip_token_rules() {
+    let src = "\
+/// This doc mentions panic!(...) and .unwrap() and 0x5EED freely.
+// So does this comment: vec![0x9E3779B97F4A7C15].
+pub fn quiet() {}
+";
+    assert!(check_file("rust/src/coordinator/x.rs", src).is_empty());
+}
+
+#[test]
+fn waiver_on_preceding_comment_block_applies() {
+    let src = "\
+/// Doc'd.
+pub fn startup() {
+    // xtask: allow(no-panic) justification: startup-only invariant;
+    // dying loudly here is the documented contract.
+    Option::<u32>::None.expect(\"boom\");
+}
+";
+    assert!(check_file("rust/src/coordinator/x.rs", src).is_empty());
+}
+
+#[test]
+fn string_literals_do_not_hide_code_after_them() {
+    // A `//` inside a string is not a comment: the `.unwrap()` after the
+    // string must still be seen.
+    let src = "\
+/// Doc'd.
+pub fn sneaky(v: Option<&str>) -> &str {
+    let _url = \"https://example.com\";
+    v.unwrap()
+}
+";
+    let findings = check_file("rust/src/coordinator/x.rs", src);
+    assert_eq!(rule_names(&findings), vec!["no-panic"], "{findings:?}");
+}

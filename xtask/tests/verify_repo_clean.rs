@@ -1,0 +1,20 @@
+//! The real repository must satisfy every invariant: this is the same
+//! pass CI's `static-analysis` job runs (`cargo run -p xtask -- verify`),
+//! wired into the test suite so `cargo test` on the workspace enforces
+//! the invariants too.
+
+use std::path::Path;
+
+#[test]
+fn repository_satisfies_all_invariants() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits one level below the repo root");
+    let findings = xtask::verify_repo(root).expect("walking rust/src must succeed");
+    assert!(
+        findings.is_empty(),
+        "xtask verify found {} violation(s):\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
