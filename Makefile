@@ -24,8 +24,11 @@ test:
 tier1: build test
 
 # Chaos suite: fault-injected serving-core tests (worker panics, stalls,
-# overload shedding, deadline expiry, shutdown drains). Run in release —
-# the tests drive real worker pools under timing assertions.
+# overload shedding, deadline expiry, shutdown drains) plus the resilient
+# client's full recovery ladder (deadline-carved retries under budgets,
+# hedged requests with bit-identity audits, per-function circuit
+# breakers). Run in release — the tests drive real worker pools under
+# timing assertions.
 chaos:
 	$(CARGO) test --test chaos --release --manifest-path $(MANIFEST) $(FEATFLAGS)
 

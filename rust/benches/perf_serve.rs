@@ -8,14 +8,22 @@
 //! 2. analytic evaluator throughput (scalar and batched),
 //! 3. XLA kernel throughput (AOT Pallas path, batch 1024),
 //! 4. coordinator end-to-end request throughput + latency percentiles,
-//! 5. SC-PwMM MAC rate (the CNN hot path).
+//! 5. SC-PwMM MAC rate (the CNN hot path),
+//! 6. resilient-client overhead (passthrough + retry-armed, both
+//!    equality-gated against the direct server path) and hedged tail
+//!    latency against a deterministically stalled worker.
 
-use smurf::coordinator::{Engine, EvalServer, ServerConfig};
+use smurf::coordinator::batcher::BatchPolicy;
+use smurf::coordinator::{
+    ClientConfig, Engine, EvalServer, FaultInjector, HedgeConfig, HedgeDelay, ResilientClient,
+    RetryPolicy, ServerConfig,
+};
 use smurf::nn::sc_ops::{ScContext, ScMode};
 use smurf::prelude::*;
 use smurf::runtime::default_artifacts_dir;
+use smurf::util::stats::percentile_sorted;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn timed<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     // warmup
@@ -116,6 +124,103 @@ fn main() {
         "  → SC MAC rate",
         400.0 / per_dot / 1e6
     );
+
+    // 6. Resilient client: ladder overhead and hedged tail latency.
+    //    Every row is equality-gated — the client must serve the exact
+    //    bits the direct path serves, or the measurement is meaningless.
+    println!();
+    let p1 = vec![vec![0.3, 0.4]];
+    let direct_ref = server.eval_sync("euclidean2", p1.clone(), Engine::Analytic, 64);
+    assert!(direct_ref.is_ok());
+    let gate = |r: &smurf::coordinator::EvalResponse| {
+        assert!(r.is_ok(), "{:?}", r.error);
+        assert_eq!(r.outputs.len(), direct_ref.outputs.len());
+        for (a, b) in r.outputs.iter().zip(&direct_ref.outputs) {
+            assert_eq!(a.to_bits(), b.to_bits(), "client row diverged from direct path");
+        }
+    };
+    timed("direct eval_sync (analytic, baseline)", 5_000, || {
+        let r = server.eval_sync("euclidean2", p1.clone(), Engine::Analytic, 64);
+        std::hint::black_box(gate(&r));
+    });
+    let passthrough = ResilientClient::new(server.as_ref(), ClientConfig::default());
+    timed("resilient client, passthrough (default)", 5_000, || {
+        let r = passthrough.eval("euclidean2", p1.clone(), Engine::Analytic, 64);
+        std::hint::black_box(gate(&r));
+    });
+    drop(passthrough);
+    let armed = ResilientClient::new(
+        server.as_ref(),
+        ClientConfig { retry: Some(RetryPolicy::default()), ..ClientConfig::default() },
+    );
+    timed("resilient client, retry-armed (no faults)", 5_000, || {
+        let r = armed.eval("euclidean2", p1.clone(), Engine::Analytic, 64);
+        std::hint::black_box(gate(&r));
+    });
+    drop(armed);
+
+    // Hedged tail: a dedicated 2-worker server whose injector stalls the
+    // primary attempt of each measured request; the hedge must cut the
+    // tail far below the stall.
+    let stall = Duration::from_millis(30);
+    let faults = Arc::new(FaultInjector::new());
+    let hedge_server = EvalServer::start(
+        vec![SmurfApproximator::synthesize(&cfg, &functions::euclidean2(), 64)],
+        None,
+        ServerConfig {
+            workers: 2,
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(200) },
+            faults: faults.clone(),
+            ..ServerConfig::default()
+        },
+    );
+    let hedged = ResilientClient::new(
+        &hedge_server,
+        ClientConfig {
+            hedge: Some(HedgeConfig { delay: HedgeDelay::Fixed(Duration::from_millis(2)) }),
+            ..ClientConfig::default()
+        },
+    );
+    let bits_ref = hedge_server.eval_sync("euclidean2", p1.clone(), Engine::BitLevel, 256);
+    assert!(bits_ref.is_ok());
+    let mut lat_ms: Vec<f64> = Vec::new();
+    for _ in 0..40 {
+        faults.arm_stall_on_batch(1, stall); // the primary stalls; the hedge races past
+        let t = Instant::now();
+        let r = hedged.eval_with_timeout(
+            "euclidean2",
+            p1.clone(),
+            Engine::BitLevel,
+            256,
+            Duration::from_secs(5),
+        );
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        assert!(r.is_ok(), "{:?}", r.error);
+        assert_eq!(r.outputs[0].to_bits(), bits_ref.outputs[0].to_bits());
+        // Let the stalled loser finish so the next arm targets a fresh batch.
+        let audit = hedged.drain_hedge_audits(Duration::from_secs(2));
+        assert_eq!(audit.mismatched, 0, "hedge losers must stay bit-identical");
+    }
+    lat_ms.sort_by(|a, b| a.total_cmp(b));
+    println!(
+        "{:<44} {:>8.2} / {:>8.2} ms (stall {} ms)",
+        "hedged tail p50/p99 vs stalled primary",
+        percentile_sorted(&lat_ms, 50.0),
+        percentile_sorted(&lat_ms, 99.0),
+        stall.as_millis()
+    );
+    let hsnap = hedge_server.metrics();
+    println!(
+        "{:<44} {:>6} hedges, {:>4} wins, {:>4} verified, {} mismatches",
+        "  → hedge accounting",
+        hsnap.client_hedges,
+        hsnap.client_hedge_wins,
+        hsnap.client_hedge_verified,
+        hsnap.client_hedge_mismatches
+    );
+    assert_eq!(hsnap.client_hedge_mismatches, 0);
+    drop(hedged);
+    hedge_server.shutdown();
 
     if let Ok(s) = Arc::try_unwrap(server) {
         s.shutdown();

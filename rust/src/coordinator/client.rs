@@ -1,0 +1,1053 @@
+//! Resilient client: the caller-side recovery ladder over
+//! [`EvalServer`](super::server::EvalServer).
+//!
+//! The serving core *fails well* — typed errors, panic isolation, load
+//! shedding, drift quarantine — but a bare `eval_sync` still surfaces
+//! every `Timeout`/`QueueFull`/`WorkerPanic` straight to the caller.
+//! [`ResilientClient`] wraps `submit`/`eval_sync_with_timeout` with four
+//! independently configurable recovery stages, rung by rung:
+//!
+//! 1. **Deadline-carving retries** ([`RetryPolicy`]): every attempt gets
+//!    a per-attempt timeout carved from the *overall* request deadline,
+//!    and failed retryable attempts back off exponentially with
+//!    equal-jitter drawn from a seeded [`Pcg`] stream — no `thread_rng`
+//!    anywhere, so retry schedules replay exactly under a fixed seed.
+//! 2. **Retry budgets** ([`BudgetConfig`]): a token bucket (earn a
+//!    fraction per success, spend one per retry) bounds how much extra
+//!    load retries can add, so a correlated failure can never amplify
+//!    into a retry storm. Classification is
+//!    [`EvalError::is_retryable`]: terminal errors never burn budget.
+//! 3. **Hedged requests** ([`HedgeConfig`]): once an attempt outlives a
+//!    latency threshold (fixed, or a live quantile of past attempt
+//!    latencies), a second identical request is launched and the first
+//!    answer wins. Because served outputs are deterministic per request
+//!    (seeds derive from `DEFAULT_STREAM_SEED ^ point_index`), the
+//!    losing attempt is *audited* for bit-identity with the winner when
+//!    it eventually lands — the idempotency dividend, checked on every
+//!    hedge rather than assumed.
+//! 4. **Per-function circuit breakers** ([`BreakerConfig`]):
+//!    Closed→Open→HalfOpen keyed on function name, reusing the drift
+//!    sentinel's count-based probe-and-recover idiom (no wall-clock
+//!    cooldowns — deterministic in tests). While Open, calls fail fast
+//!    with [`EvalError::CircuitOpen`] without touching the server; every
+//!    `probe_interval`-th arrival is let through as a probe, and a
+//!    streak of good probes recloses the breaker.
+//!
+//! With every stage disabled ([`ClientConfig::default`]) the client is a
+//! strict passthrough: `eval_with_timeout` delegates directly to
+//! [`EvalServer::eval_sync_with_timeout`](super::server::EvalServer::eval_sync_with_timeout),
+//! byte-for-byte identical behavior (pinned by the chaos suite).
+//!
+//! All shared state lives behind [`crate::util::sync`] primitives so the
+//! module stays loom-modelable alongside the rest of the coordinator.
+
+use super::metrics::Metrics;
+use super::request::{Engine, EvalError, EvalRequest, EvalResponse};
+use super::server::EvalServer;
+use crate::util::prng::Pcg;
+use crate::util::stats::LatencyHistogram;
+use crate::util::sync::{lock_unpoisoned, Arc, AtomicU64, Mutex, Ordering};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+/// Poll tick while racing a primary attempt against its hedge: mpsc
+/// receivers cannot be `select`ed, so after the hedge launches the
+/// client alternates `try_recv` on both channels at this cadence. Far
+/// below every serving latency floor we gate on, and only ever paid on
+/// the (rare, already-slow) hedged path.
+const HEDGE_POLL: Duration = Duration::from_micros(100);
+
+/// Cap on parked hedge audits awaiting their losing reply; beyond it the
+/// oldest audit is dropped (the loser's receiver closes harmlessly).
+const MAX_PENDING_AUDITS: usize = 32;
+
+/// Fixed-point scale for the retry budget: tokens are stored in
+/// milli-tokens so fractional earn rates (e.g. 0.1 per success) work on
+/// an integer atomic.
+const BUDGET_MILLI: u64 = 1_000;
+
+/// Retry stage configuration (ladder rung 1).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Max retries after the first attempt (0 = first attempt only).
+    pub max_retries: u32,
+    /// Per-attempt timeout carved from the overall deadline; `None`
+    /// gives every attempt the full remaining deadline.
+    pub attempt_timeout: Option<Duration>,
+    /// Backoff before retry `k` is drawn from
+    /// `[min(base·2^k, max)/2, min(base·2^k, max))` — "equal jitter".
+    pub backoff_base: Duration,
+    /// Upper clamp on the exponential backoff.
+    pub backoff_max: Duration,
+    /// Seed for the jitter stream ([`Pcg`]); fixed seed ⇒ identical
+    /// retry schedule on every run.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 3,
+            attempt_timeout: None,
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(100),
+            jitter_seed: 0xB0FF,
+        }
+    }
+}
+
+/// Retry-budget configuration (ladder rung 2): a token bucket that
+/// starts at `initial` tokens, earns `earn_per_success` per successful
+/// attempt (clamped to `max`), and spends exactly 1 token per retry.
+/// Budget-refused retries surface the last attempt's typed error and
+/// bump `client_retry_budget_exhausted`.
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetConfig {
+    /// Tokens available at construction.
+    pub initial: f64,
+    /// Bucket capacity.
+    pub max: f64,
+    /// Tokens earned per successful attempt.
+    pub earn_per_success: f64,
+}
+
+impl Default for BudgetConfig {
+    fn default() -> Self {
+        Self { initial: 10.0, max: 10.0, earn_per_success: 0.1 }
+    }
+}
+
+/// When to launch the hedge attempt (ladder rung 3).
+#[derive(Clone, Copy, Debug)]
+pub enum HedgeDelay {
+    /// Hedge after a fixed wait.
+    Fixed(Duration),
+    /// Hedge after the `q`-quantile of observed successful-attempt
+    /// latencies, once at least `min_samples` have been recorded
+    /// (`fallback` until then), never below `floor`.
+    Quantile { q: f64, min_samples: u64, floor: Duration, fallback: Duration },
+}
+
+/// Hedged-request configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HedgeConfig {
+    /// Latency threshold after which the second attempt launches.
+    pub delay: HedgeDelay,
+}
+
+/// Per-function circuit-breaker configuration (ladder rung 4). All
+/// cadences are *count-based* (arrivals, not wall-clock), mirroring the
+/// drift sentinel's probe idiom, so breaker tests are deterministic.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failed calls (while Closed) that trip the breaker.
+    pub failure_threshold: u32,
+    /// While Open, every `probe_interval`-th arrival is admitted as a
+    /// HalfOpen probe; the rest fail fast.
+    pub probe_interval: u32,
+    /// Consecutive successful probes required to reclose.
+    pub probe_successes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self { failure_threshold: 5, probe_interval: 4, probe_successes: 2 }
+    }
+}
+
+/// Full client configuration. The default disables every stage, making
+/// the client a strict passthrough to the server.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientConfig {
+    /// Overall deadline for [`ResilientClient::eval`]; attempts, backoff
+    /// and hedges are all carved from this one window. `None` uses the
+    /// server's configured `sync_timeout`.
+    pub total_timeout: Option<Duration>,
+    /// Ladder rung 1; `None` = single attempt.
+    pub retry: Option<RetryPolicy>,
+    /// Ladder rung 2; `None` = unlimited retries (bounded only by
+    /// `max_retries` and the deadline).
+    pub budget: Option<BudgetConfig>,
+    /// Ladder rung 3; `None` = never hedge.
+    pub hedge: Option<HedgeConfig>,
+    /// Ladder rung 4; `None` = no breaker.
+    pub breaker: Option<BreakerConfig>,
+}
+
+/// Public breaker lifecycle state for one function.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: calls pass through; failures are counted.
+    Closed,
+    /// Tripped: calls fail fast; periodic arrivals become probes.
+    Open,
+    /// A probe is in flight; other arrivals still fail fast.
+    HalfOpen,
+}
+
+/// Outcome tallies from [`ResilientClient::drain_hedge_audits`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HedgeAudit {
+    /// Losers that completed bit-identical to their winner.
+    pub verified: u64,
+    /// Losers that completed but diverged (determinism bug — must be 0).
+    pub mismatched: u64,
+    /// Losers still unanswered when the drain wait expired (dropped).
+    pub unresolved: u64,
+}
+
+// ---------------------------------------------------------------------
+// Retry budget: fixed-point token bucket on a single atomic.
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct RetryBudget {
+    milli: AtomicU64,
+    max_milli: u64,
+    earn_milli: u64,
+}
+
+impl RetryBudget {
+    fn new(cfg: &BudgetConfig) -> Self {
+        let to_milli = |x: f64| (x * BUDGET_MILLI as f64).round().max(0.0) as u64;
+        let max_milli = to_milli(cfg.max);
+        Self {
+            milli: AtomicU64::new(to_milli(cfg.initial).min(max_milli)),
+            max_milli,
+            earn_milli: to_milli(cfg.earn_per_success),
+        }
+    }
+
+    /// Spend one whole token; `false` (and no change) if fewer remain.
+    fn try_spend(&self) -> bool {
+        let mut cur = self.milli.load(Ordering::Relaxed);
+        loop {
+            if cur < BUDGET_MILLI {
+                return false;
+            }
+            match self.milli.compare_exchange_weak(
+                cur,
+                cur - BUDGET_MILLI,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Earn the per-success increment, clamped to capacity.
+    fn earn(&self) {
+        let mut cur = self.milli.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(self.earn_milli).min(self.max_milli);
+            if next == cur {
+                return;
+            }
+            match self
+                .milli
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn tokens(&self) -> f64 {
+        self.milli.load(Ordering::Relaxed) as f64 / BUDGET_MILLI as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-function circuit breaker.
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+enum BreakerRoute {
+    Pass,
+    Probe,
+    Reject,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum AttemptOutcome {
+    /// The attempt succeeded.
+    Good,
+    /// The attempt failed with a *retryable* error — evidence the
+    /// function's serving path is unhealthy.
+    Faulty,
+    /// The attempt failed terminally (bad request, shutdown, expired
+    /// deadline): says nothing about the function's health, so it
+    /// neither trips nor heals the breaker.
+    Neutral,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+enum BreakerEvent {
+    Opened,
+    Reclosed,
+}
+
+#[derive(Debug)]
+struct FnBreaker {
+    stage: BreakerState,
+    failures: u32,
+    open_arrivals: u32,
+    probe_streak: u32,
+}
+
+impl Default for FnBreaker {
+    fn default() -> Self {
+        Self { stage: BreakerState::Closed, failures: 0, open_arrivals: 0, probe_streak: 0 }
+    }
+}
+
+#[derive(Debug)]
+struct Breaker {
+    cfg: BreakerConfig,
+    map: Mutex<HashMap<String, FnBreaker>>,
+}
+
+impl Breaker {
+    fn new(cfg: BreakerConfig) -> Self {
+        Self { cfg, map: Mutex::new(HashMap::new()) }
+    }
+
+    /// Admission decision for one arrival at `function`'s breaker.
+    fn route(&self, function: &str) -> BreakerRoute {
+        let mut map = lock_unpoisoned(&self.map);
+        let fb = map.entry(function.to_string()).or_default();
+        match fb.stage {
+            BreakerState::Closed => BreakerRoute::Pass,
+            // A probe is already in flight; don't stampede it.
+            BreakerState::HalfOpen => BreakerRoute::Reject,
+            BreakerState::Open => {
+                fb.open_arrivals += 1;
+                if fb.open_arrivals % self.cfg.probe_interval == 0 {
+                    fb.stage = BreakerState::HalfOpen;
+                    BreakerRoute::Probe
+                } else {
+                    BreakerRoute::Reject
+                }
+            }
+        }
+    }
+
+    /// Fold one attempt's outcome into the state machine; returns the
+    /// lifecycle transition (if any) so the caller can count it.
+    fn observe(
+        &self,
+        function: &str,
+        was_probe: bool,
+        outcome: AttemptOutcome,
+    ) -> Option<BreakerEvent> {
+        let mut map = lock_unpoisoned(&self.map);
+        let fb = map.entry(function.to_string()).or_default();
+        match (outcome, was_probe) {
+            (AttemptOutcome::Good, true) => {
+                fb.probe_streak += 1;
+                if fb.probe_streak >= self.cfg.probe_successes {
+                    *fb = FnBreaker::default();
+                    return Some(BreakerEvent::Reclosed);
+                }
+                // Streak continues at the next probe slot.
+                fb.stage = BreakerState::Open;
+                None
+            }
+            (AttemptOutcome::Good, false) => {
+                if fb.stage == BreakerState::Closed {
+                    fb.failures = 0;
+                }
+                None
+            }
+            (AttemptOutcome::Faulty, true) => {
+                fb.probe_streak = 0;
+                fb.stage = BreakerState::Open;
+                None
+            }
+            (AttemptOutcome::Faulty, false) => {
+                if fb.stage == BreakerState::Closed {
+                    fb.failures += 1;
+                    if fb.failures >= self.cfg.failure_threshold {
+                        fb.stage = BreakerState::Open;
+                        fb.open_arrivals = 0;
+                        fb.probe_streak = 0;
+                        return Some(BreakerEvent::Opened);
+                    }
+                }
+                None
+            }
+            // A terminal error during a probe neither confirms recovery
+            // nor indicts the function: give the slot back.
+            (AttemptOutcome::Neutral, true) => {
+                fb.stage = BreakerState::Open;
+                None
+            }
+            (AttemptOutcome::Neutral, false) => None,
+        }
+    }
+
+    fn state(&self, function: &str) -> BreakerState {
+        lock_unpoisoned(&self.map)
+            .get(function)
+            .map(|fb| fb.stage)
+            .unwrap_or(BreakerState::Closed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hedge audits.
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct PendingAudit {
+    function: String,
+    winner: Vec<f64>,
+    winner_degraded: bool,
+    loser: Receiver<EvalResponse>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+enum AuditOutcome {
+    Verified,
+    Mismatched,
+    /// The loser errored or was served at a different fidelity
+    /// (degraded vs full): nothing comparable, silently resolved.
+    Skipped,
+}
+
+// ---------------------------------------------------------------------
+// The client.
+// ---------------------------------------------------------------------
+
+/// Caller-side recovery ladder over an [`EvalServer`]; see the module
+/// docs for the four stages. Cheap to construct; borrow one per server.
+/// All methods take `&self` and the client is `Sync`, so one instance
+/// can serve many threads.
+#[derive(Debug)]
+pub struct ResilientClient<'a> {
+    server: &'a EvalServer,
+    cfg: ClientConfig,
+    metrics: Arc<Metrics>,
+    budget: Option<RetryBudget>,
+    breaker: Option<Breaker>,
+    jitter: Mutex<Pcg>,
+    attempt_latency: Mutex<LatencyHistogram>,
+    audits: Mutex<Vec<PendingAudit>>,
+}
+
+impl<'a> ResilientClient<'a> {
+    /// Wrap `server` with the given recovery ladder. Panics (via
+    /// `assert!`) on nonsensical configs: zero breaker cadences,
+    /// negative budget rates, a hedge quantile outside `[0, 1]`, or
+    /// `backoff_base > backoff_max`.
+    pub fn new(server: &'a EvalServer, cfg: ClientConfig) -> Self {
+        if let Some(r) = &cfg.retry {
+            assert!(r.backoff_base <= r.backoff_max, "backoff_base must be <= backoff_max");
+        }
+        if let Some(b) = &cfg.budget {
+            assert!(
+                b.initial >= 0.0 && b.max >= b.initial && b.earn_per_success >= 0.0,
+                "budget must satisfy 0 <= initial <= max, earn >= 0"
+            );
+        }
+        if let Some(br) = &cfg.breaker {
+            assert!(
+                br.failure_threshold >= 1 && br.probe_interval >= 1 && br.probe_successes >= 1,
+                "breaker cadences must be >= 1"
+            );
+        }
+        if let Some(h) = &cfg.hedge {
+            if let HedgeDelay::Quantile { q, .. } = h.delay {
+                assert!((0.0..=1.0).contains(&q), "hedge quantile must be in [0, 1]");
+            }
+        }
+        let metrics = server.metrics_handle();
+        let budget = cfg.budget.as_ref().map(RetryBudget::new);
+        let breaker = cfg.breaker.map(Breaker::new);
+        let jitter_seed = cfg.retry.as_ref().map(|r| r.jitter_seed).unwrap_or(0);
+        Self {
+            server,
+            cfg,
+            metrics,
+            budget,
+            breaker,
+            jitter: Mutex::new(Pcg::new(jitter_seed)),
+            attempt_latency: Mutex::new(LatencyHistogram::new()),
+            audits: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Evaluate with the configured overall deadline
+    /// ([`ClientConfig::total_timeout`], else the server's
+    /// `sync_timeout`). Failures arrive as a typed [`EvalError`] on the
+    /// response, exactly like the bare server path.
+    pub fn eval(
+        &self,
+        function: &str,
+        points: Vec<Vec<f64>>,
+        engine: Engine,
+        stream_len: usize,
+    ) -> EvalResponse {
+        let timeout = self
+            .cfg
+            .total_timeout
+            .unwrap_or_else(|| self.server.admission().config().sync_timeout);
+        self.eval_with_timeout(function, points, engine, stream_len, timeout)
+    }
+
+    /// Evaluate with an explicit overall deadline; retries, backoff and
+    /// hedges are all carved from this single window. The response's
+    /// typed [`EvalError`] (if any) is the *last attempt's* error — or
+    /// [`EvalError::CircuitOpen`] when the breaker refused without an
+    /// attempt, or [`EvalError::Timeout`] when the window closed.
+    pub fn eval_with_timeout(
+        &self,
+        function: &str,
+        points: Vec<Vec<f64>>,
+        engine: Engine,
+        stream_len: usize,
+        timeout: Duration,
+    ) -> EvalResponse {
+        self.sweep_audits();
+        if self.is_passthrough() {
+            // Acceptance contract: default config == calling the server
+            // directly, byte for byte.
+            return self
+                .server
+                .eval_sync_with_timeout(function, points, engine, stream_len, timeout);
+        }
+        let overall = Instant::now() + timeout;
+        let max_retries = self.cfg.retry.as_ref().map(|r| r.max_retries).unwrap_or(0);
+        let mut attempt: u32 = 0;
+        loop {
+            let was_probe = match self.breaker.as_ref().map(|b| b.route(function)) {
+                Some(BreakerRoute::Reject) => {
+                    self.metrics.record_breaker_rejection();
+                    return EvalResponse::from_error(EvalError::CircuitOpen);
+                }
+                Some(BreakerRoute::Probe) => true,
+                Some(BreakerRoute::Pass) | None => false,
+            };
+            let now = Instant::now();
+            if now >= overall {
+                self.metrics.record_client_timeout();
+                return EvalResponse::from_error(EvalError::Timeout);
+            }
+            let attempt_deadline = match self.cfg.retry.as_ref().and_then(|r| r.attempt_timeout)
+            {
+                Some(t) => overall.min(now + t),
+                None => overall,
+            };
+            let started = now;
+            let resp = self.run_attempt(function, &points, engine, stream_len, attempt_deadline);
+            let Some(err) = resp.error.clone() else {
+                if let Some(b) = &self.budget {
+                    b.earn();
+                }
+                if let Some(br) = &self.breaker {
+                    if br.observe(function, was_probe, AttemptOutcome::Good)
+                        == Some(BreakerEvent::Reclosed)
+                    {
+                        self.metrics.record_breaker_reclose();
+                    }
+                }
+                if self.cfg.hedge.is_some() {
+                    let ns = started.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                    lock_unpoisoned(&self.attempt_latency).record(ns);
+                }
+                return resp;
+            };
+            let retryable = err.is_retryable();
+            if let Some(br) = &self.breaker {
+                let outcome =
+                    if retryable { AttemptOutcome::Faulty } else { AttemptOutcome::Neutral };
+                if br.observe(function, was_probe, outcome) == Some(BreakerEvent::Opened) {
+                    self.metrics.record_breaker_open();
+                }
+            }
+            if !retryable || attempt >= max_retries {
+                return resp;
+            }
+            if let Some(b) = &self.budget {
+                if !b.try_spend() {
+                    self.metrics.record_retry_budget_exhausted();
+                    return resp;
+                }
+            }
+            if let Some(r) = &self.cfg.retry {
+                let backoff = self.backoff_for(r, attempt);
+                // Carve check: a retry that cannot start (let alone
+                // finish) before the overall deadline is pointless.
+                if Instant::now() + backoff >= overall {
+                    return resp;
+                }
+                if !backoff.is_zero() {
+                    std::thread::sleep(backoff);
+                }
+            }
+            self.metrics.record_client_retry();
+            attempt += 1;
+        }
+    }
+
+    /// Current breaker state for `function` (`Closed` when no breaker
+    /// is configured or the function has never been seen).
+    pub fn breaker_state(&self, function: &str) -> BreakerState {
+        self.breaker.as_ref().map(|b| b.state(function)).unwrap_or(BreakerState::Closed)
+    }
+
+    /// Remaining retry-budget tokens (`None` when no budget is
+    /// configured — i.e. unlimited).
+    pub fn retry_budget_tokens(&self) -> Option<f64> {
+        self.budget.as_ref().map(|b| b.tokens())
+    }
+
+    /// Resolve parked hedge audits, waiting up to `wait` total for
+    /// losing replies still in flight. Verified/mismatched counts are
+    /// also mirrored into the metrics sink as they resolve; losers
+    /// still pending at the end of the wait are dropped and counted
+    /// `unresolved`. Tests call this before asserting the bit-identity
+    /// invariant; it is safe to call at any time.
+    pub fn drain_hedge_audits(&self, wait: Duration) -> HedgeAudit {
+        let deadline = Instant::now() + wait;
+        let pending: Vec<PendingAudit> =
+            lock_unpoisoned(&self.audits).drain(..).collect();
+        let mut out = HedgeAudit::default();
+        for a in pending {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match a.loser.recv_timeout(left) {
+                Ok(resp) => match self.resolve_audit(&a, &resp) {
+                    AuditOutcome::Verified => out.verified += 1,
+                    AuditOutcome::Mismatched => out.mismatched += 1,
+                    AuditOutcome::Skipped => {}
+                },
+                Err(RecvTimeoutError::Timeout) => out.unresolved += 1,
+                // Loser dropped without answering (shutdown race): the
+                // answer-exactly-once contract was kept by the winner.
+                Err(RecvTimeoutError::Disconnected) => {}
+            }
+        }
+        out
+    }
+
+    fn is_passthrough(&self) -> bool {
+        self.cfg.retry.is_none()
+            && self.cfg.budget.is_none()
+            && self.cfg.hedge.is_none()
+            && self.cfg.breaker.is_none()
+    }
+
+    /// Equal-jitter exponential backoff before retry number `attempt`.
+    fn backoff_for(&self, r: &RetryPolicy, attempt: u32) -> Duration {
+        let exp = r.backoff_base.saturating_mul(2u32.saturating_pow(attempt));
+        let full = exp.min(r.backoff_max);
+        let half = full / 2;
+        lock_unpoisoned(&self.jitter).range_duration(half, full)
+    }
+
+    /// Latency threshold after which this attempt hedges.
+    fn hedge_delay(&self, cfg: &HedgeConfig) -> Duration {
+        match cfg.delay {
+            HedgeDelay::Fixed(d) => d,
+            HedgeDelay::Quantile { q, min_samples, floor, fallback } => {
+                let hist = lock_unpoisoned(&self.attempt_latency);
+                if hist.count() >= min_samples {
+                    floor.max(Duration::from_nanos(hist.quantile_ns(q)))
+                } else {
+                    fallback
+                }
+            }
+        }
+    }
+
+    /// One attempt: submit, wait; if a hedge is configured and the
+    /// primary outlives the hedge threshold, launch a second identical
+    /// request and take the first answer, parking the loser for a
+    /// bit-identity audit.
+    fn run_attempt(
+        &self,
+        function: &str,
+        points: &[Vec<f64>],
+        engine: Engine,
+        stream_len: usize,
+        deadline: Instant,
+    ) -> EvalResponse {
+        let (tx, rx) = channel();
+        let req = EvalRequest::new(function, points.to_vec(), engine, stream_len, tx)
+            .with_deadline(deadline);
+        if let Err(e) = self.server.submit(req) {
+            return EvalResponse::from_error(e);
+        }
+        let hedge_at = self.cfg.hedge.as_ref().map(|h| self.hedge_delay(h));
+        let until_deadline = deadline.saturating_duration_since(Instant::now());
+        let first_wait = match hedge_at {
+            Some(d) => d.min(until_deadline),
+            None => until_deadline,
+        };
+        match rx.recv_timeout(first_wait) {
+            // Primary answered before the hedge threshold: done. A
+            // *failed* primary is not hedged either — the retry rungs
+            // own failure recovery; hedging only targets latency.
+            Ok(resp) => return resp,
+            Err(RecvTimeoutError::Disconnected) => {
+                return EvalResponse::from_error(EvalError::Shutdown)
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if hedge_at.is_none() || Instant::now() >= deadline {
+                    self.metrics.record_client_timeout();
+                    return EvalResponse::from_error(EvalError::Timeout);
+                }
+            }
+        }
+        // The primary is slow: launch the hedge on its own channel.
+        let (htx, hrx) = channel();
+        let hedge_req = EvalRequest::new(function, points.to_vec(), engine, stream_len, htx)
+            .with_deadline(deadline);
+        match self.server.submit(hedge_req) {
+            Ok(()) => self.metrics.record_client_hedge(),
+            // Hedge refused (queue full, shedding, …): keep waiting on
+            // the primary alone — hedging is best-effort by design.
+            Err(_) => {
+                let left = deadline.saturating_duration_since(Instant::now());
+                return match rx.recv_timeout(left) {
+                    Ok(resp) => resp,
+                    Err(RecvTimeoutError::Timeout) => {
+                        self.metrics.record_client_timeout();
+                        EvalResponse::from_error(EvalError::Timeout)
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        EvalResponse::from_error(EvalError::Shutdown)
+                    }
+                };
+            }
+        }
+        self.race_hedge(function, rx, hrx, deadline)
+    }
+
+    /// Race the primary and hedge receivers to the first *successful*
+    /// answer; the still-pending loser is parked for a bit-identity
+    /// audit. If one arm fails, keep the other until the deadline and
+    /// surface the first failure only if both fail.
+    fn race_hedge(
+        &self,
+        function: &str,
+        primary: Receiver<EvalResponse>,
+        hedge: Receiver<EvalResponse>,
+        deadline: Instant,
+    ) -> EvalResponse {
+        let mut primary = Some(primary);
+        let mut hedge = Some(hedge);
+        let mut first_err: Option<EvalResponse> = None;
+        loop {
+            if let Some(rx) = primary.as_ref() {
+                match rx.try_recv() {
+                    Ok(resp) if resp.is_ok() => {
+                        if let Some(loser) = hedge.take() {
+                            self.park_audit(function, &resp, loser);
+                        }
+                        return resp;
+                    }
+                    Ok(resp) => {
+                        primary = None;
+                        first_err.get_or_insert(resp);
+                    }
+                    Err(TryRecvError::Empty) => {}
+                    Err(TryRecvError::Disconnected) => {
+                        primary = None;
+                        first_err
+                            .get_or_insert(EvalResponse::from_error(EvalError::Shutdown));
+                    }
+                }
+            }
+            if let Some(rx) = hedge.as_ref() {
+                match rx.try_recv() {
+                    Ok(resp) if resp.is_ok() => {
+                        self.metrics.record_client_hedge_win();
+                        if let Some(loser) = primary.take() {
+                            self.park_audit(function, &resp, loser);
+                        }
+                        return resp;
+                    }
+                    Ok(resp) => {
+                        hedge = None;
+                        first_err.get_or_insert(resp);
+                    }
+                    Err(TryRecvError::Empty) => {}
+                    Err(TryRecvError::Disconnected) => {
+                        hedge = None;
+                        first_err
+                            .get_or_insert(EvalResponse::from_error(EvalError::Shutdown));
+                    }
+                }
+            }
+            if primary.is_none() && hedge.is_none() {
+                // Both arms failed: surface the first typed error.
+                return first_err
+                    .unwrap_or_else(|| EvalResponse::from_error(EvalError::Shutdown));
+            }
+            if Instant::now() >= deadline {
+                self.metrics.record_client_timeout();
+                return EvalResponse::from_error(EvalError::Timeout);
+            }
+            std::thread::sleep(HEDGE_POLL);
+        }
+    }
+
+    /// Park a hedge loser for later bit-identity verification; capped
+    /// at [`MAX_PENDING_AUDITS`] (oldest dropped).
+    fn park_audit(
+        &self,
+        function: &str,
+        winner: &EvalResponse,
+        loser: Receiver<EvalResponse>,
+    ) {
+        let mut audits = lock_unpoisoned(&self.audits);
+        if audits.len() >= MAX_PENDING_AUDITS {
+            audits.remove(0);
+        }
+        audits.push(PendingAudit {
+            function: function.to_string(),
+            winner: winner.outputs.clone(),
+            winner_degraded: winner.degraded,
+            loser,
+        });
+    }
+
+    /// Non-blocking pass over parked audits at the top of every eval.
+    fn sweep_audits(&self) {
+        let mut audits = lock_unpoisoned(&self.audits);
+        let mut i = 0;
+        while i < audits.len() {
+            match audits[i].loser.try_recv() {
+                Ok(resp) => {
+                    let a = audits.remove(i);
+                    self.resolve_audit(&a, &resp);
+                }
+                Err(TryRecvError::Empty) => i += 1,
+                Err(TryRecvError::Disconnected) => {
+                    audits.remove(i);
+                }
+            }
+        }
+    }
+
+    /// Compare a completed loser against its winner. Served outputs are
+    /// deterministic per request (seed = `DEFAULT_STREAM_SEED ^ i`), so
+    /// same-fidelity replays must match to the bit.
+    fn resolve_audit(&self, audit: &PendingAudit, loser: &EvalResponse) -> AuditOutcome {
+        if !loser.is_ok() || loser.degraded != audit.winner_degraded {
+            // Errored loser, or the two attempts were served at
+            // different fidelities (one degraded to analytic): outputs
+            // are legitimately incomparable.
+            return AuditOutcome::Skipped;
+        }
+        let identical = loser.outputs.len() == audit.winner.len()
+            && loser
+                .outputs
+                .iter()
+                .zip(&audit.winner)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        if identical {
+            self.metrics.record_client_hedge_verified();
+            AuditOutcome::Verified
+        } else {
+            self.metrics.record_client_hedge_mismatch();
+            debug_assert!(
+                false,
+                "hedge loser diverged from winner for `{}` — served-output determinism broke",
+                audit.function
+            );
+            AuditOutcome::Mismatched
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_spends_and_earns_with_fixed_point_precision() {
+        let b = RetryBudget::new(&BudgetConfig { initial: 2.0, max: 3.0, earn_per_success: 0.1 });
+        assert!((b.tokens() - 2.0).abs() < 1e-9);
+        assert!(b.try_spend());
+        assert!(b.try_spend());
+        assert!(!b.try_spend(), "2 tokens buy exactly 2 retries");
+        assert!((b.tokens() - 0.0).abs() < 1e-9);
+        // 10 successes earn exactly one token back (0.1 each, no float drift).
+        for _ in 0..10 {
+            b.earn();
+        }
+        assert!((b.tokens() - 1.0).abs() < 1e-9);
+        assert!(b.try_spend());
+        assert!(!b.try_spend());
+        // Earning clamps at capacity.
+        for _ in 0..1000 {
+            b.earn();
+        }
+        assert!((b.tokens() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_budget_never_allows_a_retry() {
+        let b = RetryBudget::new(&BudgetConfig { initial: 0.0, max: 5.0, earn_per_success: 0.0 });
+        assert!(!b.try_spend());
+        b.earn(); // earn rate 0: still empty
+        assert!(!b.try_spend());
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let br = Breaker::new(BreakerConfig {
+            failure_threshold: 3,
+            probe_interval: 2,
+            probe_successes: 2,
+        });
+        let f = "fn";
+        // Closed: passes; failures accumulate.
+        for i in 0..3 {
+            assert!(matches!(br.route(f), BreakerRoute::Pass));
+            let ev = br.observe(f, false, AttemptOutcome::Faulty);
+            if i < 2 {
+                assert_eq!(ev, None);
+                assert_eq!(br.state(f), BreakerState::Closed);
+            } else {
+                assert_eq!(ev, Some(BreakerEvent::Opened));
+            }
+        }
+        assert_eq!(br.state(f), BreakerState::Open);
+        // Open: arrival 1 rejected, arrival 2 is the probe.
+        assert!(matches!(br.route(f), BreakerRoute::Reject));
+        assert!(matches!(br.route(f), BreakerRoute::Probe));
+        assert_eq!(br.state(f), BreakerState::HalfOpen);
+        // While the probe is in flight, everyone else is rejected.
+        assert!(matches!(br.route(f), BreakerRoute::Reject));
+        // First good probe: streak 1 of 2 — back to Open, wait for next slot.
+        assert_eq!(br.observe(f, true, AttemptOutcome::Good), None);
+        assert_eq!(br.state(f), BreakerState::Open);
+        assert!(matches!(br.route(f), BreakerRoute::Reject));
+        assert!(matches!(br.route(f), BreakerRoute::Probe));
+        // Second good probe recloses.
+        assert_eq!(br.observe(f, true, AttemptOutcome::Good), Some(BreakerEvent::Reclosed));
+        assert_eq!(br.state(f), BreakerState::Closed);
+        // A success after reclose keeps it closed and resets failures.
+        assert!(matches!(br.route(f), BreakerRoute::Pass));
+        assert_eq!(br.observe(f, false, AttemptOutcome::Good), None);
+        assert_eq!(br.state(f), BreakerState::Closed);
+    }
+
+    #[test]
+    fn failed_probe_reopens_and_resets_the_streak() {
+        let br = Breaker::new(BreakerConfig {
+            failure_threshold: 1,
+            probe_interval: 1,
+            probe_successes: 2,
+        });
+        let f = "g";
+        assert!(matches!(br.route(f), BreakerRoute::Pass));
+        assert_eq!(br.observe(f, false, AttemptOutcome::Faulty), Some(BreakerEvent::Opened));
+        // probe_interval 1: every Open arrival probes.
+        assert!(matches!(br.route(f), BreakerRoute::Probe));
+        assert_eq!(br.observe(f, true, AttemptOutcome::Good), None); // streak 1/2
+        assert!(matches!(br.route(f), BreakerRoute::Probe));
+        assert_eq!(br.observe(f, true, AttemptOutcome::Faulty), None); // streak reset
+        assert_eq!(br.state(f), BreakerState::Open);
+        assert!(matches!(br.route(f), BreakerRoute::Probe));
+        assert_eq!(br.observe(f, true, AttemptOutcome::Good), None); // streak 1/2 again
+        assert!(matches!(br.route(f), BreakerRoute::Probe));
+        assert_eq!(br.observe(f, true, AttemptOutcome::Good), Some(BreakerEvent::Reclosed));
+    }
+
+    #[test]
+    fn terminal_errors_are_neutral_to_the_breaker() {
+        let br = Breaker::new(BreakerConfig {
+            failure_threshold: 1,
+            probe_interval: 1,
+            probe_successes: 1,
+        });
+        let f = "h";
+        // Terminal failures while Closed never trip it.
+        for _ in 0..10 {
+            assert!(matches!(br.route(f), BreakerRoute::Pass));
+            assert_eq!(br.observe(f, false, AttemptOutcome::Neutral), None);
+        }
+        assert_eq!(br.state(f), BreakerState::Closed);
+        // Trip it, then a terminal error on the probe gives the slot back
+        // without reclosing.
+        br.observe(f, false, AttemptOutcome::Faulty);
+        assert!(matches!(br.route(f), BreakerRoute::Probe));
+        assert_eq!(br.observe(f, true, AttemptOutcome::Neutral), None);
+        assert_eq!(br.state(f), BreakerState::Open);
+    }
+
+    #[test]
+    fn breakers_are_keyed_per_function() {
+        let br = Breaker::new(BreakerConfig {
+            failure_threshold: 1,
+            probe_interval: 1,
+            probe_successes: 1,
+        });
+        br.observe("a", false, AttemptOutcome::Faulty);
+        assert_eq!(br.state("a"), BreakerState::Open);
+        assert_eq!(br.state("b"), BreakerState::Closed);
+        assert!(matches!(br.route("b"), BreakerRoute::Pass));
+    }
+
+    #[test]
+    fn jitter_schedule_is_deterministic_and_equal_jitter_bounded() {
+        // Replays of the same seed produce the same backoff schedule,
+        // and every draw lands in [full/2, full) with full = min(base·2^k, max).
+        let base = Duration::from_millis(4);
+        let max = Duration::from_millis(20);
+        let draws = |seed: u64| -> Vec<Duration> {
+            let mut rng = Pcg::new(seed);
+            (0..6)
+                .map(|k| {
+                    let full = base.saturating_mul(2u32.saturating_pow(k)).min(max);
+                    rng.range_duration(full / 2, full)
+                })
+                .collect()
+        };
+        let a = draws(0xB0FF);
+        let b = draws(0xB0FF);
+        assert_eq!(a, b, "same seed, same schedule");
+        for (k, d) in a.iter().enumerate() {
+            let full = base.saturating_mul(2u32.saturating_pow(k as u32)).min(max);
+            assert!(*d >= full / 2 && *d < full.max(full / 2 + Duration::from_nanos(1)),
+                "draw {k} = {d:?} outside [{:?}, {:?})", full / 2, full);
+        }
+        // The clamp binds: k >= 3 draws stay under max.
+        assert!(a[5] < max);
+    }
+
+    #[test]
+    fn default_config_is_passthrough() {
+        let cfg = ClientConfig::default();
+        assert!(cfg.retry.is_none());
+        assert!(cfg.budget.is_none());
+        assert!(cfg.hedge.is_none());
+        assert!(cfg.breaker.is_none());
+        assert!(cfg.total_timeout.is_none());
+    }
+
+    #[test]
+    fn deadline_carving_math() {
+        // attempt_deadline = min(now + attempt_timeout, overall): the
+        // last sliver of the window produces a shorter attempt, never a
+        // longer one.
+        let now = Instant::now();
+        let overall = now + Duration::from_millis(100);
+        let carve = |now: Instant, attempt_timeout: Option<Duration>| match attempt_timeout {
+            Some(t) => overall.min(now + t),
+            None => overall,
+        };
+        assert_eq!(carve(now, None), overall);
+        assert_eq!(carve(now, Some(Duration::from_millis(30))), now + Duration::from_millis(30));
+        let late = now + Duration::from_millis(90);
+        assert_eq!(carve(late, Some(Duration::from_millis(30))), overall);
+    }
+}

@@ -9,7 +9,15 @@
 //!   supervisor's respawn path);
 //! - **artificial slowness** — every batch stalls for a configured
 //!   duration (exercises deadline expiry, client timeouts, queue
-//!   buildup, and load shedding);
+//!   buildup, and load shedding), or a *single* numbered batch stalls
+//!   once (exercises hedged requests: the primary attempt wedges, the
+//!   hedge lands on a healthy worker);
+//! - **bounded flaky windows** — for the next `batches` batches, each
+//!   batch independently panics or stalls with seeded Bernoulli
+//!   probabilities ([`FlakyWindow`]); the draws come from a
+//!   [`Pcg`](crate::util::prng::Pcg) stream, so a fixed seed replays the
+//!   exact fault schedule (this is what the resilient client's
+//!   retry/budget chaos tests drive);
 //! - **output drift** — a constant bias added to every `BitLevel` batch
 //!   output (exercises the drift sentinel's canary cross-checks and the
 //!   quarantine lifecycle: the bias is healable, so clearing it lets
@@ -24,8 +32,46 @@
 //! (not per cycle), so production builds keep it compiled in and the
 //! chaos suite runs against the exact shipping code path.
 
-use crate::util::sync::{AtomicBool, AtomicU64, Ordering};
+use crate::util::prng::Pcg;
+use crate::util::sync::{lock_unpoisoned, AtomicBool, AtomicU64, Mutex, Ordering};
 use std::time::Duration;
+
+/// A bounded window of seeded intermittent faults: for the next
+/// `batches` batches, each batch independently panics with probability
+/// `panic_prob`, else stalls for `stall` with probability `stall_prob`.
+/// Draws come from a [`Pcg`] stream seeded with `seed`, so the exact
+/// fault schedule replays deterministically (the property the resilient
+/// client's retry chaos tests stand on). After the window the injector
+/// returns to inert on its own.
+#[derive(Clone, Copy, Debug)]
+pub struct FlakyWindow {
+    /// Seed for the per-batch Bernoulli draws.
+    pub seed: u64,
+    /// Probability that a batch in the window panics before execution.
+    pub panic_prob: f64,
+    /// Probability that a (non-panicking) batch stalls for `stall`.
+    pub stall_prob: f64,
+    /// Stall applied to stalled batches.
+    pub stall: Duration,
+    /// Number of batches the window covers.
+    pub batches: u64,
+}
+
+/// Live state of an armed [`FlakyWindow`].
+#[derive(Debug)]
+struct FlakyState {
+    rng: Pcg,
+    window: FlakyWindow,
+    remaining: u64,
+}
+
+/// What a flaky draw decided for one batch (resolved under the lock,
+/// acted on after it is released so a panic cannot poison the state).
+enum FlakyAction {
+    None,
+    Panic(u64),
+    Stall(Duration),
+}
 
 /// Shared, thread-safe fault plan. All hooks are disabled by default.
 #[derive(Debug)]
@@ -33,6 +79,10 @@ pub struct FaultInjector {
     /// 1-based batch ordinal to panic on (0 = disabled). One-shot: the
     /// trigger clears itself so the respawned worker recovers.
     panic_on_batch: AtomicU64,
+    /// 1-based batch ordinal to stall once (0 = disabled, one-shot).
+    stall_on_batch: AtomicU64,
+    /// Duration of the one-shot stall, in nanoseconds.
+    stall_once_ns: AtomicU64,
     /// Batches executed so far (across all workers).
     batches_seen: AtomicU64,
     /// Artificial stall before each batch, in nanoseconds (0 = none).
@@ -42,6 +92,11 @@ pub struct FaultInjector {
     output_bias: AtomicU64,
     /// Replace every BitLevel output with NaN.
     poison_nan: AtomicBool,
+    /// Fast gate for the flaky window: the per-batch cost of a disarmed
+    /// injector stays a handful of relaxed loads, never a lock.
+    flaky_armed: AtomicBool,
+    /// Armed flaky window, if any (locked only while armed).
+    flaky: Mutex<Option<FlakyState>>,
 }
 
 impl Default for FaultInjector {
@@ -50,10 +105,14 @@ impl Default for FaultInjector {
     fn default() -> Self {
         Self {
             panic_on_batch: AtomicU64::new(0),
+            stall_on_batch: AtomicU64::new(0),
+            stall_once_ns: AtomicU64::new(0),
             batches_seen: AtomicU64::new(0),
             slow_batch_ns: AtomicU64::new(0),
             output_bias: AtomicU64::new(0),
             poison_nan: AtomicBool::new(false),
+            flaky_armed: AtomicBool::new(false),
+            flaky: Mutex::new(None),
         }
     }
 }
@@ -75,6 +134,37 @@ impl FaultInjector {
     /// Stall every subsequent batch by `d` (Duration::ZERO disables).
     pub fn set_slow_batch(&self, d: Duration) {
         self.slow_batch_ns.store(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Arm a one-shot stall of `d` on the `n`th batch executed from now
+    /// (1 = the very next batch). Resets the batch counter. This is the
+    /// hedged-request fault: exactly one attempt wedges, every other
+    /// batch — including the hedge — runs at full speed.
+    pub fn arm_stall_on_batch(&self, n: u64, d: Duration) {
+        assert!(n > 0, "batch ordinals are 1-based");
+        self.batches_seen.store(0, Ordering::SeqCst);
+        self.stall_once_ns.store(d.as_nanos() as u64, Ordering::SeqCst);
+        self.stall_on_batch.store(n, Ordering::SeqCst);
+    }
+
+    /// Arm a bounded [`FlakyWindow`]: the next `window.batches` batches
+    /// draw panic/stall faults from a Bernoulli stream seeded with
+    /// `window.seed`, then the injector disarms itself. Replaces any
+    /// window already armed.
+    pub fn arm_flaky_window(&self, window: FlakyWindow) {
+        assert!(
+            (0.0..=1.0).contains(&window.panic_prob) && (0.0..=1.0).contains(&window.stall_prob),
+            "fault probabilities must lie in [0, 1]"
+        );
+        let state = FlakyState { rng: Pcg::new(window.seed), window, remaining: window.batches };
+        *lock_unpoisoned(&self.flaky) = (window.batches > 0).then_some(state);
+        self.flaky_armed.store(window.batches > 0, Ordering::SeqCst);
+    }
+
+    /// Disarm any flaky window before its batch budget runs out.
+    pub fn clear_flaky_window(&self) {
+        self.flaky_armed.store(false, Ordering::SeqCst);
+        *lock_unpoisoned(&self.flaky) = None;
     }
 
     /// Bias every subsequent BitLevel batch output by `bias` (0.0
@@ -121,10 +211,55 @@ impl FaultInjector {
             // purpose — it injects the worker-panic fault the chaos suite isolates.
             panic!("fault injection: worker panic on batch {seen}");
         }
+        let stall_target = self.stall_on_batch.load(Ordering::SeqCst);
+        if stall_target != 0 && seen == stall_target {
+            self.stall_on_batch.store(0, Ordering::SeqCst);
+            let ns = self.stall_once_ns.swap(0, Ordering::SeqCst);
+            if ns > 0 {
+                std::thread::sleep(Duration::from_nanos(ns));
+            }
+        }
+        if self.flaky_armed.load(Ordering::Relaxed) {
+            match self.flaky_draw(seen) {
+                FlakyAction::None => {}
+                FlakyAction::Panic(batch) => {
+                    // xtask: allow(no-panic) justification: the flaky window's whole
+                    // purpose is injecting intermittent worker panics (isolated by
+                    // catch_unwind) for the resilient-client chaos tests.
+                    panic!("fault injection: flaky panic on batch {batch}");
+                }
+                FlakyAction::Stall(d) => std::thread::sleep(d),
+            }
+        }
         let ns = self.slow_batch_ns.load(Ordering::Relaxed);
         if ns > 0 {
             std::thread::sleep(Duration::from_nanos(ns));
         }
+    }
+
+    /// Resolve one batch's fate under the armed flaky window. The draw
+    /// (and the window bookkeeping) happens under the lock; the panic or
+    /// stall itself is performed by the caller *after* the guard drops,
+    /// so an injected panic cannot wedge the injector's own state.
+    fn flaky_draw(&self, seen: u64) -> FlakyAction {
+        let mut guard = lock_unpoisoned(&self.flaky);
+        let Some(state) = guard.as_mut() else {
+            return FlakyAction::None;
+        };
+        state.remaining -= 1;
+        let u = state.rng.uniform();
+        let action = if u < state.window.panic_prob {
+            FlakyAction::Panic(seen)
+        } else if u < state.window.panic_prob + state.window.stall_prob {
+            FlakyAction::Stall(state.window.stall)
+        } else {
+            FlakyAction::None
+        };
+        if state.remaining == 0 {
+            *guard = None;
+            self.flaky_armed.store(false, Ordering::SeqCst);
+        }
+        action
     }
 }
 
@@ -177,6 +312,85 @@ mod tests {
         let mut out = [0.1];
         f.corrupt_outputs(&mut out);
         assert_eq!(out, [0.1]);
+    }
+
+    #[test]
+    fn one_shot_stall_hits_exactly_one_batch() {
+        let f = FaultInjector::new();
+        f.arm_stall_on_batch(2, Duration::from_millis(5));
+        let t0 = std::time::Instant::now();
+        f.before_batch(); // batch 1: untouched
+        assert!(t0.elapsed() < Duration::from_millis(5));
+        let t1 = std::time::Instant::now();
+        f.before_batch(); // batch 2: stalls once
+        assert!(t1.elapsed() >= Duration::from_millis(5));
+        let t2 = std::time::Instant::now();
+        f.before_batch(); // batch 3: trigger cleared
+        assert!(t2.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn flaky_window_panics_deterministically_and_disarms() {
+        // p=1 panics every batch in the window, then the injector is
+        // inert again without any explicit clear.
+        let f = FaultInjector::new();
+        f.arm_flaky_window(FlakyWindow {
+            seed: 7,
+            panic_prob: 1.0,
+            stall_prob: 0.0,
+            stall: Duration::ZERO,
+            batches: 2,
+        });
+        for _ in 0..2 {
+            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.before_batch()));
+            assert!(err.is_err(), "every batch in a p=1 window must panic");
+        }
+        for _ in 0..5 {
+            f.before_batch(); // window exhausted: clean
+        }
+    }
+
+    #[test]
+    fn flaky_window_replays_the_seeded_bernoulli_schedule() {
+        // The injector's panic/no-panic sequence must equal an
+        // independent replay of the same Pcg stream — fault schedules
+        // are part of the deterministic test contract, not noise.
+        let window = FlakyWindow {
+            seed: 42,
+            panic_prob: 0.5,
+            stall_prob: 0.0,
+            stall: Duration::ZERO,
+            batches: 32,
+        };
+        let f = FaultInjector::new();
+        f.arm_flaky_window(window);
+        let mut rng = Pcg::new(window.seed);
+        for i in 0..window.batches {
+            let expect_panic = rng.uniform() < window.panic_prob;
+            let got =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.before_batch()));
+            assert_eq!(got.is_err(), expect_panic, "batch {i} diverged from the seeded schedule");
+        }
+        f.before_batch(); // window over: inert
+    }
+
+    #[test]
+    fn flaky_window_can_stall_and_be_cleared_early() {
+        let f = FaultInjector::new();
+        f.arm_flaky_window(FlakyWindow {
+            seed: 3,
+            panic_prob: 0.0,
+            stall_prob: 1.0,
+            stall: Duration::from_millis(5),
+            batches: 100,
+        });
+        let t0 = std::time::Instant::now();
+        f.before_batch();
+        assert!(t0.elapsed() >= Duration::from_millis(5), "p=1 stall window must stall");
+        f.clear_flaky_window();
+        let t1 = std::time::Instant::now();
+        f.before_batch();
+        assert!(t1.elapsed() < Duration::from_millis(5), "cleared window must be inert");
     }
 
     #[test]

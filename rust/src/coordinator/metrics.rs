@@ -4,7 +4,10 @@
 //! requests, and the in-flight queue-depth high-water mark) and the
 //! drift-sentinel counters (canary cross-checks, drift alarms, recovery
 //! probes, drift-degraded requests, recoveries, and non-finite engine
-//! outputs caught by the worker guard).
+//! outputs caught by the worker guard) and the resilient-client counters
+//! (retries, budget-exhausted stops, hedges and hedge outcomes, and
+//! per-function circuit-breaker rejections/opens/recloses — see
+//! [`super::client`]).
 
 use super::request::RejectReason;
 use crate::util::stats::LatencyHistogram;
@@ -51,6 +54,15 @@ struct Inner {
     drift_degraded: u64,
     drift_recoveries: u64,
     nonfinite_outputs: u64,
+    client_retries: u64,
+    client_retry_budget_exhausted: u64,
+    client_hedges: u64,
+    client_hedge_wins: u64,
+    client_hedge_verified: u64,
+    client_hedge_mismatches: u64,
+    breaker_rejections: u64,
+    breaker_opens: u64,
+    breaker_recloses: u64,
     queue: Option<LatencyHistogram>,
     exec: Option<LatencyHistogram>,
     e2e: Option<LatencyHistogram>,
@@ -102,6 +114,28 @@ pub struct Snapshot {
     /// Engine outputs caught non-finite by the worker guard and answered
     /// with a typed error instead of a poisoned float.
     pub nonfinite_outputs: u64,
+    /// Resilient-client retry attempts after a retryable failure
+    /// ([`super::client::ResilientClient`]).
+    pub client_retries: u64,
+    /// Retries the client *wanted* but the token-bucket budget refused —
+    /// storm containment doing its job.
+    pub client_retry_budget_exhausted: u64,
+    /// Hedge attempts launched after the configured latency threshold.
+    pub client_hedges: u64,
+    /// Hedged requests won by the hedge attempt (the primary lost).
+    pub client_hedge_wins: u64,
+    /// Hedge losers that completed and matched the winner bit-for-bit —
+    /// the idempotency dividend, audited.
+    pub client_hedge_verified: u64,
+    /// Hedge losers that completed and *diverged* from the winner. Must
+    /// stay 0; anything else is a determinism bug.
+    pub client_hedge_mismatches: u64,
+    /// Calls refused fast by an open per-function circuit breaker.
+    pub breaker_rejections: u64,
+    /// Closed→Open breaker transitions (failure threshold crossed).
+    pub breaker_opens: u64,
+    /// HalfOpen→Closed breaker transitions (probe streak succeeded).
+    pub breaker_recloses: u64,
     pub mean_batch_size: f64,
     pub queue_p50_us: f64,
     pub queue_p99_us: f64,
@@ -205,6 +239,51 @@ impl Metrics {
         lock_unpoisoned(&self.inner).nonfinite_outputs += 1;
     }
 
+    /// Count a resilient-client retry attempt.
+    pub fn record_client_retry(&self) {
+        lock_unpoisoned(&self.inner).client_retries += 1;
+    }
+
+    /// Count a retry refused by an exhausted retry budget.
+    pub fn record_retry_budget_exhausted(&self) {
+        lock_unpoisoned(&self.inner).client_retry_budget_exhausted += 1;
+    }
+
+    /// Count a hedge attempt launched.
+    pub fn record_client_hedge(&self) {
+        lock_unpoisoned(&self.inner).client_hedges += 1;
+    }
+
+    /// Count a hedged request won by the hedge attempt.
+    pub fn record_client_hedge_win(&self) {
+        lock_unpoisoned(&self.inner).client_hedge_wins += 1;
+    }
+
+    /// Count a hedge loser audited bit-identical to the winner.
+    pub fn record_client_hedge_verified(&self) {
+        lock_unpoisoned(&self.inner).client_hedge_verified += 1;
+    }
+
+    /// Count a hedge loser that diverged from the winner (determinism bug).
+    pub fn record_client_hedge_mismatch(&self) {
+        lock_unpoisoned(&self.inner).client_hedge_mismatches += 1;
+    }
+
+    /// Count a call refused fast by an open circuit breaker.
+    pub fn record_breaker_rejection(&self) {
+        lock_unpoisoned(&self.inner).breaker_rejections += 1;
+    }
+
+    /// Count a Closed→Open breaker transition.
+    pub fn record_breaker_open(&self) {
+        lock_unpoisoned(&self.inner).breaker_opens += 1;
+    }
+
+    /// Count a HalfOpen→Closed breaker transition.
+    pub fn record_breaker_reclose(&self) {
+        lock_unpoisoned(&self.inner).breaker_recloses += 1;
+    }
+
     /// Track the in-flight high-water mark (called at admission).
     pub fn note_queue_depth(&self, depth: u64) {
         let mut m = lock_unpoisoned(&self.inner);
@@ -240,6 +319,15 @@ impl Metrics {
             drift_degraded: m.drift_degraded,
             drift_recoveries: m.drift_recoveries,
             nonfinite_outputs: m.nonfinite_outputs,
+            client_retries: m.client_retries,
+            client_retry_budget_exhausted: m.client_retry_budget_exhausted,
+            client_hedges: m.client_hedges,
+            client_hedge_wins: m.client_hedge_wins,
+            client_hedge_verified: m.client_hedge_verified,
+            client_hedge_mismatches: m.client_hedge_mismatches,
+            breaker_rejections: m.breaker_rejections,
+            breaker_opens: m.breaker_opens,
+            breaker_recloses: m.breaker_recloses,
             mean_batch_size: if m.batches == 0 {
                 0.0
             } else {
@@ -265,6 +353,8 @@ impl Snapshot {
              panics={} respawns={} shutdown-answered={} | queue hw={}\n\
              drift canary/alarm/probe/degraded/recovered: {}/{}/{}/{}/{} | \
              nonfinite={}\n\
+             client retry/budget-stop/hedge/hedge-win/verified/mismatch: \
+             {}/{}/{}/{}/{}/{} | breaker reject/open/reclose: {}/{}/{}\n\
              queue p50/p99: {:.1}/{:.1} us | exec p50/p99: {:.1}/{:.1} us | \
              e2e p50/p99: {:.1}/{:.1} us | throughput {:.0} req/s",
             self.requests,
@@ -287,6 +377,15 @@ impl Snapshot {
             self.drift_degraded,
             self.drift_recoveries,
             self.nonfinite_outputs,
+            self.client_retries,
+            self.client_retry_budget_exhausted,
+            self.client_hedges,
+            self.client_hedge_wins,
+            self.client_hedge_verified,
+            self.client_hedge_mismatches,
+            self.breaker_rejections,
+            self.breaker_opens,
+            self.breaker_recloses,
             self.queue_p50_us,
             self.queue_p99_us,
             self.exec_p50_us,
@@ -338,6 +437,18 @@ mod tests {
         m.record_drift_degraded();
         m.record_drift_recovery();
         m.record_nonfinite();
+        m.record_client_retry();
+        m.record_client_retry();
+        m.record_retry_budget_exhausted();
+        m.record_client_hedge();
+        m.record_client_hedge_win();
+        m.record_client_hedge_verified();
+        m.record_client_hedge_mismatch();
+        m.record_breaker_rejection();
+        m.record_breaker_rejection();
+        m.record_breaker_rejection();
+        m.record_breaker_open();
+        m.record_breaker_reclose();
         let s = m.snapshot();
         assert_eq!(s.rejected_queue_full, 1);
         assert_eq!(s.rejected_bad_request, 2);
@@ -354,10 +465,23 @@ mod tests {
         assert_eq!(s.drift_degraded, 1);
         assert_eq!(s.drift_recoveries, 1);
         assert_eq!(s.nonfinite_outputs, 1);
+        assert_eq!(s.client_retries, 2);
+        assert_eq!(s.client_retry_budget_exhausted, 1);
+        assert_eq!(s.client_hedges, 1);
+        assert_eq!(s.client_hedge_wins, 1);
+        assert_eq!(s.client_hedge_verified, 1);
+        assert_eq!(s.client_hedge_mismatches, 1);
+        assert_eq!(s.breaker_rejections, 3);
+        assert_eq!(s.breaker_opens, 1);
+        assert_eq!(s.breaker_recloses, 1);
         assert!(s.report().contains("rejected qfull/bad/deadline: 1/2/1"));
         assert!(s.report().contains("queue hw=7"));
         assert!(s.report().contains("drift canary/alarm/probe/degraded/recovered: 2/1/1/1/1"));
         assert!(s.report().contains("nonfinite=1"));
+        assert!(s
+            .report()
+            .contains("client retry/budget-stop/hedge/hedge-win/verified/mismatch: 2/1/1/1/1/1"));
+        assert!(s.report().contains("breaker reject/open/reclose: 3/1/1"));
     }
 
     #[test]
@@ -371,5 +495,8 @@ mod tests {
         assert_eq!(s.canary_checks, 0);
         assert_eq!(s.drift_alarms, 0);
         assert_eq!(s.nonfinite_outputs, 0);
+        assert_eq!(s.client_retries, 0);
+        assert_eq!(s.client_hedges, 0);
+        assert_eq!(s.breaker_rejections, 0);
     }
 }

@@ -21,6 +21,9 @@
 //! - [`sentinel`] — drift detection: canary cross-checks of bit-level
 //!   responses against the analytic closed form, per-function error
 //!   EWMAs, and the quarantine state machine.
+//! - [`client`] — the caller-side recovery ladder: deadline-carving
+//!   retries with token-bucket budgets, hedged requests with
+//!   bit-identity audits, and per-function circuit breakers.
 //!
 //! # Failure model
 //!
@@ -93,6 +96,46 @@
 //! and released on `Drop`, so no failure path — panic unwind, shutdown
 //! drop, reply sent — can leak queue depth.
 //!
+//! # Client-side recovery taxonomy
+//!
+//! Everything above describes how the *server* fails; [`client`] is how
+//! the *caller* recovers. Its ladder keys on one classification,
+//! [`EvalError::is_retryable`](request::EvalError::is_retryable):
+//!
+//! - **Retryable** — `Timeout`, `Rejected(QueueFull)`, `WorkerPanic`,
+//!   `Engine`: transient by construction (slow reply, momentary load,
+//!   respawned worker, injected intermittent fault). A fresh identical
+//!   attempt can win, and resubmission is *safe* because served outputs
+//!   are deterministic per request (the seed-discipline note above).
+//! - **Terminal** — `Rejected(BadRequest)`, `Rejected(Deadline)`,
+//!   `Shutdown`, `CircuitOpen`: deterministic refusals or gone-forever
+//!   states. Retrying cannot help and never burns budget.
+//!
+//! Recovery is then four independently configurable rungs
+//! ([`client::ClientConfig`]):
+//!
+//! - **Retries** carve each attempt's timeout from one overall deadline
+//!   and back off with equal-jitter drawn from a seeded
+//!   [`crate::util::prng::Pcg`] stream — deterministic schedules, no
+//!   `thread_rng`.
+//! - **Budgets** are a token bucket (spend 1 per retry, earn a fraction
+//!   per success) bounding retry amplification: a correlated outage
+//!   costs at most `initial + earned` extra requests, never a storm.
+//! - **Hedges** launch a second identical request after a latency
+//!   threshold and take the first answer; the loser is audited for
+//!   bit-identity with the winner when it lands (mismatch counters must
+//!   stay 0 — that audit *is* the determinism invariant, exercised on
+//!   live traffic).
+//! - **Circuit breakers** are per-function `Closed → Open → HalfOpen`
+//!   with count-based probe cadence (the sentinel's idiom); while open,
+//!   callers get a typed [`EvalError::CircuitOpen`](request::EvalError)
+//!   without the server ever seeing the request.
+//!
+//! With all four rungs disabled (the default config) the client is a
+//! strict passthrough to
+//! [`EvalServer::eval_sync_with_timeout`](server::EvalServer::eval_sync_with_timeout)
+//! — byte-for-byte, pinned by the chaos suite.
+//!
 //! # Mechanically-enforced invariants
 //!
 //! The contracts above are not prose-only: `docs/INVARIANTS.md` (repo
@@ -106,6 +149,7 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod client;
 pub mod fault;
 pub mod metrics;
 pub mod request;
@@ -113,7 +157,11 @@ pub mod sentinel;
 pub mod server;
 
 pub use admission::{Admission, AdmissionConfig};
-pub use fault::FaultInjector;
+pub use client::{
+    BreakerConfig, BreakerState, BudgetConfig, ClientConfig, HedgeAudit, HedgeConfig, HedgeDelay,
+    ResilientClient, RetryPolicy,
+};
+pub use fault::{FaultInjector, FlakyWindow};
 pub use request::{Engine, EvalError, EvalRequest, EvalResponse, RejectReason, DEFAULT_STREAM_SEED};
 pub use sentinel::{DriftAlarm, DriftSentinel, EngineHealth, SentinelConfig};
 pub use server::{EvalServer, ServerConfig};

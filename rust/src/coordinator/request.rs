@@ -92,6 +92,44 @@ pub enum EvalError {
     /// The engine itself failed (unknown function at execution time,
     /// unavailable XLA runtime, …).
     Engine(String),
+    /// Refused by the *client-side* circuit breaker
+    /// ([`crate::coordinator::client`]): recent attempts against this
+    /// function kept failing, so the client fails fast without loading
+    /// the server. Never produced by the server itself.
+    CircuitOpen,
+}
+
+impl EvalError {
+    /// Whether a fresh, identical attempt could plausibly succeed — the
+    /// classification the resilient client's retry/hedge ladder keys on.
+    ///
+    /// Retryable: [`Timeout`](EvalError::Timeout) (the reply may simply
+    /// have been slow), `Rejected(QueueFull)` (load is transient),
+    /// [`WorkerPanic`](EvalError::WorkerPanic) (the supervisor respawns
+    /// the worker), and [`Engine`](EvalError::Engine) (covers injected
+    /// intermittent faults; a deterministic engine bug fails again and
+    /// burns one retry, which the budget bounds).
+    ///
+    /// Terminal: `Rejected(BadRequest)` (same input, same refusal),
+    /// `Rejected(Deadline)` (the deadline stays expired),
+    /// [`Shutdown`](EvalError::Shutdown) (the server is gone), and
+    /// [`CircuitOpen`](EvalError::CircuitOpen) (retrying immediately
+    /// would defeat the breaker).
+    ///
+    /// Resubmission is *safe* in every case because served outputs are
+    /// deterministic per request: seeds derive from
+    /// [`DEFAULT_STREAM_SEED`] `^` the within-request point index, never
+    /// from batch composition or worker identity.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            EvalError::Timeout | EvalError::WorkerPanic(_) | EvalError::Engine(_) => true,
+            EvalError::Rejected(RejectReason::QueueFull) => true,
+            EvalError::Rejected(RejectReason::BadRequest(_))
+            | EvalError::Rejected(RejectReason::Deadline)
+            | EvalError::Shutdown
+            | EvalError::CircuitOpen => false,
+        }
+    }
 }
 
 impl fmt::Display for EvalError {
@@ -102,6 +140,9 @@ impl fmt::Display for EvalError {
             EvalError::WorkerPanic(msg) => write!(f, "worker panicked: {msg}"),
             EvalError::Shutdown => write!(f, "server shut down before the request was evaluated"),
             EvalError::Engine(msg) => write!(f, "engine error: {msg}"),
+            EvalError::CircuitOpen => {
+                write!(f, "circuit breaker open: failing fast without contacting the server")
+            }
         }
     }
 }
@@ -194,12 +235,6 @@ pub struct EvalResponse {
 }
 
 impl EvalResponse {
-    /// An engine failure with a plain message (shorthand for
-    /// `from_error(EvalError::Engine(..))`).
-    pub fn failed(msg: impl Into<String>) -> Self {
-        Self::from_error(EvalError::Engine(msg.into()))
-    }
-
     /// An empty response carrying a typed error.
     pub fn from_error(error: EvalError) -> Self {
         Self {
@@ -229,10 +264,27 @@ mod tests {
 
     #[test]
     fn failed_response() {
-        let r = EvalResponse::failed("nope");
+        let r = EvalResponse::from_error(EvalError::Engine("nope".into()));
         assert!(!r.is_ok());
         assert_eq!(r.error, Some(EvalError::Engine("nope".into())));
         assert_eq!(r.error_message().as_deref(), Some("engine error: nope"));
+    }
+
+    #[test]
+    fn retryable_classification_matches_the_ladder_contract() {
+        // Retryable: transient by construction — a fresh attempt can win.
+        assert!(EvalError::Timeout.is_retryable());
+        assert!(EvalError::Rejected(RejectReason::QueueFull).is_retryable());
+        assert!(EvalError::WorkerPanic("boom".into()).is_retryable());
+        assert!(EvalError::Engine("flaky".into()).is_retryable());
+        // Terminal: deterministic refusals and gone-forever states.
+        assert!(!EvalError::Rejected(RejectReason::BadRequest("arity".into())).is_retryable());
+        assert!(!EvalError::Rejected(RejectReason::Deadline).is_retryable());
+        assert!(!EvalError::Shutdown.is_retryable());
+        assert!(!EvalError::CircuitOpen.is_retryable());
+        // The client-side variant renders for humans like the rest.
+        let r = EvalResponse::from_error(EvalError::CircuitOpen);
+        assert!(r.error_message().unwrap().contains("circuit breaker open"));
     }
 
     #[test]

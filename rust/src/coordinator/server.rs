@@ -332,6 +332,14 @@ impl EvalServer {
         self.shared.metrics.snapshot()
     }
 
+    /// Shared metrics sink handle (crate-internal): the resilient client
+    /// ([`super::client`]) records its retry/hedge/breaker counters into
+    /// the same sink the server reports from, so one snapshot covers the
+    /// whole serving path.
+    pub(crate) fn metrics_handle(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
     /// Admission state (depths, shedding latch; `force_shed` for tests
     /// and benches).
     pub fn admission(&self) -> &Admission {
@@ -513,7 +521,9 @@ fn execute_batch(shared: &Shared, batch: Batch) {
         // kept as defense for directly-injected batches.
         for req in requests {
             shared.metrics.record_error();
-            let _ = req.reply.send(EvalResponse::failed(format!("unknown function {fname}")));
+            let _ = req.reply.send(EvalResponse::from_error(EvalError::Engine(format!(
+                "unknown function {fname}"
+            ))));
         }
         return;
     };
@@ -560,9 +570,9 @@ fn execute_batch(shared: &Shared, batch: Batch) {
                 if let Some(bad) = span_out.iter().find(|y| !y.is_finite()) {
                     shared.metrics.record_nonfinite();
                     shared.metrics.record_error();
-                    let _ = req.reply.send(EvalResponse::failed(format!(
+                    let _ = req.reply.send(EvalResponse::from_error(EvalError::Engine(format!(
                         "engine produced non-finite output {bad}"
-                    )));
+                    ))));
                     continue;
                 }
                 // Canary/probe cross-check: feed the mean error vs the
@@ -602,7 +612,7 @@ fn execute_batch(shared: &Shared, batch: Batch) {
         Err(e) => {
             for req in requests {
                 shared.metrics.record_error();
-                let _ = req.reply.send(EvalResponse::failed(e.clone()));
+                let _ = req.reply.send(EvalResponse::from_error(EvalError::Engine(e.clone())));
             }
         }
     }

@@ -75,6 +75,18 @@ impl Pcg {
         ((self.next_u64() as u128 * n as u128) >> 64) as u64
     }
 
+    /// Uniform `Duration` in `[lo, hi)`. The resilient client's backoff
+    /// jitter draws from a seeded stream through this helper (no
+    /// `thread_rng` anywhere), so retry schedules replay deterministically
+    /// under a fixed seed. `hi <= lo` returns `lo`.
+    pub fn range_duration(&mut self, lo: std::time::Duration, hi: std::time::Duration) -> std::time::Duration {
+        if hi <= lo {
+            return lo;
+        }
+        let span = (hi - lo).as_nanos().min(u64::MAX as u128) as u64;
+        lo + std::time::Duration::from_nanos(self.below(span.max(1)))
+    }
+
     /// Standard normal via Box–Muller.
     pub fn normal(&mut self) -> f64 {
         let u1 = self.uniform().max(f64::MIN_POSITIVE);
@@ -131,6 +143,22 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.below(10) < 10);
         }
+    }
+
+    #[test]
+    fn range_duration_bounds_and_determinism() {
+        use std::time::Duration;
+        let (lo, hi) = (Duration::from_millis(2), Duration::from_millis(6));
+        let mut a = Pcg::new(9);
+        let mut b = Pcg::new(9);
+        for _ in 0..200 {
+            let d = a.range_duration(lo, hi);
+            assert!(d >= lo && d < hi, "{d:?}");
+            assert_eq!(d, b.range_duration(lo, hi), "same seed, same jitter schedule");
+        }
+        // Degenerate span collapses to lo instead of panicking.
+        assert_eq!(a.range_duration(hi, lo), hi);
+        assert_eq!(a.range_duration(lo, lo), lo);
     }
 
     #[test]

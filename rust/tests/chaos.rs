@@ -9,8 +9,9 @@
 
 use smurf::coordinator::batcher::BatchPolicy;
 use smurf::coordinator::{
-    AdmissionConfig, Engine, EngineHealth, EvalError, EvalRequest, EvalServer, FaultInjector,
-    RejectReason, SentinelConfig, ServerConfig,
+    AdmissionConfig, BreakerConfig, BreakerState, BudgetConfig, ClientConfig, Engine,
+    EngineHealth, EvalError, EvalRequest, EvalServer, FaultInjector, FlakyWindow, HedgeConfig,
+    HedgeDelay, RejectReason, ResilientClient, RetryPolicy, SentinelConfig, ServerConfig,
 };
 use smurf::prelude::*;
 use std::sync::mpsc::channel;
@@ -476,6 +477,362 @@ fn dropped_clients_under_panics_leak_nothing() {
     await_pool(&server, 2);
     let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::Analytic, 64);
     assert!(resp.is_ok(), "{:?}", resp.error);
+    server.shutdown();
+}
+
+/// Wait (bounded) until in-flight depth accounting drains to zero.
+fn await_drain(server: &EvalServer) {
+    for _ in 0..2000 {
+        if server.admission().total_depth() == 0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("in-flight depth did not drain (depth={})", server.admission().total_depth());
+}
+
+/// The invariant the whole resilient-client ladder stands on (ISSUE 9
+/// satellite): submitting the *same* request twice through the full
+/// server yields bitwise-identical outputs on both engines — including
+/// after a worker panic and respawn, because stream seeds derive from
+/// `DEFAULT_STREAM_SEED ^ point_index`, never from batch composition or
+/// worker identity.
+#[test]
+fn resubmission_is_bit_identical_across_respawns() {
+    let (server, faults) = chaos_server(2, default_policy(), AdmissionConfig::default());
+    let reference =
+        SmurfApproximator::synthesize(&SmurfConfig::uniform(2, 4), &functions::euclidean2(), 64);
+    let points = vec![vec![0.2, 0.7], vec![0.5, 0.5], vec![0.9, 0.1]];
+
+    let run = |engine: Engine| -> Vec<f64> {
+        let resp = server.eval_sync("euclidean2", points.clone(), engine, 256);
+        assert!(resp.is_ok() && !resp.degraded, "{:?}", resp.error);
+        resp.outputs
+    };
+    let bit_a = run(Engine::BitLevel);
+    let bit_b = run(Engine::BitLevel);
+    for (a, b) in bit_a.iter().zip(&bit_b) {
+        assert_eq!(a.to_bits(), b.to_bits(), "BitLevel resubmission must be bit-identical");
+    }
+    // Pinned to the seed-discipline contract, not just self-consistent.
+    for (i, (p, out)) in points.iter().zip(&bit_a).enumerate() {
+        assert_eq!(
+            out.to_bits(),
+            reference.eval_bitstream(p, 256, 0x5EED ^ i as u64).to_bits(),
+            "point {i} must be served at seed DEFAULT_STREAM_SEED ^ {i}"
+        );
+    }
+    let an_a = run(Engine::Analytic);
+    let an_b = run(Engine::Analytic);
+    for (a, b) in an_a.iter().zip(&an_b) {
+        assert_eq!(a.to_bits(), b.to_bits(), "Analytic resubmission must be bit-identical");
+    }
+
+    // Kill a worker mid-stream; the respawned pool must serve the same bits.
+    faults.arm_panic_on_batch(1);
+    let (rtx, rrx) = channel();
+    server
+        .submit(EvalRequest::new("euclidean2", points.clone(), Engine::Analytic, 64, rtx))
+        .expect("sacrificial traffic admits");
+    let _ = rrx.recv_timeout(Duration::from_secs(10)).expect("sacrificial request answered");
+    await_pool(&server, 2);
+    let bit_c = run(Engine::BitLevel);
+    for (a, c) in bit_a.iter().zip(&bit_c) {
+        assert_eq!(a.to_bits(), c.to_bits(), "respawned worker must serve identical bits");
+    }
+    await_drain(&server);
+    server.shutdown();
+}
+
+/// Ladder rung 1+2: a deterministically flaky worker (seeded Bernoulli
+/// panic window) is survived by deadline-carved retries, the answer is
+/// bit-identical to a clean run, and the retry count is exactly the
+/// number of injected failures — no storm.
+#[test]
+fn flaky_worker_survived_by_retries_within_budget() {
+    let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    let (server, faults) = chaos_server(1, policy, AdmissionConfig::default());
+    let reference =
+        SmurfApproximator::synthesize(&SmurfConfig::uniform(2, 4), &functions::euclidean2(), 64);
+    // The first two batches panic (p = 1 over a 2-batch window), then heal.
+    faults.arm_flaky_window(FlakyWindow {
+        seed: 1,
+        panic_prob: 1.0,
+        stall_prob: 0.0,
+        stall: Duration::ZERO,
+        batches: 2,
+    });
+    let client = ResilientClient::new(
+        &server,
+        ClientConfig {
+            retry: Some(RetryPolicy {
+                max_retries: 3,
+                backoff_base: Duration::ZERO, // keep the test fast; jitter is moot at 0
+                ..RetryPolicy::default()
+            }),
+            budget: Some(BudgetConfig { initial: 5.0, max: 5.0, earn_per_success: 0.1 }),
+            ..ClientConfig::default()
+        },
+    );
+
+    let resp = client.eval("euclidean2", vec![vec![0.3, 0.4]], Engine::BitLevel, 256);
+    assert!(resp.is_ok(), "retries must survive the flaky window: {:?}", resp.error);
+    assert_eq!(
+        resp.outputs[0].to_bits(),
+        reference.eval_bitstream(&[0.3, 0.4], 256, 0x5EED).to_bits(),
+        "the surviving attempt serves the exact same bits as a clean run"
+    );
+    let snap = server.metrics();
+    assert_eq!(snap.client_retries, 2, "exactly one retry per injected panic");
+    assert_eq!(snap.client_retry_budget_exhausted, 0);
+    assert!(snap.panics >= 2, "both injected panics were real worker deaths");
+    // 5 tokens - 2 retries + 0.1 earned by the success.
+    let tokens = client.retry_budget_tokens().expect("budget configured");
+    assert!((tokens - 3.1).abs() < 1e-9, "tokens={tokens}");
+    await_drain(&server);
+    await_pool(&server, 1);
+    drop(client);
+    server.shutdown();
+}
+
+/// Ladder rung 2 under a *persistent* fault: the token-bucket budget
+/// caps total retry amplification across calls. 5 failing evals against
+/// a 3-token budget spend exactly 3 retries ever, every call still
+/// resolves with the typed underlying error, and depth drains to zero.
+#[test]
+fn retry_storm_is_contained_by_the_budget() {
+    let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    let (server, faults) = chaos_server(1, policy, AdmissionConfig::default());
+    faults.arm_flaky_window(FlakyWindow {
+        seed: 2,
+        panic_prob: 1.0, // every batch dies for the whole window
+        stall_prob: 0.0,
+        stall: Duration::ZERO,
+        batches: 100,
+    });
+    let client = ResilientClient::new(
+        &server,
+        ClientConfig {
+            retry: Some(RetryPolicy {
+                max_retries: 10,
+                backoff_base: Duration::ZERO,
+                ..RetryPolicy::default()
+            }),
+            budget: Some(BudgetConfig { initial: 3.0, max: 3.0, earn_per_success: 0.1 }),
+            ..ClientConfig::default()
+        },
+    );
+
+    for _ in 0..5 {
+        let resp = client.eval("euclidean2", vec![vec![0.3, 0.4]], Engine::BitLevel, 64);
+        assert!(
+            matches!(resp.error, Some(EvalError::WorkerPanic(_))),
+            "the underlying typed error must surface when retries stop: {:?}",
+            resp.error
+        );
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.client_retries, 3, "the 3-token budget caps total retries at 3");
+    assert_eq!(
+        snap.client_retry_budget_exhausted, 5,
+        "every eval eventually hit the empty bucket (once each)"
+    );
+    assert_eq!(client.retry_budget_tokens(), Some(0.0));
+    // Storm arithmetic: 5 calls + 3 retries = 8 server attempts total,
+    // not 5 * (1 + max_retries) = 55.
+    assert_eq!(snap.panics, 8, "no amplification beyond the budget cap");
+    faults.clear_flaky_window();
+    await_drain(&server);
+    await_pool(&server, 1);
+    drop(client);
+    server.shutdown();
+}
+
+/// Ladder rung 3: a hedged request beats a stalled worker well inside
+/// the deadline, and the losing (stalled) attempt is audited
+/// bit-identical to the winner when it finally lands — the idempotency
+/// dividend, checked on live traffic.
+#[test]
+fn hedged_request_beats_a_stalled_worker_within_deadline() {
+    let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    let (server, faults) = chaos_server(2, policy, AdmissionConfig::default());
+    let reference =
+        SmurfApproximator::synthesize(&SmurfConfig::uniform(2, 4), &functions::euclidean2(), 64);
+    // The very first batch (the primary attempt) stalls 400 ms; the
+    // hedge lands on the second, healthy worker.
+    faults.arm_stall_on_batch(1, Duration::from_millis(400));
+    let client = ResilientClient::new(
+        &server,
+        ClientConfig {
+            hedge: Some(HedgeConfig { delay: HedgeDelay::Fixed(Duration::from_millis(20)) }),
+            ..ClientConfig::default()
+        },
+    );
+
+    let t0 = Instant::now();
+    let resp = client.eval_with_timeout(
+        "euclidean2",
+        vec![vec![0.3, 0.4]],
+        Engine::BitLevel,
+        256,
+        Duration::from_secs(5),
+    );
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    assert!(
+        t0.elapsed() < Duration::from_millis(300),
+        "the hedge must beat the 400 ms stall, got {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(
+        resp.outputs[0].to_bits(),
+        reference.eval_bitstream(&[0.3, 0.4], 256, 0x5EED).to_bits(),
+        "hedged answer is the same deterministic bits"
+    );
+    let snap = server.metrics();
+    assert!(snap.client_hedges >= 1, "a hedge must have launched");
+    assert!(snap.client_hedge_wins >= 1, "the hedge must have won");
+
+    // The stalled loser completes eventually; audit it against the winner.
+    let audit = client.drain_hedge_audits(Duration::from_secs(5));
+    assert!(audit.verified >= 1, "the loser must resolve and verify: {audit:?}");
+    assert_eq!(audit.mismatched, 0, "bit-identity must hold: {audit:?}");
+    assert_eq!(server.metrics().client_hedge_mismatches, 0);
+    await_drain(&server);
+    drop(client);
+    server.shutdown();
+}
+
+/// Ladder rung 4: a persistent engine fault trips the per-function
+/// breaker (fail-fast `CircuitOpen` without touching the server), probes
+/// keep sampling the function, and once the fault clears the probe
+/// streak recloses the breaker and full service resumes bit-exact.
+#[test]
+fn breaker_opens_probes_and_recloses_after_the_fault_clears() {
+    let (server, faults) = chaos_server(1, default_policy(), AdmissionConfig::default());
+    let reference =
+        SmurfApproximator::synthesize(&SmurfConfig::uniform(2, 4), &functions::product2(), 64);
+    faults.set_poison_nan(true); // every BitLevel eval → typed Engine error
+    let client = ResilientClient::new(
+        &server,
+        ClientConfig {
+            breaker: Some(BreakerConfig {
+                failure_threshold: 3,
+                probe_interval: 2,
+                probe_successes: 2,
+            }),
+            ..ClientConfig::default()
+        },
+    );
+    let eval = |client: &ResilientClient| {
+        client.eval("product2", vec![vec![0.5, 0.5]], Engine::BitLevel, 64)
+    };
+
+    // 3 engine failures trip the breaker.
+    for _ in 0..3 {
+        let resp = eval(&client);
+        assert!(matches!(resp.error, Some(EvalError::Engine(_))), "{:?}", resp.error);
+    }
+    assert_eq!(client.breaker_state("product2"), BreakerState::Open);
+    assert_eq!(server.metrics().breaker_opens, 1);
+
+    // While open: fail-fast rejections, with every probe_interval-th
+    // arrival probing the (still broken) engine.
+    let requests_before = server.metrics().requests;
+    let mut circuit_open_seen = 0;
+    for _ in 0..4 {
+        let resp = eval(&client);
+        if resp.error == Some(EvalError::CircuitOpen) {
+            circuit_open_seen += 1;
+        }
+    }
+    assert_eq!(circuit_open_seen, 2, "interval-2 probing: half the arrivals fail fast");
+    assert!(server.metrics().breaker_rejections >= 2);
+    assert_eq!(
+        server.metrics().requests,
+        requests_before,
+        "fail-fast rejections and failed probes never produce served requests"
+    );
+    assert_eq!(client.breaker_state("product2"), BreakerState::Open, "failed probes reopen");
+
+    // Fault clears → two successful probes reclose the breaker.
+    faults.set_poison_nan(false);
+    let mut reclosed = false;
+    for _ in 0..16 {
+        let _ = eval(&client);
+        if client.breaker_state("product2") == BreakerState::Closed {
+            reclosed = true;
+            break;
+        }
+    }
+    assert!(reclosed, "good probes must reclose the breaker");
+    assert_eq!(server.metrics().breaker_recloses, 1);
+
+    // Full service, bit-exact, and other functions were never affected.
+    let resp = eval(&client);
+    assert!(resp.is_ok() && !resp.degraded, "{:?}", resp.error);
+    assert_eq!(
+        resp.outputs[0].to_bits(),
+        reference.eval_bitstream(&[0.5, 0.5], 64, 0x5EED).to_bits()
+    );
+    assert_eq!(client.breaker_state("euclidean2"), BreakerState::Closed);
+    await_drain(&server);
+    drop(client);
+    server.shutdown();
+}
+
+/// Acceptance pin: with every ladder rung disabled (the default config)
+/// the client is byte-for-byte behavior-identical to calling the server
+/// directly — same bits on success, same typed errors on refusal, and
+/// zero client-side counters.
+#[test]
+fn default_client_config_is_passthrough_identical() {
+    let (server, _faults) = chaos_server(1, default_policy(), AdmissionConfig::default());
+    let client = ResilientClient::new(&server, ClientConfig::default());
+    let timeout = Duration::from_secs(5);
+
+    for engine in [Engine::BitLevel, Engine::Analytic] {
+        let via_client = client.eval_with_timeout(
+            "euclidean2",
+            vec![vec![0.3, 0.4], vec![0.8, 0.2]],
+            engine,
+            256,
+            timeout,
+        );
+        let direct = server.eval_sync_with_timeout(
+            "euclidean2",
+            vec![vec![0.3, 0.4], vec![0.8, 0.2]],
+            engine,
+            256,
+            timeout,
+        );
+        assert!(via_client.is_ok() && direct.is_ok());
+        assert_eq!(via_client.outputs.len(), direct.outputs.len());
+        for (a, b) in via_client.outputs.iter().zip(&direct.outputs) {
+            assert_eq!(a.to_bits(), b.to_bits(), "passthrough must serve identical bits");
+        }
+        assert_eq!(via_client.degraded, direct.degraded);
+    }
+
+    // Same typed refusals as the direct path.
+    let via_client =
+        client.eval_with_timeout("nope", vec![vec![0.1, 0.2]], Engine::Analytic, 64, timeout);
+    let direct =
+        server.eval_sync_with_timeout("nope", vec![vec![0.1, 0.2]], Engine::Analytic, 64, timeout);
+    assert!(matches!(via_client.error, Some(EvalError::Rejected(RejectReason::BadRequest(_)))));
+    assert_eq!(via_client.error, direct.error);
+
+    // The ladder never engaged: all client-side counters stay zero.
+    let snap = server.metrics();
+    assert_eq!(snap.client_retries, 0);
+    assert_eq!(snap.client_retry_budget_exhausted, 0);
+    assert_eq!(snap.client_hedges, 0);
+    assert_eq!(snap.client_hedge_wins, 0);
+    assert_eq!(snap.breaker_rejections, 0);
+    assert_eq!(snap.breaker_opens, 0);
+    assert_eq!(client.breaker_state("euclidean2"), BreakerState::Closed);
+    assert_eq!(client.retry_budget_tokens(), None);
+    await_drain(&server);
+    drop(client);
     server.shutdown();
 }
 

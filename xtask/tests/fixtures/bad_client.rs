@@ -1,0 +1,24 @@
+//! Negative fixture: resilient-client code that must trip the no-panic
+//! and doc'd-failure rules — proving the lints cover
+//! `coordinator/client.rs` like the rest of the serving core.
+
+/// The client's typed failure for this fixture.
+pub enum EvalError {
+    /// The breaker refused the call.
+    CircuitOpen,
+}
+
+/// Documented, but unwraps the hedge winner instead of surfacing a
+/// typed error.
+pub fn hedged(winner: Option<u32>) -> u32 {
+    winner.unwrap()
+}
+
+pub fn undocumented_retry(attempt: u32) -> u32 {
+    attempt + 1
+}
+
+/// Documented, but never names the typed failure mode of its ladder.
+pub fn submit_with_retries(x: u32) -> Result<u32, EvalError> {
+    Ok(x)
+}

@@ -99,6 +99,25 @@ fn doc_failure_flags_missing_docs_and_unnamed_failure_modes() {
 }
 
 #[test]
+fn client_module_is_covered_by_no_panic_and_doc_failure() {
+    // The resilient client (ISSUE 9) lives at coordinator/client.rs and
+    // must sit under the same serving-core lint umbrella: panicking
+    // calls and undocumented/vague failure APIs all fire there.
+    let findings = check_file(
+        "rust/src/coordinator/client.rs",
+        include_str!("fixtures/bad_client.rs"),
+    );
+    assert_eq!(
+        rule_names(&findings),
+        vec!["no-panic", "doc-failure", "doc-failure"],
+        "{findings:?}"
+    );
+    assert!(findings[0].message.contains(".unwrap()"), "{findings:?}");
+    assert!(findings[1].message.contains("undocumented"), "{findings:?}");
+    assert!(findings[2].message.contains("EvalError"), "{findings:?}");
+}
+
+#[test]
 fn allow_attr_requires_justification() {
     let findings = check_file(
         "rust/src/nn/layers.rs",
