@@ -12,7 +12,7 @@ FEATURES ?=
 FEATFLAGS := $(if $(FEATURES),--features $(FEATURES),)
 
 .PHONY: build test tier1 chaos clippy bench-json bench bench-build fault-sweep ci \
-	lint-invariants loom miri tsan careful verify-all
+	lint-invariants loom miri tsan careful verify-all fuzz-smoke soak
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST) $(FEATFLAGS)
@@ -65,6 +65,31 @@ bench: bench-json
 fault-sweep:
 	$(CARGO) bench --bench fault_sweep --manifest-path $(MANIFEST) $(FEATFLAGS)
 
+# Differential-oracle fuzz smoke (ISSUE 10): FUZZ_CASES seeded cases
+# through the exact-equality lattice (scalar == every plane width ==
+# TMR-at-0 == armed-zero faults, bit for bit) plus the bounded analytic
+# relation, with shrinking to a minimized seed+config repro on failure.
+# Sized for tier-1 time; override FUZZ_SEED to replay a reported case.
+FUZZ_CASES ?=
+FUZZ_SEED ?=
+fuzz-smoke:
+	FUZZ_CASES=$(FUZZ_CASES) FUZZ_SEED=$(FUZZ_SEED) \
+		$(CARGO) test --test soak --release --manifest-path $(MANIFEST) $(FEATFLAGS) \
+		-- --nocapture differential_oracle_fuzz_smoke
+
+# Chaos soak (ISSUE 10): SOAK_ROUNDS randomized server/client/fault
+# rounds with global invariant audits (answered-exactly-once metrics
+# conservation, depth drain, pool respawn, payload bit-fidelity,
+# sentinel/breaker legality) and an identical-seed byte-identical replay
+# per round. `#[ignore]`d from plain `cargo test`; a failure prints the
+# round seed — rerun with SOAK_SEED=<seed> SOAK_ROUNDS=1 to reproduce.
+SOAK_ROUNDS ?=
+SOAK_SEED ?=
+soak:
+	SOAK_ROUNDS=$(SOAK_ROUNDS) SOAK_SEED=$(SOAK_SEED) \
+		$(CARGO) test --test soak --release --manifest-path $(MANIFEST) $(FEATFLAGS) \
+		-- --ignored --nocapture chaos_soak
+
 # Repo-invariant static analysis (docs/INVARIANTS.md): zero-dep lint
 # pass over rust/src — coordinator no-panic, hot-loop alloc bans, seed
 # hygiene, plane-width genericity, doc'd failure modes, justified allows.
@@ -111,8 +136,9 @@ careful:
 
 # Everything a first session on a networked/toolchain machine should
 # run, in dependency order: static analysis, the tier-1 gate, lints,
-# chaos, assertion-heavy release tests, and bench compilation. (loom /
-# miri / tsan stay manual: they need the uncommented dep or nightly.)
-verify-all: lint-invariants tier1 clippy chaos careful bench-build
+# chaos, the randomized robustness harness, assertion-heavy release
+# tests, and bench compilation. (loom / miri / tsan stay manual: they
+# need the uncommented dep or nightly.)
+verify-all: lint-invariants tier1 clippy chaos fuzz-smoke soak careful bench-build
 
-ci: tier1 clippy lint-invariants
+ci: tier1 clippy lint-invariants fuzz-smoke

@@ -88,6 +88,8 @@ fn main() {
         println!("XLA engine: {xla_ok} requests served from the AOT kernel");
     }
     println!("\n=== service metrics ===\n{}", server.metrics().report());
-    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
     println!("serve OK");
 }

@@ -1,0 +1,84 @@
+//! Standalone chaos-soak driver: the same round engine the `#[ignore]`d
+//! integration test runs (`smurf::testutil::soak`), packaged as a
+//! long-running binary with environment-variable knobs and a per-round
+//! progress line. Exits non-zero on the first invariant violation,
+//! printing the violating round's seed — the one-line repro is
+//! `SOAK_SEED=<seed> SOAK_ROUNDS=1 cargo run --release --example soak`.
+//!
+//! Knobs (all optional; decimal or 0x-hex):
+//!   SOAK_SEED      base seed           (default: SoakOptions::default)
+//!   SOAK_ROUNDS    independent rounds  (default: 8)
+//!   SOAK_CLIENTS   client threads      (default: 3)
+//!   SOAK_REQUESTS  calls per client    (default: 24)
+//!   SOAK_REPLAY    0 disables the identical-seed replay audit
+//!
+//! Run: `cargo run --release --example soak`, or `make soak`.
+
+use smurf::testutil::{run_round, SoakOptions};
+use smurf::util::prng::GOLDEN_GAMMA;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        // Absent and empty (a Makefile-passed undefined knob) both fall
+        // back to the default.
+        Ok(v) if !v.trim().is_empty() => {
+            let v = v.trim().to_string();
+            let parsed = if let Some(hex) = v.strip_prefix("0x") {
+                u64::from_str_radix(hex, 16)
+            } else {
+                v.parse::<u64>()
+            };
+            match parsed {
+                Ok(n) => n,
+                Err(_) => {
+                    eprintln!("soak: {name}={v:?} is not a u64");
+                    std::process::exit(2);
+                }
+            }
+        }
+        _ => default,
+    }
+}
+
+fn main() {
+    let d = SoakOptions::default();
+    let opts = SoakOptions {
+        seed: env_u64("SOAK_SEED", d.seed),
+        rounds: env_u64("SOAK_ROUNDS", d.rounds as u64) as usize,
+        clients: env_u64("SOAK_CLIENTS", d.clients as u64) as usize,
+        requests_per_client: env_u64("SOAK_REQUESTS", d.requests_per_client as u64) as usize,
+        replay: env_u64("SOAK_REPLAY", 1) != 0,
+    };
+    println!(
+        "soak: {} rounds × {} clients × {} calls, seed={:#x}, replay={}",
+        opts.rounds, opts.clients, opts.requests_per_client, opts.seed, opts.replay
+    );
+    let mut compared = 0usize;
+    for r in 0..opts.rounds {
+        let seed = opts.seed.wrapping_add((r as u64).wrapping_mul(GOLDEN_GAMMA));
+        match run_round(seed, &opts) {
+            Ok(report) => {
+                compared += report.replay_compared;
+                println!("[{}/{}] {}", r + 1, opts.rounds, report.render());
+            }
+            Err(violation) => {
+                eprintln!("[{}/{}] INVARIANT VIOLATION\n{violation}", r + 1, opts.rounds);
+                eprintln!(
+                    "repro: SOAK_SEED={seed:#x} SOAK_ROUNDS=1 cargo run --release --example soak"
+                );
+                std::process::exit(1);
+            }
+        }
+    }
+    if opts.replay && opts.rounds > 0 && compared == 0 {
+        eprintln!(
+            "soak: replay enabled but zero payload pairs were comparable — \
+             the replay invariant was never exercised"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "soak OK: {} rounds green, {} replay pairs byte-identical",
+        opts.rounds, compared
+    );
+}

@@ -7,7 +7,9 @@
 //! outputs caught by the worker guard) and the resilient-client counters
 //! (retries, budget-exhausted stops, hedges and hedge outcomes, and
 //! per-function circuit-breaker rejections/opens/recloses — see
-//! [`super::client`]).
+//! [`super::client`]). The `submitted` counter plus
+//! [`Snapshot::check_conservation`] form the answered-exactly-once
+//! ledger the chaos soak (`crate::testutil::soak`) audits every round.
 
 use super::request::RejectReason;
 use crate::util::stats::LatencyHistogram;
@@ -35,6 +37,7 @@ impl Default for Metrics {
 
 #[derive(Debug, Default)]
 struct Inner {
+    submitted: u64,
     requests: u64,
     points: u64,
     batches: u64,
@@ -72,6 +75,12 @@ struct Inner {
 /// A point-in-time snapshot.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
+    /// Requests that entered [`super::server::EvalServer::submit`] —
+    /// the left-hand side of the conservation ledger
+    /// ([`Snapshot::check_conservation`]): once the queues drain, every
+    /// submitted request must be accounted for by exactly one of
+    /// `requests`, `errors`, `rejected_*`, or `shutdown_answered`.
+    pub submitted: u64,
     pub requests: u64,
     pub points: u64,
     pub batches: u64,
@@ -167,6 +176,12 @@ impl Metrics {
         m.queue.get_or_insert_with(LatencyHistogram::new).record(queue_ns);
         m.exec.get_or_insert_with(LatencyHistogram::new).record(exec_ns);
         m.e2e.get_or_insert_with(LatencyHistogram::new).record(e2e_ns);
+    }
+
+    /// Count a request entering `submit` (before routing, admission, or
+    /// any outcome counter) — the conservation ledger's debit side.
+    pub fn record_submitted(&self) {
+        lock_unpoisoned(&self.inner).submitted += 1;
     }
 
     /// Count a request answered with a typed error.
@@ -300,6 +315,7 @@ impl Metrics {
         let e = m.e2e.clone().unwrap_or_default();
         let elapsed = m.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         Snapshot {
+            submitted: m.submitted,
             requests: m.requests,
             points: m.points,
             batches: m.batches,
@@ -345,10 +361,56 @@ impl Metrics {
 }
 
 impl Snapshot {
+    /// Conservation check over the answered-exactly-once ledger: every
+    /// request that entered `submit` must appear in exactly one outcome
+    /// bucket —
+    ///
+    /// ```text
+    /// submitted == requests (ok)
+    ///            + errors (typed EvalError at the worker)
+    ///            + rejected_queue_full + rejected_bad_request + rejected_deadline
+    ///            + shutdown_answered
+    /// ```
+    ///
+    /// Only valid once the stack has drained (in-flight depth 0): a
+    /// request still queued is submitted but not yet answered, so callers
+    /// (the chaos soak, chaos-test teardowns) must wait for
+    /// `Admission::total_depth() == 0` first. `client_timeouts` is
+    /// deliberately absent: a timed-out caller's request is still
+    /// answered (to a dropped receiver) and lands in a bucket. The one
+    /// path outside the ledger is a *batcher* panic (its pending map is
+    /// lost by design, clients see a disconnect); the soak never induces
+    /// one, so a shortfall here under `panics > 0` with a healthy batcher
+    /// is a real leak.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let answered = self.requests
+            + self.errors
+            + self.rejected_queue_full
+            + self.rejected_bad_request
+            + self.rejected_deadline
+            + self.shutdown_answered;
+        if self.submitted == answered {
+            Ok(())
+        } else {
+            Err(format!(
+                "metrics conservation violated: submitted={} != answered={} \
+                 (ok={} + errors={} + rejected {}/{}/{} + shutdown_answered={})",
+                self.submitted,
+                answered,
+                self.requests,
+                self.errors,
+                self.rejected_queue_full,
+                self.rejected_bad_request,
+                self.rejected_deadline,
+                self.shutdown_answered,
+            ))
+        }
+    }
+
     /// Render a human-readable report block.
     pub fn report(&self) -> String {
         format!(
-            "requests={} points={} batches={} (mean batch {:.1}) errors={}\n\
+            "submitted={} requests={} points={} batches={} (mean batch {:.1}) errors={}\n\
              rejected qfull/bad/deadline: {}/{}/{} | timeouts={} | degraded={} | \
              panics={} respawns={} shutdown-answered={} | queue hw={}\n\
              drift canary/alarm/probe/degraded/recovered: {}/{}/{}/{}/{} | \
@@ -357,6 +419,7 @@ impl Snapshot {
              {}/{}/{}/{}/{}/{} | breaker reject/open/reclose: {}/{}/{}\n\
              queue p50/p99: {:.1}/{:.1} us | exec p50/p99: {:.1}/{:.1} us | \
              e2e p50/p99: {:.1}/{:.1} us | throughput {:.0} req/s",
+            self.submitted,
             self.requests,
             self.points,
             self.batches,
@@ -404,16 +467,57 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
+        m.record_submitted();
+        m.record_submitted();
+        m.record_submitted();
         m.record(1_000, 10_000, 12_000, 4, true);
         m.record(2_000, 20_000, 25_000, 4, false);
         m.record_error();
         let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
         assert_eq!(s.requests, 2);
         assert_eq!(s.points, 8);
         assert_eq!(s.batches, 1);
         assert_eq!(s.errors, 1);
         assert!(s.exec_p99_us >= s.exec_p50_us);
-        assert!(s.report().contains("requests=2"));
+        assert!(s.report().contains("submitted=3 requests=2"));
+    }
+
+    #[test]
+    fn conservation_balances_across_every_outcome_bucket() {
+        let m = Metrics::new();
+        // 7 submits: 2 ok, 1 typed error, 3 rejections (one per reason),
+        // 1 answered at shutdown.
+        for _ in 0..7 {
+            m.record_submitted();
+        }
+        m.record(1_000, 10_000, 12_000, 1, true);
+        m.record(1_000, 10_000, 12_000, 1, false);
+        m.record_error();
+        m.record_rejection(&RejectReason::QueueFull);
+        m.record_rejection(&RejectReason::BadRequest("arity".into()));
+        m.record_rejection(&RejectReason::Deadline);
+        m.record_shutdown_answered();
+        assert!(m.snapshot().check_conservation().is_ok());
+        // Client-side counters never unbalance the ledger.
+        m.record_client_timeout();
+        m.record_breaker_rejection();
+        assert!(m.snapshot().check_conservation().is_ok());
+    }
+
+    #[test]
+    fn conservation_flags_an_unanswered_submit() {
+        let m = Metrics::new();
+        m.record_submitted();
+        m.record_submitted();
+        m.record(1_000, 10_000, 12_000, 1, true);
+        let err = m.snapshot().check_conservation().unwrap_err();
+        assert!(err.contains("submitted=2"), "got: {err}");
+        assert!(err.contains("answered=1"), "got: {err}");
+        // An over-answered ledger (an outcome recorded twice) also fails.
+        m.record_error();
+        m.record_error();
+        assert!(m.snapshot().check_conservation().is_err());
     }
 
     #[test]
@@ -487,7 +591,9 @@ mod tests {
     #[test]
     fn empty_snapshot_is_sane() {
         let s = Metrics::new().snapshot();
+        assert_eq!(s.submitted, 0);
         assert_eq!(s.requests, 0);
+        assert!(s.check_conservation().is_ok());
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.throughput_rps, 0.0);
         assert_eq!(s.panics, 0);

@@ -96,6 +96,16 @@
 //! and released on `Drop`, so no failure path — panic unwind, shutdown
 //! drop, reply sent — can leak queue depth.
 //!
+//! The answered-exactly-once contract is mechanically audited: every
+//! submit debits a `submitted` counter, every outcome above credits
+//! exactly one answer bucket, and
+//! [`metrics::Snapshot::check_conservation`] requires the ledger to
+//! balance once the queues drain — checked at every chaos test's
+//! teardown and, against *randomized* configurations and fault
+//! schedules, by the seeded chaos soak ([`crate::testutil::soak`],
+//! `make soak`; see docs/INVARIANTS.md § Randomized robustness
+//! harness).
+//!
 //! # Client-side recovery taxonomy
 //!
 //! Everything above describes how the *server* fails; [`client`] is how

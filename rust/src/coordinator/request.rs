@@ -147,6 +147,15 @@ impl fmt::Display for EvalError {
     }
 }
 
+// `std::error::Error` so `?`-interop and `Box<dyn Error>` callers can
+// consume the typed failure surface directly. Both enums are leaves of
+// the failure model: an `EvalError::Rejected` *carries* its
+// `RejectReason` as data (matched on by the retry ladder), so neither
+// impl forwards a `source()` — the default `None` is the contract.
+impl std::error::Error for RejectReason {}
+
+impl std::error::Error for EvalError {}
+
 /// One evaluation request: a point (or batch of points) for a named,
 /// already-synthesized function.
 #[derive(Debug)]
@@ -298,6 +307,27 @@ mod tests {
         assert!(r.error_message().unwrap().contains("arity 3 != 2"));
         let r = EvalResponse::from_error(EvalError::WorkerPanic("boom".into()));
         assert!(matches!(r.error, Some(EvalError::WorkerPanic(ref m)) if m == "boom"));
+    }
+
+    #[test]
+    fn typed_errors_box_into_dyn_error() {
+        // `?`-interop: both failure enums erase into `Box<dyn Error>`.
+        fn fails_rejected() -> Result<(), Box<dyn std::error::Error>> {
+            Err(RejectReason::QueueFull)?
+        }
+        fn fails_eval() -> Result<(), Box<dyn std::error::Error>> {
+            Err(EvalError::Timeout)?
+        }
+        let e = fails_rejected().unwrap_err();
+        assert_eq!(e.to_string(), "queue full");
+        assert!(e.source().is_none(), "leaf error: source() is None by contract");
+        let e = fails_eval().unwrap_err();
+        assert!(e.to_string().contains("deadline fired"));
+        assert!(e.source().is_none());
+        // Rejected carries its reason as matched data, not as a source.
+        let e: Box<dyn std::error::Error> =
+            Box::new(EvalError::Rejected(RejectReason::Deadline));
+        assert!(e.source().is_none());
     }
 
     #[test]

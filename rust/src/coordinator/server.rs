@@ -252,6 +252,10 @@ impl EvalServer {
     /// request may be rewritten to `Analytic`.
     pub fn submit(&self, mut req: EvalRequest) -> Result<(), EvalError> {
         req.enqueued = Instant::now();
+        // Conservation ledger debit: recorded before routing or admission
+        // so that *every* outcome below (rejection, shutdown, worker
+        // answer) balances it — see `metrics::Snapshot::check_conservation`.
+        self.shared.metrics.record_submitted();
         let functions = &self.shared.functions;
         // Sentinel routing runs before admission so rerouted traffic is
         // validated and depth-accounted under its *final* engine (the
@@ -278,9 +282,18 @@ impl EvalServer {
             self.shared.metrics.record_rejection(&reason);
             EvalError::Rejected(reason)
         })?;
-        let tx = self.tx.as_ref().ok_or(EvalError::Shutdown)?;
+        let Some(tx) = self.tx.as_ref() else {
+            // Closed intake: the typed `Shutdown` result *is* the answer,
+            // so it is counted like the batcher's drain path to keep the
+            // conservation ledger balanced.
+            self.shared.metrics.record_shutdown_answered();
+            return Err(EvalError::Shutdown);
+        };
         // On failure the request (and its depth token) is dropped here.
-        tx.send(req).map_err(|_| EvalError::Shutdown)
+        tx.send(req).map_err(|_| {
+            self.shared.metrics.record_shutdown_answered();
+            EvalError::Shutdown
+        })
     }
 
     /// Convenience: synchronous single-request evaluation with the
@@ -367,7 +380,11 @@ impl EvalServer {
     /// Graceful shutdown: stop supervision, close intake, join batcher
     /// and workers. Requests still queued at close are either evaluated
     /// by the draining workers or answered with a typed shutdown error —
-    /// never silently dropped.
+    /// never silently dropped. Returns the final metrics snapshot, taken
+    /// after every thread has joined, so callers can audit the
+    /// conservation ledger ([`super::metrics::Snapshot::check_conservation`])
+    /// over the server's complete lifetime — the chaos suite and the
+    /// soak (`crate::testutil::soak`) do exactly that at teardown.
     ///
     /// Join-order audit (ISSUE 8, cross-checked against the loom wakeup
     /// model): `stop` must be set and the supervisor notified *before*
@@ -379,7 +396,7 @@ impl EvalServer {
     /// handles into `self.workers` again. The one ordering bug the model
     /// did find was upstream of this function — the supervisor
     /// registration window, fixed by [`WakeSignal`].
-    pub fn shutdown(mut self) {
+    pub fn shutdown(mut self) -> super::metrics::Snapshot {
         // Order matters: the supervisor must stop respawning before the
         // workers see the closed channel and exit.
         self.stop.store(true, Ordering::SeqCst);
@@ -397,6 +414,8 @@ impl EvalServer {
         for w in ws.drain(..) {
             let _ = w.join();
         }
+        drop(ws);
+        self.shared.metrics.snapshot()
     }
 }
 

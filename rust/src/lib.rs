@@ -38,6 +38,11 @@
 //!   own: JSON, deterministic PRNG for tests, statistics helpers.
 //! - [`testing`] — minimal property-testing harness (proptest is not
 //!   vendored in this environment; see DESIGN.md).
+//! - [`testutil`] — randomized robustness harness: seed-deterministic
+//!   structured generators, the differential oracle (scalar == every
+//!   plane width == TMR-at-rate-0, bit for bit) with a shrinker, and the
+//!   coordinator chaos-soak round engine (`make fuzz-smoke` /
+//!   `make soak`; docs/INVARIANTS.md § Randomized robustness harness).
 //!
 //! ## Quickstart
 //!
@@ -80,6 +85,7 @@
 
 pub mod util;
 pub mod testing;
+pub mod testutil;
 pub mod sc;
 pub mod fsm;
 pub mod smurf;

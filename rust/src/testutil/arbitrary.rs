@@ -1,0 +1,317 @@
+//! Structured, seed-deterministic generators for the differential
+//! oracle.
+//!
+//! One [`Pcg`] seed expands into a complete [`FuzzCase`]: SMURF shape
+//! (variable count, mixed radices), a θ/CPT table that deliberately
+//! includes the boundary rows 0.0 and 1.0 (quantizing to gate thresholds
+//! 0 and 65535), hostile inputs (±0.0, subnormals, `f64::MIN_POSITIVE`,
+//! exactly-representable `k/65536` grid points, `1 − ε`), lane-boundary
+//! stream lengths (1, 63, 64, 65, 4096), an entropy mode, a trial
+//! budget, and an optional [`BitFaultPlan`] (absent, armed-but-inert, or
+//! genuinely faulty). Every case carries its seed: re-running
+//! [`FuzzCase::from_seed`] with the same value rebuilds the identical
+//! case, so any oracle failure is a one-line repro.
+//!
+//! Generation draws from `Pcg` only — no wall clock, no OS entropy — and
+//! every case is *valid* by construction (arity and table sizes match,
+//! radices ≥ 2, probabilities within the simulator's accepted domain),
+//! so an engine assertion firing on a generated case is itself a bug.
+
+use crate::sc::fault::{BitFaultPlan, FaultRates, FaultSite};
+use crate::smurf::config::SmurfConfig;
+use crate::smurf::sim::EntropyMode;
+use crate::util::prng::{Pcg, GOLDEN_GAMMA};
+
+/// Cap on the generated CPT bank size `Π N_j`. Keeps every case's table
+/// (and the oracle's per-case cost) bounded while still reaching
+/// four-variable and radix-16 shapes.
+pub const MAX_AGGREGATE_STATES: usize = 512;
+
+/// Work cap per case: `len · trials` of the estimator legs never exceeds
+/// this, so a full smoke sweep stays inside tier-1 time even in debug
+/// builds.
+pub const MAX_ESTIMATOR_CYCLES: usize = 32_768;
+
+/// One fully-specified differential-oracle case. All fields are public
+/// so the shrinker (and hand-written boundary regressions) can construct
+/// and mutate cases directly; a mutated case is still a valid case, it
+/// just no longer derives from `seed` alone — which is why failure
+/// reports always print [`FuzzCase::describe`], never just the seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FuzzCase {
+    /// Generator seed (also the base of the per-trial stream seeds).
+    pub seed: u64,
+    /// Per-variable FSM radices (each ≥ 2, product ≤
+    /// [`MAX_AGGREGATE_STATES`]).
+    pub radices: Vec<usize>,
+    /// θ/CPT table, one coefficient in `[0, 1]` per aggregate state.
+    pub w: Vec<f64>,
+    /// Entropy wiring of the bit-level engines.
+    pub mode: EntropyMode,
+    /// Input point, one probability per variable.
+    pub point: Vec<f64>,
+    /// Bitstream length `L` (≥ 1).
+    pub len: usize,
+    /// Monte-Carlo trials for the estimator legs (≥ 1).
+    pub trials: usize,
+    /// Independent stream seeds exercised by the exact-lattice legs
+    /// (1..=8; also the TMR trial count, so always ≤ `LANES / 3`).
+    pub lattice_seeds: usize,
+    /// Optional fault plan: `None`, armed-but-inert, or real rates.
+    pub plan: Option<BitFaultPlan>,
+}
+
+impl FuzzCase {
+    /// Deterministically expand `seed` into a complete case.
+    pub fn from_seed(seed: u64) -> Self {
+        let mut rng = Pcg::new(seed);
+        let radices = gen_radices(&mut rng);
+        let states: usize = radices.iter().product();
+        let w = gen_table(&mut rng, states);
+        let mode = match rng.below(3) {
+            0 => EntropyMode::SharedLfsr,
+            1 => EntropyMode::IndependentXorshift,
+            _ => EntropyMode::SobolCpt,
+        };
+        let point: Vec<f64> = (0..radices.len()).map(|_| gen_probability(&mut rng)).collect();
+        let len = gen_len(&mut rng);
+        let trials = gen_trials(&mut rng, len);
+        let lattice_seeds = 1 + rng.below(8) as usize;
+        let plan = gen_plan(&mut rng);
+        Self { seed, radices, w, mode, point, len, trials, lattice_seeds, plan }
+    }
+
+    /// The case's [`SmurfConfig`] (rebuilt on demand — the shrinker
+    /// mutates `radices` and `w` together).
+    pub fn config(&self) -> SmurfConfig {
+        SmurfConfig::new(self.radices.clone())
+    }
+
+    /// `n` independent stream seeds derived from the case seed by golden
+    /// -gamma stepping — the seed set the exact-lattice legs run at.
+    pub fn trial_seeds(&self, n: usize) -> Vec<u64> {
+        (0..n as u64)
+            .map(|i| self.seed.wrapping_add((i + 1).wrapping_mul(GOLDEN_GAMMA)))
+            .collect()
+    }
+
+    /// One-line, complete repro: every field a reader needs to rebuild
+    /// the case by hand (the seed alone suffices for *generated* cases;
+    /// shrunk cases need the explicit fields).
+    pub fn describe(&self) -> String {
+        format!(
+            "seed={:#018x} radices={:?} mode={:?} len={} trials={} lattice_seeds={} \
+             point={:?} w={:?} plan={}",
+            self.seed,
+            self.radices,
+            self.mode,
+            self.len,
+            self.trials,
+            self.lattice_seeds,
+            self.point,
+            self.w,
+            describe_plan(&self.plan),
+        )
+    }
+}
+
+/// Render the fault plan compactly for repro lines.
+fn describe_plan(plan: &Option<BitFaultPlan>) -> String {
+    match plan {
+        None => "none".to_string(),
+        Some(p) => {
+            let mut sites = String::new();
+            for site in FaultSite::ALL {
+                let r = p.rates(site);
+                if r != FaultRates::NONE {
+                    sites.push_str(&format!(
+                        " {site:?}(s0={},s1={},flip={})",
+                        r.stuck_at_zero, r.stuck_at_one, r.flip
+                    ));
+                }
+            }
+            let tag = if p.is_inert() { " inert" } else { "" };
+            format!("{{seed={:#x}{}{}}}", p.seed(), sites, tag)
+        }
+    }
+}
+
+/// Mixed radices from a hostile palette (binary through radix-16),
+/// truncated so the CPT bank stays within [`MAX_AGGREGATE_STATES`].
+fn gen_radices(rng: &mut Pcg) -> Vec<usize> {
+    let target_vars = 1 + rng.below(4) as usize;
+    let mut radices = Vec::with_capacity(target_vars);
+    let mut states = 1usize;
+    for _ in 0..target_vars {
+        let candidate = match rng.below(8) {
+            0 => 2,
+            1 => 3,
+            2 => 4,
+            3 => 5,
+            4 => 6,
+            5 => 8,
+            6 => 12,
+            _ => 16,
+        };
+        // Prefer keeping the variable at a smaller radix over dropping it.
+        let r = if states * candidate <= MAX_AGGREGATE_STATES {
+            candidate
+        } else if states * 2 <= MAX_AGGREGATE_STATES {
+            2
+        } else {
+            break;
+        };
+        radices.push(r);
+        states *= r;
+    }
+    if radices.is_empty() {
+        radices.push(2);
+    }
+    radices
+}
+
+/// θ/CPT table over a hostile palette; with probability 1/2 both
+/// boundary rows (0.0 → gate 0, 1.0 → gate 65535) are forced present.
+fn gen_table(rng: &mut Pcg, states: usize) -> Vec<f64> {
+    let mut w: Vec<f64> = (0..states).map(|_| gen_probability(rng)).collect();
+    if states >= 2 && rng.below(2) == 0 {
+        let i0 = rng.below(states as u64) as usize;
+        let i1 = (i0 + 1 + rng.below(states as u64 - 1) as usize) % states;
+        w[i0] = 0.0;
+        w[i1] = 1.0;
+    }
+    w
+}
+
+/// One probability from the hostile palette: domain edges, signed zero,
+/// subnormals, the smallest normal, exactly-representable grid points,
+/// off-by-ε values, and plain uniforms.
+fn gen_probability(rng: &mut Pcg) -> f64 {
+    match rng.below(12) {
+        0 => 0.0,
+        1 => 1.0,
+        2 => -0.0,
+        3 => 5e-324,              // smallest positive subnormal
+        4 => f64::MIN_POSITIVE,   // smallest positive normal
+        5 => rng.below(65_537) as f64 / 65_536.0, // exact θ-grid point
+        6 => 1.0 - f64::EPSILON,
+        7 => 0.5 + f64::EPSILON,
+        8 => f64::EPSILON,
+        _ => rng.uniform(),
+    }
+}
+
+/// Stream length: the lane boundaries of the 64-wide plane (63/64/65),
+/// the degenerate single-cycle stream, the paper-scale 4096, and
+/// uniform fillers.
+fn gen_len(rng: &mut Pcg) -> usize {
+    match rng.below(8) {
+        0 => 1,
+        1 => 63,
+        2 => 64,
+        3 => 65,
+        4 => 4096,
+        _ => 2 + rng.below(510) as usize,
+    }
+}
+
+/// Trial budget for the estimator legs, straddling the scalar↔wide
+/// routing threshold (`WIDE_TRIALS_MIN = 8`) and one full plane (64),
+/// clamped so `len · trials` ≤ [`MAX_ESTIMATOR_CYCLES`].
+fn gen_trials(rng: &mut Pcg, len: usize) -> usize {
+    let t = match rng.below(6) {
+        0 => 1,
+        1 => 2,
+        2 => 7,
+        3 => 8,
+        4 => 64,
+        _ => 9 + rng.below(57) as usize,
+    };
+    t.min((MAX_ESTIMATOR_CYCLES / len).max(1))
+}
+
+/// Fault plan: absent (half the cases — the clean lattice), armed but
+/// inert (the armed-zero legs), sub-quantization rates (inert by the
+/// 16-bit grid), or real rates at one random site.
+fn gen_plan(rng: &mut Pcg) -> Option<BitFaultPlan> {
+    match rng.below(8) {
+        0 | 1 | 2 | 3 => None,
+        4 => Some(BitFaultPlan::new(rng.next_u64())),
+        5 => Some(BitFaultPlan::uniform(rng.next_u64(), FaultRates::flips(1e-9))),
+        _ => {
+            let site = FaultSite::ALL[rng.below(FaultSite::COUNT as u64) as usize];
+            let rate = 2f64.powi(-(3 + rng.below(8) as i32));
+            let rates = match rng.below(3) {
+                0 => FaultRates::flips(rate),
+                1 => FaultRates::stuck0(rate),
+                _ => FaultRates::stuck1(rate),
+            };
+            Some(BitFaultPlan::new(rng.next_u64()).with_site(site, rates))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_reproducible_from_their_seed() {
+        for i in 0..64u64 {
+            let seed = 0xF022_CA5E_u64.wrapping_add(i.wrapping_mul(GOLDEN_GAMMA));
+            let a = FuzzCase::from_seed(seed);
+            let b = FuzzCase::from_seed(seed);
+            assert_eq!(a, b);
+            assert_eq!(a.describe(), b.describe());
+        }
+    }
+
+    #[test]
+    fn every_generated_case_is_valid() {
+        for i in 0..256u64 {
+            let case = FuzzCase::from_seed(0xA11D_u64.wrapping_add(i.wrapping_mul(GOLDEN_GAMMA)));
+            let states: usize = case.radices.iter().product();
+            assert!(!case.radices.is_empty() && case.radices.iter().all(|&r| r >= 2));
+            assert!(states <= MAX_AGGREGATE_STATES);
+            assert_eq!(case.w.len(), states);
+            assert_eq!(case.point.len(), case.radices.len());
+            assert!(case.w.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(case.point.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(case.len >= 1);
+            assert!(case.trials >= 1 && case.len * case.trials <= MAX_ESTIMATOR_CYCLES);
+            assert!((1..=8).contains(&case.lattice_seeds));
+            // The config constructor's own validation must accept it.
+            let cfg = case.config();
+            assert_eq!(cfg.num_aggregate_states(), states);
+        }
+    }
+
+    #[test]
+    fn palette_reaches_the_hostile_corners() {
+        // Across a modest sweep the generator must actually emit the
+        // boundary rows, a degenerate stream, a lane-boundary stream,
+        // and at least one real fault plan — otherwise the "hostile"
+        // palette is decorative.
+        let mut saw_zero_row = false;
+        let mut saw_one_row = false;
+        let mut saw_len_one = false;
+        let mut saw_lane_edge = false;
+        let mut saw_real_plan = false;
+        let mut saw_inert_plan = false;
+        for i in 0..512u64 {
+            let case = FuzzCase::from_seed(0xED6E_u64.wrapping_add(i.wrapping_mul(GOLDEN_GAMMA)));
+            saw_zero_row |= case.w.contains(&0.0);
+            saw_one_row |= case.w.contains(&1.0);
+            saw_len_one |= case.len == 1;
+            saw_lane_edge |= matches!(case.len, 63 | 64 | 65);
+            if let Some(p) = &case.plan {
+                saw_real_plan |= !p.is_inert();
+                saw_inert_plan |= p.is_inert();
+            }
+        }
+        assert!(saw_zero_row && saw_one_row, "θ boundary rows never generated");
+        assert!(saw_len_one, "L=1 never generated");
+        assert!(saw_lane_edge, "lane-boundary L never generated");
+        assert!(saw_real_plan && saw_inert_plan, "fault-plan palette incomplete");
+    }
+}

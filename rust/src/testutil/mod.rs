@@ -1,0 +1,49 @@
+//! Randomized robustness harness: seeded structured fuzzing, the
+//! differential oracle, and the coordinator chaos soak.
+//!
+//! The paper's claim — bit-level stochasticity traded for hardware
+//! simplicity *without* losing accuracy — only holds if every
+//! implementation layer agrees exactly where it must and within bound
+//! where it may. The hand-written suites pin known scenarios; this
+//! module hunts the rest of the input space automatically, with zero
+//! external dependencies and total seed determinism (every failure is a
+//! one-line repro).
+//!
+//! Three layers:
+//!
+//! - [`arbitrary`] — structured generators: one [`crate::util::prng::Pcg`]
+//!   seed expands into a complete, valid-and-hostile [`arbitrary::FuzzCase`]
+//!   (mixed radices, θ tables including boundary rows 0/65535, domain-edge
+//!   and subnormal inputs, lane-boundary stream lengths, entropy modes,
+//!   fault plans).
+//! - [`oracle`] — the differential oracle: the exact-equality lattice
+//!   (scalar simulator == every compiled plane width == TMR at rate 0 ==
+//!   armed-zero fault hooks, bit for bit), the bounded analytic relation,
+//!   and a shrinker that minimizes a failing case (num_vars → radices →
+//!   L → table rows) and renders the minimized seed + config before the
+//!   caller fails.
+//! - [`soak`] — the chaos-soak round engine shared by
+//!   `rust/tests/soak.rs` and `examples/soak.rs`: each round builds an
+//!   `EvalServer` + `ResilientClient` from a round seed, drives a mixed
+//!   workload under a randomized fault schedule, then audits the global
+//!   invariants (answered-exactly-once, depth drained, pool respawned,
+//!   metrics conservation, sentinel/breaker legality, byte-identical
+//!   replay).
+//!
+//! Entry points: `make fuzz-smoke` (oracle over N seeded cases, tier-1
+//! time) and `make soak SOAK_ROUNDS=… SOAK_SEED=…`. Documented in
+//! `docs/INVARIANTS.md` § Randomized robustness harness.
+//!
+//! This module is production-compiled (the integration tests and the
+//! example driver consume it from outside the crate), so it lives under
+//! the same `no-panic` xtask rule as the coordinator: failures are
+//! `Result<_, String>` values carrying the case description, never
+//! panics — the *callers* (tests, drivers) decide how to fail.
+
+pub mod arbitrary;
+pub mod oracle;
+pub mod soak;
+
+pub use arbitrary::FuzzCase;
+pub use oracle::{check_case, run_seeded, shrink_case, CheckFailure};
+pub use soak::{run_round, run_soak, RoundReport, SoakOptions};

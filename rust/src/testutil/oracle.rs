@@ -1,0 +1,631 @@
+//! Differential oracle + shrinker over generated [`FuzzCase`]s.
+//!
+//! Per case the oracle asserts two kinds of relations:
+//!
+//! **Exact-equality lattice** (bit for bit, via `f64::to_bits`):
+//! - scalar simulator replay: same seed → same bits;
+//! - scalar == `eval_trials` at *every* compiled plane width (`u64`,
+//!   `[u64; 4]`, and `MaxPlane` — `[u64; 8]` under `wide512`);
+//! - scalar == the per-lane-threshold `eval_points` path (the
+//!   coordinator's batch shape) with the point replicated per lane;
+//! - scalar == TMR voting at fault rate 0 (the vote is the identity);
+//! - scalar == armed-but-inert fault hooks (an attached all-zero
+//!   [`BitFaultPlan`] must change nothing);
+//! - every estimator route is one estimator: `eval_avg` ==
+//!   `eval_avg_scalar` == wide `eval_avg` == `eval_avg_tmr`, and the
+//!   same for `abs_error`.
+//!
+//! **Bounded relations**: the Monte-Carlo estimate sits within an
+//! `L`-derived tolerance of the analytic closed form (Eq. 21) — a
+//! deliberately generous band (the exactness burden is on the lattice;
+//! this leg catches catastrophic divergence, NaNs, and sign flips).
+//!
+//! Real (non-inert) fault plans are checked for replay determinism and
+//! range, not equality — fault entropy is per-lane by design, so scalar
+//! and wide armed runs legitimately differ.
+//!
+//! On failure, [`run_seeded`] shrinks the case (drop variables → reduce
+//! radices → shorten `L` → fewer trials → drop the plan → neutralize
+//! table rows and inputs) under a bounded predicate-evaluation budget
+//! and returns a report carrying the *minimized* seed + config — the
+//! one-line repro contract.
+
+use super::arbitrary::FuzzCase;
+use crate::sc::fault::BitFaultPlan;
+use crate::sc::plane::BitPlane;
+use crate::smurf::analytic::AnalyticSmurf;
+use crate::smurf::config::SmurfConfig;
+use crate::smurf::sim::BitLevelSmurf;
+use crate::smurf::sim_wide::{MaxPlane, WideBitLevelSmurf};
+use crate::util::prng::GOLDEN_GAMMA;
+
+/// Default predicate-evaluation budget of the shrinker: enough for the
+/// generator's largest shapes to collapse, small enough that a failing
+/// smoke run still exits in seconds.
+pub const SHRINK_BUDGET: usize = 400;
+
+/// One oracle violation: which leg of the lattice broke, and how.
+#[derive(Clone, Debug)]
+pub struct CheckFailure {
+    /// Stable leg name (e.g. `wide-lattice`, `tmr-zero`, `armed-zero`).
+    pub leg: &'static str,
+    /// Human-readable divergence detail (values, lane, plane label).
+    pub detail: String,
+}
+
+impl CheckFailure {
+    fn new(leg: &'static str, detail: String) -> Self {
+        Self { leg, detail }
+    }
+
+    /// Render as `[leg] detail` — the shape `run_seeded` reports.
+    pub fn render(&self) -> String {
+        format!("[{}] {}", self.leg, self.detail)
+    }
+}
+
+/// Bitwise equality of two f64 slices; returns the first diverging lane.
+fn first_divergence(a: &[f64], b: &[f64]) -> Option<(usize, f64, f64)> {
+    a.iter()
+        .zip(b.iter())
+        .enumerate()
+        .find(|(_, (x, y))| x.to_bits() != y.to_bits())
+        .map(|(i, (&x, &y))| (i, x, y))
+}
+
+/// Run the full differential oracle over one case.
+pub fn check_case(case: &FuzzCase) -> Result<(), CheckFailure> {
+    let cfg = case.config();
+    let clean = BitLevelSmurf::new(cfg.clone(), &case.w, case.mode);
+    let analytic = AnalyticSmurf::new(cfg.clone(), case.w.clone());
+    let seeds = case.trial_seeds(case.lattice_seeds);
+
+    // Scalar reference column, plus range + replay determinism.
+    let scalar: Vec<f64> =
+        seeds.iter().map(|&s| clean.eval(&case.point, case.len, s)).collect();
+    for (i, &y) in scalar.iter().enumerate() {
+        if !(0.0..=1.0).contains(&y) {
+            return Err(CheckFailure::new(
+                "scalar-range",
+                format!("trial {i}: output {y} outside [0,1]"),
+            ));
+        }
+    }
+    let replay: Vec<f64> =
+        seeds.iter().map(|&s| clean.eval(&case.point, case.len, s)).collect();
+    if let Some((i, a, b)) = first_divergence(&scalar, &replay) {
+        return Err(CheckFailure::new(
+            "scalar-replay",
+            format!("trial {i}: {a} then {b} from the same seed"),
+        ));
+    }
+
+    // Armed-zero at the scalar engine: an inert plan changes nothing.
+    let armed = BitLevelSmurf::new(cfg.clone(), &case.w, case.mode)
+        .with_fault_plan(BitFaultPlan::new(case.seed));
+    let armed_out: Vec<f64> =
+        seeds.iter().map(|&s| armed.eval(&case.point, case.len, s)).collect();
+    if let Some((i, a, b)) = first_divergence(&scalar, &armed_out) {
+        return Err(CheckFailure::new(
+            "armed-zero",
+            format!("scalar trial {i}: clean {a} != inert-armed {b}"),
+        ));
+    }
+    // Same, with the case's own plan when it is armed but inert.
+    if let Some(plan) = case.plan.as_ref().filter(|p| p.is_inert()) {
+        let armed = BitLevelSmurf::new(cfg.clone(), &case.w, case.mode)
+            .with_fault_plan(plan.clone());
+        let out: Vec<f64> =
+            seeds.iter().map(|&s| armed.eval(&case.point, case.len, s)).collect();
+        if let Some((i, a, b)) = first_divergence(&scalar, &out) {
+            return Err(CheckFailure::new(
+                "armed-zero",
+                format!("scalar trial {i}: clean {a} != case-plan(inert) {b}"),
+            ));
+        }
+    }
+
+    // Estimator identity: one estimator, every route.
+    let avg = clean.eval_avg(&case.point, case.len, case.trials, case.seed);
+    let avg_scalar =
+        clean.eval_avg_scalar(&case.point, case.len, case.trials, case.seed);
+    if avg.to_bits() != avg_scalar.to_bits() {
+        return Err(CheckFailure::new(
+            "estimator-routing",
+            format!("eval_avg {avg} != eval_avg_scalar {avg_scalar}"),
+        ));
+    }
+    let truth = analytic.eval(&case.point);
+    let err_routed =
+        clean.abs_error(&case.point, truth, case.len, case.trials, case.seed);
+    let err_scalar =
+        clean.abs_error_scalar(&case.point, truth, case.len, case.trials, case.seed);
+    if err_routed.to_bits() != err_scalar.to_bits() {
+        return Err(CheckFailure::new(
+            "estimator-routing",
+            format!("abs_error {err_routed} != abs_error_scalar {err_scalar}"),
+        ));
+    }
+
+    // Every compiled plane width against the scalar column.
+    check_plane::<u64>(case, &cfg, &scalar, &seeds, avg, "u64/64-lane")?;
+    check_plane::<[u64; 4]>(case, &cfg, &scalar, &seeds, avg, "[u64;4]/256-lane")?;
+    check_plane::<MaxPlane>(case, &cfg, &scalar, &seeds, avg, "MaxPlane")?;
+
+    // Bounded relation against the closed form — only where the bound is
+    // informative: enough trials to tame MC variance and a stream long
+    // enough that the FSM warm-up transient (O(states/L)) is small.
+    let states = cfg.num_aggregate_states();
+    if case.trials >= 8 && case.len >= 16 * states {
+        if !truth.is_finite() {
+            return Err(CheckFailure::new(
+                "analytic-bound",
+                format!("analytic closed form returned {truth}"),
+            ));
+        }
+        let tol = (0.05
+            + 2.0 / (case.trials as f64).sqrt()
+            + 2.0 * states as f64 / case.len as f64)
+            .min(1.0);
+        if (avg - truth).abs() > tol {
+            return Err(CheckFailure::new(
+                "analytic-bound",
+                format!(
+                    "bit-level mean {avg} vs analytic {truth}: |Δ|={} > tol={tol} \
+                     (L={}, trials={}, states={states})",
+                    (avg - truth).abs(),
+                    case.len,
+                    case.trials,
+                ),
+            ));
+        }
+    }
+
+    // Real fault plans: deterministic replay and range, never equality
+    // (fault entropy is per-lane by design).
+    if let Some(plan) = case.plan.as_ref().filter(|p| !p.is_inert()) {
+        let faulted = BitLevelSmurf::new(cfg.clone(), &case.w, case.mode)
+            .with_fault_plan(plan.clone());
+        let a: Vec<f64> =
+            seeds.iter().map(|&s| faulted.eval(&case.point, case.len, s)).collect();
+        let b: Vec<f64> =
+            seeds.iter().map(|&s| faulted.eval(&case.point, case.len, s)).collect();
+        if let Some((i, x, y)) = first_divergence(&a, &b) {
+            return Err(CheckFailure::new(
+                "fault-replay",
+                format!("scalar trial {i}: {x} then {y} from the same seed + plan"),
+            ));
+        }
+        if let Some(&y) = a.iter().find(|y| !(0.0..=1.0).contains(*y)) {
+            return Err(CheckFailure::new(
+                "fault-range",
+                format!("faulted output {y} outside [0,1]"),
+            ));
+        }
+        let wide = WideBitLevelSmurf::<u64>::new(cfg.clone(), &case.w, case.mode)
+            .with_fault_plan(plan.clone());
+        let mut st = wide.make_run_state();
+        let mut wa = vec![0.0; seeds.len()];
+        let mut wb = vec![0.0; seeds.len()];
+        wide.eval_trials(&case.point, case.len, &seeds, &mut st, &mut wa);
+        wide.eval_trials(&case.point, case.len, &seeds, &mut st, &mut wb);
+        if let Some((i, x, y)) = first_divergence(&wa, &wb) {
+            return Err(CheckFailure::new(
+                "fault-replay",
+                format!("wide lane {i}: {x} then {y} from the same seed + plan"),
+            ));
+        }
+    }
+
+    Ok(())
+}
+
+/// The per-plane-width legs: `eval_trials`, the per-lane `eval_points`
+/// shape, TMR at rate 0, armed-zero, and the estimator routes — all
+/// bit-equal to the scalar column / scalar estimate.
+fn check_plane<P: BitPlane>(
+    case: &FuzzCase,
+    cfg: &SmurfConfig,
+    scalar: &[f64],
+    seeds: &[u64],
+    scalar_avg: f64,
+    label: &'static str,
+) -> Result<(), CheckFailure> {
+    let wide = WideBitLevelSmurf::<P>::new(cfg.clone(), &case.w, case.mode);
+    let mut st = wide.make_run_state();
+    let mut out = vec![0.0; seeds.len()];
+
+    wide.eval_trials(&case.point, case.len, seeds, &mut st, &mut out);
+    if let Some((i, a, b)) = first_divergence(scalar, &out) {
+        return Err(CheckFailure::new(
+            "wide-lattice",
+            format!("{label} eval_trials lane {i}: scalar {a} != wide {b}"),
+        ));
+    }
+
+    let pts: Vec<&[f64]> = vec![case.point.as_slice(); seeds.len()];
+    wide.eval_points(&pts, case.len, seeds, &mut st, &mut out);
+    if let Some((i, a, b)) = first_divergence(scalar, &out) {
+        return Err(CheckFailure::new(
+            "points-lattice",
+            format!("{label} eval_points lane {i}: scalar {a} != wide {b}"),
+        ));
+    }
+
+    // TMR with no plan: the vote is the identity, bit for bit.
+    let k = seeds.len().min(P::LANES / 3).max(1);
+    wide.eval_trials_tmr(&case.point, case.len, &seeds[..k], &mut st, &mut out);
+    if let Some((i, a, b)) = first_divergence(&scalar[..k], &out[..k]) {
+        return Err(CheckFailure::new(
+            "tmr-zero",
+            format!("{label} TMR trial {i}: scalar {a} != voted {b}"),
+        ));
+    }
+
+    // Armed-but-inert plan on this plane width.
+    let armed = WideBitLevelSmurf::<P>::new(cfg.clone(), &case.w, case.mode)
+        .with_fault_plan(BitFaultPlan::new(case.seed));
+    let mut st_armed = armed.make_run_state();
+    armed.eval_trials(&case.point, case.len, seeds, &mut st_armed, &mut out);
+    if let Some((i, a, b)) = first_divergence(scalar, &out) {
+        return Err(CheckFailure::new(
+            "armed-zero",
+            format!("{label} lane {i}: clean scalar {a} != inert-armed wide {b}"),
+        ));
+    }
+
+    // Estimator routes on this plane width.
+    let avg = wide.eval_avg(&case.point, case.len, case.trials, case.seed, &mut st);
+    if avg.to_bits() != scalar_avg.to_bits() {
+        return Err(CheckFailure::new(
+            "estimator-plane",
+            format!("{label} eval_avg {avg} != scalar {scalar_avg}"),
+        ));
+    }
+    let avg_tmr =
+        wide.eval_avg_tmr(&case.point, case.len, case.trials, case.seed, &mut st);
+    if avg_tmr.to_bits() != scalar_avg.to_bits() {
+        return Err(CheckFailure::new(
+            "estimator-tmr",
+            format!("{label} eval_avg_tmr {avg_tmr} != scalar {scalar_avg}"),
+        ));
+    }
+    Ok(())
+}
+
+/// Greedily minimize a failing case under a predicate-evaluation budget.
+///
+/// `fail` returns `Some(detail)` while the case still fails; the
+/// shrinker only keeps mutations that preserve failure. Reduction order
+/// (each pass repeats until the case is a fixed point or the budget is
+/// spent): drop variables → reduce radices toward 2 → halve `L` → halve
+/// trials → single lattice seed → drop the fault plan → simplest entropy
+/// mode → neutralize input coordinates → neutralize table rows to 0.5.
+/// Returns the minimized case and its failure detail.
+pub fn shrink_case<F>(
+    start: FuzzCase,
+    start_detail: String,
+    fail: &F,
+    budget: usize,
+) -> (FuzzCase, String)
+where
+    F: Fn(&FuzzCase) -> Option<String>,
+{
+    let mut case = start;
+    let mut detail = start_detail;
+    let mut left = budget;
+    loop {
+        let mut improved = false;
+
+        // Drop whole variables (highest index first; restart after a win
+        // because indices shift).
+        let mut j = case.radices.len();
+        while j > 0 && left > 0 {
+            j -= 1;
+            if case.radices.len() <= 1 {
+                break;
+            }
+            if accept(&drop_var(&case, j), fail, &mut left, &mut case, &mut detail) {
+                improved = true;
+                j = case.radices.len();
+            }
+        }
+
+        // Reduce each radix toward 2.
+        for j in 0..case.radices.len() {
+            while case.radices[j] > 2 && left > 0 {
+                if !accept(&reduce_radix(&case, j), fail, &mut left, &mut case, &mut detail) {
+                    break;
+                }
+                improved = true;
+            }
+        }
+
+        // Shorten the stream.
+        while case.len > 1 && left > 0 {
+            let mut cand = case.clone();
+            cand.len /= 2;
+            if !accept(&cand, fail, &mut left, &mut case, &mut detail) {
+                break;
+            }
+            improved = true;
+        }
+
+        // Fewer estimator trials and lattice seeds.
+        while case.trials > 1 && left > 0 {
+            let mut cand = case.clone();
+            cand.trials /= 2;
+            if !accept(&cand, fail, &mut left, &mut case, &mut detail) {
+                break;
+            }
+            improved = true;
+        }
+        if case.lattice_seeds > 1 && left > 0 {
+            let mut cand = case.clone();
+            cand.lattice_seeds = 1;
+            improved |= accept(&cand, fail, &mut left, &mut case, &mut detail);
+        }
+
+        // Drop the fault plan, then the entropy mode's complexity.
+        if case.plan.is_some() && left > 0 {
+            let mut cand = case.clone();
+            cand.plan = None;
+            improved |= accept(&cand, fail, &mut left, &mut case, &mut detail);
+        }
+        if case.mode != crate::smurf::sim::EntropyMode::SharedLfsr && left > 0 {
+            let mut cand = case.clone();
+            cand.mode = crate::smurf::sim::EntropyMode::SharedLfsr;
+            improved |= accept(&cand, fail, &mut left, &mut case, &mut detail);
+        }
+
+        // Neutralize input coordinates (0.0, then 0.5).
+        for j in 0..case.point.len() {
+            for v in [0.0, 0.5] {
+                if left == 0 || case.point[j].to_bits() == v.to_bits() {
+                    continue;
+                }
+                let mut cand = case.clone();
+                cand.point[j] = v;
+                improved |= accept(&cand, fail, &mut left, &mut case, &mut detail);
+            }
+        }
+
+        // Neutralize table rows to the midpoint.
+        for i in 0..case.w.len() {
+            if left == 0 || case.w[i] == 0.5 {
+                continue;
+            }
+            let mut cand = case.clone();
+            cand.w[i] = 0.5;
+            improved |= accept(&cand, fail, &mut left, &mut case, &mut detail);
+        }
+
+        if !improved || left == 0 {
+            return (case, detail);
+        }
+    }
+}
+
+/// Spend one budget unit on `cand`; keep it iff it still fails.
+fn accept<F>(
+    cand: &FuzzCase,
+    fail: &F,
+    left: &mut usize,
+    case: &mut FuzzCase,
+    detail: &mut String,
+) -> bool
+where
+    F: Fn(&FuzzCase) -> Option<String>,
+{
+    if *left == 0 {
+        return false;
+    }
+    *left -= 1;
+    match fail(cand) {
+        Some(d) => {
+            *case = cand.clone();
+            *detail = d;
+            true
+        }
+        None => false,
+    }
+}
+
+/// Remove variable `j`, keeping the table slice at digit `0` (mixed-radix
+/// LSB-first convention, matching [`SmurfConfig::strides`]).
+fn drop_var(case: &FuzzCase, j: usize) -> FuzzCase {
+    let mut cand = case.clone();
+    cand.radices.remove(j);
+    cand.point.remove(j);
+    cand.w = table_with_digit(&case.radices, &case.w, j, |_r| 0);
+    cand
+}
+
+/// Shrink variable `j`'s radix by one, keeping the rows whose digit `j`
+/// is still representable.
+fn reduce_radix(case: &FuzzCase, j: usize) -> FuzzCase {
+    let mut cand = case.clone();
+    cand.radices[j] -= 1;
+    cand.w = remap_table(&case.radices, &case.w, &cand.radices);
+    cand
+}
+
+/// Project `old_w` onto the radices with variable `j` removed, fixing
+/// its digit via `fixed(radix)`.
+fn table_with_digit(
+    old_radices: &[usize],
+    old_w: &[f64],
+    j: usize,
+    fixed: impl Fn(usize) -> usize,
+) -> Vec<f64> {
+    let new_states: usize =
+        old_radices.iter().enumerate().filter(|&(k, _)| k != j).map(|(_, &r)| r).product();
+    let mut out = Vec::with_capacity(new_states.max(1));
+    for idx in 0..new_states.max(1) {
+        let mut rem = idx;
+        let mut old_idx = 0;
+        let mut old_stride = 1;
+        for (k, &r) in old_radices.iter().enumerate() {
+            let d = if k == j {
+                fixed(r)
+            } else {
+                let d = rem % r;
+                rem /= r;
+                d
+            };
+            old_idx += d * old_stride;
+            old_stride *= r;
+        }
+        out.push(old_w[old_idx]);
+    }
+    out
+}
+
+/// Re-index `old_w` onto smaller per-variable radices (same variable
+/// count), keeping the rows every surviving digit combination selects.
+fn remap_table(old_radices: &[usize], old_w: &[f64], new_radices: &[usize]) -> Vec<f64> {
+    let new_states: usize = new_radices.iter().product();
+    let mut out = Vec::with_capacity(new_states);
+    for idx in 0..new_states {
+        let mut rem = idx;
+        let mut old_idx = 0;
+        let mut old_stride = 1;
+        for (k, &r_old) in old_radices.iter().enumerate() {
+            let d = rem % new_radices[k];
+            rem /= new_radices[k];
+            old_idx += d * old_stride;
+            old_stride *= r_old;
+        }
+        out.push(old_w[old_idx]);
+    }
+    out
+}
+
+/// Render the minimized repro block `run_seeded` (and the example
+/// driver) print before failing.
+pub fn minimized_report(case: &FuzzCase, detail: &str) -> String {
+    format!(
+        "MINIMIZED REPRO\n  case: {}\n  failure: {}\n  note: the seed regenerates the \
+         ORIGINAL case (FuzzCase::from_seed); the fields above are the minimized case.",
+        case.describe(),
+        detail,
+    )
+}
+
+/// Run the oracle over `cases` seeds derived from `base_seed` by
+/// golden-gamma stepping. On the first failure the case is shrunk under
+/// [`SHRINK_BUDGET`] and the returned error carries the original case,
+/// the original failure, and the minimized repro block. `Ok` carries the
+/// number of cases checked.
+pub fn run_seeded(base_seed: u64, cases: usize) -> Result<usize, String> {
+    let fail = |c: &FuzzCase| check_case(c).err().map(|f| f.render());
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add((i as u64).wrapping_mul(GOLDEN_GAMMA));
+        let case = FuzzCase::from_seed(seed);
+        if let Some(first) = fail(&case) {
+            let (min_case, min_detail) =
+                shrink_case(case.clone(), first.clone(), &fail, SHRINK_BUDGET);
+            return Err(format!(
+                "differential oracle failed at case {i}/{cases} (base_seed={base_seed:#x})\n\
+                 original: {}\n  original failure: {first}\n{}",
+                case.describe(),
+                minimized_report(&min_case, &min_detail),
+            ));
+        }
+    }
+    Ok(cases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::smurf::sim::EntropyMode;
+
+    #[test]
+    fn oracle_accepts_a_seed_sweep() {
+        // A real (if small) slice of the fuzz space must be green; the
+        // full sweep runs via `make fuzz-smoke` / tests/soak.rs.
+        if let Err(report) = run_seeded(0x0D0E_u64, 6) {
+            panic!("oracle rejected a healthy stack:\n{report}");
+        }
+    }
+
+    #[test]
+    fn shrinker_minimizes_a_perturbed_theta_table() {
+        // Simulated engine bug: a "buggy build" perturbs θ row 0 by half
+        // the quantization grid (always a real threshold change). The
+        // predicate fails whenever clean and buggy outputs diverge; the
+        // shrinker must keep the failure while collapsing the case, and
+        // the report must carry the minimized repro.
+        let fail = |c: &FuzzCase| {
+            let cfg = c.config();
+            let clean = crate::smurf::sim::BitLevelSmurf::new(cfg.clone(), &c.w, c.mode);
+            let mut w2 = c.w.clone();
+            w2[0] = if w2[0] >= 0.5 { w2[0] - 0.5 } else { w2[0] + 0.5 };
+            let buggy = crate::smurf::sim::BitLevelSmurf::new(cfg, &w2, c.mode);
+            let s = c.trial_seeds(1)[0];
+            let a = clean.eval(&c.point, c.len, s);
+            let b = buggy.eval(&c.point, c.len, s);
+            (a.to_bits() != b.to_bits())
+                .then(|| format!("θ row 0 perturbation diverges: clean {a} vs buggy {b}"))
+        };
+        // Deterministically find a failing start in the normal sweep.
+        let mut start = None;
+        for i in 0..64u64 {
+            let c = FuzzCase::from_seed(
+                0xBAD_7AB1E_u64.wrapping_add(i.wrapping_mul(crate::util::prng::GOLDEN_GAMMA)),
+            );
+            if fail(&c).is_some() {
+                start = Some(c);
+                break;
+            }
+        }
+        let start = start.expect("a θ-row-0 perturbation must diverge somewhere in 64 cases");
+        let first = fail(&start).unwrap();
+        let (min, detail) = shrink_case(start.clone(), first, &fail, SHRINK_BUDGET);
+        // Still failing, and no larger on any axis the shrinker drives.
+        assert!(fail(&min).is_some(), "shrunk case must still fail");
+        let start_states: usize = start.radices.iter().product();
+        let min_states: usize = min.radices.iter().product();
+        assert!(min_states <= start_states);
+        assert!(min.len <= start.len);
+        assert!(min.trials <= start.trials);
+        assert!(min.radices.len() <= start.radices.len());
+        let report = minimized_report(&min, &detail);
+        assert!(report.contains("MINIMIZED REPRO"));
+        assert!(report.contains("seed="));
+        assert!(report.contains("diverges"));
+    }
+
+    #[test]
+    fn shrinker_is_a_fixed_point_on_a_minimal_case() {
+        // A case that always fails cannot shrink below the floor:
+        // one binary variable, L=1, one trial, no plan.
+        let fail = |_: &FuzzCase| Some("always".to_string());
+        let floor = FuzzCase {
+            seed: 0x1,
+            radices: vec![2],
+            w: vec![0.5, 0.5],
+            mode: EntropyMode::SharedLfsr,
+            point: vec![0.0],
+            len: 1,
+            trials: 1,
+            lattice_seeds: 1,
+            plan: None,
+        };
+        let (min, _) = shrink_case(floor.clone(), "always".into(), &fail, 64);
+        assert_eq!(min, floor);
+    }
+
+    #[test]
+    fn table_projections_follow_the_stride_convention() {
+        // radices [2, 3]: strides [1, 2]; w[i0 + 2*i1].
+        let w: Vec<f64> = (0..6).map(|i| i as f64).collect();
+        // Drop variable 1 at digit 0 → rows {0, 1}.
+        assert_eq!(table_with_digit(&[2, 3], &w, 1, |_| 0), vec![0.0, 1.0]);
+        // Drop variable 0 at digit 0 → rows {0, 2, 4}.
+        assert_eq!(table_with_digit(&[2, 3], &w, 0, |_| 0), vec![0.0, 2.0, 4.0]);
+        // Reduce variable 1's radix 3 → 2: digits {0, 1} survive.
+        assert_eq!(remap_table(&[2, 3], &w, &[2, 2]), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,860 @@
+//! Chaos-soak round engine: randomized serving-stack configurations,
+//! randomized fault schedules, mixed workloads, and global invariant
+//! audits — all derived from one [`Pcg`] seed per round.
+//!
+//! Each round ([`run_round`]) builds a fresh [`EvalServer`] +
+//! [`ResilientClient`] whose every knob (worker count, batch policy,
+//! admission limits, retry/budget/hedge/breaker rungs, fault mode) is
+//! drawn from the round seed, fires a mixed workload from concurrent
+//! client threads, and then audits the invariants the serving core
+//! promises regardless of configuration:
+//!
+//! - **answered exactly once** — the metrics conservation ledger
+//!   ([`crate::coordinator::metrics::Snapshot::check_conservation`])
+//!   balances after the queues drain;
+//! - **depth drained** — admission depth counters return to 0;
+//! - **pool respawned** — the supervisor returns the worker pool to its
+//!   configured size after injected panics;
+//! - **payload fidelity** — every successful response equals its
+//!   deterministic reference bit-for-bit (analytic closed form for
+//!   `Analytic`/degraded traffic; the seeded bitstream contract
+//!   `eval_bitstream(p, L, DEFAULT_STREAM_SEED ^ i)` — plus the armed
+//!   bias, when drifting — for `BitLevel`), and well-formed calls are
+//!   never answered `BadRequest`;
+//! - **sentinel/breaker legality** — quarantine-degraded traffic implies
+//!   a recorded drift alarm; breaker fast-fails imply a recorded open;
+//!   hedge losers never diverge from winners;
+//! - **byte-identical replay** — re-running the same round seed against
+//!   a fresh server produces bitwise-equal successful payloads
+//!   (compared index-aligned, on calls that succeeded in both runs with
+//!   the same degradation state).
+//!
+//! The engine is shared by the `#[ignore]`d integration test
+//! (`rust/tests/soak.rs`, via `make soak SOAK_ROUNDS=… SOAK_SEED=…`)
+//! and the standalone driver (`examples/soak.rs`). Like the rest of
+//! `testutil`, nothing here panics in non-test code: every violation is
+//! an `Err(String)` naming the round seed — a one-line repro.
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{
+    AdmissionConfig, BreakerConfig, BudgetConfig, ClientConfig, Engine, EvalError, EvalServer,
+    FaultInjector, FlakyWindow, HedgeConfig, HedgeDelay, RejectReason, ResilientClient,
+    RetryPolicy, SentinelConfig, ServerConfig, DEFAULT_STREAM_SEED,
+};
+use crate::smurf::approximator::SmurfApproximator;
+use crate::smurf::config::SmurfConfig;
+use crate::synth::functions;
+use crate::util::prng::{Pcg, GOLDEN_GAMMA};
+use crate::util::sync::Arc;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Options for a soak run ([`run_soak`]). The defaults match the CI
+/// smoke configuration; `make soak` overrides rounds/seed from the
+/// environment.
+#[derive(Clone, Copy, Debug)]
+pub struct SoakOptions {
+    /// Base seed; round `r` derives its seed as
+    /// `seed.wrapping_add(r · GOLDEN_GAMMA)`.
+    pub seed: u64,
+    /// Number of independent rounds.
+    pub rounds: usize,
+    /// Concurrent client threads per round.
+    pub clients: usize,
+    /// Calls issued by each client thread.
+    pub requests_per_client: usize,
+    /// Re-run every round against a fresh server from the identical
+    /// seed and require byte-identical successful payloads.
+    pub replay: bool,
+}
+
+impl Default for SoakOptions {
+    fn default() -> Self {
+        Self { seed: 0xC4A05, rounds: 8, clients: 3, requests_per_client: 24, replay: true }
+    }
+}
+
+/// The fault schedule a round arms before its workload starts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum FaultMode {
+    /// Inert injector: the control round.
+    None,
+    /// One-shot worker panic on a near-future batch.
+    PanicOnce,
+    /// One-shot stall on a near-future batch.
+    StallOnce,
+    /// Bounded Bernoulli window of intermittent panics + stalls.
+    Flaky,
+    /// Every BitLevel output replaced with NaN (non-finite guard path).
+    PoisonNan,
+    /// Constant bias on BitLevel outputs (drift-sentinel path); the
+    /// payload carried alongside is the bias magnitude.
+    Bias,
+}
+
+/// Everything a round derives from its seed before any thread starts.
+#[derive(Clone, Debug)]
+struct RoundPlan {
+    workers: usize,
+    policy: BatchPolicy,
+    admission: AdmissionConfig,
+    sentinel_enabled: bool,
+    client_cfg: ClientConfig,
+    fault: FaultMode,
+    /// Bias magnitude for [`FaultMode::Bias`] (0.0 otherwise).
+    bias: f64,
+    /// Flaky-window parameters for [`FaultMode::Flaky`].
+    flaky: FlakyWindow,
+    /// One-shot batch ordinal for PanicOnce / StallOnce.
+    one_shot_batch: u64,
+    stall: Duration,
+    /// Per-call client deadline.
+    call_timeout: Duration,
+}
+
+/// What one client call looked like, recorded for the replay audit.
+#[derive(Clone, Debug)]
+pub struct CallRecord {
+    /// Engine actually requested (after the workload draw).
+    pub engine: Engine,
+    /// `degraded` flag on the response (shed or quarantined).
+    pub degraded: bool,
+    /// `None` on success; the error's summary kind otherwise.
+    pub error: Option<String>,
+    /// Successful payload (empty on error).
+    pub outputs: Vec<f64>,
+}
+
+/// Per-round audit summary returned by [`run_round`].
+#[derive(Clone, Debug, Default)]
+pub struct RoundReport {
+    /// The round's seed (one-line repro: rerun with this seed).
+    pub seed: u64,
+    /// Human-readable description of the drawn configuration.
+    pub plan: String,
+    /// Calls issued across all client threads (primary run).
+    pub calls: usize,
+    /// Successful responses.
+    pub ok: usize,
+    /// Successful responses served degraded (shed or quarantined).
+    pub degraded_ok: usize,
+    /// Typed errors by kind.
+    pub errors: Vec<(String, usize)>,
+    /// Replay pairs compared bitwise (0 when replay was disabled).
+    pub replay_compared: usize,
+    /// Worker panics recorded by the server.
+    pub panics: u64,
+    /// Threads respawned by supervision.
+    pub respawns: u64,
+    /// Drift alarms recorded by the sentinel.
+    pub drift_alarms: u64,
+    /// Breaker opens recorded by the client.
+    pub breaker_opens: u64,
+}
+
+impl RoundReport {
+    /// One-line summary for drivers.
+    pub fn render(&self) -> String {
+        let errs: Vec<String> =
+            self.errors.iter().map(|(k, n)| format!("{k}×{n}")).collect();
+        format!(
+            "round seed={:#x} calls={} ok={} (degraded {}) errors=[{}] replay_compared={} \
+             panics={} respawns={} drift_alarms={} breaker_opens={} :: {}",
+            self.seed,
+            self.calls,
+            self.ok,
+            self.degraded_ok,
+            errs.join(", "),
+            self.replay_compared,
+            self.panics,
+            self.respawns,
+            self.drift_alarms,
+            self.breaker_opens,
+            self.plan,
+        )
+    }
+}
+
+/// The function zoo every round serves: arity-2 targets on the uniform
+/// (2 vars × radix 4) lattice, synthesized at a 64-cycle default length.
+const FUNCTION_NAMES: [&str; 3] = ["euclidean2", "product2", "softmax2"];
+
+fn build_functions() -> Result<Vec<SmurfApproximator>, String> {
+    let cfg = SmurfConfig::uniform(2, 4);
+    let mut out = Vec::new();
+    for name in FUNCTION_NAMES {
+        let target = functions::by_name(name)
+            .ok_or_else(|| format!("soak function zoo references unknown target {name:?}"))?;
+        out.push(SmurfApproximator::synthesize(&cfg, &target, 64));
+    }
+    Ok(out)
+}
+
+/// Expand a round seed into the full configuration draw. Every field is
+/// a pure function of the seed, so an identical-seed replay rebuilds an
+/// identical stack.
+fn draw_plan(seed: u64) -> RoundPlan {
+    let mut rng = Pcg::new(seed);
+    let workers = 2 + rng.below(3) as usize; // 2..=4
+    let policy = BatchPolicy {
+        max_batch: 2 + rng.below(15) as usize, // 2..=16
+        max_wait: Duration::from_micros(200 + rng.below(1800)), // 200µs..2ms
+    };
+    let bitlevel_limit = 8 + rng.below(57) as usize; // 8..=64
+    let shed_high = (bitlevel_limit / 2).max(2);
+    let admission = AdmissionConfig {
+        bitlevel_limit,
+        analytic_limit: 256,
+        xla_limit: 64,
+        shed_high,
+        shed_low: (shed_high / 2).max(1),
+        sync_timeout: Duration::from_secs(5),
+    };
+    let sentinel_enabled = rng.below(4) != 0; // armed 3/4 of rounds
+
+    let retry = (rng.below(2) == 0).then(|| {
+        let base = Duration::from_millis(1 + rng.below(4));
+        RetryPolicy {
+            max_retries: 1 + rng.below(3) as u32,
+            attempt_timeout: Some(Duration::from_millis(20 + rng.below(41))),
+            backoff_base: base,
+            backoff_max: base * (2 + rng.below(7) as u32),
+            jitter_seed: rng.next_u64(),
+        }
+    });
+    let budget = (rng.below(3) == 0).then(|| {
+        let initial = 2.0 + rng.below(9) as f64;
+        BudgetConfig { initial, max: initial + rng.below(9) as f64, earn_per_success: rng.range(0.1, 1.0) }
+    });
+    let hedge = (rng.below(4) == 0).then(|| HedgeConfig {
+        delay: HedgeDelay::Fixed(Duration::from_millis(5 + rng.below(16))),
+    });
+    let breaker = (rng.below(4) == 0).then(|| BreakerConfig {
+        failure_threshold: 2 + rng.below(5) as u32,
+        probe_interval: 2 + rng.below(3) as u32,
+        probe_successes: 1 + rng.below(3) as u32,
+    });
+    let call_timeout = Duration::from_millis(250 + rng.below(751)); // 250ms..1s
+    let client_cfg = ClientConfig {
+        total_timeout: Some(call_timeout),
+        retry,
+        budget,
+        hedge,
+        breaker,
+    };
+
+    let fault = match rng.below(6) {
+        0 => FaultMode::None,
+        1 => FaultMode::PanicOnce,
+        2 => FaultMode::StallOnce,
+        3 => FaultMode::Flaky,
+        4 => FaultMode::PoisonNan,
+        _ => FaultMode::Bias,
+    };
+    // Bias palette straddles the default quarantine threshold (0.15):
+    // 0.25 drives real quarantines, the smaller magnitudes exercise the
+    // canary EWMA without tripping it.
+    let bias = match rng.below(3) {
+        0 => 0.25,
+        1 => 0.125,
+        _ => 0.0625,
+    };
+    let flaky = FlakyWindow {
+        seed: rng.next_u64(),
+        panic_prob: rng.range(0.05, 0.3),
+        stall_prob: rng.range(0.05, 0.3),
+        stall: Duration::from_millis(2 + rng.below(14)),
+        batches: 8 + rng.below(25),
+    };
+    let one_shot_batch = 1 + rng.below(4);
+    let stall = Duration::from_millis(10 + rng.below(31));
+    RoundPlan {
+        workers,
+        policy,
+        admission,
+        sentinel_enabled,
+        client_cfg,
+        fault,
+        bias,
+        flaky,
+        one_shot_batch,
+        stall,
+        call_timeout,
+    }
+}
+
+fn describe_plan(plan: &RoundPlan) -> String {
+    let rungs = format!(
+        "retry={} budget={} hedge={} breaker={}",
+        plan.client_cfg.retry.is_some(),
+        plan.client_cfg.budget.is_some(),
+        plan.client_cfg.hedge.is_some(),
+        plan.client_cfg.breaker.is_some(),
+    );
+    format!(
+        "workers={} max_batch={} bitlevel_limit={} shed_high={} sentinel={} fault={:?} bias={} {}",
+        plan.workers,
+        plan.policy.max_batch,
+        plan.admission.bitlevel_limit,
+        plan.admission.shed_high,
+        plan.sentinel_enabled,
+        plan.fault,
+        plan.bias,
+        rungs,
+    )
+}
+
+/// Arm the round's fault schedule on a fresh injector.
+fn arm_faults(plan: &RoundPlan, faults: &FaultInjector) {
+    match plan.fault {
+        FaultMode::None => {}
+        FaultMode::PanicOnce => faults.arm_panic_on_batch(plan.one_shot_batch),
+        FaultMode::StallOnce => faults.arm_stall_on_batch(plan.one_shot_batch, plan.stall),
+        FaultMode::Flaky => faults.arm_flaky_window(plan.flaky),
+        FaultMode::PoisonNan => faults.set_poison_nan(true),
+        FaultMode::Bias => faults.set_output_bias(plan.bias),
+    }
+}
+
+/// Disarm the steady-state faults so the drain window runs clean (the
+/// one-shot triggers clear themselves on firing; an unfired one-shot is
+/// harmless after the workload stops submitting).
+fn clear_faults(faults: &FaultInjector) {
+    faults.set_poison_nan(false);
+    faults.set_output_bias(0.0);
+    faults.clear_flaky_window();
+}
+
+/// Hostile-but-valid coordinate palette (the domain for the round's
+/// function zoo is the unit square): exact endpoints, subnormals,
+/// quantization-grid points, and plain uniform draws.
+fn gen_coord(rng: &mut Pcg) -> f64 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => 1.0,
+        2 => -0.0,
+        3 => 5e-324,                      // smallest positive subnormal
+        4 => 1.0 - f64::EPSILON,
+        5 => rng.below(65537) as f64 / 65536.0, // θ-quantization grid
+        _ => rng.uniform(),
+    }
+}
+
+/// One drawn call: what to send and what the contract allows back.
+struct CallSpec {
+    function: &'static str,
+    points: Vec<Vec<f64>>,
+    engine: Engine,
+    stream_len: usize,
+    /// True when the call is deliberately malformed and must be refused.
+    bad: bool,
+}
+
+fn draw_call(rng: &mut Pcg) -> CallSpec {
+    let function = FUNCTION_NAMES[rng.below(FUNCTION_NAMES.len() as u64) as usize];
+    let engine = match rng.below(10) {
+        0 => Engine::Xla,
+        1..=4 => Engine::Analytic,
+        _ => Engine::BitLevel,
+    };
+    let stream_len = [1usize, 63, 64, 65, 128, 256][rng.below(6) as usize];
+    let n_points = 1 + rng.below(3) as usize;
+    let mut points: Vec<Vec<f64>> =
+        (0..n_points).map(|_| vec![gen_coord(rng), gen_coord(rng)]).collect();
+    // ~1/8 of traffic is deliberately malformed; the kinds used here are
+    // refused by validation regardless of engine rewrites (arity, NaN
+    // input, unknown function), so the expectation is route-independent.
+    let bad = rng.below(8) == 0;
+    let mut spec = CallSpec { function, points: Vec::new(), engine, stream_len, bad };
+    if bad {
+        match rng.below(3) {
+            0 => points[0] = vec![0.5], // arity mismatch
+            1 => points[0] = vec![f64::NAN, 0.5],
+            _ => spec.function = "no_such_function",
+        }
+    }
+    spec.points = points;
+    spec
+}
+
+/// Summarize a typed error for the per-kind tally (payloads vary; the
+/// kind is what the invariants speak about).
+fn error_kind(e: &EvalError) -> &'static str {
+    match e {
+        EvalError::Rejected(RejectReason::QueueFull) => "rejected:queue_full",
+        EvalError::Rejected(RejectReason::BadRequest(_)) => "rejected:bad_request",
+        EvalError::Rejected(RejectReason::Deadline) => "rejected:deadline",
+        EvalError::Timeout => "timeout",
+        EvalError::WorkerPanic(_) => "worker_panic",
+        EvalError::Shutdown => "shutdown",
+        EvalError::Engine(_) => "engine",
+        EvalError::CircuitOpen => "circuit_open",
+    }
+}
+
+/// Check one successful payload against its deterministic reference.
+/// `refs` maps function name → synthesized reference approximator.
+fn check_payload(
+    refs: &HashMap<&'static str, SmurfApproximator>,
+    plan: &RoundPlan,
+    spec: &CallSpec,
+    degraded: bool,
+    outputs: &[f64],
+) -> Result<(), String> {
+    let func = refs
+        .get(spec.function)
+        .ok_or_else(|| format!("no reference for function {:?}", spec.function))?;
+    if outputs.len() != spec.points.len() {
+        return Err(format!(
+            "payload arity: {} outputs for {} points",
+            outputs.len(),
+            spec.points.len()
+        ));
+    }
+    for (i, (y, p)) in outputs.iter().zip(&spec.points).enumerate() {
+        if !y.is_finite() {
+            return Err(format!("non-finite output {y} escaped the worker guard (point {i})"));
+        }
+        let engine_is_analytic = spec.engine == Engine::Analytic || degraded;
+        let want = if engine_is_analytic {
+            func.eval_analytic(p)
+        } else {
+            // Non-degraded BitLevel: the seeded bitstream contract, plus
+            // the armed bias (applied by the injector as one IEEE add).
+            let raw = func.eval_bitstream(p, spec.stream_len, DEFAULT_STREAM_SEED ^ i as u64);
+            if plan.fault == FaultMode::Bias {
+                raw + plan.bias
+            } else {
+                raw
+            }
+        };
+        if plan.fault == FaultMode::PoisonNan && !engine_is_analytic {
+            return Err(format!(
+                "BitLevel call succeeded un-degraded while NaN poisoning was armed \
+                 (point {i}, output {y})"
+            ));
+        }
+        if y.to_bits() != want.to_bits() {
+            return Err(format!(
+                "payload mismatch at point {i}: got {y:?} ({:#x}), want {want:?} ({:#x}) \
+                 [engine={:?} degraded={degraded} L={}]",
+                y.to_bits(),
+                want.to_bits(),
+                spec.engine,
+                spec.stream_len
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Stats one client thread accumulates.
+#[derive(Default)]
+struct ClientStats {
+    ok: usize,
+    degraded_ok: usize,
+    errors: Vec<(String, usize)>,
+}
+
+impl ClientStats {
+    fn count_error(&mut self, kind: &str) {
+        if let Some(slot) = self.errors.iter_mut().find(|(k, _)| k == kind) {
+            slot.1 += 1;
+        } else {
+            self.errors.push((kind.to_string(), 1));
+        }
+    }
+}
+
+/// Drive one client thread's workload; returns its call records and
+/// stats, or the first invariant violation.
+fn run_client(
+    server: &EvalServer,
+    refs: &HashMap<&'static str, SmurfApproximator>,
+    plan: &RoundPlan,
+    seed: u64,
+    calls: usize,
+) -> Result<(Vec<CallRecord>, ClientStats), String> {
+    let client = ResilientClient::new(server, plan.client_cfg);
+    let mut rng = Pcg::new(seed);
+    let mut records = Vec::with_capacity(calls);
+    let mut stats = ClientStats::default();
+    for c in 0..calls {
+        let spec = draw_call(&mut rng);
+        let resp = client.eval_with_timeout(
+            spec.function,
+            spec.points.clone(),
+            spec.engine,
+            spec.stream_len,
+            plan.call_timeout,
+        );
+        match &resp.error {
+            None => {
+                if spec.bad {
+                    return Err(format!(
+                        "call {c}: malformed request (fn={:?}, engine={:?}) was answered Ok",
+                        spec.function, spec.engine
+                    ));
+                }
+                if spec.engine == Engine::Xla {
+                    return Err(format!(
+                        "call {c}: Xla succeeded with no artifacts configured"
+                    ));
+                }
+                check_payload(refs, plan, &spec, resp.degraded, &resp.outputs)
+                    .map_err(|e| format!("call {c}: {e}"))?;
+                stats.ok += 1;
+                if resp.degraded {
+                    stats.degraded_ok += 1;
+                }
+            }
+            Some(e) => {
+                let kind = error_kind(e);
+                if spec.bad {
+                    // Malformed calls must be refused at the edge (or
+                    // fast-failed by an already-open breaker); anything
+                    // else means validation let garbage through.
+                    if !matches!(
+                        e,
+                        EvalError::Rejected(RejectReason::BadRequest(_)) | EvalError::CircuitOpen
+                    ) {
+                        return Err(format!(
+                            "call {c}: malformed request answered {kind}, not BadRequest"
+                        ));
+                    }
+                } else if matches!(e, EvalError::Rejected(RejectReason::BadRequest(_))) {
+                    return Err(format!(
+                        "call {c}: well-formed request (fn={:?}, engine={:?}, L={}) \
+                         refused as BadRequest: {e}",
+                        spec.function, spec.engine, spec.stream_len
+                    ));
+                }
+                stats.count_error(kind);
+            }
+        }
+        records.push(CallRecord {
+            engine: spec.engine,
+            degraded: resp.degraded,
+            error: resp.error.as_ref().map(|e| error_kind(e).to_string()),
+            outputs: resp.outputs,
+        });
+    }
+    // Hedge losers that completed must match their winners bit-for-bit.
+    let audit = client.drain_hedge_audits(Duration::from_millis(500));
+    if audit.mismatched != 0 {
+        return Err(format!(
+            "hedge audit: {} loser(s) diverged from the winning payload",
+            audit.mismatched
+        ));
+    }
+    Ok((records, stats))
+}
+
+/// Poll until `f` returns true or `limit` elapses.
+fn wait_until(limit: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + limit;
+    loop {
+        if f() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// One full workload pass: build the stack from the plan, run the client
+/// threads, drain, audit, shut down. Returns per-client records plus the
+/// aggregated stats.
+fn run_workload(
+    seed: u64,
+    plan: &RoundPlan,
+    clients: usize,
+    calls_per_client: usize,
+) -> Result<(Vec<Vec<CallRecord>>, RoundReport), String> {
+    let functions = build_functions()?;
+    // Independent reference synthesis: the QP solve is deterministic, so
+    // the served tables and the reference tables must agree bitwise —
+    // any divergence would invalidate every payload check below.
+    let mut refs = HashMap::new();
+    for (name, served) in FUNCTION_NAMES.iter().zip(&functions) {
+        let reference = build_functions()?
+            .into_iter()
+            .find(|f| f.name() == *name)
+            .ok_or_else(|| format!("reference zoo lost function {name:?}"))?;
+        let (a, b) = (served.coefficients(), reference.coefficients());
+        if a.len() != b.len() || a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits()) {
+            return Err(format!("synthesis is not deterministic for {name:?}"));
+        }
+        refs.insert(*name, reference);
+    }
+
+    let faults = Arc::new(FaultInjector::new());
+    let sentinel = if plan.sentinel_enabled {
+        SentinelConfig::default()
+    } else {
+        SentinelConfig::disabled()
+    };
+    let server = EvalServer::start(
+        functions,
+        None,
+        ServerConfig {
+            workers: plan.workers,
+            policy: plan.policy,
+            admission: plan.admission.clone(),
+            faults: faults.clone(),
+            sentinel,
+            ..ServerConfig::default()
+        },
+    );
+    arm_faults(plan, &faults);
+
+    // Concurrent client threads; each one's workload is a pure function
+    // of (round seed, client index).
+    let mut results: Vec<Result<(Vec<CallRecord>, ClientStats), String>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let client_seed = seed.wrapping_add((c as u64 + 1).wrapping_mul(GOLDEN_GAMMA));
+            let server = &server;
+            let refs = &refs;
+            handles.push(scope.spawn(move || {
+                run_client(server, refs, plan, client_seed, calls_per_client)
+            }));
+        }
+        for h in handles {
+            results.push(
+                h.join()
+                    .unwrap_or_else(|_| Err("client thread panicked".to_string())),
+            );
+        }
+    });
+    clear_faults(&faults);
+
+    let mut records = Vec::new();
+    let mut report = RoundReport { seed, plan: describe_plan(plan), ..RoundReport::default() };
+    for r in results {
+        let (recs, stats) = r?;
+        report.calls += recs.len();
+        report.ok += stats.ok;
+        report.degraded_ok += stats.degraded_ok;
+        for (kind, n) in stats.errors {
+            if let Some(slot) = report.errors.iter_mut().find(|(k, _)| *k == kind) {
+                slot.1 += n;
+            } else {
+                report.errors.push((kind, n));
+            }
+        }
+        records.push(recs);
+    }
+    report.errors.sort();
+
+    // --- Global invariants -------------------------------------------
+    // Depth drained: abandoned (timed-out) requests are still answered
+    // by the draining workers, releasing their admission tokens.
+    if !wait_until(Duration::from_secs(10), || server.admission().total_depth() == 0) {
+        return Err(format!(
+            "round seed={seed:#x}: depth did not drain to 0 within 10s \
+             (total_depth={})",
+            server.admission().total_depth()
+        ));
+    }
+    // Pool respawned to configured size after injected panics.
+    if !wait_until(Duration::from_secs(5), || server.live_workers() == plan.workers) {
+        return Err(format!(
+            "round seed={seed:#x}: pool did not respawn to {} workers (live={})",
+            plan.workers,
+            server.live_workers()
+        ));
+    }
+    let snap = server.metrics();
+    snap.check_conservation()
+        .map_err(|e| format!("round seed={seed:#x}: conservation (pre-shutdown): {e}"))?;
+    // Sentinel legality: quarantine-degraded traffic implies a recorded
+    // alarm; recoveries never outnumber alarms.
+    if snap.drift_degraded > 0 && snap.drift_alarms == 0 {
+        return Err(format!(
+            "round seed={seed:#x}: {} drift-degraded answers with no drift alarm",
+            snap.drift_degraded
+        ));
+    }
+    if snap.drift_recoveries > snap.drift_alarms {
+        return Err(format!(
+            "round seed={seed:#x}: {} drift recoveries exceed {} alarms",
+            snap.drift_recoveries, snap.drift_alarms
+        ));
+    }
+    // Breaker legality: fast-fails imply a recorded open; hedge audits
+    // (also checked per-thread) must show zero divergence globally.
+    if snap.breaker_rejections > 0 && snap.breaker_opens == 0 {
+        return Err(format!(
+            "round seed={seed:#x}: {} breaker rejections with no recorded open",
+            snap.breaker_rejections
+        ));
+    }
+    if snap.client_hedge_mismatches != 0 {
+        return Err(format!(
+            "round seed={seed:#x}: {} hedge mismatches (determinism bug)",
+            snap.client_hedge_mismatches
+        ));
+    }
+    report.panics = snap.panics;
+    report.respawns = snap.respawns;
+    report.drift_alarms = snap.drift_alarms;
+    report.breaker_opens = snap.breaker_opens;
+
+    // Shutdown returns the final snapshot; the ledger must still balance
+    // after the drain answers everything left in the queues.
+    let last = server.shutdown();
+    last.check_conservation()
+        .map_err(|e| format!("round seed={seed:#x}: conservation (post-shutdown): {e}"))?;
+    Ok((records, report))
+}
+
+/// Run one chaos round (and, when `opts.replay` is set, its
+/// identical-seed replay) and audit every global invariant. `Err`
+/// carries a one-line repro naming the round seed.
+pub fn run_round(seed: u64, opts: &SoakOptions) -> Result<RoundReport, String> {
+    let plan = draw_plan(seed);
+    let (records, mut report) =
+        run_workload(seed, &plan, opts.clients.max(1), opts.requests_per_client.max(1))?;
+    if !opts.replay {
+        return Ok(report);
+    }
+    // Determinism dividend: a fresh server from the identical seed must
+    // produce byte-identical successful payloads. Timing-dependent
+    // outcomes (timeouts, sheds) may differ between runs, so the
+    // comparison is index-aligned and restricted to calls that
+    // succeeded in both runs with the same degradation state — for
+    // those, the payload is a pure function of the call spec.
+    let (replayed, _) =
+        run_workload(seed, &plan, opts.clients.max(1), opts.requests_per_client.max(1))?;
+    if replayed.len() != records.len() {
+        return Err(format!(
+            "round seed={seed:#x}: replay produced {} client traces, expected {}",
+            replayed.len(),
+            records.len()
+        ));
+    }
+    let mut compared = 0usize;
+    for (c, (a_trace, b_trace)) in records.iter().zip(&replayed).enumerate() {
+        if a_trace.len() != b_trace.len() {
+            return Err(format!(
+                "round seed={seed:#x}: client {c} issued {} calls on replay, expected {}",
+                b_trace.len(),
+                a_trace.len()
+            ));
+        }
+        for (i, (a, b)) in a_trace.iter().zip(b_trace).enumerate() {
+            if a.error.is_some() || b.error.is_some() || a.degraded != b.degraded {
+                continue;
+            }
+            if a.outputs.len() != b.outputs.len()
+                || a.outputs
+                    .iter()
+                    .zip(&b.outputs)
+                    .any(|(x, y)| x.to_bits() != y.to_bits())
+            {
+                return Err(format!(
+                    "round seed={seed:#x}: replay divergence at client {c} call {i}: \
+                     {:?} vs {:?}",
+                    a.outputs, b.outputs
+                ));
+            }
+            compared += 1;
+        }
+    }
+    report.replay_compared = compared;
+    Ok(report)
+}
+
+/// Run `opts.rounds` independent rounds (each derived from `opts.seed`)
+/// and return the per-round reports. Stops at the first violation; the
+/// error names the failing round's seed so `run_round(seed, …)` is the
+/// one-line repro. When replay is enabled, at least one payload pair
+/// across the whole soak must actually have been compared — a soak
+/// whose every call failed would otherwise vacuously "pass" replay.
+pub fn run_soak(opts: &SoakOptions) -> Result<Vec<RoundReport>, String> {
+    let mut reports = Vec::with_capacity(opts.rounds);
+    for r in 0..opts.rounds {
+        let seed = opts.seed.wrapping_add((r as u64).wrapping_mul(GOLDEN_GAMMA));
+        reports.push(run_round(seed, opts)?);
+    }
+    if opts.replay && !reports.is_empty() {
+        let compared: usize = reports.iter().map(|r| r.replay_compared).sum();
+        if compared == 0 {
+            return Err(
+                "soak: replay enabled but zero payload pairs were comparable across all \
+                 rounds (every call failed?) — the replay invariant was never exercised"
+                    .to_string(),
+            );
+        }
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The plan draw is a pure function of the seed.
+    #[test]
+    fn plan_draw_is_deterministic() {
+        let a = draw_plan(42);
+        let b = draw_plan(42);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert!(a.workers >= 2 && a.workers <= 4);
+        assert!(a.admission.shed_high >= 2);
+        assert!(a.admission.shed_low >= 1 && a.admission.shed_low < a.admission.shed_high);
+        if let Some(r) = a.client_cfg.retry {
+            assert!(r.backoff_base <= r.backoff_max);
+        }
+    }
+
+    /// The workload draw is deterministic and its malformed calls are
+    /// really malformed (and its well-formed calls really well-formed).
+    #[test]
+    fn call_draw_is_deterministic_and_classified() {
+        let mut a = Pcg::new(7);
+        let mut b = Pcg::new(7);
+        let mut saw_bad = false;
+        let mut saw_good = false;
+        for _ in 0..256 {
+            let ca = draw_call(&mut a);
+            let cb = draw_call(&mut b);
+            assert_eq!(ca.function, cb.function);
+            assert_eq!(ca.points, cb.points);
+            assert_eq!(ca.stream_len, cb.stream_len);
+            assert_eq!(ca.bad, cb.bad);
+            let malformed = ca.function == "no_such_function"
+                || ca.points.iter().any(|p| p.len() != 2)
+                || ca.points.iter().flatten().any(|x| !x.is_finite());
+            assert_eq!(ca.bad, malformed, "bad flag must match actual malformation");
+            saw_bad |= ca.bad;
+            saw_good |= !ca.bad;
+            for p in &ca.points {
+                if !ca.bad {
+                    assert!(p.iter().all(|x| (0.0..=1.0).contains(x)));
+                }
+            }
+            assert!(ca.stream_len > 0, "L=0 is excluded: engine rewrites make it route-dependent");
+        }
+        assert!(saw_bad && saw_good, "palette must mix malformed and well-formed calls");
+    }
+
+    /// A single fault-free mini-round end to end: all invariants green.
+    #[test]
+    fn clean_mini_round_passes_all_invariants() {
+        // Seed chosen so the drawn fault mode is None (asserted below to
+        // keep the test honest if the draw order ever changes).
+        let mut seed = 1u64;
+        while draw_plan(seed).fault != FaultMode::None {
+            seed += 1;
+        }
+        let opts = SoakOptions { seed, rounds: 1, clients: 2, requests_per_client: 8, replay: true };
+        let report = run_round(seed, &opts).expect("clean round must pass");
+        assert_eq!(report.calls, 16);
+        assert!(report.ok > 0, "a clean round must answer some calls successfully");
+    }
+}

@@ -52,6 +52,16 @@ fn await_pool(server: &EvalServer, n: usize) {
     panic!("pool did not recover to {n} workers (live={})", server.live_workers());
 }
 
+/// Teardown used by every test (ISSUE 10 satellite): wait for the
+/// in-flight depth to drain, shut down, and require the final metrics
+/// snapshot's conservation ledger to balance — every submit accounted
+/// for by exactly one answer bucket.
+fn shutdown_conserved(server: EvalServer) {
+    await_drain(&server);
+    let last = server.shutdown();
+    last.check_conservation().expect("conservation ledger must balance at teardown");
+}
+
 /// A worker panicking mid-batch must answer every in-flight client with a
 /// typed `WorkerPanic`, the supervisor must respawn the thread, and the
 /// server must keep serving.
@@ -103,7 +113,7 @@ fn worker_panic_answers_clients_and_pool_recovers() {
     let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::Analytic, 64);
     assert!(resp.is_ok(), "{:?}", resp.error);
     assert!((resp.outputs[0] - 0.25).abs() < 0.01);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// A stalled worker must not wedge synchronous clients: the deadline
@@ -134,7 +144,7 @@ fn slow_worker_times_out_typed_then_recovers() {
     // The worker finishes the stalled batch, then serves normally.
     let resp = server.eval_sync("euclidean2", vec![vec![0.3, 0.4]], Engine::Analytic, 64);
     assert!(resp.is_ok(), "{:?}", resp.error);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// A queued request whose deadline expires behind a stalled worker is
@@ -172,7 +182,7 @@ fn queued_deadline_expires_behind_stalled_worker() {
     let busy = busy_rx.recv_timeout(Duration::from_secs(5)).unwrap();
     assert!(busy.is_ok());
     faults.set_slow_batch(Duration::ZERO);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Overload: past the shed watermark BitLevel traffic degrades to the
@@ -239,7 +249,7 @@ fn overload_sheds_then_rejects_then_recovers() {
     assert!(resp.is_ok(), "{:?}", resp.error);
     assert!(!resp.degraded, "hysteresis latch must release once the backlog drains");
     assert!(!server.admission().is_shedding());
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Malformed traffic is refused at the submit edge with typed reasons and
@@ -281,7 +291,7 @@ fn bad_requests_rejected_at_the_edge() {
     assert_eq!(snap.rejected_bad_request, 4);
     assert_eq!(snap.rejected_deadline, 1);
     assert_eq!(snap.requests, 0, "nothing malformed may reach an engine");
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Shutdown answers queued requests instead of dropping them: every
@@ -304,7 +314,11 @@ fn shutdown_answers_queued_requests() {
             .unwrap();
         receivers.push(rrx);
     }
-    server.shutdown();
+    // Shut down with requests still queued behind the stalled worker:
+    // the drain must answer every one of them, and the final snapshot's
+    // conservation ledger must balance (ISSUE 10 satellite) even though
+    // nothing drained *before* the close.
+    let last = server.shutdown();
     for rrx in receivers {
         let resp = rrx
             .recv_timeout(Duration::from_secs(1))
@@ -313,6 +327,7 @@ fn shutdown_answers_queued_requests() {
         // never silently discarded.
         assert!(resp.is_ok() || resp.error == Some(EvalError::Shutdown), "{:?}", resp.error);
     }
+    last.check_conservation().expect("ledger must balance across a mid-flight shutdown");
 }
 
 /// The full drift-quarantine lifecycle: a biased engine trips the canary
@@ -421,7 +436,7 @@ fn drift_quarantine_lifecycle_detects_degrades_and_recovers() {
         std::thread::sleep(Duration::from_millis(1));
     }
     assert_eq!(server.admission().total_depth(), 0, "in-flight accounting must drain");
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// NaN-poisoned engine outputs must reach clients as typed engine errors
@@ -445,7 +460,7 @@ fn nan_poisoning_yields_typed_errors_not_poisoned_floats() {
     let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::BitLevel, 64);
     assert!(resp.is_ok(), "{:?}", resp.error);
     assert!(resp.outputs[0].is_finite());
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Clients that drop their reply receivers — even while panics are being
@@ -477,7 +492,7 @@ fn dropped_clients_under_panics_leak_nothing() {
     await_pool(&server, 2);
     let resp = server.eval_sync("product2", vec![vec![0.5, 0.5]], Engine::Analytic, 64);
     assert!(resp.is_ok(), "{:?}", resp.error);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Wait (bounded) until in-flight depth accounting drains to zero.
@@ -541,7 +556,7 @@ fn resubmission_is_bit_identical_across_respawns() {
         assert_eq!(a.to_bits(), c.to_bits(), "respawned worker must serve identical bits");
     }
     await_drain(&server);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Ladder rung 1+2: a deterministically flaky worker (seeded Bernoulli
@@ -592,7 +607,7 @@ fn flaky_worker_survived_by_retries_within_budget() {
     await_drain(&server);
     await_pool(&server, 1);
     drop(client);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Ladder rung 2 under a *persistent* fault: the token-bucket budget
@@ -645,7 +660,7 @@ fn retry_storm_is_contained_by_the_budget() {
     await_drain(&server);
     await_pool(&server, 1);
     drop(client);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Ladder rung 3: a hedged request beats a stalled worker well inside
@@ -699,7 +714,7 @@ fn hedged_request_beats_a_stalled_worker_within_deadline() {
     assert_eq!(server.metrics().client_hedge_mismatches, 0);
     await_drain(&server);
     drop(client);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Ladder rung 4: a persistent engine fault trips the per-function
@@ -777,7 +792,7 @@ fn breaker_opens_probes_and_recloses_after_the_fault_clears() {
     assert_eq!(client.breaker_state("euclidean2"), BreakerState::Closed);
     await_drain(&server);
     drop(client);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Acceptance pin: with every ladder rung disabled (the default config)
@@ -833,7 +848,7 @@ fn default_client_config_is_passthrough_identical() {
     assert_eq!(client.retry_budget_tokens(), None);
     await_drain(&server);
     drop(client);
-    server.shutdown();
+    shutdown_conserved(server);
 }
 
 /// Regression for the supervisor registration window (found by the loom
@@ -883,5 +898,5 @@ fn first_batch_panic_at_startup_cannot_lose_the_respawn_wakeup() {
     assert!(server.metrics().respawns >= 1, "supervisor must record the respawn");
     let resp = server.eval_sync("euclidean2", vec![vec![0.3, 0.4]], Engine::Analytic, 64);
     assert!(resp.is_ok(), "{:?}", resp.error);
-    server.shutdown();
+    shutdown_conserved(server);
 }

@@ -1,0 +1,95 @@
+//! Randomized robustness entry points (see `smurf::testutil` and
+//! docs/INVARIANTS.md § Randomized robustness harness).
+//!
+//! Two tiers:
+//!
+//! - `differential_oracle_fuzz_smoke` runs in tier-1 time and is always
+//!   on: N seeded cases through the differential oracle (`make
+//!   fuzz-smoke`, or plain `cargo test --test soak`). Any failure prints
+//!   a minimized seed + config repro produced by the shrinker.
+//! - `chaos_soak` is `#[ignore]`d by default and driven by
+//!   `make soak SOAK_ROUNDS=… SOAK_SEED=…`: full randomized
+//!   server/client/fault rounds with global invariant audits and an
+//!   identical-seed replay check per round.
+//!
+//! Every knob comes from the environment so a failing seed pasted from
+//! a report reproduces the exact run:
+//!
+//! ```text
+//! FUZZ_SEED=0x1234 FUZZ_CASES=64   cargo test --test soak differential
+//! SOAK_SEED=0x1234 SOAK_ROUNDS=25  cargo test --test soak -- --ignored
+//! ```
+
+use smurf::testutil::{run_seeded, run_soak, SoakOptions};
+
+/// Parse an env var as u64 (decimal or 0x-hex); absent or empty (as the
+/// Makefile passes undefined knobs) falls back to the default.
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Ok(v) if !v.trim().is_empty() => {
+            let v = v.trim();
+            let parsed = if let Some(hex) = v.strip_prefix("0x") {
+                u64::from_str_radix(hex, 16)
+            } else {
+                v.parse::<u64>()
+            };
+            parsed.unwrap_or_else(|_| panic!("{name}={v:?} is not a u64"))
+        }
+        _ => default,
+    }
+}
+
+/// Differential oracle over seeded structured cases: scalar == every
+/// plane width == TMR-at-rate-0 == armed-zero faults, bit for bit, plus
+/// the bounded analytic relation — with shrinking on failure. Case
+/// count defaults are sized for tier-1 time (debug builds are ~20×
+/// slower than release, so they run fewer cases).
+#[test]
+fn differential_oracle_fuzz_smoke() {
+    let default_cases = if cfg!(debug_assertions) { 12 } else { 64 };
+    let cases = env_u64("FUZZ_CASES", default_cases) as usize;
+    let seed = env_u64("FUZZ_SEED", 0xF0_5EED);
+    match run_seeded(seed, cases) {
+        Ok(n) => println!("fuzz smoke: {n} cases checked (seed={seed:#x})"),
+        Err(report) => panic!("{report}"),
+    }
+}
+
+/// Chaos soak: randomized serving stacks under randomized fault
+/// schedules, audited for answered-exactly-once conservation, depth
+/// drain, pool respawn, payload fidelity, sentinel/breaker legality,
+/// and byte-identical identical-seed replay. Long-running; `#[ignore]`d
+/// so plain `cargo test` stays fast. Drive with
+/// `make soak SOAK_ROUNDS=25`.
+#[test]
+#[ignore = "long-running; drive with `make soak SOAK_ROUNDS=... SOAK_SEED=...`"]
+fn chaos_soak() {
+    let opts = SoakOptions {
+        seed: env_u64("SOAK_SEED", SoakOptions::default().seed),
+        rounds: env_u64("SOAK_ROUNDS", SoakOptions::default().rounds as u64) as usize,
+        clients: env_u64("SOAK_CLIENTS", SoakOptions::default().clients as u64) as usize,
+        requests_per_client: env_u64(
+            "SOAK_REQUESTS",
+            SoakOptions::default().requests_per_client as u64,
+        ) as usize,
+        replay: env_u64("SOAK_REPLAY", 1) != 0,
+    };
+    println!(
+        "chaos soak: {} rounds × {} clients × {} calls (seed={:#x}, replay={})",
+        opts.rounds, opts.clients, opts.requests_per_client, opts.seed, opts.replay
+    );
+    match run_soak(&opts) {
+        Ok(reports) => {
+            for r in &reports {
+                println!("{}", r.render());
+            }
+            let compared: usize = reports.iter().map(|r| r.replay_compared).sum();
+            println!(
+                "chaos soak: {} rounds green, {} replay pairs byte-identical",
+                reports.len(),
+                compared
+            );
+        }
+        Err(violation) => panic!("chaos soak failed:\n{violation}"),
+    }
+}

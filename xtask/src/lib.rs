@@ -4,12 +4,15 @@
 //! see (the full catalogue, with rationale and cross-references to the
 //! dynamic checks, lives in `docs/INVARIANTS.md`):
 //!
-//! - **no-panic** — non-test code in `rust/src/coordinator/` must not
-//!   call `.unwrap()`, `.expect(…)`, `panic!`, `unreachable!`, `todo!`
-//!   or `unimplemented!`: the serving core's contract is that every
-//!   failure is a *typed* answer (`EvalError`/`RejectReason`), and a
-//!   stray panic in the supervisor or submit path would take down
-//!   threads the chaos suite proves must survive.
+//! - **no-panic** — non-test code in `rust/src/coordinator/` and
+//!   `rust/src/testutil/` must not call `.unwrap()`, `.expect(…)`,
+//!   `panic!`, `unreachable!`, `todo!` or `unimplemented!`: the serving
+//!   core's contract is that every failure is a *typed* answer
+//!   (`EvalError`/`RejectReason`), and a stray panic in the supervisor
+//!   or submit path would take down threads the chaos suite proves must
+//!   survive. The robustness harness inherits the rule because it is
+//!   production-compiled library code: its failures are `Result<_,
+//!   String>` repro reports, and only the calling tests/drivers panic.
 //! - **hot-alloc** — inside `// xtask: hot-loop` … `// xtask:
 //!   hot-loop-end` marker regions (the per-clock kernels and the
 //!   batcher's steady-state arrival path), no fresh heap allocation:
@@ -211,6 +214,12 @@ pub fn check_file(rel_path: &str, content: &str) -> Vec<Finding> {
     let stripped: Vec<&str> = lines.iter().map(|l| strip_comment(l)).collect();
     let test_start = test_section_start(&lines);
     let in_coordinator = rel_path.starts_with("rust/src/coordinator/");
+    // The robustness harness (rust/src/testutil/) shares the no-panic
+    // contract: it is production-compiled library code whose failures
+    // must be `Result<_, String>` repro reports, never panics — the
+    // calling tests/drivers decide how to fail. (doc-failure stays
+    // coordinator-only: testutil's API does not speak EvalError.)
+    let no_panic_scope = in_coordinator || rel_path.starts_with("rust/src/testutil/");
     let plane_generic = PLANE_GENERIC_MODULES.contains(&rel_path);
 
     let mut findings = Vec::new();
@@ -243,15 +252,16 @@ pub fn check_file(rel_path: &str, content: &str) -> Vec<Finding> {
             hot_region_open = Some(idx);
         }
 
-        if in_coordinator {
+        if no_panic_scope {
             for tok in PANIC_TOKENS {
                 if code.contains(tok) && !has_waiver(&lines, idx, "no-panic") {
                     push(
                         "no-panic",
                         idx,
                         format!(
-                            "`{tok}` in serving-core non-test code: every failure here \
-                             must be a typed EvalError/RejectReason answer"
+                            "`{tok}` in serving-core/testutil non-test code: every failure \
+                             here must be a typed answer (EvalError/RejectReason) or a \
+                             Result repro report"
                         ),
                     );
                 }

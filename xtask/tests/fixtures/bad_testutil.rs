@@ -1,0 +1,25 @@
+//! Negative fixture: robustness-harness code that must trip the
+//! no-panic and seed-literal rules — proving the lints cover
+//! `rust/src/testutil/` (ISSUE 10), whose non-test code promises
+//! `Result<_, String>` repro reports instead of panics and named seed
+//! constants instead of raw contract literals.
+
+/// Unwraps a shrink step instead of returning the repro report.
+pub fn shrunk(case: Option<u64>) -> u64 {
+    case.unwrap()
+}
+
+/// Raw contract seed instead of `DEFAULT_STREAM_SEED`.
+pub fn stream_seed(i: u64) -> u64 {
+    0x5EED ^ i
+}
+
+#[cfg(test)]
+mod tests {
+    /// Raw literals in the trailing test section stay exempt — tests pin
+    /// the contract from the outside.
+    #[test]
+    fn raw_seed_is_fine_here() {
+        assert_eq!(super::stream_seed(0), 0x5EED);
+    }
+}

@@ -118,6 +118,28 @@ fn client_module_is_covered_by_no_panic_and_doc_failure() {
 }
 
 #[test]
+fn testutil_module_is_covered_by_no_panic_and_seed_hygiene() {
+    // The robustness harness (ISSUE 10) is production-compiled library
+    // code at rust/src/testutil/: panicking calls and raw contract-seed
+    // literals must both fire there, exactly as in the serving core.
+    let findings = check_file(
+        "rust/src/testutil/soak.rs",
+        include_str!("fixtures/bad_testutil.rs"),
+    );
+    assert_eq!(rule_names(&findings), vec!["no-panic", "seed-literal"], "{findings:?}");
+    assert!(findings[0].message.contains(".unwrap()"), "{findings:?}");
+    assert!(findings[1].message.contains("0x5EED"), "{findings:?}");
+    // The same content outside the covered scopes fires only the
+    // repo-wide seed-literal rule — pinning that the no-panic coverage
+    // really comes from the testutil path prefix.
+    let elsewhere = check_file(
+        "rust/src/synth/functions.rs",
+        include_str!("fixtures/bad_testutil.rs"),
+    );
+    assert_eq!(rule_names(&elsewhere), vec!["seed-literal"], "{elsewhere:?}");
+}
+
+#[test]
 fn allow_attr_requires_justification() {
     let findings = check_file(
         "rust/src/nn/layers.rs",
